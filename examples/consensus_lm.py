@@ -1,0 +1,71 @@
+"""Consensus-constrained LM training with the paper's A2 schedule.
+
+The paper cites consensus optimization as a target application of (1).
+Here each of 4 data-parallel shards trains its OWN replica of a small LM;
+the constraint theta_i = z (as Ax = b) is enforced by the primal-dual
+dual variables, with ONE psum per outer iteration regardless of how many
+local SGD (inexact-prox) steps run — the paper's reduce-the-barriers idea
+applied to training. Compare: lockstep DDP needs one all-reduce per SGD
+step.
+
+    PYTHONPATH=src python examples/consensus_lm.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.core.consensus import (
+    ConsensusConfig, consensus_gap, consensus_init, consensus_step,
+)
+from repro.models import build_model
+
+
+def main():
+    cfg = reduced(get_config("qwen3-4b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_rep, B, S, steps = 4, 2, 32, 60
+
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(n_rep, B, S)).astype(np.int32)
+
+    def loss_fn(p, batch):
+        return model.loss(p, {"tokens": batch})
+
+    ccfg = ConsensusConfig(gamma0=0.3, inner_steps=4, inner_lr=0.05)
+    mesh = Mesh(np.array(jax.devices()).reshape(n_rep), ("data",))
+
+    def run(tokens):
+        batch = tokens[0]
+        state, lg = consensus_init(loss_fn, params, batch, ccfg, n_rep)
+
+        def body(s, _):
+            s = consensus_step(loss_fn, s, batch, ccfg, lg)
+            metrics = (consensus_gap(s),
+                       jax.lax.pmean(loss_fn(s.z_bar, batch), "data"))
+            return s, metrics
+
+        state, (gaps, losses) = jax.lax.scan(body, state, jnp.arange(steps))
+        return state.z_bar, gaps, losses
+
+    f = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=(P("data"),),
+                              out_specs=(P(), P(), P())))
+    z, gaps, losses = f(jnp.asarray(toks))
+    print(f"{'iter':>5s} {'consensus gap':>14s} {'mean loss':>10s}")
+    for k in range(0, steps, 10):
+        print(f"{k:5d} {float(gaps[k]):14.3e} {float(losses[k]):10.4f}")
+    print(f"{steps:5d} {float(gaps[-1]):14.3e} {float(losses[-1]):10.4f}")
+    assert float(gaps[-1]) < float(gaps[0]), "consensus must tighten"
+    assert float(losses[-1]) < float(losses[0]), "loss must improve"
+    print("\nreplicas converged to a consensus model (theta_i -> z) while "
+          "training — 1 psum per outer iteration.")
+
+
+if __name__ == "__main__":
+    main()

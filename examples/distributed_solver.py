@@ -1,0 +1,71 @@
+"""End-to-end driver: the paper's workload, distributed.
+
+Solves a scaled Table-1 dataset with every distribution strategy on 8
+simulated devices and compares iterate agreement + wall time + the
+per-iteration collective signature (the MR1-4/Spark comparison, Section 5
+of the paper, reproduced on a JAX mesh).
+
+    PYTHONPATH=src python examples/distributed_solver.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.paper_problems import PaperProblemConfig
+from repro.core.distributed import build_problem, make_step_fn, solve_distributed
+from repro.core.prox import get_prox
+from repro.core.solver import PDState, dense_ops, solve
+from repro.roofline.analysis import collective_stats
+from repro.sparse import coo_to_dense, make_lasso
+
+
+def main():
+    cfg = PaperProblemConfig(name="d1/100", m=10_000, n=1_000, nnz=100_000,
+                             reg=0.1, gamma0=100.0)
+    coo, b, x_true = make_lasso(cfg, seed=0)
+    d = coo_to_dense(coo)
+    lg = float((d ** 2).sum())
+    prox = get_prox("l1", reg=cfg.reg)
+    ref, _ = solve(dense_ops(jnp.asarray(d)), prox, b, lg, cfg.gamma0,
+                   iterations=100)
+
+    devs = np.array(jax.devices())
+    mesh1 = Mesh(devs.reshape(8), ("p",))
+    mesh2 = Mesh(devs.reshape(2, 4), ("data", "model"))
+    print(f"{'strategy':10s} {'alg':3s} {'err vs dense':>12s} {'t/iter':>9s} "
+          f"{'wire B/iter':>12s}  collective signature")
+    for strategy, mesh in [("rowpart", mesh1), ("colpart", mesh1),
+                           ("dualpart", mesh1), ("block2d", mesh2)]:
+        for alg in ("a1", "a2"):
+            t0 = time.perf_counter()
+            xbar, state = solve_distributed(coo, b, prox, mesh, strategy,
+                                            gamma0=cfg.gamma0,
+                                            iterations=100, algorithm=alg)
+            dt = (time.perf_counter() - t0) / 100
+            err = float(jnp.max(jnp.abs(xbar - ref.xbar)))
+            problem = build_problem(coo, mesh, strategy)
+            step = make_step_fn(problem, prox, cfg.gamma0, algorithm=alg)
+            xs = jax.ShapeDtypeStruct((problem.n_pad,), jnp.float32)
+            ys = jax.ShapeDtypeStruct((problem.m_pad,), jnp.float32)
+            st = PDState(xbar=xs, xstar=xs, yhat=ys,
+                         gamma=jax.ShapeDtypeStruct((), jnp.float32),
+                         k=jax.ShapeDtypeStruct((), jnp.int32))
+            comp = step.lower(problem.operands, ys, st).compile()
+            cs = collective_stats(comp.as_text(), default_group=8)
+            sig = ",".join(f"{k.split('-')[-1]}:{v:.0f}"
+                           for k, v in sorted(cs.by_op.items()))
+            print(f"{strategy:10s} {alg:3s} {err:12.2e} {dt*1e3:7.1f}ms "
+                  f"{cs.wire_bytes:12.3e}  {sig}")
+    print("\nNote the A2 rows: fewer forward-op collectives per iteration — "
+          "the paper's linearity fusion, visible on the wire.")
+
+
+if __name__ == "__main__":
+    main()

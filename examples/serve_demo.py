@@ -1,0 +1,47 @@
+"""Batched serving demo: continuous batching over decode slots, three
+different architecture families sharing one engine.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.serve import Engine, Request
+
+
+def run_arch(arch: str, n_requests: int = 5, max_new: int = 8):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, slots=4, max_len=48)
+    eng.init_state(params)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(2, 8))
+        shape = (plen, cfg.num_codebooks) if cfg.num_codebooks else (plen,)
+        r = Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=shape).astype(np.int32),
+                    max_new_tokens=max_new)
+        reqs.append(r)
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in reqs)
+    print(f"[{arch:20s}] {n_requests} reqs, {toks} tokens, {dt:5.2f}s "
+          f"({toks/dt:6.1f} tok/s) sample={reqs[0].out[:4]}")
+
+
+def main():
+    for arch in ("qwen3-4b", "falcon-mamba-7b", "musicgen-medium"):
+        run_arch(arch)
+
+
+if __name__ == "__main__":
+    main()

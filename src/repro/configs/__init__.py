@@ -1,0 +1,50 @@
+"""Architecture & problem config registry.
+
+``get_config("minitron-8b")`` returns the exact assigned ModelConfig;
+``get_config("paper-lasso-d3")`` returns a PaperProblemConfig.
+"""
+from __future__ import annotations
+
+from repro.configs import paper_problems
+from repro.configs.base import (
+    SHAPES,
+    SMOKE_SHAPES,
+    ModelConfig,
+    PaperProblemConfig,
+    ShapeSpec,
+    applicable,
+    reduced,
+)
+
+_ARCH_MODULES = {
+    "minitron-8b": "minitron_8b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "qwen1.5-110b": "qwen15_110b",
+    "qwen3-4b": "qwen3_4b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "zamba2-7b": "zamba2_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+PAPER_IDS = tuple(f"paper-lasso-{d}" for d in paper_problems.ALL_DATASETS)
+
+
+def get_config(arch: str):
+    if arch.startswith("paper-lasso-"):
+        return paper_problems.get_config(arch.removeprefix("paper-lasso-"))
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS + PAPER_IDS}")
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.get_config()
+
+
+__all__ = [
+    "ARCH_IDS", "PAPER_IDS", "SHAPES", "SMOKE_SHAPES", "ModelConfig",
+    "PaperProblemConfig", "ShapeSpec", "applicable", "get_config", "reduced",
+]

@@ -1,0 +1,215 @@
+"""Config dataclasses for the repro framework.
+
+Two kinds of workload are first-class:
+  * ``ModelConfig``  — an LM-family transformer (the 10 assigned architectures).
+  * ``PaperProblemConfig`` — a sparse primal-dual problem instance (the paper's
+    own workload, datasets D1..D6 from Table 1).
+
+Shapes (``ShapeSpec``) are the assigned input-shape set; ``applicable()``
+encodes the skip rules (long_500k only for sub-quadratic archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters. Field defaults = "feature absent"."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                   # 0 for attention-free archs
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- attention options -------------------------------------------------
+    attn_bias: bool = False          # qwen1.5 QKV bias
+    qk_norm: bool = False            # qwen3 / olmoe per-head RMSNorm on q,k
+    rope_theta: float = 1.0e4
+
+    # --- FFN ----------------------------------------------------------------
+    activation: str = "swiglu"       # swiglu | relu2 | gelu
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim (d_ff used for dense layers)
+    first_dense_layers: int = 0      # deepseek-v3: first k layers are dense FFN
+
+    # --- MLA (deepseek) -----------------------------------------------------
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    mtp_depth: int = 0               # multi-token-prediction extra blocks (train aux loss)
+
+    # --- SSM ----------------------------------------------------------------
+    ssm_type: str = ""               # mamba1 | mamba2
+    ssm_state: int = 0
+    d_inner: int = 0                 # 0 -> 2 * d_model
+    conv_width: int = 4
+    dt_rank: int = 0                 # mamba1; 0 -> d_model // 16
+    mamba2_head_dim: int = 64
+    mamba2_n_groups: int = 1
+
+    # --- hybrid (zamba2) ----------------------------------------------------
+    attn_every: int = 0              # weight-shared attn block applied every N core blocks
+
+    # --- VLM ----------------------------------------------------------------
+    cross_attn_every: int = 0        # cross-attn layer inserted every N layers
+    num_image_tokens: int = 0        # stub frontend: precomputed image embeddings
+
+    # --- audio (musicgen) ----------------------------------------------------
+    num_codebooks: int = 0           # EnCodec codebooks; stub frontend sums embeddings
+
+    # --- numerics / training knobs -------------------------------------------
+    dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32" # bf16 for the 340B to fit one pod
+    remat: bool = True
+    microbatches_train: int = 8      # gradient-accumulation steps for train_4k
+    tie_embeddings: bool = False
+
+    # ------------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def resolved_d_inner(self) -> int:
+        return self.d_inner if self.d_inner else 2 * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank if self.dt_rank else max(1, self.d_model // 16)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports 500k-token decode (SSM / hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str                        # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """Skip rules: long_500k only for sub-quadratic archs (full-attention
+    O(S^2) at 524k is out of regime; recorded in DESIGN.md)."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperProblemConfig:
+    """A sparse primal-dual problem instance (paper Table 1 datasets).
+
+    min f(x)  s.t.  Ax = b, x in X   with A (m x n) uniform-sparse.
+    """
+
+    name: str
+    m: int
+    n: int
+    nnz: int
+    prox: str = "l1"                 # key into repro.core.prox registry
+    reg: float = 0.1                 # l1 weight etc.
+    gamma0: float = 1.0
+    iterations: int = 200
+    strategy: str = "dualpart"       # repro.core.distributed strategy
+    fused: bool = True               # A2 (fused) vs A1 (faithful)
+    dtype: str = "float32"
+
+    @property
+    def row_nnz(self) -> int:
+        return max(1, round(self.nnz / self.m))
+
+    @property
+    def col_nnz(self) -> int:
+        return max(1, round(self.nnz / self.n))
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests (shapes only matter
+    relative to each other; every structural feature stays enabled)."""
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        family=cfg.family,
+        num_layers=min(cfg.num_layers, 4) if cfg.attn_every == 0 else 2 * max(2, cfg.attn_every),
+        d_model=64,
+        num_heads=4 if cfg.num_heads else 0,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0,
+        d_ff=128,
+        vocab_size=256,
+        head_dim=16 if cfg.num_heads else 0,
+        attn_bias=cfg.attn_bias,
+        qk_norm=cfg.qk_norm,
+        activation=cfg.activation,
+        dtype="float32",
+        remat=False,
+        microbatches_train=1,
+    )
+    if cfg.num_experts:
+        kw.update(
+            num_experts=8,
+            num_experts_per_token=min(cfg.num_experts_per_token, 2),
+            num_shared_experts=min(cfg.num_shared_experts, 1),
+            moe_d_ff=32,
+            first_dense_layers=1 if cfg.first_dense_layers else 0,
+        )
+    if cfg.use_mla:
+        kw.update(
+            use_mla=True, q_lora_rank=32, kv_lora_rank=16,
+            qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+            mtp_depth=min(cfg.mtp_depth, 1),
+        )
+    if cfg.ssm_type:
+        kw.update(
+            ssm_type=cfg.ssm_type, ssm_state=min(cfg.ssm_state, 16),
+            d_inner=128, conv_width=cfg.conv_width, dt_rank=8,
+            mamba2_head_dim=32, mamba2_n_groups=1,
+        )
+    if cfg.attn_every:
+        kw.update(attn_every=2)
+    if cfg.cross_attn_every:
+        kw.update(cross_attn_every=2, num_image_tokens=16)
+    if cfg.num_codebooks:
+        kw.update(num_codebooks=cfg.num_codebooks)
+    return ModelConfig(**kw)
+
+
+SMOKE_SHAPES: dict[str, ShapeSpec] = {
+    "train": ShapeSpec("train_smoke", "train", 32, 2),
+    "prefill": ShapeSpec("prefill_smoke", "prefill", 32, 2),
+    "decode": ShapeSpec("decode_smoke", "decode", 32, 2),
+}

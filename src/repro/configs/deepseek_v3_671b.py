@@ -1,0 +1,36 @@
+"""DeepSeek-V3-671B [arXiv:2412.19437].
+
+61L d_model=7168 128H MLA; 1 shared + 256 routed experts top-8 (first 3 layers
+dense d_ff=18432); per-expert d_ff=2048; vocab=129280; MTP depth 1.
+MLA: q_lora 1536, kv_lora 512, qk_nope 128, qk_rope 64, v_head 128.
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        family="moe",
+        num_layers=61,
+        d_model=7168,
+        num_heads=128,
+        num_kv_heads=128,
+        d_ff=18432,                 # dense-layer FFN width
+        vocab_size=129280,
+        activation="swiglu",
+        num_experts=256,
+        num_experts_per_token=8,
+        num_shared_experts=1,
+        moe_d_ff=2048,
+        first_dense_layers=3,
+        use_mla=True,
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+        mtp_depth=1,
+        rope_theta=1.0e4,
+        opt_state_dtype="bfloat16",
+        microbatches_train=16,
+    )

@@ -1,0 +1,24 @@
+"""Falcon-Mamba-7B [arXiv:2410.05355] — pure Mamba-1, attention-free.
+
+64L d_model=4096, d_inner=8192, ssm_state=16, conv4, dt_rank=256, vocab=65024.
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b",
+        family="ssm",
+        num_layers=64,
+        d_model=4096,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=0,
+        vocab_size=65024,
+        ssm_type="mamba1",
+        ssm_state=16,
+        d_inner=8192,
+        conv_width=4,
+        dt_rank=256,
+        microbatches_train=4,
+    )

@@ -1,0 +1,25 @@
+"""Llama-3.2-11B-Vision [hf:meta-llama/Llama-3.2-11B-Vision].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256; cross-attention
+image layers every 5 decoder layers. The vision tower is a STUB: input_specs
+provides precomputed image-patch embeddings (B, 1600, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b",
+        family="vlm",
+        num_layers=40,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=128256,
+        activation="swiglu",
+        rope_theta=5.0e5,
+        cross_attn_every=5,
+        num_image_tokens=1600,
+        microbatches_train=4,
+    )

@@ -1,0 +1,21 @@
+"""Minitron-8B — width/depth-pruned Nemotron-4 [arXiv:2407.14679].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000, squared-ReLU MLP.
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b",
+        family="dense",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=16384,
+        vocab_size=256000,
+        activation="relu2",
+        rope_theta=1.0e4,
+        microbatches_train=4,
+    )

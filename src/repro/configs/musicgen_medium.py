@@ -1,0 +1,25 @@
+"""MusicGen-medium [arXiv:2306.05284] — decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048 per codebook;
+4 codebooks with the delay interleaving pattern. The EnCodec frontend is a
+STUB: inputs are the 4-codebook token ids; embeddings are summed; the head
+emits 4x2048 logits.
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        num_layers=48,
+        d_model=1536,
+        num_heads=24,
+        num_kv_heads=24,
+        d_ff=6144,
+        vocab_size=2048,
+        activation="gelu",
+        num_codebooks=4,
+        rope_theta=1.0e4,
+        microbatches_train=2,
+    )

@@ -1,0 +1,24 @@
+"""Nemotron-4-340B [arXiv:2402.16819].
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000, squared-ReLU.
+Optimizer moments kept in bf16 so (params + states) fit 16 GB/chip on a single
+16x16 pod; fp32 is used automatically when the `pod` axis shards the states.
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b",
+        family="dense",
+        num_layers=96,
+        d_model=18432,
+        num_heads=96,
+        num_kv_heads=8,
+        d_ff=73728,
+        vocab_size=256000,
+        activation="relu2",
+        rope_theta=1.0e4,
+        opt_state_dtype="bfloat16",
+        microbatches_train=16,
+    )

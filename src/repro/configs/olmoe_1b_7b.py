@@ -1,0 +1,26 @@
+"""OLMoE-1B-7B [arXiv:2409.02060].
+
+16L d_model=2048 16H (MHA kv=16) 64 experts top-8, per-expert d_ff=1024,
+vocab=50304, qk_norm.
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b",
+        family="moe",
+        num_layers=16,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=1024,
+        vocab_size=50304,
+        qk_norm=True,
+        activation="swiglu",
+        num_experts=64,
+        num_experts_per_token=8,
+        moe_d_ff=1024,
+        rope_theta=1.0e4,
+        microbatches_train=2,
+    )

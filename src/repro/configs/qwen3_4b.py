@@ -1,0 +1,23 @@
+"""Qwen3-4B [hf:Qwen/Qwen3 family].
+
+36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936, qk_norm, SwiGLU.
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b",
+        family="dense",
+        num_layers=36,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=9728,
+        vocab_size=151936,
+        qk_norm=True,
+        head_dim=128,
+        activation="swiglu",
+        rope_theta=1.0e6,
+        microbatches_train=4,
+    )

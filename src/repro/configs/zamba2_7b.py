@@ -1,0 +1,29 @@
+"""Zamba2-7B [arXiv:2411.15242] — hybrid Mamba-2 + weight-shared attention.
+
+81 core Mamba-2 blocks, d_model=3584; one weight-SHARED GQA attention block
+(32H kv=32 => MHA, d_ff=14336 for its paired MLP) applied every 6 core blocks.
+ssm_state=64. vocab=32000.
+"""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        family="hybrid",
+        num_layers=81,
+        d_model=3584,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=14336,
+        vocab_size=32000,
+        activation="swiglu",
+        ssm_type="mamba2",
+        ssm_state=64,
+        d_inner=7168,
+        conv_width=4,
+        mamba2_head_dim=64,
+        mamba2_n_groups=2,
+        attn_every=6,
+        microbatches_train=4,
+    )

@@ -1,0 +1,12 @@
+# The paper's primary contribution: the smoothed accelerated primal-dual
+# solver (A1 faithful / A2 fused schedules), its prox library, convergence
+# certificates, and the distributed execution strategies that map the
+# paper's Hadoop/Spark data-movement designs onto a JAX device mesh.
+from repro.core.gap import certificates
+from repro.core.prox import ProxOp, get_prox
+from repro.core.solver import (
+    PDState, SolverOps, a1_init, a1_step, a2_init, a2_step, beta_j,
+    dense_ops, ell_ops, gamma_j, solve, solve_tol, tau_k,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,131 @@
+"""Consensus-constrained training with the A2 primal-dual schedule.
+
+The paper lists *consensus optimization* among the motivating applications of
+(1). Here the constraint set is
+
+    min  sum_i f_i(theta_i)   s.t.  theta_i = z   for i = 1..P,
+
+written as Ax = b with x = (theta_1..theta_P, z), b = 0, and A the incidence
+operator (theta_i - z). Per coordinate, A^T A has eigenvalues {1, P+1}, so we
+use the exact Lg = ||A||^2 = P + 1 instead of the paper's loose column-sum
+(both are valid upper bounds; the exact one is free here — recorded in
+DESIGN.md as an adaptation).
+
+Everything in A2 is elementwise per parameter except:
+  * matvec      r_i = theta_i - z            (local on each data shard)
+  * rmatvec     (y_i, -psum_i y_i)           (ONE psum per iteration — the
+                                              2-barrier structure survives)
+  * the f_i prox — no closed form for a neural loss, so the primal
+    subproblem argmin f_i(t) + <zhat_i, t> + gamma/2 ||t - c||^2 is solved
+    INEXACTLY with a few SGD steps (warm-started at the previous theta*_i).
+
+This is the bridge that makes the paper's solver a first-class *trainer*
+feature: each data-parallel shard trains its own replica; the dual variables
+enforce consensus asymptotically — an alternative to lockstep gradient
+all-reduce whose per-iteration wire cost is ONE psum of the parameters
+regardless of how many local prox steps are taken (vs. one all-reduce per
+SGD step for DDP): the paper's "reduce synchronization points" idea applied
+to distributed training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver import beta_j, gamma_j, tau_k
+
+tmap = jax.tree_util.tree_map
+
+
+class ConsensusState(NamedTuple):
+    theta_bar: dict      # xbar, replica block (per-shard)
+    theta_star: dict     # xstar, replica block
+    z_bar: dict          # xbar, consensus block (replicated)
+    z_star: dict         # xstar, consensus block
+    yhat: dict           # dual (per-shard, theta-shaped)
+    k: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusConfig:
+    gamma0: float = 1.0
+    c: float = 3.0
+    inner_steps: int = 4         # inexact-prox SGD steps
+    inner_lr: float = 0.1
+    axis: str = "data"           # replica axis name inside shard_map
+
+
+def _inexact_prox(loss_fn, batch, zhat, gamma, center, init, cfg):
+    """~argmin f(t; batch) + <zhat, t> + gamma/2 ||t - center||^2 via SGD."""
+
+    def phi_grad(t):
+        g = jax.grad(loss_fn)(t, batch)
+        return tmap(lambda gi, zi, ti, ci: gi + zi + gamma * (ti - ci),
+                    g, zhat, t, center)
+
+    def body(_, t):
+        g = phi_grad(t)
+        return tmap(lambda ti, gi: ti - cfg.inner_lr / (1.0 + gamma) * gi, t, g)
+
+    return jax.lax.fori_loop(0, cfg.inner_steps, body, init)
+
+
+def consensus_init(loss_fn: Callable, params, batch, cfg: ConsensusConfig,
+                   num_replicas: int):
+    """A2 init (steps 7-9): tau_{-1}=1, yhat^{-1}=0; one primal block."""
+    lg = float(num_replicas + 1)
+    gamma0 = jnp.asarray(cfg.gamma0, jnp.float32)
+    zeros = tmap(jnp.zeros_like, params)
+    # zhat = A^T yhat^{-1} = 0; center = current params (warm center)
+    theta_star = _inexact_prox(loss_fn, batch, zeros, gamma0, params, params,
+                               cfg)
+    z_star = tmap(lambda u: jax.lax.pmean(u, cfg.axis), theta_star)
+    return ConsensusState(theta_bar=theta_star, theta_star=theta_star,
+                          z_bar=z_star, z_star=z_star,
+                          yhat=tmap(jnp.zeros_like, params),
+                          k=jnp.zeros((), jnp.int32)), lg
+
+
+def consensus_step(loss_fn: Callable, state: ConsensusState, batch,
+                   cfg: ConsensusConfig, lg: float) -> ConsensusState:
+    """One A2 iteration on the consensus problem (runs inside shard_map)."""
+    c = cfg.c
+    k = state.k.astype(jnp.float32)
+    tk = tau_k(k, c)
+    bk = beta_j(k, cfg.gamma0, lg, c)
+    gk = gamma_j(k, cfg.gamma0, c)
+    gk_eff = jnp.where(state.k == 0, lg / beta_j(0, cfg.gamma0, lg, c), gk)
+    c0 = 1.0 - tk
+    c1 = (1.0 - tk) * gk_eff / lg
+    c2 = tk / bk
+    # eq (15) specialization: A(c1 x* + c2 xbar) = (c1 th*_i + c2 thbar_i)
+    #                                            - (c1 z*   + c2 zbar), b = 0
+    yhat = tmap(
+        lambda yh, ts, tb, zs, zb:
+            c0 * yh + (c1 * ts + c2 * tb) - (c1 * zs + c2 * zb),
+        state.yhat, state.theta_star, state.theta_bar, state.z_star,
+        state.z_bar)
+    # backward: zhat_theta_i = yhat_i ; zhat_z = -sum_i yhat_i   [barrier]
+    zhat_z = tmap(lambda u: -jax.lax.psum(u, cfg.axis), yhat)
+    gk1 = gamma_j(k + 1.0, cfg.gamma0, c)
+    # primal blocks: inexact prox for theta_i (center = consensus z_bar);
+    # exact prox for z (f_z = 0): z* = center - zhat/gamma
+    theta_star = _inexact_prox(loss_fn, batch, yhat, gk1, state.z_bar,
+                               state.theta_star, cfg)
+    z_star = tmap(lambda zb, zz: zb - zz / gk1, state.z_bar, zhat_z)
+    theta_bar = tmap(lambda b_, s: (1.0 - tk) * b_ + tk * s,
+                     state.theta_bar, theta_star)
+    z_bar = tmap(lambda b_, s: (1.0 - tk) * b_ + tk * s, state.z_bar, z_star)
+    return ConsensusState(theta_bar=theta_bar, theta_star=theta_star,
+                          z_bar=z_bar, z_star=z_star, yhat=yhat,
+                          k=state.k + 1)
+
+
+def consensus_gap(state: ConsensusState, axis: str = "data") -> jax.Array:
+    """||A xbar||^2 = sum_i ||theta_bar_i - z_bar||^2 (psum'd feasibility)."""
+    sq = tmap(lambda t, z: jnp.sum((t - z) ** 2), state.theta_bar, state.z_bar)
+    total = jax.tree_util.tree_reduce(jnp.add, sq)
+    return jax.lax.psum(total, axis)

@@ -1,0 +1,300 @@
+"""Distributed execution strategies for the primal-dual solver.
+
+Each strategy is a shard_map'd iteration whose collective signature mirrors
+one of the paper's Hadoop/Spark designs (DESIGN.md section 2):
+
+  rowpart   A row-sharded, x replicated, y row-sharded.
+            fwd: local;            bwd: psum(n)            ~ MR1/MR3
+  colpart   A^T row-sharded (column blocks of A), x col-sharded, y replicated.
+            fwd: psum(m);          bwd: local              ~ MR2 (transposed)
+  dualpart  BOTH copies cached (the Spark dual-RDD trick), x col-, y row-sharded.
+            fwd: reduce-scatter(m) bwd: reduce-scatter(n)  ~ Spark + MR4 combiner
+  block2d   A in a 2-D (data x model) block grid; x sharded over `model`,
+            y over `data`.  fwd: psum(m/R) over model; bwd: psum(n/C) over data.
+            The 1000+-node generalization (per-device wire bytes shrink with
+            BOTH mesh axes). `dual_copy=True` additionally stores each block's
+            transpose so the backward is gather-only (kernel-friendly) instead
+            of scatter-add — the paper's memory-for-network trade, per block.
+
+The solver body (repro.core.solver a1_step/a2_step) is reused verbatim inside
+shard_map: everything except the operators is elementwise, and the schedule
+scalars are computed redundantly per device — the "embarrassingly parallel
+except 2 barriers" structure of pseudocode A2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.prox import ProxOp
+from repro.core.solver import PDState, SolverOps, a1_init, a1_step, a2_init, a2_step
+from repro.sparse.formats import COO
+from repro.sparse.linalg import ell_matvec
+from repro.sparse.partition import (
+    _ceil_to, block_partitioned_ell, col_partitioned_ell, row_partitioned_ell,
+)
+
+STRATEGIES = ("rowpart", "colpart", "dualpart", "block2d", "replicated")
+
+
+@dataclasses.dataclass
+class DistProblem:
+    """Sharded operand bundle + the specs that drive shard_map."""
+
+    strategy: str
+    mesh: Mesh
+    axes: tuple[str, ...]            # 1 axis name, or (row_axis, col_axis)
+    operands: Any                    # pytree of global arrays (or SDS)
+    operand_specs: Any               # matching PartitionSpec pytree
+    x_spec: P
+    y_spec: P
+    m: int                           # unpadded sizes
+    n: int
+    m_pad: int
+    n_pad: int
+    lg: float | jax.Array
+    dual_copy: bool = False
+
+    @property
+    def state_specs(self) -> PDState:
+        return PDState(xbar=self.x_spec, xstar=self.x_spec, yhat=self.y_spec,
+                       gamma=P(), k=P())
+
+
+# ---------------------------------------------------------------------------
+# Operand construction (host side, real arrays)
+# ---------------------------------------------------------------------------
+
+def _scatter_rmatvec(vals, cols, y_loc, n):
+    """z = A_loc^T y_loc from a row-ELL block with column indices into [0, n).
+    Accumulates in y's dtype (fp32) so bf16-compressed operands stay exact."""
+    contrib = vals.astype(y_loc.dtype) * y_loc[:, None]
+    return jnp.zeros((n,), y_loc.dtype).at[cols.reshape(-1)].add(
+        contrib.reshape(-1))
+
+
+def _scatter_matvec(vals_t, rows, x_loc, m):
+    """y = A_loc x_loc from a col-ELL block (ELL of A^T) with row indices."""
+    contrib = vals_t.astype(x_loc.dtype) * x_loc[:, None]
+    return jnp.zeros((m,), x_loc.dtype).at[rows.reshape(-1)].add(
+        contrib.reshape(-1))
+
+
+def build_problem(coo: COO, mesh: Mesh, strategy: str = "dualpart",
+                  axes: tuple[str, ...] | None = None,
+                  dual_copy: bool = True) -> DistProblem:
+    """Partition a concrete COO matrix for `strategy` on `mesh`."""
+    if strategy not in STRATEGIES:
+        raise KeyError(f"unknown strategy {strategy!r}")
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axes is None:
+        axes = tuple(mesh.axis_names[-2:]) if strategy == "block2d" \
+            else (mesh.axis_names[-1],)
+
+    lg = float(np.sum(np.asarray(coo.vals) ** 2))  # sum_i ||A_i||^2 (paper 1-2)
+
+    if strategy == "replicated":
+        ell = row_partitioned_ell(coo, 1)
+        ellt = col_partitioned_ell(coo, 1)
+        return DistProblem(strategy, mesh, axes,
+                           operands=dict(a=(ell.vals, ell.cols),
+                                         at=(ellt.vals, ellt.cols)),
+                           operand_specs=dict(a=(P(), P()), at=(P(), P())),
+                           x_spec=P(), y_spec=P(), m=coo.m, n=coo.n,
+                           m_pad=ell.vals.shape[0], n_pad=ellt.vals.shape[0],
+                           lg=lg)
+
+    if strategy == "rowpart":
+        p = axis_sizes[axes[0]]
+        ell = row_partitioned_ell(coo, p)
+        return DistProblem(strategy, mesh, axes,
+                           operands=dict(a=(ell.vals, ell.cols)),
+                           operand_specs=dict(a=(P(axes[0]), P(axes[0]))),
+                           x_spec=P(), y_spec=P(axes[0]), m=coo.m, n=coo.n,
+                           m_pad=ell.vals.shape[0], n_pad=coo.n, lg=lg)
+
+    if strategy == "colpart":
+        p = axis_sizes[axes[0]]
+        ellt = col_partitioned_ell(coo, p)
+        return DistProblem(strategy, mesh, axes,
+                           operands=dict(at=(ellt.vals, ellt.cols)),
+                           operand_specs=dict(at=(P(axes[0]), P(axes[0]))),
+                           x_spec=P(axes[0]), y_spec=P(), m=coo.m, n=coo.n,
+                           m_pad=coo.m, n_pad=ellt.vals.shape[0], lg=lg)
+
+    if strategy == "dualpart":
+        p = axis_sizes[axes[0]]
+        ell = row_partitioned_ell(coo, p)
+        ellt = col_partitioned_ell(coo, p)
+        m_pad = _ceil_to(ell.vals.shape[0], p)
+        n_pad = _ceil_to(ellt.vals.shape[0], p)
+        return DistProblem(strategy, mesh, axes,
+                           operands=dict(a=(ell.vals, ell.cols),
+                                         at=(ellt.vals, ellt.cols)),
+                           operand_specs=dict(a=(P(axes[0]), P(axes[0])),
+                                              at=(P(axes[0]), P(axes[0]))),
+                           x_spec=P(axes[0]), y_spec=P(axes[0]),
+                           m=coo.m, n=coo.n, m_pad=m_pad, n_pad=n_pad, lg=lg)
+
+    # block2d
+    ra, ca = axes
+    R, C = axis_sizes[ra], axis_sizes[ca]
+    vals, cols, m_pad, n_pad = block_partitioned_ell(coo, R, C)
+    operands = dict(a=(vals, cols))
+    specs = dict(a=(P(ra, ca), P(ra, ca)))
+    if dual_copy:
+        # per-block transpose: ELL of block^T with block-local row indices
+        vt, ct, _, _ = block_partitioned_ell(
+            COO(rows=coo.cols, cols=coo.rows, vals=coo.vals,
+                m=n_pad, n=m_pad), C, R)
+        # grid of A^T is (C, R); transpose grid dims so device (i,j) holds
+        # block^T of its own block
+        operands["at"] = (jnp.swapaxes(vt, 0, 1), jnp.swapaxes(ct, 0, 1))
+        specs["at"] = (P(ra, ca), P(ra, ca))
+    return DistProblem(strategy, mesh, axes, operands=operands,
+                       operand_specs=specs, x_spec=P(ca), y_spec=P(ra),
+                       m=coo.m, n=coo.n, m_pad=m_pad, n_pad=n_pad, lg=lg,
+                       dual_copy=dual_copy)
+
+
+# ---------------------------------------------------------------------------
+# Local operator bundles (run INSIDE shard_map)
+# ---------------------------------------------------------------------------
+
+def make_local_ops(problem: DistProblem, operands) -> SolverOps:
+    s, axes = problem.strategy, problem.axes
+
+    if s == "replicated":
+        av, ac = operands["a"]
+        atv, atc = operands["at"]
+        return SolverOps(
+            matvec=lambda x: jnp.sum(av * jnp.take(x, ac, axis=0), axis=1),
+            rmatvec=lambda y: jnp.sum(
+                atv * jnp.take(jnp.pad(y, (0, 0)), atc, axis=0), axis=1))
+
+    if s == "rowpart":
+        av, ac = operands["a"]          # local (mb, k), global cols
+        ax = axes[0]
+        return SolverOps(
+            matvec=lambda x: jnp.sum(av * jnp.take(x, ac, axis=0), axis=1),
+            rmatvec=lambda y: jax.lax.psum(
+                _scatter_rmatvec(av, ac, y, problem.n_pad), ax))
+
+    if s == "colpart":
+        atv, atc = operands["at"]       # local (nb, kc), global rows
+        ax = axes[0]
+        return SolverOps(
+            matvec=lambda x: jax.lax.psum(
+                _scatter_matvec(atv, atc, x, problem.m_pad), ax),
+            rmatvec=lambda y: jnp.sum(atv * jnp.take(y, atc, axis=0), axis=1))
+
+    if s == "dualpart":
+        av, ac = operands["a"]          # row block, global cols
+        atv, atc = operands["at"]       # col block (ELL of A^T), global rows
+        ax = axes[0]
+
+        def matvec(x_loc):              # partial over my columns -> RS to rows
+            y_part = _scatter_matvec(atv, atc, x_loc, problem.m_pad)
+            return jax.lax.psum_scatter(y_part, ax, scatter_dimension=0,
+                                        tiled=True)
+
+        def rmatvec(y_loc):             # partial over my rows -> RS to cols
+            z_part = _scatter_rmatvec(av, ac, y_loc, problem.n_pad)
+            return jax.lax.psum_scatter(z_part, ax, scatter_dimension=0,
+                                        tiled=True)
+
+        return SolverOps(matvec=matvec, rmatvec=rmatvec)
+
+    # block2d: operands carry a leading (1, 1) block index -> squeeze
+    ra, ca = axes
+    av, ac = (o[0, 0] for o in operands["a"])
+
+    def matvec(x_loc):                  # (nb,) -> (mb,): gather + psum(model)
+        return jax.lax.psum(jnp.sum(av * jnp.take(x_loc, ac, axis=0), axis=1),
+                            ca)
+
+    if problem.dual_copy:
+        atv, atc = (o[0, 0] for o in operands["at"])
+
+        def rmatvec(y_loc):             # gather-only backward (kernel-friendly)
+            return jax.lax.psum(
+                jnp.sum(atv * jnp.take(y_loc, atc, axis=0), axis=1), ra)
+    else:
+        def rmatvec(y_loc):             # scatter-add backward
+            nb = problem.n_pad // problem.mesh.devices.shape[
+                problem.mesh.axis_names.index(ca)]
+            return jax.lax.psum(_scatter_rmatvec(av, ac, y_loc, nb), ra)
+
+    return SolverOps(matvec=matvec, rmatvec=rmatvec)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+def _pad_to(v, size):
+    return jnp.pad(v, (0, size - v.shape[0])) if size > v.shape[0] else v
+
+
+def make_solve_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
+                  iterations: int, algorithm: str = "a2", c: float = 3.0):
+    """Returns jit(shard_map(full solve)): (operands, b_padded) -> PDState.
+
+    The whole iteration loop lives inside one shard_map so operands stay
+    device-resident across iterations — the RDD-persistence analogue."""
+    init_fn = a2_init if algorithm == "a2" else a1_init
+    step_fn = a2_step if algorithm == "a2" else a1_step
+    nloc = problem.n_pad
+    for ax in (problem.x_spec or ()):
+        if ax is not None:
+            nloc //= problem.mesh.devices.shape[problem.mesh.axis_names.index(ax)]
+
+    def local_solve(operands, b):
+        ops = make_local_ops(problem, operands)
+        lg = jnp.asarray(problem.lg, b.dtype)
+        state = init_fn(ops, prox, b, lg, gamma0, c, n=nloc)
+        state = jax.lax.fori_loop(
+            0, iterations,
+            lambda _, s: step_fn(ops, prox, b, lg, gamma0, s, c), state)
+        return state
+
+    mapped = jax.shard_map(
+        local_solve, mesh=problem.mesh,
+        in_specs=(problem.operand_specs, problem.y_spec),
+        out_specs=problem.state_specs)
+    return jax.jit(mapped)
+
+
+def make_step_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
+                 algorithm: str = "a2", c: float = 3.0):
+    """One shard_map'd iteration (the dry-run / roofline unit)."""
+    step_fn = a2_step if algorithm == "a2" else a1_step
+
+    def local_step(operands, b, state):
+        ops = make_local_ops(problem, operands)
+        lg = jnp.asarray(problem.lg, b.dtype)
+        return step_fn(ops, prox, b, lg, gamma0, state, c)
+
+    mapped = jax.shard_map(
+        local_step, mesh=problem.mesh,
+        in_specs=(problem.operand_specs, problem.y_spec, problem.state_specs),
+        out_specs=problem.state_specs)
+    return jax.jit(mapped)
+
+
+def solve_distributed(coo: COO, b, prox: ProxOp, mesh: Mesh,
+                      strategy: str = "dualpart", gamma0: float = 1.0,
+                      iterations: int = 100, algorithm: str = "a2",
+                      dual_copy: bool = True):
+    """End-to-end convenience: partition, solve, return (xbar[:n], state)."""
+    problem = build_problem(coo, mesh, strategy, dual_copy=dual_copy)
+    solve_fn = make_solve_fn(problem, prox, gamma0, iterations, algorithm)
+    bp = _pad_to(b, problem.m_pad)
+    state = solve_fn(problem.operands, bp)
+    return state.xbar[:problem.n], state

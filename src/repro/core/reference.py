@@ -1,0 +1,62 @@
+"""Pure-numpy A1 oracle — the paper's "Matlab reference" role.
+
+Deliberately written as a line-by-line transcription of pseudocode A1 (no
+closed-form schedule reuse, explicit beta recurrence) so the JAX solvers are
+checked against an *independent* implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def soft(v, thr):
+    return np.sign(v) * np.maximum(np.abs(v) - thr, 0.0)
+
+
+def a1_reference(a: np.ndarray, b: np.ndarray, reg: float, gamma0: float,
+                 iterations: int, c_bar: float = 1.0,
+                 record: bool = False):
+    """A1 with f = reg*||x||_1, X = R^n, zero center points."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    m, n = a.shape
+    # Init (steps 1-7)
+    lg_i = (a * a).sum(axis=0)                # ||A_i||_2^2 per column
+    lg = lg_i.sum()
+    c = max(3.0, c_bar)
+    tau = c / (c + 2.0)
+    beta = 3.0 * c * c * lg / ((c + 2.0) ** 2 * gamma0)
+    # eq (3): xbar0 = argmin f + <A^T yc, x> + gamma0/2 ||x||^2, yc = 0
+    xbar = soft(np.zeros(n), reg / gamma0)
+    ybar = (a @ xbar - b) / beta              # eq (4)
+    xstar = xbar.copy()
+    hist = []
+    for k in range(iterations):
+        tau = c / (k + c + 2.0)               # eq (5)
+        gamma_next = gamma0 * (c + 2.0) / (k + c + 3.0)
+        ystar = (a @ xbar - b) / beta         # eq (6)
+        yhat = (1.0 - tau) * ybar + tau * ystar
+        zhat = a.T @ yhat                     # eq (7)
+        xstar = soft(-zhat / gamma_next, reg / gamma_next)   # eq (8), xc = 0
+        xbar = (1.0 - tau) * xbar + tau * xstar
+        ybar = yhat + (gamma_next / lg) * (a @ xstar - b)    # eq (9)
+        beta = lg * c * c * (k + c + 4.0) / (
+            gamma0 * (c + 2.0) * (k + c + 3.0) * (k + 3.0))  # eq (10)
+        if record:
+            hist.append(dict(k=k + 1,
+                             feasibility=float(np.linalg.norm(a @ xbar - b)),
+                             objective=float(reg * np.abs(xbar).sum()),
+                             gap=smoothed_gap(a, b, reg, xbar, ybar,
+                                              gamma_next, beta)))
+    return dict(xbar=xbar, xstar=xstar, ybar=ybar, lg=lg, history=hist)
+
+
+def smoothed_gap(a, b, reg, xbar, ybar, gamma, beta) -> float:
+    """G_{gamma,beta}(w) = f_beta(xbar) - g_gamma(ybar)  (Section 1)."""
+    r = a @ xbar - b
+    f_beta = reg * np.abs(xbar).sum() + (r @ r) / (2.0 * beta)
+    z = a.T @ ybar
+    xg = soft(-z / gamma, reg / gamma)
+    g_gamma = (reg * np.abs(xg).sum() + (a @ xg - b) @ ybar
+               + 0.5 * gamma * (xg @ xg))
+    return float(f_beta - g_gamma)

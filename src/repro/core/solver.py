@@ -1,0 +1,237 @@
+"""The paper's primal-dual algorithms A1 (faithful) and A2 (fused).
+
+Problem:  min f(x)  s.t.  Ax = b, x in X,   f/X p-decomposable,
+smoothed with d_S(x, xc) = 1/2||x - xc||^2 and b_y(y) = 1/2||y||^2.
+
+Parameter schedules (closed forms; c = max(3, c_bar) = 3):
+    tau_k   = c / (k + c + 2)
+    gamma_j = gamma0 (c+2) / (j + c + 2)                      (j >= 0)
+    beta_j  = Lg c^2 (j+c+3) / (gamma0 (c+2)(j+c+2)(j+2))     (j >= 0)
+(gamma_0 = gamma0 and beta_0 = 3 c^2 Lg /((c+2)^2 gamma0) fall out of the
+closed forms — the paper's init steps 5-6.)
+
+A1 per iteration: 2 forward + 1 backward applications, >=4 sync points.
+A2 per iteration: 1 forward (on the linearity-combined vector) + 1 backward,
+2 sync points — the paper's system contribution. Both produce *identical*
+iterates (verified in tests, mirroring the paper's Matlab check).
+
+The operator bundle ``SolverOps`` abstracts the execution substrate: plain
+jnp (reference), Pallas kernels (fused HBM-pass versions), or shard_map'ped
+distributed operators (repro.core.distributed) — the solver body is reused
+verbatim inside shard_map, since everything but the operators is elementwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import ProxOp
+
+
+# --------------------------------------------------------------------------
+# Parameter schedules
+# --------------------------------------------------------------------------
+
+def tau_k(k, c: float = 3.0):
+    return c / (k + c + 2.0)
+
+
+def gamma_j(j, gamma0: float, c: float = 3.0):
+    return gamma0 * (c + 2.0) / (j + c + 2.0)
+
+
+def beta_j(j, gamma0: float, lg, c: float = 3.0):
+    return lg * c * c * (j + c + 3.0) / (gamma0 * (c + 2.0) * (j + c + 2.0) * (j + 2.0))
+
+
+# --------------------------------------------------------------------------
+# Operator bundle
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolverOps:
+    """matvec: x -> Ax;  rmatvec: y -> A^T y.
+
+    fused_dual(yhat, xstar, xbar, b, c0, c1, c2, c3)
+        = c0*yhat + A(c1*xstar + c2*xbar) - c3*b     (eq. 15, one A pass)
+    prox_update(prox, zhat, gamma, tau, xbar, xc) -> (xstar_new, xbar_new)
+        fused prox + heavy-ball averaging (paper step 14 inner block).
+    Defaults compose from matvec; kernel/distributed backends override.
+    """
+
+    matvec: Callable
+    rmatvec: Callable
+    fused_dual: Optional[Callable] = None
+    prox_update: Optional[Callable] = None
+
+    def dual(self, yhat, xstar, xbar, b, c0, c1, c2, c3):
+        if self.fused_dual is not None:
+            return self.fused_dual(yhat, xstar, xbar, b, c0, c1, c2, c3)
+        u = c1 * xstar + c2 * xbar
+        return c0 * yhat + self.matvec(u) - c3 * b
+
+    def primal(self, prox: ProxOp, zhat, gamma, tau, xbar, xc):
+        if self.prox_update is not None:
+            return self.prox_update(prox, zhat, gamma, tau, xbar, xc)
+        xstar = prox.apply(zhat, gamma, xc)
+        return xstar, (1.0 - tau) * xbar + tau * xstar
+
+
+class PDState(NamedTuple):
+    """A2 carry. For A1, ybar additionally carried (yhat reused as scratch)."""
+    xbar: jax.Array
+    xstar: jax.Array
+    yhat: jax.Array      # A2: yhat^{k-1};  A1: ybar^k
+    gamma: jax.Array     # gamma used to produce current xstar
+    k: jax.Array
+
+
+# --------------------------------------------------------------------------
+# A1 — faithful pseudocode
+# --------------------------------------------------------------------------
+
+def a1_init(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float, c: float = 3.0,
+            xc=None, yc=None, n: int | None = None):
+    n = n if n is not None else ops.rmatvec(jnp.zeros_like(b)).shape[0]
+    xc = jnp.zeros(n, b.dtype) if xc is None else xc
+    yc = jnp.zeros_like(b) if yc is None else yc
+    beta0 = beta_j(0, gamma0, lg, c)
+    zc = ops.rmatvec(yc)
+    xbar0 = prox.apply(zc, jnp.asarray(gamma0, b.dtype), xc)      # eq (3)
+    ybar0 = (ops.matvec(xbar0) - b) / beta0                        # eq (4)
+    return PDState(xbar=xbar0, xstar=xbar0, yhat=ybar0,
+                   gamma=jnp.asarray(gamma0, b.dtype),
+                   k=jnp.zeros((), jnp.int32))
+
+
+def a1_step(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float,
+            state: PDState, c: float = 3.0, xc=None) -> PDState:
+    k = state.k.astype(b.dtype)
+    tk = tau_k(k, c)
+    gk1 = gamma_j(k + 1.0, gamma0, c)
+    bk = beta_j(k, gamma0, lg, c)
+    # step 10: yhat = (1-t) ybar + t * (A xbar - b)/beta_k      [2 syncs: matvec]
+    ystar = (ops.matvec(state.xbar) - b) / bk
+    yhat = (1.0 - tk) * state.yhat + tk * ystar
+    # steps 11-12: zhat = A^T yhat ; prox ; averaging
+    zhat = ops.rmatvec(yhat)
+    xc = jnp.zeros_like(zhat) if xc is None else xc
+    xstar, xbar = ops.primal(prox, zhat, gk1, tk, state.xbar, xc)
+    # step 13: ybar^{k+1} = yhat + (gamma_{k+1}/Lg)(A xstar - b)  [2nd forward]
+    ybar = yhat + (gk1 / lg) * (ops.matvec(xstar) - b)
+    return PDState(xbar=xbar, xstar=xstar, yhat=ybar, gamma=gk1,
+                   k=state.k + 1)
+
+
+# --------------------------------------------------------------------------
+# A2 — optimized parallel execution (the paper's contribution)
+# --------------------------------------------------------------------------
+
+def a2_init(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float, c: float = 3.0,
+            xc=None, yc=None, n: int | None = None):
+    """Steps 7-9: k=-1, tau_{-1}=1, yhat^{-1}=yc; one primal block; yhat:=0."""
+    n = n if n is not None else ops.rmatvec(jnp.zeros_like(b)).shape[0]
+    xc = jnp.zeros(n, b.dtype) if xc is None else xc
+    yc = jnp.zeros_like(b) if yc is None else yc
+    zc = ops.rmatvec(yc)
+    gamma0_ = jnp.asarray(gamma0, b.dtype)
+    xstar, _ = ops.primal(prox, zc, gamma0_, jnp.asarray(1.0, b.dtype),
+                          jnp.zeros(n, b.dtype), xc)
+    # tau_{-1} = 1  =>  xbar^0 = xstar
+    return PDState(xbar=xstar, xstar=xstar, yhat=jnp.zeros_like(b),
+                   gamma=gamma0_, k=jnp.zeros((), jnp.int32))
+
+
+def a2_step(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float,
+            state: PDState, c: float = 3.0, xc=None) -> PDState:
+    """One fused iteration: 1 forward + 1 backward + 1 prox, 2 sync barriers."""
+    k = state.k.astype(b.dtype)
+    tk = tau_k(k, c)
+    bk = beta_j(k, gamma0, lg, c)
+    # eq (13): for k=0 the gamma in eq (15) is Lg/beta_0, not the input gamma0
+    gk_eff = jnp.where(state.k == 0, lg / beta_j(0, gamma0, lg, c), state.gamma)
+    # eq (15): ONE forward application on the combined vector  [barrier 1]
+    c0 = 1.0 - tk
+    c1 = (1.0 - tk) * gk_eff / lg
+    c2 = tk / bk
+    c3 = c1 + c2
+    yhat = ops.dual(state.yhat, state.xstar, state.xbar, b, c0, c1, c2, c3)
+    # step 14: backward + prox + averaging                      [barrier 2]
+    gk1 = gamma_j(k + 1.0, gamma0, c)
+    zhat = ops.rmatvec(yhat)
+    xc = jnp.zeros_like(zhat) if xc is None else xc
+    xstar, xbar = ops.primal(prox, zhat, gk1, tk, state.xbar, xc)
+    return PDState(xbar=xbar, xstar=xstar, yhat=yhat, gamma=gk1,
+                   k=state.k + 1)
+
+
+# --------------------------------------------------------------------------
+# Drivers
+# --------------------------------------------------------------------------
+
+def solve(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
+          iterations: int = 100, algorithm: str = "a2", c: float = 3.0,
+          xc=None, yc=None, n: int | None = None, record_every: int = 0,
+          unroll: int = 1):
+    """Fixed-iteration solve via lax.scan. Returns (state, history|None).
+
+    history (when record_every>0): dict of per-record feasibility ||A xbar - b||,
+    objective f(xbar), and the iterate snapshots' k.
+    """
+    init = (a2_init if algorithm == "a2" else a1_init)(
+        ops, prox, b, lg, gamma0, c, xc=xc, yc=yc, n=n)
+    step = a2_step if algorithm == "a2" else a1_step
+
+    def body(state, _):
+        new = step(ops, prox, b, lg, gamma0, state, c)
+        rec = ()
+        if record_every:
+            feas = jnp.linalg.norm(ops.matvec(new.xbar) - b)
+            rec = (new.k, feas, prox.value(new.xbar))
+        return new, rec
+
+    final, recs = jax.lax.scan(body, init, None, length=iterations,
+                               unroll=unroll)
+    if record_every:
+        ks, feas, obj = recs
+        sel = slice(record_every - 1, None, record_every)
+        history = {"k": ks[sel], "feasibility": feas[sel], "objective": obj[sel]}
+        return final, history
+    return final, None
+
+
+def solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
+              max_iterations: int = 10_000, tol: float = 1e-6,
+              algorithm: str = "a2", c: float = 3.0, check_every: int = 8):
+    """Early-stopping solve (paper step 8/10 stopping_criterion):
+    relative feasibility ||A xbar - b|| / max(1, ||b||) < tol."""
+    init = (a2_init if algorithm == "a2" else a1_init)(ops, prox, b, lg, gamma0, c)
+    step = a2_step if algorithm == "a2" else a1_step
+    bnorm = jnp.maximum(jnp.linalg.norm(b), 1.0)
+
+    def cond(state):
+        feas = jnp.linalg.norm(ops.matvec(state.xbar) - b) / bnorm
+        return jnp.logical_and(state.k < max_iterations, feas >= tol)
+
+    def body(state):  # check_every inner steps per feasibility check
+        return jax.lax.fori_loop(
+            0, check_every, lambda _, s: step(ops, prox, b, lg, gamma0, s, c),
+            state)
+
+    return jax.lax.while_loop(cond, body, init)
+
+
+def dense_ops(a: jax.Array) -> SolverOps:
+    return SolverOps(matvec=lambda x: a @ x, rmatvec=lambda y: a.T @ y)
+
+
+def ell_ops(ell_a, ell_at) -> SolverOps:
+    """Single-device sparse ops from (ELL of A, ELL of A^T)."""
+    from repro.sparse.linalg import ell_matvec
+
+    return SolverOps(matvec=partial(ell_matvec, ell_a),
+                     rmatvec=partial(ell_matvec, ell_at))

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import Shardings, make_shardings, null_shardings
+
+__all__ = ["Shardings", "make_shardings", "null_shardings"]

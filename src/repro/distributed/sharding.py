@@ -1,0 +1,48 @@
+"""Logical-axis activation sharding: the glue between mesh-agnostic model
+code and a concrete mesh. Models annotate activations with LOGICAL axes
+("dp", "tp", "seq", "fsdp", "ep", None); `Shardings` resolves them through
+the same rules table used for parameters (repro.models.params.rules_for_mesh)
+and applies with_sharding_constraint. With mesh=None (single-device smoke
+tests) everything is a no-op.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Shardings:
+    mesh: Mesh | None
+    rules: dict
+
+    def spec(self, *logical) -> P:
+        return P(*[self.rules.get(a) if a is not None else None
+                   for a in logical])
+
+    def named(self, *logical) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def act(self, x, *logical):
+        """Constrain activation x to the resolved spec (no-op without mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(*logical))
+
+
+def null_shardings() -> Shardings:
+    return Shardings(mesh=None, rules={})
+
+
+def make_shardings(mesh: Mesh | None, overrides: dict | None = None) -> Shardings:
+    from repro.models.params import rules_for_mesh
+
+    if mesh is None:
+        return null_shardings()
+    rules = rules_for_mesh(mesh)
+    if overrides:
+        rules.update(overrides)
+    return Shardings(mesh=mesh, rules=rules)

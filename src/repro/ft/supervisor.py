@@ -1,0 +1,103 @@
+"""Fault-tolerance supervisor: heartbeats, straggler detection, restart.
+
+Hadoop gives the paper's system task-rerun and speculative execution for
+free; an SPMD JAX job has neither — a slow or dead host stalls every
+collective. The production equivalent (and what this module implements,
+host-side) is:
+
+  * Heartbeat: each host (or simulated worker) reports step completions;
+    a worker silent for `dead_after` seconds is declared dead.
+  * Straggler detection: a worker whose step latency exceeds
+    `straggler_factor` x the rolling median is flagged (the speculative-
+    execution criterion). The policy response at cluster scale is restart-
+    without-it (elastic shrink) from the last checkpoint, not task rerun —
+    recorded per event.
+  * run_with_restarts: wraps a step loop; on failure restores the latest
+    checkpoint and continues, up to `max_restarts`, optionally shrinking
+    the mesh via the caller-provided `rebuild` hook (elastic restore is
+    handled by repro.checkpoint — full logical arrays re-shard onto any
+    mesh).
+
+Tests drive it with an injectable clock and simulated failures; on a real
+cluster the heartbeat feed comes from per-host agents.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Callable
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    dead_after: float = 60.0            # s without heartbeat -> dead
+    straggler_factor: float = 2.0       # x median latency -> straggler
+    window: int = 32                    # rolling latency window
+    max_restarts: int = 3
+
+
+class Supervisor:
+    def __init__(self, cfg: SupervisorConfig | None = None, clock=time.monotonic):
+        self.cfg = cfg or SupervisorConfig()
+        self.clock = clock
+        self.last_beat: dict[str, float] = {}
+        self.latencies: dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=self.cfg.window))
+        self.events: list[dict] = []
+
+    def heartbeat(self, worker: str, step_latency: float | None = None):
+        self.last_beat[worker] = self.clock()
+        if step_latency is not None:
+            self.latencies[worker].append(step_latency)
+
+    def dead_workers(self) -> list[str]:
+        now = self.clock()
+        return [w for w, t in self.last_beat.items()
+                if now - t > self.cfg.dead_after]
+
+    def stragglers(self) -> list[str]:
+        meds = []
+        for lat in self.latencies.values():
+            if lat:
+                meds.append(sorted(lat)[len(lat) // 2])
+        if not meds:
+            return []
+        cluster_median = sorted(meds)[len(meds) // 2]
+        out = []
+        for w, lat in self.latencies.items():
+            if lat and sorted(lat)[len(lat) // 2] > \
+                    self.cfg.straggler_factor * cluster_median:
+                out.append(w)
+        return out
+
+    def check(self) -> dict:
+        """One policy evaluation; records and returns the decision."""
+        dead = self.dead_workers()
+        slow = self.stragglers()
+        decision = {"dead": dead, "stragglers": slow,
+                    "action": ("restart_without" if dead or slow else "none"),
+                    "time": self.clock()}
+        if dead or slow:
+            self.events.append(decision)
+        return decision
+
+
+def run_with_restarts(step_loop: Callable[[int], int],
+                      restore_fn: Callable[[], int],
+                      max_restarts: int = 3,
+                      on_restart: Callable[[int], None] | None = None) -> int:
+    """Run `step_loop(start_step) -> final_step`; on exception restore the
+    latest checkpoint (restore_fn -> start step) and retry."""
+    restarts = 0
+    start = restore_fn()
+    while True:
+        try:
+            return step_loop(start)
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            start = restore_fn()
+            if on_restart:
+                on_restart(restarts)

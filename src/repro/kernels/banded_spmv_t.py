@@ -1,0 +1,55 @@
+"""Backward operator  z = A^T @ y  over banded column-ELL, as a Pallas kernel.
+
+The hard part of A^T y on TPU: y (length m, up to 1e7 = 40 MB fp32) does NOT
+fit VMEM, so a flat column-ELL gather is impossible. TPU adaptation: bucket
+nonzeros into row *bands* of band_size rows so each band's y-slice fits VMEM,
+and make the band the minor grid dimension so the output column tile stays
+resident while the kernel accumulates over bands:
+
+    grid = (n // block_cols, num_bands)        # band minor => out revisited
+    z[j-tile] += sum_kb vals[band, j-tile] * y_band[rows[band, j-tile]]
+
+This is the memory-hierarchy answer to the same problem the paper's shuffle
+phase solves with per-reducer key grouping (MR2 Job2) — but with *bounded*
+staging (VMEM) instead of reducer spill files.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, rows_ref, y_ref, out_ref):
+    band = pl.program_id(1)
+
+    @pl.when(band == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[0]                        # (TN, kb)
+    rows = rows_ref[0]                        # (TN, kb) band-local int32
+    yb = y_ref[...]                           # (band_size,) VMEM slice
+    contrib = jnp.sum(vals.astype(jnp.float32)
+                      * jnp.take(yb, rows, axis=0).astype(jnp.float32), axis=1)
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+def banded_spmv_t_pallas(vals: jax.Array, rows: jax.Array, y: jax.Array,
+                         band_size: int, *, block_cols: int = 512,
+                         interpret: bool = True):
+    num_bands, n, kb = vals.shape
+    assert n % block_cols == 0, (n, block_cols)
+    assert y.shape[0] == num_bands * band_size
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block_cols, num_bands),
+        in_specs=[
+            pl.BlockSpec((1, block_cols, kb), lambda j, b: (b, j, 0)),
+            pl.BlockSpec((1, block_cols, kb), lambda j, b: (b, j, 0)),
+            pl.BlockSpec((band_size,), lambda j, b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((block_cols,), lambda j, b: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), y.dtype),
+        interpret=interpret,
+    )(vals, rows, y)

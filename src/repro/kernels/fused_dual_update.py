@@ -1,0 +1,57 @@
+"""Fused dual update (paper eq. 15) — the A2 linearity trick AS A KERNEL.
+
+    yhat_new = c0*yhat + A @ (c1*xstar + c2*xbar) - c3*b
+
+One HBM pass over A; the combined vector u = c1*xstar + c2*xbar is formed in
+VMEM per row tile and never materialized in HBM; the axpy epilogue
+(c0*yhat - c3*b) fuses into the same pass. This is the kernel-level version
+of the paper's observation that eq. 15 "is just one application of the
+forward matrix operator".
+
+Scalars (c0..c3) arrive as a (4,)-vector operand (per-iteration traced
+values, so they cannot be compile-time constants).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(coef_ref, vals_ref, cols_ref, xstar_ref, xbar_ref, yhat_ref,
+            b_ref, out_ref):
+    c = coef_ref[...].astype(jnp.float32)      # (4,)
+    u = (c[1] * xstar_ref[...].astype(jnp.float32)
+         + c[2] * xbar_ref[...].astype(jnp.float32))          # (n,) in VMEM
+    vals = vals_ref[...].astype(jnp.float32)                  # (TM, k)
+    gathered = jnp.take(u, cols_ref[...], axis=0)             # VMEM gather
+    au = jnp.sum(vals * gathered, axis=1)                     # (TM,)
+    out = (c[0] * yhat_ref[...].astype(jnp.float32) + au
+           - c[3] * b_ref[...].astype(jnp.float32))
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def fused_dual_update_pallas(coefs: jax.Array, vals: jax.Array,
+                             cols: jax.Array, xstar: jax.Array,
+                             xbar: jax.Array, yhat: jax.Array, b: jax.Array,
+                             *, block_rows: int = 512,
+                             interpret: bool = True):
+    m, k = vals.shape
+    assert m % block_rows == 0, (m, block_rows)
+    n = xstar.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), yhat.dtype),
+        interpret=interpret,
+    )(coefs, vals, cols, xstar, xbar, yhat, b)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (tested with assert_allclose)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(vals, cols, x):
+    g = jnp.take(x, cols, axis=0)
+    return jnp.sum(vals.astype(jnp.float32) * g.astype(jnp.float32),
+                   axis=1).astype(x.dtype)
+
+
+def banded_spmv_t_ref(vals, rows, y, band_size):
+    num_bands, n, kb = vals.shape
+    yb = y.reshape(num_bands, band_size)
+    out = jnp.zeros((n,), jnp.float32)
+    for b in range(num_bands):
+        g = jnp.take(yb[b], rows[b], axis=0)
+        out = out + jnp.sum(vals[b].astype(jnp.float32) * g.astype(jnp.float32),
+                            axis=1)
+    return out.astype(y.dtype)
+
+
+def fused_dual_update_ref(coefs, vals, cols, xstar, xbar, yhat, b):
+    c = coefs.astype(jnp.float32)
+    u = c[1] * xstar.astype(jnp.float32) + c[2] * xbar.astype(jnp.float32)
+    au = ell_spmv_ref(vals, cols, u).astype(jnp.float32)
+    out = c[0] * yhat.astype(jnp.float32) + au - c[3] * b.astype(jnp.float32)
+    return out.astype(yhat.dtype)
+
+
+def prox_update_ref(coefs, zhat, xbar, xc):
+    c = coefs.astype(jnp.float32)
+    gamma, tau, reg = c[0], c[1], c[2]
+    v = xc.astype(jnp.float32) - zhat.astype(jnp.float32) / gamma
+    xstar = jnp.sign(v) * jnp.maximum(jnp.abs(v) - reg / gamma, 0.0)
+    xbar_new = (1.0 - tau) * xbar.astype(jnp.float32) + tau * xstar
+    return xstar.astype(zhat.dtype), xbar_new.astype(zhat.dtype)

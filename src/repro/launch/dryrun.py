@@ -1,0 +1,146 @@
+"""Multi-pod dry-run driver (THE compile-proof + roofline data source).
+
+MUST be run as a module main: `PYTHONPATH=src python -m repro.launch.dryrun
+--arch minitron-8b --shape train_4k --mesh both --units`.
+
+The first two lines force 512 placeholder host devices BEFORE any jax
+import; never set this globally (tests/benches must see 1 device).
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.configs import ARCH_IDS, PAPER_IDS, SHAPES, applicable, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh                             # noqa: E402
+from repro.launch.steps import make_lm_cell, make_paper_cell                   # noqa: E402
+from repro.roofline import analysis, hw, units as units_mod                    # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             do_units: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips}
+    t0 = time.time()
+    if arch.startswith("paper-"):
+        cell = make_paper_cell(arch, mesh)
+    else:
+        cell = make_lm_cell(arch, shape_name, mesh)
+    lowered = (cell.fn.lower(*cell.args) if hasattr(cell.fn, "lower")
+               else jax.jit(cell.fn).lower(*cell.args))
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["memory"] = analysis.memory_of(compiled)
+    flops_once, bytes_once = analysis.cost_of(compiled)
+    coll = analysis.collective_stats(compiled.as_text())
+    rec["full_step_once"] = {
+        "flops": flops_once, "bytes": bytes_once,
+        "wire_bytes": coll.wire_bytes, "collectives_by_op": coll.by_op,
+        "collective_count": coll.count,
+        "note": "scan bodies counted once; see units for corrected totals"}
+
+    if do_units and not arch.startswith("paper-"):
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        sh = cell.meta["sh"]
+        ulist = (units_mod.train_units(cfg, shape, sh)
+                 if shape.kind == "train"
+                 else units_mod.serve_units(cfg, shape, sh))
+        costs = units_mod.measure_units(ulist)
+        rec["units"] = [vars(c) for c in costs]
+        flops = sum(c.flops for c in costs)
+        bts_hlo = sum(c.bytes_hbm for c in costs)
+        wire = sum(c.wire for c in costs)
+        mf = units_mod.model_flops(cfg, shape, chips)
+        bts = units_mod.analytic_bytes(cfg, shape, sh)
+        t = analysis.terms(flops, bts, wire, mf, bytes_hlo=bts_hlo)
+        rec["roofline"] = {
+            "compute_s": t.compute_s, "memory_s": t.memory_s,
+            "memory_hlo_s": t.memory_hlo_s,
+            "collective_s": t.collective_s, "dominant": t.dominant,
+            "bound_s": t.bound_s, "model_flops": mf,
+            "useful_ratio": t.useful_ratio,
+            "roofline_fraction": t.roofline_fraction,
+            "flops": flops, "bytes": bts, "bytes_hlo": bts_hlo,
+            "wire_bytes": wire,
+        }
+    elif arch.startswith("paper-"):
+        # solver cell: no interior scans in one iteration — full numbers are
+        # trip-count-exact already.
+        pcfg = get_config(arch)
+        mf = 4.0 * pcfg.nnz / chips          # fwd+bwd sparse ops, 2 flops/nnz
+        t = analysis.terms(flops_once, bytes_once, coll.wire_bytes, mf)
+        rec["roofline"] = {
+            "compute_s": t.compute_s, "memory_s": t.memory_s,
+            "collective_s": t.collective_s, "dominant": t.dominant,
+            "bound_s": t.bound_s, "model_flops": mf,
+            "useful_ratio": t.useful_ratio,
+            "roofline_fraction": t.roofline_fraction,
+            "flops": flops_once, "bytes": bytes_once,
+            "wire_bytes": coll.wire_bytes,
+        }
+    return rec
+
+
+def cells(args):
+    archs = args.arch.split(",") if args.arch else list(ARCH_IDS)
+    shapes = args.shape.split(",") if args.shape else list(SHAPES)
+    for arch in archs:
+        if arch.startswith("paper-"):
+            yield arch, "step"
+            continue
+        cfg = get_config(arch)
+        for sname in shapes:
+            if applicable(cfg, SHAPES[sname]):
+                yield arch, sname
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="comma list; default: all 10 + use paper-lasso-dN "
+                         "for solver cells")
+    ap.add_argument("--shape", default=None, help="comma list of shapes")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--units", action="store_true", default=True)
+    ap.add_argument("--no-units", dest="units", action="store_false")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_fail = 0
+    for arch, sname in cells(args):
+        for mp in meshes:
+            tag = f"{arch}_{sname}_{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            try:
+                rec = run_cell(arch, sname, mp, do_units=args.units and not mp)
+                rec["ok"] = True
+                n_ok += 1
+                print(f"OK   {tag}  compile={rec['compile_s']}s "
+                      f"dominant={rec.get('roofline', {}).get('dominant')}")
+            except Exception as e:
+                rec = {"arch": arch, "shape": sname, "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()}
+                n_fail += 1
+                print(f"FAIL {tag}  {type(e).__name__}: {e}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+    print(f"\n{n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

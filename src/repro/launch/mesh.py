@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (device count is locked at first backend init, and only
+dryrun.py sets the 512-placeholder-device XLA flag).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — run under "
+            "launch/dryrun.py (which forces 512 host devices) or a real pod")
+    return Mesh(np.asarray(devs[:need]).reshape(shape), axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:need]).reshape(shape), axes)

@@ -1,0 +1,156 @@
+"""Cell builders: (arch x shape x mesh) -> lowered-ready step functions.
+
+A "cell" is one dry-run unit: a jit'd step with ShapeDtypeStruct arguments
+and explicit in_shardings. Three kinds for LM archs (train / prefill /
+decode) plus the paper's own solver cells (one A2 iteration, block2d).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, PaperProblemConfig, ShapeSpec
+from repro.core.prox import get_prox
+from repro.core.solver import PDState
+from repro.distributed.sharding import Shardings, make_shardings
+from repro.models.api import (
+    batch_shardings, batch_specs, build_model, cache_sds, cache_shardings,
+)
+from repro.train import OptConfig
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import make_train_step
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable                 # jit-able python callable
+    args: tuple                  # SDS pytrees
+    in_shardings: Any            # NamedSharding pytrees (or None)
+    meta: dict
+
+
+def _named(sh: Shardings, spec_tree):
+    return tmap(lambda s: NamedSharding(sh.mesh, s), spec_tree)
+
+
+def make_lm_cell(arch: str, shape_name: str, mesh) -> Cell:
+    from repro.models.api import serve_rule_overrides
+
+    cfg: ModelConfig = get_config(arch)
+    shape = SHAPES[shape_name]
+    # DECODE cells use inference sharding rules (TP-only params where they
+    # fit, cluster-wide EP) — §Perf hillclimb. Prefill keeps the training
+    # rules: measured across all 10 archs, dropping fsdp at prefill lets
+    # GSPMD pick strictly worse layouts (e.g. olmoe 5.2s -> 41.5s wire).
+    overrides = serve_rule_overrides(cfg, mesh, "decode") \
+        if SHAPES[shape_name].kind == "decode" else None
+    sh = make_shardings(mesh, overrides)
+    model = build_model(cfg)
+    params_sds = model.sds()
+    param_sh = _named(sh, model.pspecs(sh.rules))
+    bsp = batch_specs(cfg, shape)
+    bsh = _named(sh, batch_shardings(cfg, shape, sh))
+
+    if shape.kind == "train":
+        step, in_sh, _ = make_train_step(model, shape, sh, donate=False)
+        ocfg = OptConfig(state_dtype=cfg.opt_state_dtype)
+        opt_sds = jax.eval_shape(lambda p: opt_mod.init(p, ocfg), params_sds)
+        # make_train_step returns a jit'd fn with shardings baked in
+        return Cell(name=f"{arch}:{shape_name}", fn=step,
+                    args=(params_sds, opt_sds, bsp),
+                    in_shardings=None,          # baked into the jit
+                    meta=dict(cfg=cfg, shape=shape, sh=sh, kind="train",
+                              model=model))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            tokens = batch["tokens"]
+            extras = {k: v for k, v in batch.items() if k != "tokens"}
+            return model.prefill(params, tokens, sh, extras or None)
+
+        fn = jax.jit(prefill_step, in_shardings=(param_sh, bsh))
+        return Cell(name=f"{arch}:{shape_name}", fn=fn,
+                    args=(params_sds, bsp), in_shardings=None,
+                    meta=dict(cfg=cfg, shape=shape, sh=sh, kind="prefill",
+                              model=model))
+
+    # decode
+    csds = cache_sds(cfg, shape)
+    csh = _named(sh, cache_shardings(cfg, shape, sh))
+
+    def decode(params, cache, batch):
+        return model.decode(params, cache, batch["tokens"],
+                            batch["cur_index"], sh)
+
+    # cache is donated: the updated cache aliases the input buffer (in-place
+    # token append on TPU — no full-cache copy per step)
+    fn = jax.jit(decode, in_shardings=(param_sh, csh, bsh),
+                 donate_argnums=(1,))
+    return Cell(name=f"{arch}:{shape_name}", fn=fn,
+                args=(params_sds, csds, bsp), in_shardings=None,
+                meta=dict(cfg=cfg, shape=shape, sh=sh, kind="decode",
+                          model=model))
+
+
+# ---------------------------------------------------------------------------
+# Paper solver cells (allocation-free dry-run of one A2 iteration, block2d)
+# ---------------------------------------------------------------------------
+
+def make_paper_cell(arch: str, mesh, strategy: str = "block2d",
+                    algorithm: str = "a2", operand_dtype=jnp.float32,
+                    index_dtype=jnp.int32) -> Cell:
+    """One A2 (or A1) iteration of the block2d-distributed solver.
+
+    `operand_dtype=bf16` + `index_dtype=int16` is the §Perf compressed-ELL
+    variant: 4 bytes/nnz instead of 8 (values in bf16, block-LOCAL column
+    indices < n/C = 3125 for D6 fit int16); the iteration math stays fp32
+    (gathers/accumulations promote).
+    """
+    from repro.core.distributed import DistProblem, make_step_fn
+    from repro.sparse.partition import _ceil_to
+
+    pcfg: PaperProblemConfig = get_config(arch)
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    ca = names[-1]
+    if "pod" in names:                  # fold pod into the row (data) axis
+        ra: Any = ("pod", names[-2])
+        R = sizes["pod"] * sizes[names[-2]]
+    else:
+        ra = names[-2]
+        R = sizes[ra]
+    C = sizes[ca]
+    m_pad, n_pad = _ceil_to(pcfg.m, R), _ceil_to(pcfg.n, C)
+    mb = m_pad // R
+    k = _ceil_to(max(1, round(pcfg.nnz / pcfg.m / C)) + 8, 8)
+    if index_dtype == jnp.int16 and n_pad // C >= 2 ** 15:
+        raise ValueError("block width too large for int16 indices")
+    grid_spec = P(ra, ca, None, None)
+    vals = jax.ShapeDtypeStruct((R, C, mb, k), operand_dtype)
+    cols = jax.ShapeDtypeStruct((R, C, mb, k), index_dtype)
+    problem = DistProblem(
+        strategy="block2d", mesh=mesh, axes=(ra, ca),
+        operands=dict(a=(vals, cols)),
+        operand_specs=dict(a=(grid_spec, grid_spec)),
+        x_spec=P(ca), y_spec=P(ra),
+        m=pcfg.m, n=pcfg.n, m_pad=m_pad, n_pad=n_pad, lg=float(pcfg.m),
+        dual_copy=False)
+    prox = get_prox(pcfg.prox, reg=pcfg.reg)
+    step = make_step_fn(problem, prox, pcfg.gamma0, algorithm=algorithm)
+    b_sds = jax.ShapeDtypeStruct((m_pad,), jnp.float32)
+    xs = jax.ShapeDtypeStruct((n_pad,), jnp.float32)
+    ys = jax.ShapeDtypeStruct((m_pad,), jnp.float32)
+    state = PDState(xbar=xs, xstar=xs, yhat=ys,
+                    gamma=jax.ShapeDtypeStruct((), jnp.float32),
+                    k=jax.ShapeDtypeStruct((), jnp.int32))
+    return Cell(name=f"{arch}:step", fn=step,
+                args=(problem.operands, b_sds, state), in_shardings=None,
+                meta=dict(cfg=pcfg, kind="solver", problem=problem))

@@ -1,0 +1,7 @@
+from repro.models.api import (
+    Model, batch_shardings, batch_specs, build_model, cache_sds,
+    cache_shardings,
+)
+
+__all__ = ["Model", "batch_shardings", "batch_specs", "build_model",
+           "cache_sds", "cache_shardings"]

@@ -1,0 +1,205 @@
+"""Public model API: one call site for configs -> params/steps/specs.
+
+Everything the launcher and dry-run need for a given (arch, shape, mesh):
+
+  build_model(cfg)                 -> Model (init / loss / prefill / decode)
+  batch_specs(cfg, shape)          -> SDS pytree for step inputs
+  batch_shardings(cfg, shape, sh)  -> PartitionSpec pytree for those inputs
+  cache_sds(cfg, shape)            -> SDS pytree for the decode cache
+  cache_shardings(cfg, shape, sh)  -> PartitionSpec pytree for the cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import Shardings
+from repro.models import transformer as tfm
+from repro.models.params import init_params, partition_specs, sds_params
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    tree: Any                                   # PSpec tree
+
+    def init(self, key, dtype=None):
+        return init_params(self.tree, key,
+                           dtype or jnp.dtype(self.cfg.dtype))
+
+    def sds(self, dtype=None):
+        return sds_params(self.tree, dtype or jnp.dtype(self.cfg.dtype))
+
+    def pspecs(self, rules: dict):
+        return partition_specs(self.tree, rules)
+
+    def loss(self, params, batch, sh=None, **kw):
+        return tfm.loss_fn(params, batch, self.cfg, sh, **kw)
+
+    def prefill(self, params, tokens, sh=None, extras=None, **kw):
+        return tfm.prefill(params, tokens, self.cfg, sh, extras, **kw)
+
+    def decode(self, params, cache, tokens, cur_index, sh=None):
+        return tfm.decode_step(params, cache, tokens, cur_index, self.cfg, sh)
+
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+        return tfm.init_cache(self.cfg, batch, seq_len, dtype)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, tree=tfm.param_tree(cfg))
+
+
+def serve_rule_overrides(cfg: ModelConfig, mesh, kind: str = "decode") -> dict:
+    """Serving-time sharding rules (§Perf hillclimb, EXPERIMENTS.md).
+
+    Training shards params FSDP x TP, which forces a full parameter
+    all-gather EVERY DECODED TOKEN. For serving:
+      * params that fit TP-only (<= ~10 GB/chip) drop the fsdp axis
+        (replicated over `data`; zero param collectives per step);
+      * MoE expert stacks shard over BOTH axes when divisible (deepseek:
+        256 experts / 256 chips = 1/chip) — EP across the cluster, the
+        DeepSeek-style serving layout;
+      * a too-big-for-TP dense model (nemotron-340b) keeps FSDP and eats
+        the gather (documented trade; mitigations: pipeline or int8).
+    """
+    if mesh is None:
+        return {}
+    from repro.models.params import count_params
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    over: dict = {}
+    ep_grid = sizes.get("data", 1) * tp
+    # EP over both axes only helps when T <= E (decode dense-local-experts);
+    # at prefill scale (T >> E) it multiplies the dispatch gathers (measured
+    # 106 -> 893 GB/step on deepseek prefill — §Perf iteration log).
+    ep_both = (kind == "decode" and bool(cfg.num_experts)
+               and cfg.num_experts % ep_grid == 0)
+    if ep_both:
+        over["ep"] = ("data", "model")
+    # what must fit per chip if fsdp is dropped: TP-sharded non-expert params
+    # (+ expert shard, already /ep_grid when ep_both)
+    total_bytes = count_params(tfm.param_tree(cfg)) * 2
+    expert_bytes = 0
+    if cfg.num_experts:
+        wi_cols = 2 * cfg.moe_d_ff if cfg.activation == "swiglu" \
+            else cfg.moe_d_ff
+        per_expert = cfg.d_model * (wi_cols + cfg.moe_d_ff) * 2
+        n_moe = cfg.num_layers - cfg.first_dense_layers + cfg.mtp_depth
+        expert_bytes = per_expert * cfg.num_experts * n_moe
+    dense_bytes = total_bytes - expert_bytes
+    per_chip = dense_bytes / tp + (expert_bytes / ep_grid if ep_both
+                                   else expert_bytes / tp)
+    if per_chip <= 10e9:
+        over["fsdp"] = None
+    return over
+
+
+# --------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; weak-type-correct, no allocation)
+# --------------------------------------------------------------------------
+
+def _token_sds(cfg: ModelConfig, b: int, s: int):
+    if cfg.num_codebooks:
+        return jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        d = {"tokens": _token_sds(cfg, b, s)}
+        if cfg.family == "vlm":
+            d["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        return d
+    # decode: one new token against a seq_len cache
+    return {"tokens": _token_sds(cfg, b, 1),
+            "cur_index": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def _dp_axis(shape: ShapeSpec, sh: Shardings):
+    """Batch axis sharding — None when the batch can't cover the dp axes
+    (long_500k has batch 1; its parallelism axis is the sequence)."""
+    dp = sh.rules.get("dp")
+    if dp is None:
+        return None
+    sizes = dict(zip(sh.mesh.axis_names, sh.mesh.devices.shape))
+    need = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        need *= sizes[a]
+    return dp if shape.global_batch % need == 0 else None
+
+
+def _seq_axis(shape: ShapeSpec, sh: Shardings, dp):
+    """Cache sequence axis: `model` normally; (data, model) when batch=1."""
+    if sh.mesh is None:
+        return None
+    if dp is None and sh.rules.get("dp") is not None:
+        # batch unshardable -> give the sequence both axes
+        base = sh.rules.get("seq")
+        extra = sh.rules.get("dp")
+        if base is None:
+            return extra
+        base_t = base if isinstance(base, tuple) else (base,)
+        extra_t = extra if isinstance(extra, tuple) else (extra,)
+        return tuple(extra_t) + tuple(base_t)
+    return sh.rules.get("seq")
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, sh: Shardings):
+    dp = _dp_axis(shape, sh)
+    if shape.kind in ("train", "prefill"):
+        d = {"tokens": P(dp, None) if not cfg.num_codebooks
+             else P(dp, None, None)}
+        if cfg.family == "vlm":
+            d["image_embeds"] = P(dp, None, None)
+        return d
+    return {"tokens": P(dp, None) if not cfg.num_codebooks
+            else P(dp, None, None),
+            "cur_index": P(dp)}
+
+
+def cache_sds(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+    return cache
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeSpec, sh: Shardings):
+    """PartitionSpec tree matching init_cache's structure, by path pattern."""
+    dp = _dp_axis(shape, sh)
+    seq = _seq_axis(shape, sh, dp)
+    tp = sh.rules.get("tp")
+    cache = cache_sds(cfg, shape)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        nd = leaf.ndim
+        grouped = "ssm_groups" in keys
+        if "cross_kv" in keys:
+            return P(None, dp, None, None, None)
+        if keys[-1] in ("k", "v"):               # (L,B,S,K,hd)
+            return P(None, dp, seq, None, None)
+        if keys[-1] == "latent":                 # (L,B,S,lat)
+            return P(None, dp, seq, None)
+        if keys[-1] == "conv":                   # (L,B,W-1,D) | (G,g,B,W-1,D)
+            return P(None, None, dp, None, tp) if grouped \
+                else P(None, dp, None, tp)
+        if keys[-1] == "ssm":
+            if grouped:                          # (G,g,B,nh,hd,st) | (G,g,B,di,st)
+                return P(*([None, None, dp, tp] + [None] * (nd - 4)))
+            return P(*([None, dp, tp] + [None] * (nd - 3)))
+        raise KeyError(f"unrecognized cache leaf {keys}")
+
+    specs = [spec_for(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,269 @@
+"""Attention variants: GQA (+QKV-bias, +qk_norm), MLA, cross-attention.
+
+Training/prefill use a chunked online-softmax (flash-style) causal attention
+— O(chunk) score memory, scan over KV chunks with static trip count
+(`unroll=True` variant exists for roofline cost units, since XLA's
+cost_analysis counts scan bodies once).
+
+Decode uses direct dot attention against the cache; the cache is sharded
+along the SEQUENCE axis (DESIGN.md: flash-decoding-style partial softmax,
+combined by GSPMD psums) which works for any kv-head count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.params import PSpec
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+def gqa_params(cfg: ModelConfig):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    h_ax = "tp" if H % 16 == 0 else None       # musicgen 24H: replicated attn
+    k_ax = "tp" if (K % 16 == 0 and h_ax) else None
+    p = {
+        "wq": PSpec((d, H, hd), ("fsdp", h_ax, None)),
+        "wk": PSpec((d, K, hd), ("fsdp", k_ax, None)),
+        "wv": PSpec((d, K, hd), ("fsdp", k_ax, None)),
+        "wo": PSpec((H, hd, d), (h_ax, None, "fsdp")),
+    }
+    if cfg.attn_bias:
+        p["bq"] = PSpec((H, hd), (h_ax, None), scale="zero")
+        p["bk"] = PSpec((K, hd), (k_ax, None), scale="zero")
+        p["bv"] = PSpec((K, hd), (k_ax, None), scale="zero")
+    if cfg.qk_norm:
+        p["q_norm"] = PSpec((hd,), (None,), scale="zero")
+        p["k_norm"] = PSpec((hd,), (None,), scale="zero")
+    return p
+
+
+def mla_params(cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": PSpec((d, qr), ("fsdp", None)),
+        "q_norm": PSpec((qr,), (None,), scale="zero"),
+        "wq_b": PSpec((qr, H, dn + dr), (None, "tp", None)),
+        "wkv_a": PSpec((d, kr + dr), ("fsdp", None)),
+        "kv_norm": PSpec((kr,), (None,), scale="zero"),
+        "wk_b": PSpec((kr, H, dn), (None, "tp", None)),
+        "wv_b": PSpec((kr, H, dv), (None, "tp", None)),
+        "wo": PSpec((H, dv, d), ("tp", None, "fsdp")),
+    }
+
+
+def cross_attn_params(cfg: ModelConfig):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    h_ax = "tp" if H % 16 == 0 else None
+    k_ax = "tp" if (K % 16 == 0 and h_ax) else None
+    return {
+        "wq": PSpec((d, H, hd), ("fsdp", h_ax, None)),
+        "wk": PSpec((d, K, hd), ("fsdp", k_ax, None)),
+        "wv": PSpec((d, K, hd), ("fsdp", k_ax, None)),
+        "wo": PSpec((H, hd, d), (h_ax, None, "fsdp")),
+        "gate": PSpec((), (), scale="zero"),
+    }
+
+
+# --------------------------------------------------------------------------
+# Core attention math
+# --------------------------------------------------------------------------
+
+def _group(q, K):
+    """(B, S, H, D) -> (B, S, K, G, D)."""
+    B, S, H, D = q.shape
+    return q.reshape(B, S, K, H // K, D)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                      chunk: int = 512, unroll: bool = False):
+    """Online-softmax attention. q: (B,Sq,K,G,D); k: (B,Sk,K,D);
+    v: (B,Sk,K,Dv) — Dv may differ from D (MLA)."""
+    B, Sq, K, G, D = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    chunk = min(chunk, Sk)
+    if Sk % chunk:
+        chunk = Sk  # fallback for odd smoke shapes
+    nchunks = Sk // chunk
+    qf = q.astype(F32) * (D ** -0.5)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kc = jnp.moveaxis(k.reshape(B, nchunks, chunk, K, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nchunks, chunk, K, Dv), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kb.astype(F32))
+        if causal:
+            col = ci * chunk + jnp.arange(chunk)
+            mask = col[None, :] <= q_pos[:, None]          # (Sq, chunk)
+            s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vb.astype(F32))
+        return (m_new, l_new, acc_new), None
+
+    # carry inits derive from qf/v so their varying-manual-axes (vma) match
+    # the body outputs when this runs inside shard_map (consensus trainer)
+    zero_q = jnp.moveaxis(qf[..., 0], 1, 3) * 0.0          # (B,K,G,Sq)
+    zero_v = (v[(0,) * v.ndim] * 0.0).astype(F32)
+    init = (zero_q + zero_v + NEG,
+            zero_q + zero_v,
+            jnp.broadcast_to((zero_q + zero_v)[..., None],
+                             (B, K, G, Sq, Dv)))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, jnp.arange(nchunks)),
+                                  unroll=nchunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (B,K,G,Sq,Dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, K * G, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_index):
+    """q: (B,1,K,G,D); caches (B,S,K,D) seq-sharded; masked at > cur_index."""
+    B, _, K, G, D = q.shape
+    S = k_cache.shape[1]
+    qf = q.astype(F32) * (D ** -0.5)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_cache.astype(F32))
+    mask = jnp.arange(S)[None, :] <= cur_index[:, None]    # (B, S)
+    s = jnp.where(mask[:, None, None, None], s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p, v_cache.astype(F32))
+    out = out / jnp.maximum(jnp.sum(p, axis=-1), 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(B, 1, K * G, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA block forward (train/prefill + decode)
+# --------------------------------------------------------------------------
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm({"scale": p["q_norm"]}, q)
+        k = rms_norm({"scale": p["k_norm"]}, k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ModelConfig, *, chunk: int = 512,
+                unroll: bool = False, return_kv: bool = False):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = chunked_attention(_group(q, cfg.num_kv_heads), k, v, causal=True,
+                            chunk=chunk, unroll=unroll)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return (out, (k, v)) if return_kv else out
+
+
+def gqa_decode(p, x, cfg: ModelConfig, cache, cur_index):
+    """x: (B,1,d); cache: dict(k=(B,S,K,D), v=...); returns (out, new_cache)."""
+    B = x.shape[0]
+    positions = cur_index[:, None]
+    q, k, v = _qkv(p, x, cfg, positions)
+    k_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u.astype(c.dtype), (i, 0, 0)))(cache["k"], k, cur_index)
+    v_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u.astype(c.dtype), (i, 0, 0)))(cache["v"], v, cur_index)
+    out = decode_attention(_group(q, cfg.num_kv_heads), k_cache, v_cache,
+                           cur_index)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# --------------------------------------------------------------------------
+# MLA (deepseek)
+# --------------------------------------------------------------------------
+
+def _mla_qc(p, x, cfg: ModelConfig, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq_a"])
+    q = rms_norm({"scale": p["q_norm"]}, q)
+    q = jnp.einsum("bsq,qhk->bshk", q, p["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c, k_rope = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c = rms_norm({"scale": p["kv_norm"]}, c)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_forward(p, x, cfg: ModelConfig, *, chunk: int = 512,
+                unroll: bool = False):
+    """Training/prefill: materialize per-head k/v (standard path)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope, c, k_rope = _mla_qc(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c, p["wv_b"])
+    H = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (*k_rope.shape[:2], H, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    # MHA (K = H, G = 1); pad v head dim to match out reshape later
+    out = chunked_attention(q[:, :, :, None, :], k, v, causal=True,
+                            chunk=chunk, unroll=unroll)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache, cur_index):
+    """Absorbed-matrices decode against the latent cache (B,S,kr+dr)."""
+    positions = cur_index[:, None]
+    q_nope, q_rope, c, k_rope = _mla_qc(p, x, cfg, positions)
+    new_entry = jnp.concatenate([c, k_rope], axis=-1)      # (B,1,kr+dr)
+    latent = jax.vmap(lambda cc, u, i: jax.lax.dynamic_update_slice(
+        cc, u.astype(cc.dtype), (i, 0)))(cache["latent"], new_entry, cur_index)
+    kr = cfg.kv_lora_rank
+    c_cache, kr_cache = latent[..., :kr], latent[..., kr:]
+    # absorb W_uk into the query:  q_lat = q_nope @ W_uk  -> (B,1,H,kr)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
+    s = (jnp.einsum("bshr,bSr->bhsS", q_lat.astype(F32), c_cache.astype(F32))
+         + jnp.einsum("bshk,bSk->bhsS", q_rope.astype(F32),
+                      kr_cache.astype(F32)))
+    s *= (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    S = latent.shape[1]
+    mask = jnp.arange(S)[None, :] <= cur_index[:, None]
+    s = jnp.where(mask[:, None, None], s, NEG)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhsS,bSr->bshr", p_attn, c_cache.astype(F32))
+    out = jnp.einsum("bshr,rhk->bshk", out_lat.astype(x.dtype), p["wv_b"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"latent": latent}
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (VLM)
+# --------------------------------------------------------------------------
+
+def cross_attn_forward(p, x, kv_src, cfg: ModelConfig):
+    """x: (B,S,d) text; kv_src: (B,N,d) image embeddings. Non-causal."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bnd,dhk->bnhk", kv_src, p["wk"])
+    v = jnp.einsum("bnd,dhk->bnhk", kv_src, p["wv"])
+    out = chunked_attention(_group(q, cfg.num_kv_heads), k, v, causal=False,
+                            chunk=k.shape[1])
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return jnp.tanh(p["gate"].astype(F32)).astype(x.dtype) * out

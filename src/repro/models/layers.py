@@ -1,0 +1,116 @@
+"""Shared layer primitives: norms, rotary embeddings, MLPs, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm_params(dim: int):
+    return {"scale": PSpec((dim,), (None,), scale="zero")}  # stored as (w-1)
+
+
+def rms_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq   # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (dense FFN)
+# --------------------------------------------------------------------------
+
+def mlp_params(cfg: ModelConfig, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation == "swiglu":
+        return {
+            "wi": PSpec((d, 2 * ff), ("fsdp", "tp")),   # gate+up fused
+            "wo": PSpec((ff, d), ("tp", "fsdp")),
+        }
+    return {
+        "wi": PSpec((d, ff), ("fsdp", "tp")),
+        "wo": PSpec((ff, d), ("tp", "fsdp")),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    h = x @ p["wi"]
+    if cfg.activation == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif cfg.activation == "relu2":
+        r = jnp.maximum(h, 0.0)
+        h = r * r
+    else:  # gelu
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# Embedding / head
+# --------------------------------------------------------------------------
+
+def embed_params(cfg: ModelConfig):
+    v, d = cfg.vocab_size, cfg.d_model
+    n_emb = max(cfg.num_codebooks, 1)
+    p = {"embedding": PSpec((n_emb, v, d), (None, "tp", None), scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = PSpec((n_emb, d, v), (None, None, "tp"))
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    """tokens: (B, S) int32 or (B, S, n_codebooks) for audio — summed."""
+    table = p["embedding"]
+    if cfg.num_codebooks:
+        outs = [jnp.take(table[c], tokens[..., c], axis=0)
+                for c in range(cfg.num_codebooks)]
+        return sum(outs)
+    return jnp.take(table[0], tokens, axis=0)
+
+
+def logits(p, h, cfg: ModelConfig):
+    """h: (B, S, d) -> (B, S, n_codebooks, V) (n_codebooks=1 squeezed)."""
+    if cfg.tie_embeddings:
+        w = jnp.swapaxes(p["embedding"], 1, 2)      # (n, d, V)
+    else:
+        w = p["head"]
+    out = jnp.einsum("bsd,ndv->bsnv", h, w)
+    if not cfg.num_codebooks:
+        out = out[..., 0, :]
+    return out
+
+
+def cross_entropy(lg, targets):
+    """lg: (..., V) any dtype; stable CE in fp32; targets int32 same leading."""
+    lg = lg.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    shifted = lg - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    tgt = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tgt)

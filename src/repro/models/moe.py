@@ -1,0 +1,134 @@
+"""Mixture-of-Experts with sort + static-capacity dispatch (MegaBlocks-style
+token dropping) and expert parallelism over the `ep` (model) axis.
+
+FLOP-exact formulation (no dense all-experts overcompute): tokens are sorted
+by assigned expert, scattered into a static (E, C, d) buffer (overflow slots
+dropped — standard capacity-factor semantics), processed with two batched
+einsums sharded over E, and combined back with the router gates. The expert
+buffers/weights shard over `ep`; GSPMD inserts the dispatch/return
+all-to-alls across the model axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+
+F32 = jnp.float32
+
+
+def moe_params(cfg: ModelConfig):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    wi_cols = 2 * f if cfg.activation == "swiglu" else f
+    p = {
+        "router": PSpec((d, E), (None, None)),
+        "wi": PSpec((E, d, wi_cols), ("ep", "fsdp", None)),
+        "wo": PSpec((E, f, d), ("ep", None, "fsdp")),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared_wi"] = PSpec((d, 2 * fs if cfg.activation == "swiglu" else fs),
+                               ("fsdp", "tp"))
+        p["shared_wo"] = PSpec((fs, d), ("tp", "fsdp"))
+    return p
+
+
+def _act(h, cfg: ModelConfig):
+    if cfg.activation == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        return jax.nn.silu(gate.astype(F32)).astype(h.dtype) * up
+    if cfg.activation == "relu2":
+        r = jnp.maximum(h, 0.0)
+        return r * r
+    return jax.nn.gelu(h.astype(F32)).astype(h.dtype)
+
+
+def moe_forward(p, x, cfg: ModelConfig, sh=None,
+                capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d). `sh`: Shardings for the (E, C, ...) buffer
+    constraints — without them GSPMD replicates the dispatch buffers
+    (observed: 256 GB/device temp on deepseek prefill; see EXPERIMENTS §Perf).
+
+    Two dispatch regimes (§Perf hillclimb, deepseek decode):
+      * T > E:  sort + static-capacity buffers (training/prefill — FLOP-exact)
+      * T <= E: dense local-experts einsum — every device runs ALL tokens
+        through ITS expert shard and the contraction over E psums the gated
+        mix. Overcompute factor E/topk is cheap below the weights-bandwidth
+        floor at decode batch sizes, and it removes the sharded
+        gather/scatter that otherwise forces buffer replication.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_token
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(F32)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(gates_all, k)               # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    if T <= 4 * E:   # decode regime: overcompute E/topk is below the
+        #            weights-bandwidth floor; avoids sharded gather/scatter
+        gate_dense = jnp.zeros((T, E), F32).at[
+            jnp.repeat(jnp.arange(T), k), ids.reshape(-1)].set(
+            gates.reshape(-1))                             # (T, E)
+        h = jnp.einsum("td,edf->tef", xt, p["wi"])
+        h = _act(h, cfg)
+        if sh is not None:
+            h = sh.act(h, None, "ep", None)
+        # gate folded into h; ONE dot contracting (e, f) jointly => GSPMD
+        # partial-sums over the local expert shard and all-reduces (T, d) —
+        # a gather of the (T, E, d) per-expert outputs would be 256 GB/step
+        # (measured; see EXPERIMENTS §Perf iteration log).
+        hg = h * gate_dense[:, :, None].astype(h.dtype)
+        out = jnp.einsum("tef,efd->td", hg, p["wo"]).astype(x.dtype)
+        if cfg.num_shared_experts:
+            hs = _act(xt @ p["shared_wi"], cfg)
+            out = out + hs @ p["shared_wo"]
+        frac = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=F32), axis=0)
+        aux = E * jnp.sum(frac * jnp.mean(gates_all, axis=0))
+        return out.reshape(B, S, d), aux
+
+    C = max(8, int(T * k / E * capacity_factor))
+    ids_f = ids.reshape(-1)                                # (T*k,)
+    gate_f = gates.reshape(-1)
+    tok_f = jnp.repeat(jnp.arange(T), k)
+
+    order = jnp.argsort(ids_f)                             # stable
+    ids_s, tok_s, gate_s = ids_f[order], tok_f[order], gate_f[order]
+    # position within expert = rank - start_of_expert
+    start = jnp.searchsorted(ids_s, jnp.arange(E))
+    pos = jnp.arange(T * k) - start[ids_s]
+    slot = jnp.where(pos < C, pos, C)                      # overflow -> slot C
+
+    buf = jnp.zeros((E, C + 1, d), x.dtype)
+    buf = buf.at[ids_s, slot].set(xt[tok_s])               # dispatch scatter
+    buf = buf[:, :C]
+    # NOTE (§Perf iteration log): explicit sharding constraints on buf/h
+    # ("ep" or C-over-dp) were tried and REGRESS 5x — GSPMD reshards the
+    # dispatch through replication. Unconstrained propagation is the best
+    # GSPMD-expressible layout; the identified next step is a shard_map
+    # all-to-all EP dispatch (~17x wire headroom on deepseek train,
+    # napkin math in EXPERIMENTS.md) — not yet implemented.
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    h = _act(h, cfg)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])       # (E, C, d)
+
+    out_pad = jnp.concatenate(
+        [out_buf, jnp.zeros((E, 1, d), out_buf.dtype)], axis=1)
+    expert_out = out_pad[ids_s, slot]                      # (T*k, d), 0 if dropped
+    combined = jnp.zeros((T, d), F32).at[tok_s].add(
+        expert_out.astype(F32) * gate_s[:, None])
+
+    out = combined.astype(x.dtype)
+    if cfg.num_shared_experts:
+        hs = _act(xt @ p["shared_wi"], cfg)
+        out = out + hs @ p["shared_wo"]
+    # load-balance aux loss (Switch): E * sum_e fraction_e * prob_e
+    frac = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=F32), axis=0)
+    prob = jnp.mean(gates_all, axis=0)
+    aux = E * jnp.sum(frac * prob)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,112 @@
+"""Parameter metadata trees: one structure, three materializations.
+
+Models declare their parameters as trees of ``PSpec(shape, axes, scale)``
+where ``axes`` are LOGICAL sharding axes ("tp" = tensor-parallel / model,
+"fsdp" = fully-sharded data-parallel, "ep" = expert-parallel, None =
+replicated). The same tree then yields:
+
+  * ``init_params(tree, key)``     — real arrays (smoke tests, examples)
+  * ``sds_params(tree)``           — ShapeDtypeStructs (dry-run, no alloc)
+  * ``partition_specs(tree, rules)`` — jax PartitionSpecs for a mesh, via
+    rules like {"tp": "model", "fsdp": ("pod", "data"), "ep": "model"}.
+
+Logical->physical indirection is what makes the configs mesh-agnostic
+(single pod, multi pod, elastic reshapes) — configs never name mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]           # logical axis per dim
+    scale: float | str = "fan_in"          # init stddev, "fan_in", or "zero"
+    dtype: Any = None                      # override model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_pspec(x):
+    return isinstance(x, PSpec)
+
+
+def _stddev(p: PSpec) -> float:
+    if p.scale == "zero":
+        return 0.0
+    if p.scale == "fan_in":
+        fan = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        return 1.0 / math.sqrt(max(fan, 1))
+    return float(p.scale)
+
+
+def init_params(tree, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for p, k in zip(leaves, keys):
+        dt = p.dtype or dtype
+        sd = _stddev(p)
+        if sd == 0.0:
+            out.append(jnp.zeros(p.shape, dt))
+        else:
+            out.append((jax.random.normal(k, p.shape, jnp.float32) * sd)
+                       .astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sds_params(tree, dtype=jnp.bfloat16):
+    return tmap(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or dtype),
+                tree, is_leaf=_is_pspec)
+
+
+def resolve_axis(logical, rules: dict):
+    if logical is None:
+        return None
+    phys = rules.get(logical)
+    return phys
+
+
+def partition_specs(tree, rules: dict):
+    """rules: logical axis -> mesh axis (str | tuple | None)."""
+
+    def one(p: PSpec):
+        return P(*[resolve_axis(a, rules) for a in p.axes])
+
+    return tmap(one, tree, is_leaf=_is_pspec)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=_is_pspec)
+    return sum(math.prod(l.shape) for l in leaves)
+
+
+DEFAULT_RULES = {          # single-pod (16 data, 16 model)
+    "tp": "model",
+    "ep": "model",
+    "fsdp": "data",
+    "dp": "data",
+    "seq": "model",
+}
+
+
+def rules_for_mesh(mesh) -> dict:
+    """Pick logical->physical rules from the mesh's axis names."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return {"tp": "model", "ep": "model", "fsdp": ("pod", "data"),
+                "dp": ("pod", "data"), "seq": "model"}
+    if "model" in names:
+        return dict(DEFAULT_RULES)
+    # 1-device / test meshes: everything replicated
+    return {k: None for k in DEFAULT_RULES}

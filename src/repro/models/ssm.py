@@ -1,0 +1,162 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Training scans the selective recurrence over the sequence with lax.scan
+(compile-size control; the recurrence FLOPs are <1% of the block's matmul
+FLOPs, accounted analytically in the roofline — see roofline/analysis.py).
+Decode is the single-step recurrence against (conv_state, ssm_state) caches,
+which is why these archs run the 500k-token shape: state is O(1) in seq_len.
+
+d_inner shards over `tp`; states shard (batch->dp, d_inner->tp).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Mamba-1
+# --------------------------------------------------------------------------
+
+def mamba1_params(cfg: ModelConfig):
+    d, di, st = cfg.d_model, cfg.resolved_d_inner, cfg.ssm_state
+    dtr, w = cfg.resolved_dt_rank, cfg.conv_width
+    return {
+        "in_proj": PSpec((d, 2 * di), ("fsdp", "tp")),
+        "conv_w": PSpec((w, di), (None, "tp"), scale=1.0),
+        "conv_b": PSpec((di,), ("tp",), scale="zero"),
+        "x_proj": PSpec((di, dtr + 2 * st), ("tp", None)),
+        "dt_proj": PSpec((dtr, di), (None, "tp")),
+        "dt_bias": PSpec((di,), ("tp",), scale=1.0),
+        "a_log": PSpec((di, st), ("tp", None), scale=1.0),
+        "d_skip": PSpec((di,), ("tp",), scale=1.0),
+        "out_proj": PSpec((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B,S,di); w: (W,di) depthwise. state: (B,W-1,di) for decode."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+W-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):]
+    return out + b, new_state
+
+
+def _selective_scan(u, dt, a, b, c, d_skip, h0):
+    """u,dt: (B,S,di); a: (di,st); b,c: (B,S,st); h0: (B,di,st)."""
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp                      # (B,di),(B,di),(B,st)
+        da = jnp.exp(dt_t[..., None] * a)              # (B,di,st)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u * d_skip            # (B,S,di)
+    return y, h
+
+
+def mamba1_forward(p, x, cfg: ModelConfig, cache=None):
+    """x: (B,S,d). cache (decode): dict(conv=(B,W-1,di), ssm=(B,di,st))."""
+    B, S, _ = x.shape
+    di, st, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    u, z = jnp.split(x @ p["in_proj"], 2, axis=-1)
+    conv_state = cache["conv"] if cache else None
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u = jax.nn.silu(u.astype(F32)).astype(x.dtype)
+    proj = u @ p["x_proj"]
+    dt_r, b, c = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"] + p["dt_bias"]).astype(F32))
+    a = -jnp.exp(p["a_log"].astype(F32))
+    # zero init derived from u so shard_map varying-axes match the scan body
+    h0 = cache["ssm"].astype(F32) if cache \
+        else jnp.zeros((B, di, st), F32) + (u[0, 0, 0] * 0).astype(F32)
+    y, h = _selective_scan(u.astype(F32), dt, a, b.astype(F32), c.astype(F32),
+                           p["d_skip"].astype(F32), h0)
+    y = (y.astype(x.dtype) * jax.nn.silu(z.astype(F32)).astype(x.dtype))
+    out = y @ p["out_proj"]
+    new_cache = {"conv": new_conv, "ssm": h.astype(x.dtype)} if cache is not None \
+        else None
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 (SSD parameterization: scalar per-head decay)
+# --------------------------------------------------------------------------
+
+def mamba2_params(cfg: ModelConfig):
+    d, di, st = cfg.d_model, cfg.resolved_d_inner, cfg.ssm_state
+    hd = cfg.mamba2_head_dim
+    nh = di // hd
+    g = cfg.mamba2_n_groups
+    w = cfg.conv_width
+    conv_dim = di + 2 * g * st
+    return {
+        "in_proj": PSpec((d, 2 * di + 2 * g * st + nh), ("fsdp", "tp")),
+        "conv_w": PSpec((w, conv_dim), (None, "tp"), scale=1.0),
+        "conv_b": PSpec((conv_dim,), ("tp",), scale="zero"),
+        "dt_bias": PSpec((nh,), ("tp",), scale=1.0),
+        "a_log": PSpec((nh,), ("tp",), scale=1.0),
+        "d_skip": PSpec((nh,), ("tp",), scale=1.0),
+        "norm": PSpec((di,), ("tp",), scale="zero"),
+        "out_proj": PSpec((di, d), ("tp", "fsdp")),
+    }
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, cache=None):
+    """SSD recurrence h_t = exp(dt*a) h_{t-1} + dt * b_t x_t^T per head."""
+    B, S, _ = x.shape
+    di, st = cfg.resolved_d_inner, cfg.ssm_state
+    hd, g = cfg.mamba2_head_dim, cfg.mamba2_n_groups
+    nh = di // hd
+    proj = x @ p["in_proj"]
+    z, xbc, dt_r = jnp.split(proj, [di, 2 * di + 2 * g * st], axis=-1)
+    conv_state = cache["conv"] if cache else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(F32)).astype(x.dtype)
+    u, b, c = jnp.split(xbc, [di, di + g * st], axis=-1)
+    u = u.reshape(B, S, nh, hd)
+    b = b.reshape(B, S, g, st)
+    c = c.reshape(B, S, g, st)
+    rep = nh // g
+    b = jnp.repeat(b, rep, axis=2)                      # (B,S,nh,st)
+    c = jnp.repeat(c, rep, axis=2)
+    dt = jax.nn.softplus((dt_r + p["dt_bias"]).astype(F32))   # (B,S,nh)
+    a = -jnp.exp(p["a_log"].astype(F32))                      # (nh,)
+
+    def step(h, inp):                                   # h: (B,nh,hd,st)
+        u_t, b_t, c_t, dt_t = inp
+        da = jnp.exp(dt_t * a)                          # (B,nh)
+        h = (h * da[..., None, None]
+             + (dt_t[..., None] * u_t)[..., None] * b_t[:, :, None, :])
+        y = jnp.einsum("bhds,bhs->bhd", h, c_t)
+        return h, y
+
+    h0 = cache["ssm"].astype(F32) if cache \
+        else jnp.zeros((B, nh, hd, st), F32) + (u[0, 0, 0, 0] * 0).astype(F32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (u.astype(F32), b.astype(F32), c.astype(F32), dt))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u.astype(F32) * p["d_skip"].astype(F32)[:, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    # gated RMSNorm (mamba2)
+    yf = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["norm"].astype(F32))
+    out = yf.astype(x.dtype) @ p["out_proj"]
+    new_cache = {"conv": new_conv, "ssm": h.astype(x.dtype)} if cache is not None \
+        else None
+    return out, new_cache

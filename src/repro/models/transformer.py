@@ -1,0 +1,545 @@
+"""Unified decoder-LM assembly for all 10 assigned architectures.
+
+Families compose from the same block set with scan-over-layers (stacked
+params, static trip counts — required both for compile-time control and for
+the roofline's trip-count-corrected FLOP accounting):
+
+  dense / audio      [attn + ffn] x L
+  moe                [attn + moe] x L (deepseek: first 3 dense, + MTP block)
+  vlm                groups of [cross_attn_every self layers + 1 cross block]
+  ssm                [mamba1] x L
+  hybrid (zamba2)    groups of [attn_every mamba2 blocks] + ONE weight-shared
+                     attention block applied per group (+ tail mamba blocks)
+
+Entry points per config:
+  loss_fn(params, batch, cfg, sh)                       (training)
+  forward(..., collect_kv=True)                         (prefill: logits+cache)
+  decode_step(params, cache, tokens, cur_index, cfg)    (one-token serve)
+  init_cache(cfg, batch, seq_len)                       (decode cache pytree)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Shardings, null_shardings
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    cross_entropy, embed, embed_params, logits, mlp, mlp_params, rms_norm,
+    rms_norm_params,
+)
+from repro.models.params import PSpec
+
+F32 = jnp.float32
+tmap = jax.tree_util.tree_map
+
+
+def _stack(tree, n: int):
+    """Prepend a scan dim of size n to every PSpec in tree."""
+    return tmap(lambda p: PSpec((n,) + p.shape, (None,) + p.axes, p.scale,
+                                p.dtype),
+                tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+# --------------------------------------------------------------------------
+# Parameter tree
+# --------------------------------------------------------------------------
+
+def _layer_params(cfg: ModelConfig, ffn: str):
+    p: dict[str, Any] = {
+        "ln1": rms_norm_params(cfg.d_model),
+        "attn": attn.mla_params(cfg) if cfg.use_mla else attn.gqa_params(cfg),
+        "ln2": rms_norm_params(cfg.d_model),
+    }
+    if ffn == "moe":
+        p["moe"] = moe_mod.moe_params(cfg)
+    else:
+        p["mlp"] = mlp_params(cfg)
+    return p
+
+
+def param_tree(cfg: ModelConfig):
+    t: dict[str, Any] = {"embed": embed_params(cfg),
+                         "final_ln": rms_norm_params(cfg.d_model)}
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        t["layers"] = _stack(_layer_params(cfg, "mlp"), cfg.num_layers)
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            t["dense_layers"] = _stack(_layer_params(cfg, "mlp"),
+                                       cfg.first_dense_layers)
+        t["moe_layers"] = _stack(
+            _layer_params(cfg, "moe"),
+            cfg.num_layers - cfg.first_dense_layers)
+        if cfg.mtp_depth:
+            t["mtp"] = _stack(_layer_params(cfg, "moe"), cfg.mtp_depth)
+    elif fam == "vlm":
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        t["layers"] = _stack(_layer_params(cfg, "mlp"), cfg.num_layers)
+        t["cross"] = _stack({"ln": rms_norm_params(cfg.d_model),
+                             "xattn": attn.cross_attn_params(cfg),
+                             "ln2": rms_norm_params(cfg.d_model),
+                             "mlp": mlp_params(cfg)}, n_groups)
+    elif fam == "ssm":
+        t["layers"] = _stack({"ln1": rms_norm_params(cfg.d_model),
+                              "mamba": ssm_mod.mamba1_params(cfg)},
+                             cfg.num_layers)
+    elif fam == "hybrid":
+        t["mamba"] = _stack({"ln1": rms_norm_params(cfg.d_model),
+                             "mamba": ssm_mod.mamba2_params(cfg)},
+                            cfg.num_layers)
+        t["shared_attn"] = _layer_params(cfg, "mlp")   # ONE copy, reused
+    else:
+        raise ValueError(cfg.family)
+    return t
+
+
+def _hybrid_split(cfg: ModelConfig, tree):
+    """Split the stacked mamba tree into (groups of attn_every, tail)."""
+    g = cfg.attn_every
+    n_groups = cfg.num_layers // g
+    grouped = tmap(lambda a: a[: n_groups * g].reshape(
+        (n_groups, g) + a.shape[1:]), tree)
+    tail = tmap(lambda a: a[n_groups * g:], tree)
+    return grouped, tail
+
+
+# --------------------------------------------------------------------------
+# Block forwards (training / prefill). Each returns (x, aux, kv|None).
+# --------------------------------------------------------------------------
+
+def _attn_ffn_fwd(p, x, cfg, sh: Shardings, *, use_mla, ffn, chunk, unroll,
+                  collect_kv=False):
+    h_in = rms_norm(p["ln1"], x)
+    kv = None
+    if use_mla:
+        h = attn.mla_forward(p["attn"], h_in, cfg, chunk=chunk, unroll=unroll)
+        if collect_kv:
+            B, S, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            *_, c, k_rope = attn._mla_qc(p["attn"], h_in, cfg, positions)
+            kv = {"latent": jnp.concatenate([c, k_rope], axis=-1)}
+    else:
+        if collect_kv:
+            h, (k, v) = attn.gqa_forward(p["attn"], h_in, cfg, chunk=chunk,
+                                         unroll=unroll, return_kv=True)
+            kv = {"k": k, "v": v}
+        else:
+            h = attn.gqa_forward(p["attn"], h_in, cfg, chunk=chunk,
+                                 unroll=unroll)
+    x = sh.act(x + h, "dp", None, None)
+    aux = jnp.zeros((), F32)
+    h2_in = rms_norm(p["ln2"], x)
+    if ffn == "moe":
+        f, aux = moe_mod.moe_forward(p["moe"], h2_in, cfg, sh)
+    else:
+        f = mlp(p["mlp"], h2_in, cfg)
+    x = sh.act(x + f, "dp", None, None)
+    return x, aux, kv
+
+
+def _mamba_fwd(p, x, cfg, sh: Shardings, cache=None):
+    h, new_cache = (ssm_mod.mamba1_forward if cfg.ssm_type == "mamba1"
+                    else ssm_mod.mamba2_forward)(
+        p["mamba"], rms_norm(p["ln1"], x), cfg, cache)
+    return sh.act(x + h, "dp", None, None), new_cache
+
+
+def _aux0(x):
+    """Scalar 0 whose shard_map varying-axes match x (scan-carry vma).
+    Scalar-indexes BEFORE any cast/reshape — reshape(-1) on a sharded array
+    would materialize a gathered copy (measured +2GB/layer wire)."""
+    return (x[(0,) * x.ndim] * 0).astype(F32)
+
+
+def _scan_layers(body, x, stacked, remat: bool, collect=False):
+    f = jax.checkpoint(body) if remat else body
+
+    def wrapped(carry, lp):
+        xx, aux = carry
+        xx, a, kv = f(xx, lp)
+        return (xx, aux + a), (kv if collect else None)
+
+    (x, aux), kvs = jax.lax.scan(wrapped, (x, _aux0(x)), stacked)
+    return x, aux, kvs
+
+
+# --------------------------------------------------------------------------
+# Full forward (training / prefill)
+# --------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: ModelConfig, sh: Shardings | None = None,
+            extras=None, *, unroll: bool = False, chunk: int = 512,
+            collect_kv: bool = False):
+    """Returns (hidden (B,S,d), aux_loss, caches|None)."""
+    sh = sh or null_shardings()
+    x = embed(params["embed"], tokens, cfg)
+    x = sh.act(x, "dp", None, None)
+    caches: dict[str, Any] = {}
+    aux = _aux0(x)
+    fam = cfg.family
+    B = x.shape[0]
+
+    def attn_body(ffn, use_mla):
+        def body(xx, lp):
+            return _attn_ffn_fwd(lp, xx, cfg, sh, use_mla=use_mla, ffn=ffn,
+                                 chunk=chunk, unroll=unroll,
+                                 collect_kv=collect_kv)
+        return body
+
+    if fam in ("dense", "audio"):
+        x, aux, kv = _scan_layers(attn_body("mlp", False), x,
+                                  params["layers"], cfg.remat, collect_kv)
+        if collect_kv:
+            caches["layers"] = kv
+
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            x, a, kv = _scan_layers(attn_body("mlp", cfg.use_mla), x,
+                                    params["dense_layers"], cfg.remat,
+                                    collect_kv)
+            aux += a
+            if collect_kv:
+                caches["dense_layers"] = kv
+        x, a, kv = _scan_layers(attn_body("moe", cfg.use_mla), x,
+                                params["moe_layers"], cfg.remat, collect_kv)
+        aux += a
+        if collect_kv:
+            caches["moe_layers"] = kv
+
+    elif fam == "vlm":
+        g = cfg.cross_attn_every
+        n_groups = cfg.num_layers // g
+        img = extras["image_embeds"]
+        stacked = tmap(lambda a: a.reshape((n_groups, g) + a.shape[1:]),
+                       params["layers"])
+
+        def group_body(carry, gp):
+            xx, aux_c = carry
+            lp, cp = gp
+            xx, a, kvs = _scan_layers(attn_body("mlp", False), xx, lp,
+                                      cfg.remat, collect_kv)
+            h = attn.cross_attn_forward(cp["xattn"], rms_norm(cp["ln"], xx),
+                                        img, cfg)
+            xx = sh.act(xx + h, "dp", None, None)
+            f = mlp(cp["mlp"], rms_norm(cp["ln2"], xx), cfg)
+            xx = sh.act(xx + f, "dp", None, None)
+            return (xx, aux_c + a), kvs
+
+        (x, aux), kvs = jax.lax.scan(group_body, (x, aux),
+                                     (stacked, params["cross"]))
+        if collect_kv:
+            caches["layers"] = tmap(
+                lambda a: a.reshape((-1,) + a.shape[2:]), kvs)
+            caches["cross_kv"] = {
+                "k": jnp.einsum("bnd,gdhk->gbnhk", img,
+                                params["cross"]["xattn"]["wk"]),
+                "v": jnp.einsum("bnd,gdhk->gbnhk", img,
+                                params["cross"]["xattn"]["wv"]),
+            }
+
+    elif fam == "ssm":
+        if collect_kv:
+            c0 = init_ssm_cache(cfg, B, x.dtype, stacked=True)
+
+            def body(xx, inp):
+                lp, lc = inp
+                xx, nc = _mamba_fwd(lp, xx, cfg, sh, lc)
+                return xx, nc
+
+            f = jax.checkpoint(body) if cfg.remat else body
+            x, nc = jax.lax.scan(f, x, (params["layers"], c0))
+            caches["ssm"] = nc
+        else:
+            def body(xx, lp):
+                xx, _ = _mamba_fwd(lp, xx, cfg, sh, None)
+                return xx, None
+
+            f = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(f, x, params["layers"])
+
+    elif fam == "hybrid":
+        m_grouped, m_tail = _hybrid_split(cfg, params["mamba"])
+        shared = params["shared_attn"]
+
+        if collect_kv:
+            c0 = init_ssm_cache(cfg, B, x.dtype, stacked=True)
+            gcache, tcache = _hybrid_split(cfg, c0)
+
+            def mamba_body(xx, inp):
+                lp, lc = inp
+                xx, nc = _mamba_fwd(lp, xx, cfg, sh, lc)
+                return xx, nc
+
+            mf = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+
+            def group_body(carry, inp):
+                xx, aux_c = carry
+                gp, gc = inp
+                xx, nc = jax.lax.scan(mf, xx, (gp, gc))
+                xx, a, kv = _attn_ffn_fwd(shared, xx, cfg, sh, use_mla=False,
+                                          ffn="mlp", chunk=chunk,
+                                          unroll=unroll, collect_kv=True)
+                return (xx, aux_c + a), (nc, kv)
+
+            (x, aux), (ncaches, kvs) = jax.lax.scan(group_body, (x, aux),
+                                                    (m_grouped, gcache))
+            x, tnew = jax.lax.scan(mf, x, (m_tail, tcache))
+            caches["ssm_groups"] = ncaches
+            caches["ssm_tail"] = tnew
+            caches["attn_kv"] = kvs
+        else:
+            def mb(xx, lp):
+                xx, _ = _mamba_fwd(lp, xx, cfg, sh, None)
+                return xx, None
+
+            mbf = jax.checkpoint(mb) if cfg.remat else mb
+
+            def group_body(carry, gp):
+                xx, aux_c = carry
+                xx, _ = jax.lax.scan(mbf, xx, gp)
+                xx, a, _ = _attn_ffn_fwd(shared, xx, cfg, sh, use_mla=False,
+                                         ffn="mlp", chunk=chunk, unroll=unroll)
+                return (xx, aux_c + a), None
+
+            (x, aux), _ = jax.lax.scan(group_body, (x, aux), m_grouped)
+            x, _ = jax.lax.scan(mbf, x, m_tail)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_ln"], x)
+    return x, aux, (caches if collect_kv else None)
+
+
+# --------------------------------------------------------------------------
+# Loss (training)
+# --------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg: ModelConfig, sh: Shardings | None = None,
+            *, unroll: bool = False, chunk: int = 512):
+    tokens = batch["tokens"]
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    h, aux, _ = forward(params, tokens, cfg, sh, extras or None,
+                        unroll=unroll, chunk=chunk)
+    lg = logits(params["embed"], h[:, :-1], cfg)
+    if cfg.num_codebooks:
+        loss = cross_entropy(lg, tokens[:, 1:])       # (B,S-1,n_cb,V) vs ids
+    else:
+        loss = cross_entropy(lg, tokens[:, 1:])
+    if cfg.family == "moe" and cfg.mtp_depth:
+        sh_ = sh or null_shardings()
+
+        def body(xx, lp):
+            xx, a, _ = _attn_ffn_fwd(lp, xx, cfg, sh_, use_mla=cfg.use_mla,
+                                     ffn="moe", chunk=chunk, unroll=unroll)
+            return xx, a
+
+        h2, _ = jax.lax.scan(body, h, params["mtp"])
+        lg2 = logits(params["embed"], h2[:, :-2], cfg)
+        loss = loss + 0.3 * cross_entropy(lg2, tokens[:, 2:])
+    return loss + 0.01 * aux
+
+
+def prefill(params, tokens, cfg: ModelConfig, sh: Shardings | None = None,
+            extras=None, *, chunk: int = 512):
+    """Full-prompt forward; returns (last-position logits, cache)."""
+    h, _, caches = forward(params, tokens, cfg, sh, extras, chunk=chunk,
+                           collect_kv=True)
+    lg = logits(params["embed"], h[:, -1:], cfg)
+    return lg, caches
+
+
+# --------------------------------------------------------------------------
+# Cache construction
+# --------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype, stacked=False,
+                   n: int | None = None):
+    di, st, w = cfg.resolved_d_inner, cfg.ssm_state, cfg.conv_width
+    n = n if n is not None else cfg.num_layers
+    if cfg.ssm_type == "mamba1":
+        conv_dim = di
+        ssm_shape = (batch, di, st)
+    else:
+        conv_dim = di + 2 * cfg.mamba2_n_groups * cfg.ssm_state
+        nh = di // cfg.mamba2_head_dim
+        ssm_shape = (batch, nh, cfg.mamba2_head_dim, st)
+    conv = jnp.zeros((n, batch, w - 1, conv_dim) if stacked
+                     else (batch, w - 1, conv_dim), dtype)
+    ssm = jnp.zeros(((n,) + ssm_shape) if stacked else ssm_shape, dtype)
+    return {"conv": conv, "ssm": ssm}
+
+
+def _kv_zeros(cfg, n, batch, seq_len, dtype):
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((n, batch, seq_len, K, hd), dtype),
+            "v": jnp.zeros((n, batch, seq_len, K, hd), dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        return {"layers": _kv_zeros(cfg, cfg.num_layers, batch, seq_len, dtype)}
+    if fam == "moe":
+        c: dict[str, Any] = {}
+        if cfg.use_mla:
+            lat = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+            if cfg.first_dense_layers:
+                c["dense_layers"] = {"latent": jnp.zeros(
+                    (cfg.first_dense_layers, batch, seq_len, lat), dtype)}
+            c["moe_layers"] = {"latent": jnp.zeros(
+                (cfg.num_layers - cfg.first_dense_layers, batch, seq_len, lat),
+                dtype)}
+        else:
+            c["moe_layers"] = _kv_zeros(cfg, cfg.num_layers, batch, seq_len,
+                                        dtype)
+        return c
+    if fam == "vlm":
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "layers": _kv_zeros(cfg, cfg.num_layers, batch, seq_len, dtype),
+            "cross_kv": {
+                "k": jnp.zeros((n_groups, batch, cfg.num_image_tokens, K, hd),
+                               dtype),
+                "v": jnp.zeros((n_groups, batch, cfg.num_image_tokens, K, hd),
+                               dtype)},
+        }
+    if fam == "ssm":
+        return {"ssm": init_ssm_cache(cfg, batch, dtype, stacked=True)}
+    if fam == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.num_layers // g
+        full = init_ssm_cache(cfg, batch, dtype, stacked=True)
+        grouped, tail = _hybrid_split(cfg, full)
+        return {"ssm_groups": grouped, "ssm_tail": tail,
+                "attn_kv": _kv_zeros(cfg, n_groups, batch, seq_len, dtype)}
+    raise ValueError(fam)
+
+
+# --------------------------------------------------------------------------
+# Decode step
+# --------------------------------------------------------------------------
+
+def _attn_ffn_decode(p, x, cfg, cache, cur_index, *, use_mla, ffn, sh=None):
+    h_in = rms_norm(p["ln1"], x)
+    if use_mla:
+        h, new_cache = attn.mla_decode(p["attn"], h_in, cfg, cache, cur_index)
+    else:
+        h, new_cache = attn.gqa_decode(p["attn"], h_in, cfg, cache, cur_index)
+    x = x + h
+    h2 = rms_norm(p["ln2"], x)
+    if ffn == "moe":
+        f, _ = moe_mod.moe_forward(p["moe"], h2, cfg, sh)
+    else:
+        f = mlp(p["mlp"], h2, cfg)
+    return x + f, new_cache
+
+
+def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig,
+                sh: Shardings | None = None):
+    """tokens: (B, 1[, n_cb]); cur_index: (B,). Returns (logits, new_cache)."""
+    sh = sh or null_shardings()
+    x = embed(params["embed"], tokens, cfg)
+    fam = cfg.family
+    new_cache: dict[str, Any] = {}
+
+    def scan_decode(x, stack_params, stack_cache, use_mla, ffn):
+        def body(xx, inp):
+            lp, lc = inp
+            xx, nc = _attn_ffn_decode(lp, xx, cfg, lc, cur_index,
+                                      use_mla=use_mla, ffn=ffn, sh=sh)
+            return xx, nc
+        return jax.lax.scan(body, x, (stack_params, stack_cache))
+
+    if fam in ("dense", "audio"):
+        x, nc = scan_decode(x, params["layers"], cache["layers"], False, "mlp")
+        new_cache["layers"] = nc
+
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            x, nc = scan_decode(x, params["dense_layers"],
+                                cache["dense_layers"], cfg.use_mla, "mlp")
+            new_cache["dense_layers"] = nc
+        x, nc = scan_decode(x, params["moe_layers"], cache["moe_layers"],
+                            cfg.use_mla, "moe")
+        new_cache["moe_layers"] = nc
+
+    elif fam == "vlm":
+        g = cfg.cross_attn_every
+        n_groups = cfg.num_layers // g
+        stacked = tmap(lambda a: a.reshape((n_groups, g) + a.shape[1:]),
+                       params["layers"])
+        kv_stacked = tmap(lambda a: a.reshape((n_groups, g) + a.shape[1:]),
+                          cache["layers"])
+
+        def self_body(xx, inp):
+            lp, lc = inp
+            xx, nc = _attn_ffn_decode(lp, xx, cfg, lc, cur_index,
+                                      use_mla=False, ffn="mlp", sh=sh)
+            return xx, nc
+
+        def group_body(xx, inp):
+            lp, lc, cp, ckv = inp
+            xx, nc = jax.lax.scan(self_body, xx, (lp, lc))
+            q = jnp.einsum("bsd,dhk->bshk", rms_norm(cp["ln"], xx),
+                           cp["xattn"]["wq"])
+            n_img = ckv["k"].shape[1]
+            o = attn.decode_attention(
+                attn._group(q, cfg.num_kv_heads), ckv["k"], ckv["v"],
+                jnp.full_like(cur_index, n_img - 1))
+            o = jnp.einsum("bshk,hkd->bsd", o, cp["xattn"]["wo"])
+            xx = xx + jnp.tanh(cp["xattn"]["gate"].astype(F32)).astype(
+                xx.dtype) * o
+            xx = xx + mlp(cp["mlp"], rms_norm(cp["ln2"], xx), cfg)
+            return xx, nc
+
+        x, nc = jax.lax.scan(group_body, x, (stacked, kv_stacked,
+                                             params["cross"],
+                                             cache["cross_kv"]))
+        new_cache["layers"] = tmap(lambda a: a.reshape((-1,) + a.shape[2:]),
+                                   nc)
+        new_cache["cross_kv"] = cache["cross_kv"]
+
+    elif fam == "ssm":
+        def body(xx, inp):
+            lp, lc = inp
+            xx, nc = _mamba_fwd(lp, xx, cfg, sh, lc)
+            return xx, nc
+
+        x, nc = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+        new_cache["ssm"] = nc
+
+    elif fam == "hybrid":
+        m_grouped, m_tail = _hybrid_split(cfg, params["mamba"])
+        shared = params["shared_attn"]
+
+        def mamba_body(xx, inp):
+            lp, lc = inp
+            xx, nc = _mamba_fwd(lp, xx, cfg, sh, lc)
+            return xx, nc
+
+        def group_body(xx, inp):
+            gp, gc, akv = inp
+            xx, nc = jax.lax.scan(mamba_body, xx, (gp, gc))
+            xx, akv_new = _attn_ffn_decode(shared, xx, cfg, akv, cur_index,
+                                           use_mla=False, ffn="mlp", sh=sh)
+            return xx, (nc, akv_new)
+
+        x, (nc, akv) = jax.lax.scan(group_body, x,
+                                    (m_grouped, cache["ssm_groups"],
+                                     cache["attn_kv"]))
+        x, tnc = jax.lax.scan(mamba_body, x, (m_tail, cache["ssm_tail"]))
+        new_cache["ssm_groups"] = nc
+        new_cache["ssm_tail"] = tnc
+        new_cache["attn_kv"] = akv
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_ln"], x)
+    return logits(params["embed"], x, cfg), new_cache

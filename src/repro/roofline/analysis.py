@@ -1,0 +1,195 @@
+"""Roofline machinery: HLO collective parsing + 3-term derivation.
+
+Methodology notes (validated empirically in this repo):
+
+  * `compiled.cost_analysis()` on an SPMD-partitioned module reports
+    PER-PARTITION (= per-device) flops/bytes — post-partitioning shapes.
+  * XLA's HloCostAnalysis counts a while/scan BODY ONCE regardless of trip
+    count. All repro models scan over layers/microbatches/kv-chunks, so raw
+    full-step numbers undercount by ~the layer count. The fix implemented
+    here (roofline/units.py): lower each scanned UNIT standalone and
+    multiply by its static trip count; units containing an interior
+    sequence scan (Mamba) use a two-point linearization — lower at S and
+    S/2, where f(S) = a*S + b has b ~= (scan-body-counted-once), so the
+    corrected cost is (a + b) * S.
+  * Collective wire bytes are not in cost_analysis: we parse the post-SPMD
+    HLO text and apply ring cost factors per op (all-reduce 2(g-1)/g x out,
+    all-gather (g-1)/g x out, reduce-scatter (g-1) x out, all-to-all
+    (g-1)/g x out, collective-permute 1 x out), with g parsed from
+    replica_groups (explicit or iota form).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return int(m.group(2))                      # [G, S]<=[N]: groups of S
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        body = m.group(1).strip()
+        return len(body.split(",")) if body else 1
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0                          # per-device, ring model
+    by_op: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, op: str, wire: float):
+        self.wire_bytes += wire
+        self.by_op[op] = self.by_op.get(op, 0.0) + wire
+        self.count += 1
+
+
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+
+
+def _wire_of(line: str, default_group: int):
+    m = _COLL_RE.search(line)
+    if not m:
+        return None
+    type_str, op, _ = m.groups()
+    b = shape_bytes(type_str)
+    g = _group_size(line, default_group)
+    if g <= 1:
+        return op, 0.0
+    if op == "all-reduce":
+        wire = 2.0 * b * (g - 1) / g
+    elif op == "all-gather":
+        wire = b * (g - 1) / g
+    elif op == "reduce-scatter":
+        wire = b * (g - 1)                           # out is the shard
+    elif op == "all-to-all":
+        wire = b * (g - 1) / g
+    else:                                            # collective-permute
+        wire = float(b)
+    return op, wire
+
+
+def collective_stats(hlo_text: str, default_group: int = 16) -> CollectiveStats:
+    """Per-device wire bytes from post-SPMD HLO (while/scan bodies counted
+    once — callers multiply by trip counts; see collective_stats_split)."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ow = _wire_of(line, default_group)
+        if ow:
+            st.add(*ow)
+    return st
+
+
+def collective_stats_split(hlo_text: str, default_group: int = 16):
+    """(outside, inside_while) collective stats. Collectives that live in a
+    while-body computation recur once per trip; everything else is once per
+    call. Needed because scan-body wire must be scaled by the trip count
+    while S-constant traffic (FSDP param gathers) must NOT be."""
+    bodies = set(re.findall(r"body=%?([\w.\-]+)", hlo_text))
+    outside, inside = CollectiveStats(), CollectiveStats()
+    cur = None
+    for line in hlo_text.splitlines():
+        if line.rstrip().endswith("{"):
+            m = _COMP_START_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+        ow = _wire_of(line, default_group)
+        if ow:
+            (inside if cur in bodies else outside).add(*ow)
+    return outside, inside
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float             # from the ANALYTIC byte model (TPU-achievable)
+    collective_s: float
+    flops: float                # per device
+    bytes_hbm: float            # analytic bytes, per device
+    wire_bytes: float           # per device
+    model_flops: float = 0.0    # 6ND-style analytic, per device
+    memory_hlo_s: float = 0.0   # pessimistic bound from CPU-backend HLO
+    bytes_hlo: float = 0.0      # (CPU fuses far less than TPU; see DESIGN)
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the *useful* model flops are to the peak achievable on
+        the dominant resource: model_flops/peak divided by the bound time."""
+        if self.bound_s <= 0:
+            return 0.0
+        ideal = self.model_flops / hw.PEAK_FLOPS_BF16
+        return ideal / self.bound_s
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+
+def terms(flops: float, bytes_hbm: float, wire_bytes: float,
+          model_flops: float = 0.0, bytes_hlo: float = 0.0) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / hw.PEAK_FLOPS_BF16,
+        memory_s=bytes_hbm / hw.HBM_BW,
+        collective_s=wire_bytes / hw.COLLECTIVE_BW,
+        flops=flops, bytes_hbm=bytes_hbm, wire_bytes=wire_bytes,
+        model_flops=model_flops,
+        memory_hlo_s=bytes_hlo / hw.HBM_BW, bytes_hlo=bytes_hlo)
+
+
+def cost_of(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def memory_of(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = getattr(ma, k, None)
+    return out

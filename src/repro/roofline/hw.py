@@ -1,0 +1,20 @@
+"""TPU v5e hardware model (the dry-run target; this container is CPU-only).
+
+Collective wire model: per-device bytes for ring algorithms over one torus
+axis; each axis of the 2D ICI torus gives a bidirectional ring = 2 usable
+links per collective. These constants feed the three roofline terms
+(EXPERIMENTS.md section Roofline)."""
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (one direction)
+LINKS_PER_AXIS = 2              # bidirectional ring on one torus axis
+COLLECTIVE_BW = ICI_LINK_BW * LINKS_PER_AXIS
+HBM_PER_CHIP = 16 * 1024 ** 3   # 16 GiB
+
+CHIPS_PER_POD = 256             # 16 x 16
+PODS = 2
+
+
+def mfu(model_flops_per_device: float, seconds: float) -> float:
+    return model_flops_per_device / (seconds * PEAK_FLOPS_BF16)

@@ -1,0 +1,34 @@
+"""Refresh the §Dry-run and §Roofline tables in EXPERIMENTS.md in place
+(all other sections — Validation, Paper-tables, Perf — are hand-written
+narrative around checked-in measurements and stay untouched)."""
+from __future__ import annotations
+
+import re
+import sys
+
+from repro.roofline.report import dryrun_table, load_cells, roofline_table
+
+
+def replace_table(text: str, section: str, new_table: str) -> str:
+    """Replace the first markdown table found after `section` heading."""
+    idx = text.index(section)
+    tbl_start = text.index("\n| ", idx) + 1
+    end = tbl_start
+    for line in text[tbl_start:].splitlines(keepends=True):
+        if not line.startswith("|"):
+            break
+        end += len(line)
+    return text[:tbl_start] + new_table + "\n" + text[end:]
+
+
+def main(path: str = "EXPERIMENTS.md"):
+    cells = load_cells()
+    text = open(path).read()
+    text = replace_table(text, "## §Dry-run", dryrun_table(cells))
+    text = replace_table(text, "## §Roofline", roofline_table(cells))
+    open(path, "w").write(text)
+    print("refreshed", path)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,91 @@
+"""Assemble EXPERIMENTS.md tables from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(d: str = "experiments/dryrun"):
+    cells = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rec = json.load(open(f))
+        key = (rec.get("arch"), rec.get("shape"), rec.get("mesh"))
+        cells[key] = rec
+    return cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def dryrun_table(cells) -> str:
+    rows = ["| arch | shape | mesh | compile | args/dev | temp/dev | "
+            "collectives (once) | wire/dev (once) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if not r.get("ok"):
+            rows.append(f"| {arch} | {shape} | {mesh} | **FAIL** | | | | |")
+            continue
+        mem = r.get("memory", {})
+        fo = r.get("full_step_once", {})
+        rows.append(
+            f"| {arch} | {shape} | {mesh} | {r.get('compile_s')}s "
+            f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+            f"| {fmt_bytes(mem.get('temp_size_in_bytes'))} "
+            f"| {fo.get('collective_count', '-')} "
+            f"| {fmt_bytes(fo.get('wire_bytes'))} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells) -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "bound | MODEL_FLOPs/dev | useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if mesh != "16x16" or "roofline" not in r or not r.get("ok"):
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {fmt_s(t['compute_s'])} "
+            f"| {fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} "
+            f"| **{t['dominant']}** | {fmt_s(t['bound_s'])} "
+            f"| {t['model_flops']:.3e} | {t['useful_ratio']:.2f} "
+            f"| {t['roofline_fraction']*100:.1f}% |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells):
+    """worst roofline fraction, most collective-bound, paper-representative."""
+    lm = {k: v for k, v in cells.items()
+          if k[2] == "16x16" and v.get("ok") and "roofline" in v
+          and not k[0].startswith("paper-")}
+    worst = min(lm, key=lambda k: lm[k]["roofline"]["roofline_fraction"])
+    coll = max(lm, key=lambda k: (lm[k]["roofline"]["collective_s"]
+                                  / max(lm[k]["roofline"]["bound_s"], 1e-12)))
+    return worst, coll
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(dryrun_table(cells))
+    print()
+    print(roofline_table(cells))
+    print()
+    print("hillclimb picks:", pick_hillclimb(cells))

@@ -1,0 +1,540 @@
+"""Cost units: trip-count-correct FLOP/byte/wire accounting per cell.
+
+XLA's cost analysis counts scan bodies once (see roofline/analysis.py), so
+each cell decomposes into UNITS — the scanned bodies and the un-scanned
+remainder — lowered standalone on the same mesh/shardings and multiplied by
+their static trip counts:
+
+  train:   grad(layer-block) x L x microbatches  (+ per-stack for moe/vlm/
+           hybrid) + grad(embed+head+CE) x microbatches + optimizer x 1
+  prefill: layer-forward x L + head x 1
+  decode:  layer-decode x L + head x 1
+
+Units whose body contains an interior SEQUENCE scan (Mamba) are lowered at
+S and S/2; f(S) = a*S + b gives the corrected cost (a + b/S_unit)*S ~= aS+b
+with the body's once-counted cost b re-scaled linearly — implemented as
+cost(S) := 2*f(S) - f_half*2 ... concretely: a = (f(S)-f(S/2))/(S/2), and
+true(S) = a*S + b*S/S = a*S + (f(S) - a*S) * S  -- NO: b is counted once
+but is incurred S times, so true(S) = a*S + (f(S) - a*S)*S. Since
+everything else in the block scales linearly with S, b isolates the scan
+body. (Verified against analytic recurrence FLOPs in tests.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import Shardings
+from repro.models import transformer as tfm
+from repro.models.api import build_model
+from repro.models.layers import cross_entropy, embed, logits, rms_norm
+from repro.models.params import partition_specs, sds_params
+from repro.roofline import analysis
+from repro.train import OptConfig
+from repro.train import optimizer as opt_mod
+
+tmap = jax.tree_util.tree_map
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class Unit:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    mult: float
+    seq_scan: bool = False       # two-point correction over the seq axis
+    half_args: tuple | None = None
+
+
+@dataclasses.dataclass
+class UnitCost:
+    name: str
+    flops: float
+    bytes_hbm: float
+    wire: float
+    mult: float
+
+
+def _lower(unit_fn, args, in_shardings):
+    jitted = jax.jit(unit_fn, in_shardings=in_shardings) \
+        if in_shardings is not None else jax.jit(unit_fn)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    flops, bytes_hbm = analysis.cost_of(compiled)
+    w_out, w_in = analysis.collective_stats_split(compiled.as_text())
+    return flops, bytes_hbm, w_out.wire_bytes, w_in.wire_bytes
+
+
+def measure_units(units: list[Unit]) -> list[UnitCost]:
+    out = []
+    for u in units:
+        f, b, w_out, w_in = _lower(u.fn, u.args, u.in_shardings)
+        w = w_out + w_in
+        if u.seq_scan and u.half_args is not None:
+            # flops/bytes: f(S) = a*S + body_once (everything outside the
+            # seq scan is ~linear in S; the scan body is counted once).
+            # a*S = 2(f(S)-f(S/2)); true cost = a*S + body*S.
+            fh, bh, *_ = _lower(u.fn, u.half_args, u.in_shardings)
+            S = _SEQ_OF[id(u)]
+
+            def corrected(full, half):
+                a_S = 2.0 * (full - half)
+                body = max(full - a_S, 0.0)
+                return a_S + body * S
+
+            f = corrected(f, fh)
+            b = corrected(b, bh)
+            # wire: while-body collectives recur per step; the rest (FSDP
+            # param gathers, grad reduces) are S-constant — measured
+            # directly from the HLO computation structure, NOT two-point.
+            w = w_out + w_in * S
+        out.append(UnitCost(u.name, f * u.mult, b * u.mult, w * u.mult,
+                            u.mult))
+    return out
+
+
+_SEQ_OF: dict[int, int] = {}
+
+
+def _named(sh: Shardings, spec_tree):
+    if sh.mesh is None:
+        return None
+    return tmap(lambda s: NamedSharding(sh.mesh, s), spec_tree)
+
+
+def _dp(shape: ShapeSpec, sh: Shardings):
+    from repro.models.api import _dp_axis
+    return _dp_axis(shape, sh)
+
+
+# ---------------------------------------------------------------------------
+# Unit builders
+# ---------------------------------------------------------------------------
+
+def _layer_sds(cfg: ModelConfig, ffn: str, sh: Shardings):
+    tree = tfm._layer_params(cfg, ffn)
+    return (sds_params(tree, jnp.dtype(cfg.dtype)),
+            _named(sh, partition_specs(tree, sh.rules)))
+
+
+def _mamba_sds(cfg: ModelConfig, sh: Shardings):
+    from repro.models import ssm as ssm_mod
+    from repro.models.layers import rms_norm_params
+    tree = {"ln1": rms_norm_params(cfg.d_model),
+            "mamba": (ssm_mod.mamba1_params(cfg) if cfg.ssm_type == "mamba1"
+                      else ssm_mod.mamba2_params(cfg))}
+    return (sds_params(tree, jnp.dtype(cfg.dtype)),
+            _named(sh, partition_specs(tree, sh.rules)))
+
+
+def _x_sds(cfg, b, s):
+    return jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+
+
+def _grad_block(block, remat: bool):
+    f = jax.checkpoint(block) if remat else block
+
+    def loss(lp, x):
+        y, aux = f(lp, x)
+        # 0.5*||y||^2, NOT sum(y): a constant cotangent lets XLA's algebraic
+        # simplifier turn the backward matmuls into plain reductions and the
+        # unit undercounts the backward pass by ~3x (verified empirically).
+        yf = y.astype(F32)
+        return 0.5 * jnp.sum(yf * yf) + aux
+
+    return jax.grad(loss, argnums=(0, 1))
+
+
+def train_units(cfg: ModelConfig, shape: ShapeSpec, sh: Shardings,
+                unroll_attn: bool = True) -> list[Unit]:
+    mb = cfg.microbatches_train
+    b_mb = shape.global_batch // mb
+    S = shape.seq_len
+    dp = _dp(shape, sh)
+    x_sh = NamedSharding(sh.mesh, P(dp, None, None)) if sh.mesh else None
+    units: list[Unit] = []
+
+    def attn_block(ffn, use_mla):
+        def block(lp, x):
+            y, aux, _ = tfm._attn_ffn_fwd(lp, x, cfg, sh, use_mla=use_mla,
+                                          ffn=ffn, chunk=512,
+                                          unroll=unroll_attn)
+            return y, aux
+        return block
+
+    def mamba_block(lp, x):
+        y, _ = tfm._mamba_fwd(lp, x, cfg, sh, None)
+        return y, jnp.zeros((), F32)
+
+    def add_layer_unit(name, block, ptree, psh, mult, seq_scan=False):
+        fn = _grad_block(block, cfg.remat)
+        args = (ptree, _x_sds(cfg, b_mb, S))
+        u = Unit(name, fn, args, (psh, x_sh) if sh.mesh else None, mult,
+                 seq_scan=seq_scan,
+                 half_args=(ptree, _x_sds(cfg, b_mb, S // 2))
+                 if seq_scan else None)
+        if seq_scan:
+            _SEQ_OF[id(u)] = S
+        units.append(u)
+
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        pt, psh = _layer_sds(cfg, "mlp", sh)
+        add_layer_unit("layer", attn_block("mlp", False), pt, psh,
+                       cfg.num_layers * mb)
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            pt, psh = _layer_sds(cfg, "mlp", sh)
+            add_layer_unit("dense_layer", attn_block("mlp", cfg.use_mla),
+                           pt, psh, cfg.first_dense_layers * mb)
+        pt, psh = _layer_sds(cfg, "moe", sh)
+        n_moe = cfg.num_layers - cfg.first_dense_layers
+        add_layer_unit("moe_layer", attn_block("moe", cfg.use_mla), pt, psh,
+                       (n_moe + cfg.mtp_depth) * mb)
+    elif fam == "vlm":
+        pt, psh = _layer_sds(cfg, "mlp", sh)
+        add_layer_unit("layer", attn_block("mlp", False), pt, psh,
+                       cfg.num_layers * mb)
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        from repro.models import attention as attn_mod
+        from repro.models.layers import mlp, mlp_params, rms_norm_params
+        ctree = {"ln": tfm.rms_norm_params(cfg.d_model),
+                 "xattn": attn_mod.cross_attn_params(cfg),
+                 "ln2": tfm.rms_norm_params(cfg.d_model),
+                 "mlp": mlp_params(cfg)}
+        csds = sds_params(ctree, jnp.dtype(cfg.dtype))
+        cpsh = _named(sh, partition_specs(ctree, sh.rules))
+        img_sds = jax.ShapeDtypeStruct(
+            (b_mb, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+
+        def cross_block(cp, x, img):
+            h = attn_mod.cross_attn_forward(cp["xattn"],
+                                            rms_norm(cp["ln"], x), img, cfg)
+            x = x + h
+            return x + mlp(cp["mlp"], rms_norm(cp["ln2"], x), cfg), \
+                jnp.zeros((), F32)
+
+        def loss(cp, x, img):
+            f = jax.checkpoint(cross_block) if cfg.remat else cross_block
+            y, aux = f(cp, x, img)
+            yf = y.astype(F32)
+            return 0.5 * jnp.sum(yf * yf) + aux   # see _grad_block note
+
+        fn = jax.grad(loss, argnums=(0, 1, 2))
+        units.append(Unit("cross_block", fn,
+                          (csds, _x_sds(cfg, b_mb, S), img_sds),
+                          (cpsh, x_sh,
+                           NamedSharding(sh.mesh, P(dp, None, None)))
+                          if sh.mesh else None,
+                          n_groups * mb))
+    elif fam == "ssm":
+        pt, psh = _mamba_sds(cfg, sh)
+        add_layer_unit("mamba_layer", mamba_block, pt, psh,
+                       cfg.num_layers * mb, seq_scan=True)
+    elif fam == "hybrid":
+        pt, psh = _mamba_sds(cfg, sh)
+        add_layer_unit("mamba_layer", mamba_block, pt, psh,
+                       cfg.num_layers * mb, seq_scan=True)
+        at, ash = _layer_sds(cfg, "mlp", sh)
+        n_groups = cfg.num_layers // cfg.attn_every
+        add_layer_unit("shared_attn", attn_block("mlp", False), at, ash,
+                       n_groups * mb)
+
+    # embed + head + CE (grad), once per microbatch
+    etree = {"embed": tfm.embed_params(cfg),
+             "final_ln": tfm.rms_norm_params(cfg.d_model)}
+    esds = sds_params(etree, jnp.dtype(cfg.dtype))
+    esh = _named(sh, partition_specs(etree, sh.rules))
+    tok_sds = jax.ShapeDtypeStruct(
+        (b_mb, S, cfg.num_codebooks) if cfg.num_codebooks else (b_mb, S),
+        jnp.int32)
+    tok_sh = NamedSharding(sh.mesh, P(dp, None, None)
+                           if cfg.num_codebooks else P(dp, None)) \
+        if sh.mesh else None
+
+    def eh_loss(ep, tokens):
+        x = embed(ep["embed"], tokens, cfg)
+        h = rms_norm(ep["final_ln"], x)
+        lg = logits(ep["embed"], h[:, :-1], cfg)
+        return cross_entropy(lg, tokens[:, 1:])
+
+    units.append(Unit("embed_head", jax.grad(eh_loss), (esds, tok_sds),
+                      (esh, tok_sh) if sh.mesh else None, mb))
+
+    # optimizer update, once
+    model = build_model(cfg)
+    params_sds = model.sds()
+    psh_full = _named(sh, model.pspecs(sh.rules))
+    ocfg = OptConfig(state_dtype=cfg.opt_state_dtype)
+    opt_sds = jax.eval_shape(lambda p: opt_mod.init(p, ocfg), params_sds)
+    grads_sds = tmap(lambda p: jax.ShapeDtypeStruct(p.shape, F32), params_sds)
+
+    def opt_fn(g, s, p):
+        np_, ns, _ = opt_mod.update(g, s, p, ocfg)
+        return np_, ns
+
+    opt_in_sh = ((psh_full,
+                  opt_mod.OptState(
+                      step=NamedSharding(sh.mesh, P()), m=psh_full,
+                      v=psh_full),
+                  psh_full) if sh.mesh else None)
+    units.append(Unit("optimizer", opt_fn, (grads_sds, opt_sds, params_sds),
+                      opt_in_sh, 1.0))
+    return units
+
+
+def serve_units(cfg: ModelConfig, shape: ShapeSpec, sh: Shardings,
+                unroll_attn: bool = True) -> list[Unit]:
+    """Units for prefill (full-seq forward) or decode (1 token vs cache)."""
+    from repro.models.api import cache_shardings, cache_sds
+
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp(shape, sh)
+    units: list[Unit] = []
+    decode = shape.kind == "decode"
+    x_s = _x_sds(cfg, B, 1 if decode else S)
+    x_sh = NamedSharding(sh.mesh, P(dp, None, None)) if sh.mesh else None
+    cur_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cur_sh = NamedSharding(sh.mesh, P(dp)) if sh.mesh else None
+
+    full_cache = cache_sds(cfg, shape)
+    full_csh = cache_shardings(cfg, shape, sh)
+
+    def slice_cache(tree, spec_tree, strip: int):
+        sds = tmap(lambda a: jax.ShapeDtypeStruct(a.shape[strip:], a.dtype),
+                   tree)
+        nsh = tmap(lambda s: NamedSharding(sh.mesh, P(*s[strip:])),
+                   spec_tree) if sh.mesh else None
+        return sds, nsh
+
+    def add(name, fn, args, in_sh, mult, seq_scan=False, half_args=None):
+        u = Unit(name, fn, args, in_sh if sh.mesh else None, mult,
+                 seq_scan=seq_scan, half_args=half_args)
+        if seq_scan:
+            _SEQ_OF[id(u)] = S
+        units.append(u)
+
+    fam = cfg.family
+
+    def attn_stack_unit(stack_key, ffn, use_mla, mult):
+        pt, psh = _layer_sds(cfg, ffn, sh)
+        if decode:
+            csds, csh = slice_cache(full_cache[stack_key],
+                                    full_csh[stack_key], 1)
+
+            def fn(lp, lc, x, cur):
+                return tfm._attn_ffn_decode(lp, x, cfg, lc, cur,
+                                            use_mla=use_mla, ffn=ffn, sh=sh)
+
+            add(f"{stack_key}_decode", fn, (pt, csds, x_s, cur_sds),
+                (psh, csh, x_sh, cur_sh), mult)
+        else:
+            def fn(lp, x):
+                y, aux, kv = tfm._attn_ffn_fwd(lp, x, cfg, sh,
+                                               use_mla=use_mla, ffn=ffn,
+                                               chunk=512, unroll=unroll_attn,
+                                               collect_kv=True)
+                return y, kv
+
+            add(f"{stack_key}_fwd", fn, (pt, x_s), (psh, x_sh), mult)
+
+    if fam in ("dense", "audio"):
+        attn_stack_unit("layers", "mlp", False, cfg.num_layers)
+    elif fam == "moe":
+        if cfg.first_dense_layers:
+            attn_stack_unit("dense_layers", "mlp", cfg.use_mla,
+                            cfg.first_dense_layers)
+        attn_stack_unit("moe_layers", "moe", cfg.use_mla,
+                        cfg.num_layers - cfg.first_dense_layers)
+    elif fam == "vlm":
+        attn_stack_unit("layers", "mlp", False, cfg.num_layers)
+        # cross blocks: decode reads cached cross kv; prefill computes it.
+        # counted inside the full-step remainder for simplicity (8 small
+        # blocks; <2% of cell flops) — noted in EXPERIMENTS.md.
+    elif fam in ("ssm", "hybrid"):
+        key = "ssm" if fam == "ssm" else "ssm_groups"
+        pt, psh = _mamba_sds(cfg, sh)
+        mult = cfg.num_layers
+        if decode:
+            if fam == "ssm":
+                csds, csh = slice_cache(full_cache["ssm"], full_csh["ssm"], 1)
+            else:
+                csds, csh = slice_cache(full_cache["ssm_groups"],
+                                        full_csh["ssm_groups"], 2)
+
+            def fn(lp, lc, x):
+                y, nc = tfm._mamba_fwd(lp, x, cfg, sh, lc)
+                return y, nc
+
+            add("mamba_decode", fn, (pt, csds, x_s), (psh, csh, x_sh), mult)
+        else:
+            def fn(lp, x):
+                y, _ = tfm._mamba_fwd(lp, x, cfg, sh, None)
+                return y
+
+            half = (pt, _x_sds(cfg, B, S // 2))
+            add("mamba_fwd", fn, (pt, x_s), (psh, x_sh), mult,
+                seq_scan=True, half_args=half)
+        if fam == "hybrid":
+            attn_stack_unit("attn_kv", "mlp", False,
+                            cfg.num_layers // cfg.attn_every)
+
+    # head: final norm + last-position logits (prefill) or 1-token logits
+    etree = {"embed": tfm.embed_params(cfg),
+             "final_ln": tfm.rms_norm_params(cfg.d_model)}
+    esds = sds_params(etree, jnp.dtype(cfg.dtype))
+    esh = _named(sh, partition_specs(etree, sh.rules))
+
+    def head_fn(ep, x):
+        h = rms_norm(ep["final_ln"], x[:, -1:])
+        return logits(ep["embed"], h, cfg)
+
+    add("head", head_fn, (esds, x_s), (esh, x_sh), 1.0)
+    return units
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def active_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(total_params, active_params_per_token)."""
+    from repro.models.params import count_params
+    tree = tfm.param_tree(cfg)
+    total = count_params(tree)
+    if cfg.family != "moe":
+        return total, total
+    # replace expert count by (shared + topk) experts' worth
+    from repro.models.params import PSpec
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, PSpec))
+    active = 0
+    for l in leaves:
+        n = math.prod(l.shape)
+        if len(l.shape) >= 3 and l.shape[-3] == cfg.num_experts and \
+                l.axes[-3] == "ep":
+            n = n // cfg.num_experts * cfg.num_experts_per_token
+        active += n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec, chips: int) -> float:
+    """6*N*D (train) / 2*N*D (forward-only), N = active params, per device."""
+    total, active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    if cfg.family == "moe" and cfg.mtp_depth and shape.kind == "train":
+        factor *= (cfg.num_layers + cfg.mtp_depth) / cfg.num_layers
+    return factor * active * tokens / chips
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM byte model (TPU-achievable bound)
+# ---------------------------------------------------------------------------
+# The HLO "bytes accessed" from this container's CPU-compiled modules counts
+# every unfused elementwise producer/consumer round trip; a TPU fuses those
+# into VMEM. This model counts only traffic that MUST hit HBM on a TPU:
+#   * parameter reads (x3 for train: fwd + remat recompute + bwd; x1 serve)
+#   * gradient accumulate read/write (fp32) per microbatch + optimizer io
+#   * one activation checkpoint write+read per layer boundary (remat policy)
+#     plus a C_ACT x d_model per-token working-set spill allowance
+#   * logits/embedding io, KV-cache read (+1-token write) for decode
+# Coefficients are deliberately explicit & conservative; EXPERIMENTS.md cites
+# this docstring as the memory-term methodology.
+
+C_ACT_TRAIN = 12.0     # bytes/token/layer multiplier on d_model (bf16 rw x3 passes)
+C_ACT_FWD = 6.0        # forward-only working set
+
+
+def _mesh_factors(sh: Shardings):
+    if sh.mesh is None:
+        return 1, 1, 1
+    sizes = dict(zip(sh.mesh.axis_names, sh.mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    return dp, tp, dp * tp
+
+
+def _expert_bytes(cfg: ModelConfig) -> float:
+    if not cfg.num_experts:
+        return 0.0
+    wi_cols = 2 * cfg.moe_d_ff if cfg.activation == "swiglu" else cfg.moe_d_ff
+    per_expert = cfg.d_model * (wi_cols + cfg.moe_d_ff) * 2.0
+    n_moe = cfg.num_layers - cfg.first_dense_layers + cfg.mtp_depth
+    return per_expert * cfg.num_experts * n_moe
+
+
+def _weights_bytes_per_dev(cfg: ModelConfig, sh: Shardings,
+                           active_only: bool) -> float:
+    """Parameter bytes resident/read per device under the ACTIVE rules
+    (fsdp may be dropped and ep widened for serving — §Perf)."""
+    dp, tp, chips = _mesh_factors(sh)
+    total, active = active_params(cfg)
+    pb = 2.0
+    exp_total = _expert_bytes(cfg)
+    exp_active = exp_total / max(cfg.num_experts, 1) * \
+        (cfg.num_experts_per_token + cfg.num_shared_experts) \
+        if cfg.num_experts else 0.0
+    dense = total * pb - exp_total
+    dense_div = tp * (dp if sh.rules.get("fsdp") is not None else 1)
+    ep = sh.rules.get("ep")
+    ep_axes = ep if isinstance(ep, tuple) else (ep,) if ep else ()
+    sizes = dict(zip(sh.mesh.axis_names, sh.mesh.devices.shape)) \
+        if sh.mesh else {}
+    ep_div = 1
+    for a in ep_axes:
+        ep_div *= sizes.get(a, 1)
+    # decode reads every expert resident on the device (B*topk >> E/dev);
+    # training/prefill touch active experts' worth of flops but all weights
+    exp_term = exp_total / max(ep_div, 1)
+    if active_only and cfg.num_experts:
+        exp_term = min(exp_term, exp_active)
+    return dense / dense_div + exp_term
+
+
+def analytic_bytes(cfg: ModelConfig, shape: ShapeSpec, sh: Shardings) -> float:
+    """Per-device HBM bytes for one step (see module comment)."""
+    from repro.models.api import cache_sds
+
+    dp, tp, chips = _mesh_factors(sh)
+    total, active = active_params(cfg)
+    pbytes = 2.0
+    p_dev = total * pbytes / chips
+    tokens = shape.global_batch * shape.seq_len
+    tokens_dp = tokens / dp
+    d = cfg.d_model
+    v_tp = cfg.vocab_size / tp * max(cfg.num_codebooks, 1)
+    L = cfg.num_layers
+
+    if shape.kind == "train":
+        mb = cfg.microbatches_train
+        sbytes = 4.0 if cfg.opt_state_dtype == "float32" else 2.0
+        weights = 3.0 * mb * p_dev
+        grads = 2.0 * mb * total * 4.0 / chips
+        optim = total / chips * (6.0 * sbytes + 2.0 * pbytes + 4.0)
+        acts = tokens_dp * d * C_ACT_TRAIN * L / 1.0
+        logits_io = tokens_dp * v_tp * 2.0 * 3.0
+        embed_io = tokens_dp * d * 2.0 * 2.0
+        return weights + grads + optim + acts + logits_io + embed_io
+
+    if shape.kind == "prefill":
+        weights = _weights_bytes_per_dev(cfg, sh, active_only=False)
+        acts = tokens_dp * d * C_ACT_FWD * L
+        cache = sum(x.size * x.dtype.itemsize
+                    for x in jax.tree_util.tree_leaves(cache_sds(cfg, shape)))
+        return weights + acts + cache / chips + tokens_dp * d * 2.0
+
+    # decode: weights once + full cache read (+tiny write) + head
+    weights = _weights_bytes_per_dev(cfg, sh, active_only=False)
+    cache = sum(x.size * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(cache_sds(cfg, shape)))
+    head = shape.global_batch / dp * v_tp * 2.0
+    return weights + cache / chips + head

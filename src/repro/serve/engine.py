@@ -1,0 +1,110 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+vLLM-style slot management reduced to its JAX-native core: a fixed decode
+batch of `slots` sequences sharing one jit'd decode_step; prefill fills a
+free slot's cache region; finished sequences (EOS or max_len) free their
+slot for the next queued request. Works with any family's cache pytree
+(the slot axis is the cache's batch axis — updated functionally via
+dynamic_update_index_in_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: Any                        # (S,) or (S, n_cb) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1: never
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, slots: int = 4, max_len: int = 64,
+                 sh=None):
+        self.model = model
+        self.cfg = model.cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.sh = sh
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}
+        self.cur_index = jnp.zeros((slots,), jnp.int32)
+        self.tokens = jnp.zeros(
+            (slots, 1, self.cfg.num_codebooks) if self.cfg.num_codebooks
+            else (slots, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, i: model.decode(p, c, t, i, sh))
+
+    def init_state(self, params):
+        self.params = params
+        self.cache = self.model.init_cache(
+            self.slots, self.max_len, dtype=jnp.dtype(self.cfg.dtype))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        """Greedy: run prompt tokens one-by-one through decode (cache-true
+        prefill; a chunked prefill path is a straightforward extension)."""
+        prompt = jnp.asarray(req.prompt)[None]          # (1, S, ...)
+        s_len = prompt.shape[1]
+        self.cur_index = self.cur_index.at[slot].set(0)
+        for t in range(s_len):
+            tok = prompt[:, t:t + 1]
+            self.tokens = jax.lax.dynamic_update_index_in_dim(
+                self.tokens, tok[0], slot, 0)
+            lg, self.cache = self._decode(
+                self.params, self.cache, self.tokens, self.cur_index)
+            self.cur_index = self.cur_index.at[slot].add(1)
+        nxt = jnp.argmax(lg[slot, -1], axis=-1).astype(jnp.int32)
+        return nxt
+
+    def step(self):
+        """Admit from queue, one decode step for all active slots."""
+        free = [s for s in range(self.slots) if s not in self.active]
+        while free and self.queue:
+            slot = free.pop()
+            req = self.queue.pop(0)
+            nxt = self._prefill_into_slot(slot, req)
+            req.out.append(int(nxt) if nxt.ndim == 0 else list(map(int, nxt)))
+            self.active[slot] = req
+            upd = nxt.reshape((1,) if nxt.ndim == 0 else nxt.shape)[None] \
+                if not self.cfg.num_codebooks else nxt[None, None]
+            self.tokens = jax.lax.dynamic_update_index_in_dim(
+                self.tokens, jnp.asarray(upd[0], jnp.int32), slot, 0)
+        if not self.active:
+            return False
+        lg, self.cache = self._decode(self.params, self.cache, self.tokens,
+                                      self.cur_index)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)  # (slots[,cb])
+        self.cur_index = self.cur_index + 1
+        for slot, req in list(self.active.items()):
+            tok = nxt[slot]
+            val = int(tok) if tok.ndim == 0 else list(map(int, tok))
+            req.out.append(val)
+            tok_arr = tok.reshape(1, 1, -1) if self.cfg.num_codebooks \
+                else tok.reshape(1, 1)
+            self.tokens = jax.lax.dynamic_update_index_in_dim(
+                self.tokens, tok_arr[0], slot, 0)
+            hit_eos = (not self.cfg.num_codebooks and val == req.eos_id)
+            if (len(req.out) >= req.max_new_tokens or hit_eos
+                    or int(self.cur_index[slot]) >= self.max_len - 1):
+                req.done = True
+                del self.active[slot]
+        return True
+
+    def run(self):
+        while self.queue or self.active:
+            self.step()

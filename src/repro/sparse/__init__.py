@@ -1,0 +1,16 @@
+from repro.sparse.formats import (
+    COO, ELL, BandedELL, banded_spec, banded_to_dense, coo_to_banded,
+    coo_to_dense, coo_to_ell, dense_to_coo, ell_spec, ell_to_dense,
+    transpose_coo,
+)
+from repro.sparse.linalg import (
+    banded_rmatvec, col_norms_sq, coo_matvec, coo_rmatvec, ell_col_norms_sq,
+    ell_matvec, ell_rmatvec,
+)
+from repro.sparse.partition import (
+    block_ell_spec, block_partitioned_ell, col_partitioned_ell, pad_vector,
+    row_ell_spec, row_partitioned_ell,
+)
+from repro.sparse.random import make_lasso, random_coo
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,196 @@
+"""Sparse matrix formats, TPU-adapted.
+
+The paper streams (i, j, a_ij) text tuples through HDFS; a TPU wants dense,
+aligned tiles. We provide:
+
+  * ``COO``        — host/construction format (also the jnp oracle format).
+  * ``ELL``        — padded fixed-width rows: ``vals (m, k)``, ``cols (m, k)``.
+                     Regular tiling; padding entries have col=0, val=0 so they
+                     contribute nothing. The forward operator's format.
+  * ``BandedELL``  — column-major ELL with rows bucketed into bands so the
+                     needed slice of ``y`` fits VMEM during ``A^T y``:
+                     ``vals (B, n, kb)``, ``rows (B, n, kb)`` (row indices are
+                     band-local). The backward operator's kernel format.
+
+All formats are registered pytrees: they pass through jit/shard_map/lower and
+can be built from ``jax.ShapeDtypeStruct`` leaves for allocation-free dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["rows", "cols", "vals"],
+         meta_fields=["m", "n"])
+@dataclasses.dataclass
+class COO:
+    rows: jax.Array      # (nnz,) int32
+    cols: jax.Array      # (nnz,) int32
+    vals: jax.Array      # (nnz,) float
+    m: int
+    n: int
+
+    @property
+    def nnz(self) -> int:
+        return self.vals.shape[0]
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["vals", "cols"],
+         meta_fields=["n"])
+@dataclasses.dataclass
+class ELL:
+    """Row-major padded sparse. vals/cols: (m, k)."""
+
+    vals: jax.Array
+    cols: jax.Array
+    n: int
+
+    @property
+    def m(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.vals.shape[1]
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["vals", "rows"],
+         meta_fields=["m", "band_size"])
+@dataclasses.dataclass
+class BandedELL:
+    """Column-major padded sparse, rows bucketed into bands of ``band_size``.
+
+    vals/rows: (num_bands, n, kb); ``rows`` are band-local indices.
+    """
+
+    vals: jax.Array
+    rows: jax.Array
+    m: int
+    band_size: int
+
+    @property
+    def num_bands(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def kb(self) -> int:
+        return self.vals.shape[2]
+
+
+# --------------------------------------------------------------------------
+# Host-side conversions (numpy; construction path, not jit code)
+# --------------------------------------------------------------------------
+
+def coo_to_dense(a: COO) -> np.ndarray:
+    out = np.zeros((a.m, a.n), dtype=np.asarray(a.vals).dtype)
+    np.add.at(out, (np.asarray(a.rows), np.asarray(a.cols)), np.asarray(a.vals))
+    return out
+
+
+def ell_to_dense(a: ELL) -> np.ndarray:
+    out = np.zeros((a.m, a.n), dtype=np.asarray(a.vals).dtype)
+    rows = np.repeat(np.arange(a.m), a.k)
+    np.add.at(out, (rows, np.asarray(a.cols).reshape(-1)),
+              np.asarray(a.vals).reshape(-1))
+    return out
+
+
+def banded_to_dense(a: BandedELL) -> np.ndarray:
+    out = np.zeros((a.m, a.n), dtype=np.asarray(a.vals).dtype)
+    vals = np.asarray(a.vals)
+    rows = np.asarray(a.rows)
+    for b in range(a.num_bands):
+        cols = np.repeat(np.arange(a.n), a.kb)
+        r = rows[b].reshape(-1) + b * a.band_size
+        r = np.minimum(r, a.m - 1)  # padding rows are (0-val) anyway
+        np.add.at(out, (r, cols), vals[b].reshape(-1))
+    return out
+
+
+def coo_to_ell(a: COO, k: int | None = None, pad_to: int = 1) -> ELL:
+    """Pad each row to the max row-nnz (or given k), k rounded up to pad_to."""
+    rows = np.asarray(a.rows)
+    cols = np.asarray(a.cols)
+    vals = np.asarray(a.vals)
+    counts = np.bincount(rows, minlength=a.m)
+    kmax = int(counts.max()) if counts.size else 0
+    k = max(k or 0, kmax)
+    k = max(1, -(-k // pad_to) * pad_to)
+    order = np.argsort(rows, kind="stable")
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    # slot within row: position - row_start
+    row_start = np.zeros(a.m, dtype=np.int64)
+    np.cumsum(counts[:-1], out=row_start[1:])
+    slot = np.arange(len(rows)) - row_start[rows]
+    ev = np.zeros((a.m, k), dtype=vals.dtype)
+    ec = np.zeros((a.m, k), dtype=np.int32)
+    ev[rows, slot] = vals
+    ec[rows, slot] = cols
+    return ELL(vals=jnp.asarray(ev), cols=jnp.asarray(ec), n=a.n)
+
+
+def transpose_coo(a: COO) -> COO:
+    return COO(rows=a.cols, cols=a.rows, vals=a.vals, m=a.n, n=a.m)
+
+
+def coo_to_banded(a: COO, band_size: int, kb: int | None = None,
+                  pad_to: int = 1) -> BandedELL:
+    """Column-major banded ELL: bucket nonzeros by (row // band_size), pad the
+    per-(band, column) lists to the max count."""
+    rows = np.asarray(a.rows)
+    cols = np.asarray(a.cols)
+    vals = np.asarray(a.vals)
+    num_bands = -(-a.m // band_size)
+    band = rows // band_size
+    local = rows - band * band_size
+    # counts per (band, col)
+    key = band.astype(np.int64) * a.n + cols
+    order = np.argsort(key, kind="stable")
+    key, local, vals = key[order], local[order], vals[order]
+    counts = np.bincount(key, minlength=num_bands * a.n)
+    kmax = int(counts.max()) if counts.size else 0
+    kb = max(kb or 0, kmax)
+    kb = max(1, -(-kb // pad_to) * pad_to)
+    start = np.zeros(num_bands * a.n, dtype=np.int64)
+    np.cumsum(counts[:-1], out=start[1:])
+    slot = np.arange(len(key)) - start[key]
+    ev = np.zeros((num_bands * a.n, kb), dtype=vals.dtype)
+    er = np.zeros((num_bands * a.n, kb), dtype=np.int32)
+    ev[key, slot] = vals
+    er[key, slot] = local
+    return BandedELL(
+        vals=jnp.asarray(ev.reshape(num_bands, a.n, kb)),
+        rows=jnp.asarray(er.reshape(num_bands, a.n, kb)),
+        m=a.m, band_size=band_size)
+
+
+def dense_to_coo(d: np.ndarray) -> COO:
+    r, c = np.nonzero(d)
+    return COO(rows=jnp.asarray(r, jnp.int32), cols=jnp.asarray(c, jnp.int32),
+               vals=jnp.asarray(d[r, c]), m=d.shape[0], n=d.shape[1])
+
+
+# --------------------------------------------------------------------------
+# Dry-run stand-ins (ShapeDtypeStruct leaves; no allocation)
+# --------------------------------------------------------------------------
+
+def ell_spec(m: int, n: int, k: int, dtype=jnp.float32) -> ELL:
+    return ELL(vals=jax.ShapeDtypeStruct((m, k), dtype),
+               cols=jax.ShapeDtypeStruct((m, k), jnp.int32), n=n)
+
+
+def banded_spec(m: int, n: int, band_size: int, kb: int,
+                dtype=jnp.float32) -> BandedELL:
+    bands = -(-m // band_size)
+    return BandedELL(vals=jax.ShapeDtypeStruct((bands, n, kb), dtype),
+                     rows=jax.ShapeDtypeStruct((bands, n, kb), jnp.int32),
+                     m=m, band_size=band_size)

@@ -1,0 +1,59 @@
+"""jnp sparse linear algebra (the non-Pallas reference path).
+
+These are the operators the solver uses when ``use_kernels=False`` (and the
+oracles the Pallas kernels are tested against live in ``repro.kernels.ref``,
+which calls into here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.formats import COO, ELL, BandedELL
+
+
+def ell_matvec(a: ELL, x: jax.Array) -> jax.Array:
+    """y = A @ x, A in row-ELL. Padding entries (val=0) contribute nothing."""
+    gathered = jnp.take(x, a.cols, axis=0)            # (m, k)
+    return jnp.sum(a.vals * gathered, axis=1)
+
+
+def ell_rmatvec(at: ELL, y: jax.Array) -> jax.Array:
+    """z = A^T y given the ELL of A^T (n rows of A^T indexed by columns of A)."""
+    return ell_matvec(at, y)
+
+
+def banded_rmatvec(a: BandedELL, y: jax.Array) -> jax.Array:
+    """z = A^T y, A stored column-major in row bands.
+
+    y is split per band; each band gathers only its local slice — the VMEM
+    locality structure the Pallas kernel exploits.
+    """
+    pad = a.num_bands * a.band_size - y.shape[0]
+    ypad = jnp.pad(y, (0, pad)) if pad else y
+    ybands = ypad.reshape(a.num_bands, a.band_size)
+
+    def band_contrib(vals_b, rows_b, y_b):
+        return jnp.sum(vals_b * jnp.take(y_b, rows_b, axis=0), axis=1)
+
+    contribs = jax.vmap(band_contrib)(a.vals, a.rows, ybands)  # (B, n)
+    return jnp.sum(contribs, axis=0)
+
+
+def coo_matvec(a: COO, x: jax.Array) -> jax.Array:
+    return jax.ops.segment_sum(a.vals * x[a.cols], a.rows, num_segments=a.m)
+
+
+def coo_rmatvec(a: COO, y: jax.Array) -> jax.Array:
+    return jax.ops.segment_sum(a.vals * y[a.rows], a.cols, num_segments=a.n)
+
+
+def col_norms_sq(a: COO) -> jax.Array:
+    """L_g_i = ||A_i||^2 per column (paper init step 1)."""
+    return jax.ops.segment_sum(a.vals * a.vals, a.cols, num_segments=a.n)
+
+
+def ell_col_norms_sq(at: ELL) -> jax.Array:
+    """Per-column ||A_i||^2 from the transpose-ELL (each row of A^T is a column
+    of A) — local, no comm; the paper computes this with MapReduce counters."""
+    return jnp.sum(at.vals * at.vals, axis=1)

@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptConfig, OptState, init, update
+from repro.train.train_loop import make_train_step, split_microbatches

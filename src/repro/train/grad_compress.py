@@ -1,0 +1,77 @@
+"""Gradient compression with error feedback (beyond-paper, for the slow
+`pod` axis / DCN links at 1000+ nodes).
+
+Block-wise int8 quantization: each contiguous block of `block` values shares
+one fp32 scale (max-abs), i.e. ~8.13 bits/value on the wire vs 32 for the
+fp32 gradient accumulators — a ~3.9x wire reduction on the gradient
+all-reduce when applied inside a shard_map'd reduce (see
+repro.distributed.collectives.psum_compressed). Error feedback
+keeps the quantization residual locally and re-injects it next step, which
+preserves convergence (Karimireddy et al. 2019).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+class EFState(NamedTuple):
+    residual: Any           # same structure as grads, fp32
+
+
+def init_error_feedback(grads_like) -> EFState:
+    return EFState(residual=tmap(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def quantize_int8(x: jax.Array, block: int = 256):
+    """x (flat fp32) -> (int8 codes, fp32 scales per block, pad)."""
+    n = x.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), pad
+
+
+def dequantize_int8(q, scale, pad, n):
+    x = (q.astype(jnp.float32) * scale).reshape(-1)
+    return x[:n] if pad else x.reshape(-1)[:n]
+
+
+def compress_tree(grads, ef: EFState, block: int = 256):
+    """Returns (quantized pytree of (q, scale, meta), new EFState)."""
+    def one(g, r):
+        x = g.astype(jnp.float32).reshape(-1) + r.reshape(-1)
+        q, s, pad = quantize_int8(x, block)
+        deq = dequantize_int8(q, s, pad, x.shape[0])
+        new_r = (x - deq).reshape(g.shape)
+        return (q, s), new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(ef.residual)
+    qs, rs = [], []
+    for g, r in zip(flat_g, flat_r):
+        (q, s), nr = one(g, r)
+        qs.append((q, s))
+        rs.append(nr)
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            EFState(residual=jax.tree_util.tree_unflatten(treedef, rs)))
+
+
+def decompress_tree(qtree, shapes_like):
+    flat_q, treedef = jax.tree_util.tree_flatten(
+        qtree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and hasattr(x[0], "dtype"))
+    flat_s = jax.tree_util.tree_leaves(shapes_like)
+    out = []
+    for (q, s), like in zip(flat_q, flat_s):
+        n = like.size
+        pad = q.size - n
+        out.append(dequantize_int8(q, s, pad, n).reshape(like.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)

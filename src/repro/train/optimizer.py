@@ -1,0 +1,98 @@
+"""Sharded AdamW (+SGD) with dtype-configurable moments.
+
+Moments inherit the parameter sharding (FSDP x TP) — the optimizer is fully
+sharded state, ZeRO-style. ``state_dtype="bfloat16"`` halves optimizer HBM
+(used by the 340B/671B configs to fit a single 16-GB/chip pod; fp32 is the
+default elsewhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params, cfg: OptConfig) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    if cfg.name == "sgd":
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=tmap(zeros, params), v=())
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=tmap(zeros, params), v=tmap(zeros, params))
+
+
+def _schedule(step, cfg: OptConfig):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    sq = tmap(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq))
+
+
+def update(grads, state: OptState, params, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = _schedule(step, cfg)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    if cfg.name == "sgd":
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32) * scale
+            m32 = 0.9 * m.astype(jnp.float32) + g32
+            newp = p.astype(jnp.float32) - lr * m32
+            return newp.astype(p.dtype), m32.astype(dt)
+
+        out = tmap(upd, params, grads, state.m)
+        new_params = tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step, new_m, ()), {"grad_norm": gnorm,
+                                                       "lr": lr}
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        den = jnp.sqrt(v32 / bc2) + cfg.eps
+        step_ = (m32 / bc1) / den + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step_
+        return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = tmap(upd, params, grads, state.m, state.v)
+    is3 = lambda x: isinstance(x, tuple)
+    new_params = tmap(lambda o: o[0], out, is_leaf=is3)
+    new_m = tmap(lambda o: o[1], out, is_leaf=is3)
+    new_v = tmap(lambda o: o[2], out, is_leaf=is3)
+    return new_params, OptState(step, new_m, new_v), {"grad_norm": gnorm,
+                                                      "lr": lr}

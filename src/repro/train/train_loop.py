@@ -1,0 +1,92 @@
+"""Training step factory: microbatched gradient accumulation (scan) + remat
++ sharded AdamW, jit'd with explicit in/out shardings.
+
+The microbatch loop is a lax.scan with static trip count (compile-size
+control; the roofline corrects its FLOPs by the trip count). Gradients
+accumulate in fp32 and are sharded like the parameters.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import Shardings
+from repro.models.api import Model, batch_shardings
+from repro.train import optimizer as opt_mod
+
+tmap = jax.tree_util.tree_map
+
+
+def split_microbatches(batch, num_microbatches: int):
+    """(B, ...) -> (mb, B/mb, ...) for every leaf."""
+    def f(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape((num_microbatches, b // num_microbatches)
+                         + x.shape[1:])
+    return tmap(f, batch)
+
+
+def make_train_step(model: Model, shape: ShapeSpec, sh: Shardings,
+                    opt_cfg: opt_mod.OptConfig | None = None,
+                    *, unroll: bool = False, donate: bool = True):
+    """Returns (train_step, in_shardings, out_shardings) — jit-ready.
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    cfg = model.cfg
+    opt_cfg = opt_cfg or opt_mod.OptConfig(state_dtype=cfg.opt_state_dtype)
+    mb = cfg.microbatches_train
+    rules = sh.rules
+
+    def loss_microbatch(params, microbatch):
+        return model.loss(params, microbatch, sh, unroll=unroll)
+
+    def train_step(params, opt_state, batch):
+        batches = split_microbatches(batch, mb)
+        grad_fn = jax.value_and_grad(loss_microbatch)
+
+        def accum(carry, microbatch):
+            loss_acc, grads_acc = carry
+            loss, grads = grad_fn(params, microbatch)
+            grads = tmap(lambda a, g: a + g.astype(jnp.float32),
+                         grads_acc, grads)
+            if sh.mesh is not None:
+                pspecs = model.pspecs(rules)
+                grads = tmap(
+                    lambda g, s: jax.lax.with_sharding_constraint(
+                        g, jax.sharding.NamedSharding(sh.mesh, s)),
+                    grads, pspecs)
+            return (loss_acc + loss, grads), None
+
+        zeros = tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            accum, (jnp.zeros((), jnp.float32), zeros), batches)
+        grads = tmap(lambda g: g / mb, grads)
+        new_params, new_opt, metrics = opt_mod.update(grads, opt_state,
+                                                      params, opt_cfg)
+        metrics = dict(metrics, loss=loss_sum / mb)
+        return new_params, new_opt, metrics
+
+    if sh.mesh is None:
+        return jax.jit(train_step, donate_argnums=(0, 1) if donate else ()), \
+            None, None
+
+    pspecs = model.pspecs(rules)
+    named = lambda spec_tree: tmap(
+        lambda s: jax.sharding.NamedSharding(sh.mesh, s), spec_tree)
+    param_sh = named(pspecs)
+    opt_sh = opt_mod.OptState(
+        step=jax.sharding.NamedSharding(sh.mesh, jax.sharding.PartitionSpec()),
+        m=named(pspecs), v=named(pspecs) if opt_cfg.name != "sgd" else ())
+    batch_sh = named(batch_shardings(cfg, shape, sh))
+    repl = jax.sharding.NamedSharding(sh.mesh, jax.sharding.PartitionSpec())
+    metrics_sh = {"grad_norm": repl, "lr": repl, "loss": repl}
+    in_sh = (param_sh, opt_sh, batch_sh)
+    out_sh = (param_sh, opt_sh, metrics_sh)
+    step = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0, 1) if donate else ())
+    return step, in_sh, out_sh

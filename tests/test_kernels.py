@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    banded_spmv_t, ell_spmv, fused_dual_update, prox_update,
+)
+from repro.kernels import ref as kref
+from repro.sparse import coo_to_banded, coo_to_dense, coo_to_ell, random_coo
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+SHAPES = [(64, 16, 3), (300, 70, 5), (512, 128, 8), (1000, 333, 7)]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+def _mk(m, n, k, dtype, seed=0):
+    coo = random_coo(m, n, k, seed=seed)
+    coo.vals = coo.vals.astype(dtype)
+    return coo, coo_to_dense(coo).astype(np.float32)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("block_rows", [32, 128])
+def test_ell_spmv_sweep(m, n, k, dtype, block_rows):
+    coo, d = _mk(m, n, k, dtype)
+    ell = coo_to_ell(coo, pad_to=8)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(n), dtype)
+    out = ell_spmv(ell, x, block_rows=block_rows)
+    ref = kref.ell_spmv_ref(ell.vals, ell.cols, x)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               d @ np.asarray(x, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("band_size", [64, 256])
+def test_banded_spmv_t_sweep(m, n, k, dtype, band_size):
+    coo, d = _mk(m, n, k, dtype, seed=2)
+    bell = coo_to_banded(coo, band_size=band_size, pad_to=4)
+    y = jnp.asarray(np.random.default_rng(3).standard_normal(m), dtype)
+    out = banded_spmv_t(bell, y, block_cols=16)
+    ref = kref.banded_spmv_t_ref(bell.vals, bell.rows,
+                                 jnp.pad(y, (0, bell.num_bands *
+                                             bell.band_size - m)),
+                                 bell.band_size)[:n]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES[:3])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_dual_update_sweep(m, n, k, dtype):
+    coo, d = _mk(m, n, k, dtype, seed=4)
+    ell = coo_to_ell(coo, pad_to=8)
+    rng = np.random.default_rng(5)
+    xs = jnp.asarray(rng.standard_normal(n), dtype)
+    xb = jnp.asarray(rng.standard_normal(n), dtype)
+    yh = jnp.asarray(rng.standard_normal(m), dtype)
+    b = jnp.asarray(rng.standard_normal(m), dtype)
+    out = fused_dual_update(ell, xs, xb, yh, b, 0.9, 0.05, 0.1, 0.15,
+                            block_rows=64)
+    coefs = jnp.asarray([0.9, 0.05, 0.1, 0.15], jnp.float32)
+    ref = kref.fused_dual_update_ref(coefs, ell.vals, ell.cols, xs, xb, yh, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("n", [64, 333, 1024])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_prox_update_sweep(n, dtype):
+    rng = np.random.default_rng(6)
+    z = jnp.asarray(rng.standard_normal(n), dtype)
+    xb = jnp.asarray(rng.standard_normal(n), dtype)
+    xc = jnp.zeros(n, dtype)
+    xs_k, xb_k = prox_update(z, xb, xc, 2.0, 0.3, 0.1, block=64)
+    coefs = jnp.asarray([2.0, 0.3, 0.1], jnp.float32)
+    xs_r, xb_r = kref.prox_update_ref(coefs, z, xb, xc)
+    np.testing.assert_allclose(np.asarray(xs_k, np.float32),
+                               np.asarray(xs_r, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(xb_k, np.float32),
+                               np.asarray(xb_r, np.float32), **_tol(dtype))
+
+
+def test_fused_dual_matches_unfused_composition():
+    """Kernel fusion must be semantics-preserving: eq (15) composed from
+    separate ops == fused kernel."""
+    coo, d = _mk(256, 64, 4, jnp.float32, seed=7)
+    ell = coo_to_ell(coo, pad_to=8)
+    rng = np.random.default_rng(8)
+    xs = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    xb = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    yh = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    fused = fused_dual_update(ell, xs, xb, yh, b, 0.7, 0.2, 0.3, 0.5)
+    unfused = 0.7 * yh + ell_spmv(ell, 0.2 * xs + 0.3 * xb) - 0.5 * b
+    np.testing.assert_allclose(fused, unfused, rtol=1e-5, atol=1e-5)

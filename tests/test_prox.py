@@ -1,0 +1,96 @@
+"""Prox library: closed-form checks + property-based prox axioms."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import get_prox
+
+PROXES = ["l1", "zero", "sq_l2", "elastic_net", "nonneg", "box", "l1_box",
+          "group_l1"]
+
+
+def _vec(seed, n=32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(n),
+                       jnp.float32)
+
+
+def test_l1_soft_threshold_closed_form():
+    p = get_prox("l1", reg=0.5)
+    v = jnp.asarray([-2.0, -0.3, 0.0, 0.3, 2.0])
+    out = p.prox(v, 1.0)
+    np.testing.assert_allclose(out, [-1.5, 0.0, 0.0, 0.0, 1.5], atol=1e-7)
+
+
+def test_sq_l2_closed_form():
+    p = get_prox("sq_l2", reg=2.0)
+    v = _vec(0)
+    np.testing.assert_allclose(p.prox(v, 0.5), v / 2.0, rtol=1e-6)
+
+
+def test_box_projection():
+    p = get_prox("box", lo=-0.5, hi=0.25)
+    out = p.prox(_vec(1), 1.0)
+    assert float(out.min()) >= -0.5 and float(out.max()) <= 0.25
+
+
+def test_dummy_matches_paper():
+    p = get_prox("dummy")
+    zhat = _vec(2)
+    out = p.apply(zhat, 3.0, jnp.zeros_like(zhat))
+    np.testing.assert_allclose(out, zhat + 3.0, rtol=1e-6)
+
+
+def test_group_l1_zeros_small_groups():
+    p = get_prox("group_l1", reg=10.0, group_size=4)
+    out = p.prox(_vec(3, 16), 1.0)
+    np.testing.assert_allclose(out, 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", PROXES)
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), t=st.floats(0.01, 10.0))
+def test_prox_firm_nonexpansive(name, seed, t):
+    """||prox(u) - prox(v)|| <= ||u - v|| — holds for any proper convex f."""
+    p = get_prox(name)
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    du = p.prox(u, t) - p.prox(v, t)
+    assert float(jnp.linalg.norm(du)) <= float(jnp.linalg.norm(u - v)) + 1e-5
+
+
+@pytest.mark.parametrize("name", PROXES)
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), t=st.floats(0.01, 10.0))
+def test_prox_optimality(name, seed, t):
+    """prox_t(v) minimizes f(x) + ||x-v||^2/(2t): value at prox <= value at
+    random perturbations (first-order optimality, sampled)."""
+    p = get_prox(name)
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal(8), jnp.float32)
+    x = p.prox(v, t)
+
+    def obj(z):
+        return float(p.value(z) + jnp.sum((z - v) ** 2) / (2 * t))
+
+    base = obj(x)
+    for _ in range(8):
+        z = x + jnp.asarray(0.1 * rng.standard_normal(8), jnp.float32)
+        if name in ("nonneg",):
+            z = jnp.maximum(z, 0.0)
+        if name in ("box", "l1_box"):
+            z = jnp.clip(z, -1.0, 1.0)
+        assert obj(z) >= base - 1e-4
+
+
+def test_moreau_identity_l1():
+    """prox_{tf}(v) + t*prox_{f*/t}(v/t) = v for f=|.|_1."""
+    p = get_prox("l1", reg=1.0)
+    v = _vec(5)
+    t = 0.7
+    x = p.prox(v, t)
+    # conjugate of |.| is indicator of [-1,1]; prox of indicator = projection
+    dual = jnp.clip(v / t, -1.0, 1.0)
+    np.testing.assert_allclose(x + t * dual, v, atol=1e-6)

@@ -1,0 +1,106 @@
+"""Roofline machinery: HLO collective parser, scan-correction, hw model."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline import analysis, hw
+from repro.roofline.analysis import collective_stats, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("(f32[4], bf16[8])") == 16 + 16
+    assert shape_bytes("pred[7]") == 7
+
+
+def test_collective_parse_synthetic():
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[2048]{0} all-gather(%y), replica_groups=[2,8]<=[16] ..., dimensions={0}
+  %rs = f32[256]{0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%add
+  %cp = f32[100]{0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+    st = collective_stats(hlo)
+    assert st.count == 4
+    np.testing.assert_allclose(st.by_op["all-reduce"],
+                               2 * 4096 * 3 / 4)
+    np.testing.assert_allclose(st.by_op["all-gather"], 4096 * 7 / 8)
+    np.testing.assert_allclose(st.by_op["reduce-scatter"], 1024 * 1)
+    np.testing.assert_allclose(st.by_op["collective-permute"], 400)
+
+
+def test_scan_body_counted_once_and_corrected():
+    """The motivating bug: scan flops undercounted; units fix via trip count."""
+    def f_scan(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(f_scan).lower(x, w).compile()
+    flops, _ = analysis.cost_of(c)
+    one_iter = 2 * 64 * 128 * 128
+    assert flops < 2 * one_iter          # counted once (the bug)
+    assert abs(flops * 10 - 10 * one_iter) / (10 * one_iter) < 0.2
+
+
+def test_two_point_seq_correction():
+    """units.measure_units linearization recovers scan-body cost x S."""
+    from repro.roofline.units import Unit, _SEQ_OF, measure_units
+
+    D = 64
+    S = 32
+
+    def g(x):  # matmul outside scan (linear in S) + elementwise scan body
+        def body(c, xt):
+            return c * 0.9 + jnp.tanh(xt), None
+        y = x @ jnp.ones((D, D), jnp.float32)
+        c, _ = jax.lax.scan(body, jnp.zeros((D,), jnp.float32), y)
+        return c
+
+    u = Unit("t", g, (jax.ShapeDtypeStruct((S, D), jnp.float32),), None, 1.0,
+             seq_scan=True,
+             half_args=(jax.ShapeDtypeStruct((S // 2, D), jnp.float32),))
+    _SEQ_OF[id(u)] = S
+    [cost] = measure_units([u])
+    expected_matmul = 2 * S * D * D
+    expected_scan = S * (D * 3)          # ~3 flops/elem/step
+    assert cost.flops > expected_matmul + expected_scan * 0.3
+    assert cost.flops < expected_matmul * 2 + expected_scan * 10
+
+
+def test_terms_and_dominant():
+    t = analysis.terms(flops=197e12, bytes_hbm=819e9 * 2, wire_bytes=0.0,
+                       model_flops=197e12 / 2)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(2.0)
+    assert t.dominant == "memory"
+    assert t.roofline_fraction == pytest.approx(0.25)
+
+
+def test_analytic_bytes_sane():
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import Shardings
+    from repro.roofline.units import analytic_bytes
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+            size = 256
+
+    sh = Shardings(mesh=FakeMesh(), rules={"tp": "model", "fsdp": "data",
+                                           "dp": "data", "seq": "model",
+                                           "ep": "model"})
+    cfg = get_config("minitron-8b")
+    b_train = analytic_bytes(cfg, SHAPES["train_4k"], sh)
+    b_dec = analytic_bytes(cfg, SHAPES["decode_32k"], sh)
+    # train must at least cover optimizer io; decode at least the cache read
+    assert b_train > 8e9 * 12 / 256
+    cache = 32 * 128 * 32768 * 8 * 128 * 2 * 2 / 256
+    assert b_dec > cache * 0.9

@@ -1,0 +1,81 @@
+"""Serve-mode sharding rules + MoE dispatch regime selection (§Perf)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models.api import serve_rule_overrides
+from repro.models.moe import moe_forward
+from repro.models.params import count_params
+import repro.models.transformer as tfm
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+        size = 256
+
+
+def test_small_models_drop_fsdp_at_decode():
+    for arch in ("qwen3-4b", "zamba2-7b", "falcon-mamba-7b", "minitron-8b"):
+        over = serve_rule_overrides(get_config(arch), FakeMesh(), "decode")
+        assert over.get("fsdp", "keep") is None, arch
+
+
+def test_oversized_dense_keeps_fsdp():
+    over = serve_rule_overrides(get_config("nemotron-4-340b"), FakeMesh(),
+                                "decode")
+    assert "fsdp" not in over          # 42GB/chip TP-only: must keep FSDP
+    over = serve_rule_overrides(get_config("qwen1.5-110b"), FakeMesh(),
+                                "decode")
+    assert "fsdp" not in over
+
+
+def test_deepseek_ep_widens_only_at_decode():
+    cfg = get_config("deepseek-v3-671b")
+    dec = serve_rule_overrides(cfg, FakeMesh(), "decode")
+    assert dec.get("ep") == ("data", "model")
+    assert dec.get("fsdp", "keep") is None
+    pre = serve_rule_overrides(cfg, FakeMesh(), "prefill")
+    assert "ep" not in pre
+
+
+def test_olmoe_ep_not_divisible():
+    over = serve_rule_overrides(get_config("olmoe-1b-7b"), FakeMesh(),
+                                "decode")
+    assert "ep" not in over            # 64 experts % 256 != 0
+
+
+def test_moe_dense_path_matches_sort_path(key):
+    """T<=4E dense-local-experts path must equal the sort/capacity path
+    (no dropping at low load)."""
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    tree = tfm._layer_params(cfg, "moe")["moe"]
+    from repro.models.params import init_params
+    p = init_params(tree, key)
+    E = cfg.num_experts
+    # T small -> dense path ; same tokens reshaped so T large -> sort path
+    x_small = jax.random.normal(key, (1, 2 * E, cfg.d_model), jnp.float32)
+    out_dense, _ = moe_forward(p, x_small, cfg)          # T = 2E <= 4E
+    x_big = jnp.tile(x_small, (8, 1, 1))                 # T = 16E > 4E
+    out_sort, _ = moe_forward(p, x_big, cfg, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(out_dense[0], np.float32),
+                               np.asarray(out_sort[0], np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_sort_path_drops_on_overflow(key):
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    from repro.models.params import init_params
+    p = init_params(tfm._layer_params(cfg, "moe")["moe"], key)
+    x = jax.random.normal(key, (4, 16 * cfg.num_experts, cfg.d_model),
+                          jnp.float32)
+    out_tight, _ = moe_forward(p, x, cfg, capacity_factor=0.05)
+    out_loose, _ = moe_forward(p, x, cfg, capacity_factor=8.0)
+    # tight capacity must actually drop tokens (different output)
+    assert float(jnp.max(jnp.abs(out_tight - out_loose))) > 1e-4
+    assert bool(jnp.all(jnp.isfinite(out_tight)))

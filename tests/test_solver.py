@@ -1,0 +1,142 @@
+"""Solver validation: A1 == A2 == numpy reference; O(1/k^2) feasibility;
+basis-pursuit recovery; kernel-ops equivalence; certificates."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.paper_problems import small_config
+from repro.core.gap import certificates
+from repro.core.prox import get_prox
+from repro.core.reference import a1_reference, smoothed_gap
+from repro.core.solver import dense_ops, ell_ops, solve, solve_tol
+from repro.kernels import kernel_ops
+from repro.sparse import (
+    coo_to_banded, coo_to_dense, coo_to_ell, col_partitioned_ell, make_lasso,
+)
+
+CFG = small_config()
+
+
+@pytest.fixture(scope="module")
+def problem():
+    coo, b, x_true = make_lasso(CFG, seed=3)
+    d = coo_to_dense(coo).astype(np.float64)
+    lg = float((d ** 2).sum())
+    return coo, d, b, x_true, lg
+
+
+def test_a1_equals_a2(problem):
+    """The paper's Matlab check: A1 and A2 produce identical iterates.
+    (A1 carries ybar, A2 carries yhat — compare through dual_point.)"""
+    from repro.core.gap import dual_point
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    ops = dense_ops(jnp.asarray(d, jnp.float32))
+    s1, _ = solve(ops, prox, b, lg, 100.0, iterations=120, algorithm="a1")
+    s2, _ = solve(ops, prox, b, lg, 100.0, iterations=120, algorithm="a2")
+    np.testing.assert_allclose(s1.xbar, s2.xbar, atol=2e-5)
+    np.testing.assert_allclose(s1.xstar, s2.xstar, atol=2e-5)
+    np.testing.assert_allclose(dual_point(ops, b, lg, s1, "a1"),
+                               dual_point(ops, b, lg, s2, "a2"), atol=2e-5)
+
+
+def test_matches_numpy_reference(problem):
+    coo, d, b, x_true, lg = problem
+    ref = a1_reference(d, np.asarray(b), reg=CFG.reg, gamma0=100.0,
+                       iterations=120)
+    prox = get_prox("l1", reg=CFG.reg)
+    s2, _ = solve(dense_ops(jnp.asarray(d, jnp.float32)), prox, b, lg, 100.0,
+                  iterations=120, algorithm="a2")
+    np.testing.assert_allclose(np.asarray(s2.xbar), ref["xbar"], atol=5e-4)
+
+
+def test_sparse_ops_equal_dense(problem):
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    ell, ellt = coo_to_ell(coo), col_partitioned_ell(coo, parts=1)
+    s_sp, _ = solve(ell_ops(ell, ellt), prox, b, lg, 100.0, iterations=60)
+    s_de, _ = solve(dense_ops(jnp.asarray(d, jnp.float32)), prox, b, lg,
+                    100.0, iterations=60)
+    np.testing.assert_allclose(s_sp.xbar, s_de.xbar, atol=1e-5)
+
+
+def test_kernel_ops_equal_dense(problem):
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    kops = kernel_ops(coo_to_ell(coo, pad_to=8),
+                      coo_to_banded(coo, band_size=512, pad_to=8),
+                      prox, CFG.reg, block_rows=256, block_cols=128)
+    s_k, _ = solve(kops, prox, b, lg, 100.0, iterations=60)
+    s_d, _ = solve(dense_ops(jnp.asarray(d, jnp.float32)), prox, b, lg,
+                   100.0, iterations=60)
+    np.testing.assert_allclose(s_k.xbar, s_d.xbar, atol=1e-4)
+
+
+def test_feasibility_rate_order_k2(problem):
+    """Paper claim: accelerated O(1/k^2); fit the decay exponent."""
+    coo, d, b, x_true, lg = problem
+    ref = a1_reference(d, np.asarray(b), reg=CFG.reg, gamma0=1000.0,
+                       iterations=600, record=True)
+    ks = np.array([h["k"] for h in ref["history"]], float)
+    feas = np.array([h["feasibility"] for h in ref["history"]])
+    sel = ks >= 100
+    slope = np.polyfit(np.log(ks[sel]), np.log(feas[sel]), 1)[0]
+    assert slope < -1.5, f"feasibility decay slope {slope} (want ~ -2)"
+
+
+def test_gap_decays_polynomially(problem):
+    """|G_{gamma_k,beta_k}| decays ~ 1/k (the smoothed-gap certificate);
+    assert the fitted log-log slope is clearly negative."""
+    coo, d, b, x_true, lg = problem
+    ref = a1_reference(d, np.asarray(b), reg=CFG.reg, gamma0=100.0,
+                       iterations=600, record=True)
+    ks = np.array([h["k"] for h in ref["history"]], float)
+    gaps = np.abs(np.array([h["gap"] for h in ref["history"]]))
+    sel = ks >= 50
+    slope = np.polyfit(np.log(ks[sel]), np.log(np.maximum(gaps[sel], 1e-12)),
+                       1)[0]
+    assert slope < -0.5, f"|gap| decay slope {slope}"
+    assert gaps[-1] < 0.3 * gaps.max()   # well past the transient peak
+
+
+def test_basis_pursuit_recovery(problem):
+    """b = A x_true with m >> n: iterates approach x_true."""
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    s, _ = solve(dense_ops(jnp.asarray(d, jnp.float32)), prox, b, lg, 1000.0,
+                 iterations=800)
+    err = float(jnp.linalg.norm(s.xbar - x_true) / jnp.linalg.norm(x_true))
+    assert err < 0.05, f"recovery rel err {err}"
+
+
+def test_solve_tol_stops_early(problem):
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    s = solve_tol(dense_ops(jnp.asarray(d, jnp.float32)), prox, b, lg,
+                  1000.0, max_iterations=4000, tol=3e-2, check_every=16)
+    assert int(s.k) < 4000
+    feas = float(jnp.linalg.norm(jnp.asarray(d, jnp.float32) @ s.xbar - b))
+    assert feas / float(jnp.linalg.norm(b)) < 3.5e-2
+
+
+def test_certificates_match_reference(problem):
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    ops = dense_ops(jnp.asarray(d, jnp.float32))
+    s, _ = solve(ops, prox, b, lg, 100.0, iterations=150)
+    cert = certificates(ops, prox, b, lg, 100.0, s)
+    ref = a1_reference(d, np.asarray(b), reg=CFG.reg, gamma0=100.0,
+                       iterations=150, record=True)
+    assert abs(float(cert["gap"]) - ref["history"][-1]["gap"]) < 5e-2
+    assert abs(float(cert["feasibility"])
+               - ref["history"][-1]["feasibility"]) < 1e-2
+
+
+def test_dummy_prox_runs(problem):
+    """The paper's throughput prox (Section 5) — exercised for parity."""
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("dummy")
+    s, _ = solve(dense_ops(jnp.asarray(d, jnp.float32)), prox, b, lg, 1.0,
+                 iterations=10)
+    assert np.all(np.isfinite(np.asarray(s.xbar)))
