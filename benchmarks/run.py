@@ -1,6 +1,9 @@
 """Benchmark harness — one function per paper table/figure.
 
   table1   dataset generation + statistics           (paper Table 1)
+  spmv_formats  forward/backward operator microbench per registry
+           (format, backend): COO vs ELL vs tiled BCSR, jnp and Pallas,
+           with the roofline selector's modeled times alongside
   table2_4 stage timings per implementation x dataset (paper Tables 2-4):
            implementations = {coo/segment-sum, ELL/gather (jnp), Pallas
            kernels (interpret)} on CPU at 1/50 scale; stages match the
@@ -64,23 +67,13 @@ def table1_datasets():
 
 
 def _implementations(coo, prox, reg):
-    from functools import partial
+    from repro.operators import make_solver_ops
 
-    from repro.core.solver import SolverOps, ell_ops
-    from repro.kernels import kernel_ops
-    from repro.sparse import (
-        coo_matvec, coo_rmatvec, coo_to_banded, coo_to_ell,
-        col_partitioned_ell,
-    )
-
-    ell = coo_to_ell(coo, pad_to=8)
-    ellt = col_partitioned_ell(coo, parts=1)
-    bell = coo_to_banded(coo, band_size=4096, pad_to=8)
     return {
-        "coo": SolverOps(matvec=partial(coo_matvec, coo),
-                         rmatvec=partial(coo_rmatvec, coo)),
-        "ell": ell_ops(ell, ellt),
-        "pallas": kernel_ops(ell, bell, prox, reg),
+        "coo": make_solver_ops(coo, "coo", "jnp"),
+        "ell": make_solver_ops(coo, "ell", "jnp"),
+        "pallas": make_solver_ops(coo, "ell", "pallas", prox=prox, reg=reg,
+                                  band_size=4096),
     }
 
 
@@ -120,6 +113,56 @@ def table2_4_stage_timings():
             results[f"{ds}/{impl}"] = stages
             emit(f"table2_4/{ds}/{impl}/total", total * 1e6,
                  ";".join(f"{k}={v*1e3:.1f}ms" for k, v in stages.items()))
+    return results
+
+
+def spmv_formats():
+    """Forward/backward spmv microbenchmarks per (format, backend) — the
+    operator-registry comparison table (COO vs ELL vs tiled BCSR, jnp and
+    Pallas), plus the roofline selector's modeled times for calibration.
+    Emits experiments/bench/spmv_formats.json."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.operators import estimate_formats, from_coo, select_format
+    from repro.sparse import make_lasso
+
+    import dataclasses
+
+    def _time(fn, arg, reps=5):
+        out = jax.block_until_ready(fn(arg))          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = jax.block_until_ready(fn(arg))
+        return (time.perf_counter() - t0) / reps
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    results = {}
+    variants = [("coo", "jnp"), ("ell", "jnp"), ("ell", "pallas"),
+                ("bcsr", "jnp"), ("bcsr", "pallas")]
+    for ds in ("d1", "d2"):
+        cfg, m, n = _small(ds)
+        cfg2 = dataclasses.replace(cfg, m=m, n=n, nnz=m * cfg.row_nnz)
+        coo, b, _ = make_lasso(cfg2, seed=0)
+        x = jnp.ones((n,), jnp.float32)
+        y = jnp.ones((m,), jnp.float32)
+        est = estimate_formats(coo)
+        plan = select_format(coo)
+        rec = {"m": m, "n": n, "nnz": int(coo.nnz),
+               "selector": {"format": plan.format, "params": plan.params},
+               "modeled_s": {k: v["s"] for k, v in est.items()},
+               "measured": {}}
+        for fmt, backend in variants:
+            op = from_coo(coo, fmt, backend, bm=8, bn=128)
+            fwd = _time(jax.jit(op.matvec), x)
+            bwd = _time(jax.jit(op.rmatvec), y)
+            rec["measured"][f"{fmt}/{backend}"] = {
+                "fwd_s": fwd, "bwd_s": bwd, "stats": op.stats}
+            emit(f"spmv_formats/{ds}/{fmt}/{backend}/fwd", fwd * 1e6,
+                 f"bwd_us={bwd*1e6:.1f};nnz={coo.nnz}")
+        results[ds] = rec
+    with open(os.path.join(OUT_DIR, "spmv_formats.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
     return results
 
 
@@ -245,6 +288,7 @@ def main() -> None:
     results = {}
     print("name,us_per_call,derived")
     results["table1"] = table1_datasets()
+    results["spmv_formats"] = spmv_formats()
     results["table2_4"] = table2_4_stage_timings()
     results["table5"] = table5_strong_scaling()
     results["fig2b"] = fig2b_datasize_scaling()

@@ -21,20 +21,20 @@ from jax.sharding import Mesh
 from repro.configs.paper_problems import PaperProblemConfig
 from repro.core.distributed import build_problem, make_step_fn, solve_distributed
 from repro.core.prox import get_prox
-from repro.core.solver import PDState, dense_ops, solve
+from repro.core.solver import PDState, solve
+from repro.operators import make_solver_ops
 from repro.roofline.analysis import collective_stats
-from repro.sparse import coo_to_dense, make_lasso
+from repro.sparse import make_lasso
 
 
 def main():
     cfg = PaperProblemConfig(name="d1/100", m=10_000, n=1_000, nnz=100_000,
                              reg=0.1, gamma0=100.0)
     coo, b, x_true = make_lasso(cfg, seed=0)
-    d = coo_to_dense(coo)
-    lg = float((d ** 2).sum())
+    lg = float(jnp.sum(coo.vals ** 2))
     prox = get_prox("l1", reg=cfg.reg)
-    ref, _ = solve(dense_ops(jnp.asarray(d)), prox, b, lg, cfg.gamma0,
-                   iterations=100)
+    ref, _ = solve(make_solver_ops(coo, "dense", "jnp"), prox, b, lg,
+                   cfg.gamma0, iterations=100)
 
     devs = np.array(jax.devices())
     mesh1 = Mesh(devs.reshape(8), ("p",))

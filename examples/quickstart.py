@@ -10,12 +10,9 @@ import jax.numpy as jnp
 from repro.configs.paper_problems import small_config
 from repro.core.gap import certificates
 from repro.core.prox import get_prox
-from repro.core.solver import dense_ops, solve
-from repro.kernels import kernel_ops
-from repro.sparse import (
-    coo_to_banded, coo_to_dense, coo_to_ell, col_partitioned_ell,
-    ell_col_norms_sq, make_lasso,
-)
+from repro.core.solver import solve
+from repro.operators import make_solver_ops, select_format
+from repro.sparse import col_partitioned_ell, ell_col_norms_sq, make_lasso
 
 
 def main():
@@ -29,9 +26,12 @@ def main():
     lg = float(jnp.sum(ell_col_norms_sq(ellt)))
     prox = get_prox("l1", reg=cfg.reg)
 
-    ops = kernel_ops(coo_to_ell(coo, pad_to=8),
-                     coo_to_banded(coo, band_size=512, pad_to=8),
-                     prox, cfg.reg)
+    # operator registry: the roofline selector picks the storage format
+    # (ELL vs tiled BCSR) from matrix statistics; "pallas" = fused kernels
+    plan = select_format(coo)
+    print(f"selector: format={plan.format} params={plan.params}")
+    ops = make_solver_ops(coo, plan.format, "pallas", prox=prox, reg=cfg.reg,
+                          **{"band_size": 512, **plan.params})
 
     state, hist = solve(ops, prox, b, lg, gamma0=1000.0, iterations=600,
                         algorithm="a2", record_every=100)
@@ -47,10 +47,10 @@ def main():
           f"gap={float(cert['gap']):.4f} recovery_rel_err={rel:.4f}")
 
     # the paper's Matlab check: A1 (faithful) == A2 (fused)
-    d = jnp.asarray(coo_to_dense(coo))
-    s1, _ = solve(dense_ops(d), prox, b, lg, 1000.0, iterations=100,
+    dops = make_solver_ops(coo, "dense", "jnp")
+    s1, _ = solve(dops, prox, b, lg, 1000.0, iterations=100,
                   algorithm="a1")
-    s2, _ = solve(dense_ops(d), prox, b, lg, 1000.0, iterations=100,
+    s2, _ = solve(dops, prox, b, lg, 1000.0, iterations=100,
                   algorithm="a2")
     print(f"A1 vs A2 max|dx| = {float(jnp.max(jnp.abs(s1.xbar - s2.xbar))):.2e}"
           " (identical iterates, as the paper verifies in Matlab)")

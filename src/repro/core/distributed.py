@@ -20,6 +20,11 @@ The solver body (repro.core.solver a1_step/a2_step) is reused verbatim inside
 shard_map: everything except the operators is elementwise, and the schedule
 scalars are computed redundantly per device — the "embarrassingly parallel
 except 2 barriers" structure of pseudocode A2.
+
+The per-strategy local operators themselves live in repro.operators.dist
+(one LinearOperator builder per strategy, registered under
+(format="ell", backend=<strategy>)); this module owns the partitioning,
+the shard_map plumbing, and the drivers.
 """
 from __future__ import annotations
 
@@ -35,7 +40,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.prox import ProxOp
 from repro.core.solver import PDState, SolverOps, a1_init, a1_step, a2_init, a2_step
 from repro.sparse.formats import COO
-from repro.sparse.linalg import ell_matvec
+
+from repro.distributed.sharding import shard_map as _shard_map
 from repro.sparse.partition import (
     _ceil_to, block_partitioned_ell, col_partitioned_ell, row_partitioned_ell,
 )
@@ -70,21 +76,6 @@ class DistProblem:
 # ---------------------------------------------------------------------------
 # Operand construction (host side, real arrays)
 # ---------------------------------------------------------------------------
-
-def _scatter_rmatvec(vals, cols, y_loc, n):
-    """z = A_loc^T y_loc from a row-ELL block with column indices into [0, n).
-    Accumulates in y's dtype (fp32) so bf16-compressed operands stay exact."""
-    contrib = vals.astype(y_loc.dtype) * y_loc[:, None]
-    return jnp.zeros((n,), y_loc.dtype).at[cols.reshape(-1)].add(
-        contrib.reshape(-1))
-
-
-def _scatter_matvec(vals_t, rows, x_loc, m):
-    """y = A_loc x_loc from a col-ELL block (ELL of A^T) with row indices."""
-    contrib = vals_t.astype(x_loc.dtype) * x_loc[:, None]
-    return jnp.zeros((m,), x_loc.dtype).at[rows.reshape(-1)].add(
-        contrib.reshape(-1))
-
 
 def build_problem(coo: COO, mesh: Mesh, strategy: str = "dualpart",
                   axes: tuple[str, ...] | None = None,
@@ -168,70 +159,12 @@ def build_problem(coo: COO, mesh: Mesh, strategy: str = "dualpart",
 # ---------------------------------------------------------------------------
 
 def make_local_ops(problem: DistProblem, operands) -> SolverOps:
-    s, axes = problem.strategy, problem.axes
+    """Device-local SolverOps for `problem.strategy`, via the operator
+    registry (repro.operators.dist registers one LinearOperator builder per
+    strategy; this is a thin adapter kept for existing call sites)."""
+    from repro.operators.dist import local_operator
 
-    if s == "replicated":
-        av, ac = operands["a"]
-        atv, atc = operands["at"]
-        return SolverOps(
-            matvec=lambda x: jnp.sum(av * jnp.take(x, ac, axis=0), axis=1),
-            rmatvec=lambda y: jnp.sum(
-                atv * jnp.take(jnp.pad(y, (0, 0)), atc, axis=0), axis=1))
-
-    if s == "rowpart":
-        av, ac = operands["a"]          # local (mb, k), global cols
-        ax = axes[0]
-        return SolverOps(
-            matvec=lambda x: jnp.sum(av * jnp.take(x, ac, axis=0), axis=1),
-            rmatvec=lambda y: jax.lax.psum(
-                _scatter_rmatvec(av, ac, y, problem.n_pad), ax))
-
-    if s == "colpart":
-        atv, atc = operands["at"]       # local (nb, kc), global rows
-        ax = axes[0]
-        return SolverOps(
-            matvec=lambda x: jax.lax.psum(
-                _scatter_matvec(atv, atc, x, problem.m_pad), ax),
-            rmatvec=lambda y: jnp.sum(atv * jnp.take(y, atc, axis=0), axis=1))
-
-    if s == "dualpart":
-        av, ac = operands["a"]          # row block, global cols
-        atv, atc = operands["at"]       # col block (ELL of A^T), global rows
-        ax = axes[0]
-
-        def matvec(x_loc):              # partial over my columns -> RS to rows
-            y_part = _scatter_matvec(atv, atc, x_loc, problem.m_pad)
-            return jax.lax.psum_scatter(y_part, ax, scatter_dimension=0,
-                                        tiled=True)
-
-        def rmatvec(y_loc):             # partial over my rows -> RS to cols
-            z_part = _scatter_rmatvec(av, ac, y_loc, problem.n_pad)
-            return jax.lax.psum_scatter(z_part, ax, scatter_dimension=0,
-                                        tiled=True)
-
-        return SolverOps(matvec=matvec, rmatvec=rmatvec)
-
-    # block2d: operands carry a leading (1, 1) block index -> squeeze
-    ra, ca = axes
-    av, ac = (o[0, 0] for o in operands["a"])
-
-    def matvec(x_loc):                  # (nb,) -> (mb,): gather + psum(model)
-        return jax.lax.psum(jnp.sum(av * jnp.take(x_loc, ac, axis=0), axis=1),
-                            ca)
-
-    if problem.dual_copy:
-        atv, atc = (o[0, 0] for o in operands["at"])
-
-        def rmatvec(y_loc):             # gather-only backward (kernel-friendly)
-            return jax.lax.psum(
-                jnp.sum(atv * jnp.take(y_loc, atc, axis=0), axis=1), ra)
-    else:
-        def rmatvec(y_loc):             # scatter-add backward
-            nb = problem.n_pad // problem.mesh.devices.shape[
-                problem.mesh.axis_names.index(ca)]
-            return jax.lax.psum(_scatter_rmatvec(av, ac, y_loc, nb), ra)
-
-    return SolverOps(matvec=matvec, rmatvec=rmatvec)
+    return local_operator(problem, operands).solver_ops()
 
 
 # ---------------------------------------------------------------------------
@@ -264,7 +197,7 @@ def make_solve_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
             lambda _, s: step_fn(ops, prox, b, lg, gamma0, s, c), state)
         return state
 
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         local_solve, mesh=problem.mesh,
         in_specs=(problem.operand_specs, problem.y_spec),
         out_specs=problem.state_specs)
@@ -281,7 +214,7 @@ def make_step_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
         lg = jnp.asarray(problem.lg, b.dtype)
         return step_fn(ops, prox, b, lg, gamma0, state, c)
 
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         local_step, mesh=problem.mesh,
         in_specs=(problem.operand_specs, problem.y_spec, problem.state_specs),
         out_specs=problem.state_specs)

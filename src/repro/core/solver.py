@@ -19,11 +19,13 @@ The operator bundle ``SolverOps`` abstracts the execution substrate: plain
 jnp (reference), Pallas kernels (fused HBM-pass versions), or shard_map'ped
 distributed operators (repro.core.distributed) — the solver body is reused
 verbatim inside shard_map, since everything but the operators is elementwise.
+Bundles are constructed exclusively through the (format, backend) registry
+in ``repro.operators`` (LinearOperator.solver_ops() is the one construction
+site); ``dense_ops``/``ell_ops`` below are thin adapters kept for callers.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -226,12 +228,14 @@ def solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
 
 
 def dense_ops(a: jax.Array) -> SolverOps:
-    return SolverOps(matvec=lambda x: a @ x, rmatvec=lambda y: a.T @ y)
+    """Thin adapter over the (dense, jnp) registry operator."""
+    from repro.operators import make_operator
+
+    return make_operator("dense", "jnp", a).solver_ops()
 
 
 def ell_ops(ell_a, ell_at) -> SolverOps:
-    """Single-device sparse ops from (ELL of A, ELL of A^T)."""
-    from repro.sparse.linalg import ell_matvec
+    """Single-device sparse ops from (ELL of A, ELL of A^T), via registry."""
+    from repro.operators import make_operator
 
-    return SolverOps(matvec=partial(ell_matvec, ell_a),
-                     rmatvec=partial(ell_matvec, ell_at))
+    return make_operator("ell", "jnp", ell_a, ell_at).solver_ops()

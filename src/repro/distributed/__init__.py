@@ -1,3 +1,5 @@
-from repro.distributed.sharding import Shardings, make_shardings, null_shardings
+from repro.distributed.sharding import (
+    Shardings, make_shardings, null_shardings, shard_map,
+)
 
-__all__ = ["Shardings", "make_shardings", "null_shardings"]
+__all__ = ["Shardings", "make_shardings", "null_shardings", "shard_map"]

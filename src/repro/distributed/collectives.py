@@ -22,10 +22,16 @@ from repro.train.grad_compress import dequantize_int8, quantize_int8
 tmap = jax.tree_util.tree_map
 
 
+def _axis_size(axis: str) -> int:
+    if hasattr(jax.lax, "axis_size"):               # jax >= 0.5
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)                    # 0.4.x: folds to the size
+
+
 def ring_allreduce(x: jax.Array, axis: str) -> jax.Array:
     """all-reduce as reduce-scatter + all-gather (the bandwidth-optimal ring
     decomposition; XLA emits exactly these two primitives)."""
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
     size = x.size
     flat = x.reshape(-1)
     pad = (-size) % n

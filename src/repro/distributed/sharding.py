@@ -13,6 +13,19 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, check_vma=True):
+    """Version-portable shard_map: jax>=0.5 exposes jax.shard_map
+    (check_vma); 0.4.x only jax.experimental.shard_map (check_rep, whose
+    replication checker rejects valid scan carries that are refined inside
+    the loop — so it is disabled there; partitioning is unaffected)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 @dataclasses.dataclass(frozen=True)
 class Shardings:
     mesh: Mesh | None

@@ -4,8 +4,9 @@
 # Validated in interpret mode on CPU (no TPU in this container); written
 # with explicit BlockSpec VMEM tiling for the v5e target.
 from repro.kernels.ops import (
-    banded_spmv_t, ell_spmv, fused_dual_update, kernel_ops, prox_update,
+    banded_spmv_t, bcsr_spmv, ell_spmv, fused_dual_update, kernel_ops,
+    prox_update,
 )
 
-__all__ = ["banded_spmv_t", "ell_spmv", "fused_dual_update", "kernel_ops",
-           "prox_update"]
+__all__ = ["banded_spmv_t", "bcsr_spmv", "ell_spmv", "fused_dual_update",
+           "kernel_ops", "prox_update"]

@@ -14,12 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.prox import ProxOp
-from repro.core.solver import SolverOps
 from repro.kernels.banded_spmv_t import banded_spmv_t_pallas
+from repro.kernels.bcsr_spmv import bcsr_spmv_pallas
 from repro.kernels.ell_spmv import ell_spmv_pallas
 from repro.kernels.fused_dual_update import fused_dual_update_pallas
 from repro.kernels.prox_update import prox_update_pallas
-from repro.sparse.formats import ELL, BandedELL
+from repro.sparse.formats import BCSR, ELL, BandedELL
 
 
 def _interp(flag):
@@ -63,6 +63,23 @@ def banded_spmv_t(at: BandedELL, y: jax.Array, *, block_cols: int = 512,
     return z[:n]
 
 
+@partial(jax.jit, static_argnames=("block_brows", "interpret"))
+def bcsr_spmv(a: BCSR, x: jax.Array, *, block_brows: int = 8,
+              interpret: bool | None = None) -> jax.Array:
+    """y = A @ x (tiled BCSR, MXU tile contraction)."""
+    nbr = a.nbr
+    block_brows = max(1, min(block_brows, nbr))
+    pad_br = (-nbr) % block_brows
+    vals = jnp.pad(a.vals, ((0, pad_br), (0, 0), (0, 0), (0, 0))) \
+        if pad_br else a.vals
+    bcols = jnp.pad(a.bcols, ((0, pad_br), (0, 0))) if pad_br else a.bcols
+    pad_x = a.nbc * a.bn - x.shape[0]
+    xt = (jnp.pad(x, (0, pad_x)) if pad_x else x).reshape(a.nbc, a.bn)
+    y = bcsr_spmv_pallas(vals, bcols, xt, block_brows=block_brows,
+                         interpret=_interp(interpret))
+    return y.reshape(-1)[:a.m]
+
+
 @partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def fused_dual_update(a: ELL, xstar, xbar, yhat, b, c0, c1, c2, c3,
                       *, block_rows: int = 512,
@@ -98,25 +115,15 @@ def prox_update(zhat, xbar, xc, gamma, tau, reg, *, block: int = 1024,
 
 def kernel_ops(a: ELL, at: BandedELL, prox: ProxOp, reg: float,
                *, block_rows: int = 512, block_cols: int = 512,
-               interpret: bool | None = None) -> SolverOps:
+               interpret: bool | None = None):
     """SolverOps running the iteration entirely on the Pallas kernels.
 
-    The fused prox path requires l1 (the paper's f); other proxes keep the
-    jnp fallback for the primal step while the matrix ops stay on kernels.
+    Thin adapter over the (ell, pallas) registry operator — the fused-pass
+    wiring (one-HBM-pass dual update; fused l1 prox, jnp fallback for other
+    proxes) lives in repro.operators.builders.
     """
-    fused_prox = None
-    if prox.name == "l1":
-        def fused_prox(p, zhat, gamma, tau, xbar, xc):
-            return prox_update(zhat, xbar, xc, gamma, tau, reg,
-                               interpret=interpret)
+    from repro.operators import make_operator
 
-    return SolverOps(
-        matvec=lambda x: ell_spmv(a, x, block_rows=block_rows,
-                                  interpret=interpret),
-        rmatvec=lambda y: banded_spmv_t(at, y, block_cols=block_cols,
-                                        interpret=interpret),
-        fused_dual=lambda yhat, xstar, xbar, b, c0, c1, c2, c3:
-            fused_dual_update(a, xstar, xbar, yhat, b, c0, c1, c2, c3,
-                              block_rows=block_rows, interpret=interpret),
-        prox_update=fused_prox,
-    )
+    return make_operator("ell", "pallas", a, at, prox, reg,
+                         block_rows=block_rows, block_cols=block_cols,
+                         interpret=interpret).solver_ops()

@@ -21,6 +21,14 @@ def banded_spmv_t_ref(vals, rows, y, band_size):
     return out.astype(y.dtype)
 
 
+def bcsr_spmv_ref(vals, bcols, xt):
+    """(nbr, kb, bm, bn) tiles x (nbc, bn) x-slices -> (nbr, bm)."""
+    g = jnp.take(xt, bcols, axis=0)
+    acc = jnp.einsum("rkmn,rkn->rm", vals.astype(jnp.float32),
+                     g.astype(jnp.float32))
+    return acc.astype(xt.dtype)
+
+
 def fused_dual_update_ref(coefs, vals, cols, xstar, xbar, yhat, b):
     c = coefs.astype(jnp.float32)
     u = c[1] * xstar.astype(jnp.float32) + c[2] * xbar.astype(jnp.float32)

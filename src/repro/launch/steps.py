@@ -109,6 +109,10 @@ def make_paper_cell(arch: str, mesh, strategy: str = "block2d",
                     index_dtype=jnp.int32) -> Cell:
     """One A2 (or A1) iteration of the block2d-distributed solver.
 
+    The device-local operators are built through the operator registry
+    (repro.operators: (format="ell", backend="block2d")) by make_step_fn's
+    make_local_ops — this cell only assembles the sharded operand specs.
+
     `operand_dtype=bf16` + `index_dtype=int16` is the §Perf compressed-ELL
     variant: 4 bytes/nnz instead of 8 (values in bf16, block-LOCAL column
     indices < n/C = 3125 for D6 fit int16); the iteration math stays fp32

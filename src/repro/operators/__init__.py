@@ -1,0 +1,22 @@
+# The unified LinearOperator layer: one protocol + a (format, backend)
+# registry over which every solver in the repo is constructed — jnp
+# reference ops, Pallas kernel bundles (ELL and tiled-BCSR/MXU), and the
+# shard_map-local operators of each distributed strategy. See DESIGN.md
+# section 3.
+from repro.operators.base import LinearOperator
+from repro.operators.registry import (
+    available, from_coo, get_builder, make_operator, make_solver_ops,
+    register,
+)
+from repro.operators import builders as _builders          # noqa: F401
+from repro.operators import dist as _dist                  # noqa: F401
+from repro.operators.dist import local_operator
+from repro.operators.select import (
+    FormatPlan, estimate_formats, matrix_stats, select_format,
+)
+
+__all__ = [
+    "LinearOperator", "FormatPlan", "available", "estimate_formats",
+    "from_coo", "get_builder", "local_operator", "make_operator",
+    "make_solver_ops", "matrix_stats", "register", "select_format",
+]

@@ -1,0 +1,67 @@
+"""The LinearOperator protocol: one interface over formats x backends.
+
+Every execution substrate the solver can run on — jnp reference, Pallas
+kernels, shard_map'd distributed strategies — is expressed as a
+``LinearOperator``: matvec/rmatvec plus optional fused passes and metadata.
+The solver itself consumes the narrower ``SolverOps`` bundle
+(repro.core.solver); ``LinearOperator.solver_ops()`` is the ONLY place in
+the codebase that constructs one, so every solver is provably built through
+this layer (grep for ``SolverOps(``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.core.solver import SolverOps
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearOperator:
+    """A (possibly sharded) linear map A with its adjoint.
+
+    matvec:  x -> A x
+    rmatvec: y -> A^T y
+    fused_dual(yhat, xstar, xbar, b, c0, c1, c2, c3)
+        = c0*yhat + A(c1*xstar + c2*xbar) - c3*b    (eq. 15, one A pass)
+    prox_update(prox, zhat, gamma, tau, xbar, xc) -> (xstar_new, xbar_new)
+        fused prox + heavy-ball averaging (paper step 14 inner block).
+    shape:   logical (m, n) of the global matrix (None entries if unknown,
+             e.g. matrix-free operators).
+    nnz:     stored nonzeros (None if unknown).
+    format/backend: the registry key this operator was built under.
+    stats:   free-form metadata (padding ratios, tile occupancy, estimated
+             arithmetic intensity, ...) — feeds the format selector and the
+             benchmark tables.
+    """
+
+    matvec: Callable
+    rmatvec: Callable
+    shape: tuple[Optional[int], Optional[int]] = (None, None)
+    format: str = "custom"
+    backend: str = "custom"
+    nnz: Optional[int] = None
+    fused_dual: Optional[Callable] = None
+    prox_update: Optional[Callable] = None
+    stats: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __call__(self, x):
+        return self.matvec(x)
+
+    @property
+    def T(self) -> "LinearOperator":
+        """The adjoint operator (fused passes do not transpose)."""
+        m, n = self.shape
+        return dataclasses.replace(
+            self, matvec=self.rmatvec, rmatvec=self.matvec, shape=(n, m),
+            fused_dual=None, prox_update=None)
+
+    def solver_ops(self) -> SolverOps:
+        """Adapt to the solver's operator bundle.
+
+        This is the sole ``SolverOps`` construction site in the repo — all
+        backends (jnp / Pallas / distributed strategies) flow through here.
+        """
+        return SolverOps(matvec=self.matvec, rmatvec=self.rmatvec,
+                         fused_dual=self.fused_dual,
+                         prox_update=self.prox_update)

@@ -1,0 +1,159 @@
+"""Single-device LinearOperator builders: {dense, coo, ell, bcsr} x
+{jnp, pallas}.
+
+Each builder takes pre-converted format arrays (so callers that already
+hold an ELL/BCSR pay no conversion); ``build_from_coo`` is the conversion
+front-end used by ``repro.operators.registry.from_coo``.
+
+Backend notes:
+  jnp    — the reference path (repro.sparse.linalg); also the oracle the
+           Pallas kernels are tested against.
+  pallas — the fused-kernel path (repro.kernels.ops): ELL forward +
+           BandedELL backward with the fused dual/prox passes, or BCSR in
+           both orientations with MXU tile contraction. Off-TPU the same
+           calls run in interpret mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+
+from repro.operators.base import LinearOperator
+from repro.operators.registry import get_builder, register
+from repro.sparse.formats import (
+    BCSR, COO, ELL, BandedELL, coo_to_banded, coo_to_bcsr, coo_to_ell,
+    transpose_coo,
+)
+from repro.sparse.linalg import (
+    bcsr_matvec, coo_matvec, coo_rmatvec, ell_matvec,
+)
+
+
+def _ell_nnz_stats(a: ELL) -> dict:
+    return dict(padded_entries=int(a.m * a.k),
+                k=int(a.k))
+
+
+@register("dense", "jnp")
+def dense_operator(d) -> LinearOperator:
+    return LinearOperator(
+        matvec=lambda x: d @ x, rmatvec=lambda y: d.T @ y,
+        shape=tuple(d.shape), format="dense", backend="jnp",
+        nnz=int(d.shape[0] * d.shape[1]))
+
+
+@register("coo", "jnp")
+def coo_operator(a: COO) -> LinearOperator:
+    return LinearOperator(
+        matvec=partial(coo_matvec, a), rmatvec=partial(coo_rmatvec, a),
+        shape=(a.m, a.n), format="coo", backend="jnp", nnz=int(a.nnz))
+
+
+@register("ell", "jnp")
+def ell_operator(a: ELL, at: ELL) -> LinearOperator:
+    """(ELL of A, ELL of A^T) — both orientations stored, gather-only."""
+    return LinearOperator(
+        matvec=partial(ell_matvec, a), rmatvec=partial(ell_matvec, at),
+        shape=(a.m, at.m), format="ell", backend="jnp",
+        stats=dict(fwd=_ell_nnz_stats(a), bwd=_ell_nnz_stats(at)))
+
+
+@register("bcsr", "jnp")
+def bcsr_operator(a: BCSR, at: BCSR) -> LinearOperator:
+    return LinearOperator(
+        matvec=partial(bcsr_matvec, a), rmatvec=partial(bcsr_matvec, at),
+        shape=(a.m, a.n), format="bcsr", backend="jnp",
+        stats=dict(blocks=a.nnz_blocks, bm=a.bm, bn=a.bn,
+                   blocks_t=at.nnz_blocks))
+
+
+def _fused_l1_prox(prox, reg, interpret):
+    """The fused prox kernel implements l1 only; other proxes fall back to
+    the composed jnp primal step (SolverOps.primal default)."""
+    if prox is None or prox.name != "l1":
+        return None
+    from repro.kernels.ops import prox_update
+
+    def fused(p, zhat, gamma, tau, xbar, xc):
+        return prox_update(zhat, xbar, xc, gamma, tau, reg,
+                           interpret=interpret)
+    return fused
+
+
+@register("ell", "pallas")
+def ell_pallas_operator(a: ELL, at: BandedELL, prox=None, reg: float = 0.0,
+                        *, block_rows: int = 512, block_cols: int = 512,
+                        interpret: bool | None = None) -> LinearOperator:
+    """The full fused-kernel bundle: ELL forward, BandedELL backward,
+    one-pass dual update (eq. 15) and, for l1, the fused prox."""
+    from repro.kernels.ops import banded_spmv_t, ell_spmv, fused_dual_update
+
+    return LinearOperator(
+        matvec=lambda x: ell_spmv(a, x, block_rows=block_rows,
+                                  interpret=interpret),
+        rmatvec=lambda y: banded_spmv_t(at, y, block_cols=block_cols,
+                                        interpret=interpret),
+        fused_dual=lambda yhat, xstar, xbar, b, c0, c1, c2, c3:
+            fused_dual_update(a, xstar, xbar, yhat, b, c0, c1, c2, c3,
+                              block_rows=block_rows, interpret=interpret),
+        prox_update=_fused_l1_prox(prox, reg, interpret),
+        shape=(a.m, at.n), format="ell", backend="pallas",
+        stats=dict(fwd=_ell_nnz_stats(a),
+                   bwd=dict(bands=at.num_bands, kb=at.kb)))
+
+
+@register("bcsr", "pallas")
+def bcsr_pallas_operator(a: BCSR, at: BCSR, prox=None, reg: float = 0.0,
+                         *, block_brows: int = 8,
+                         interpret: bool | None = None) -> LinearOperator:
+    """MXU-path bundle: tiled BCSR in both orientations. The dual update
+    composes from matvec (SolverOps.dual default — still one A pass); the
+    l1 prox reuses the elementwise fused prox kernel."""
+    from repro.kernels.ops import bcsr_spmv
+
+    return LinearOperator(
+        matvec=lambda x: bcsr_spmv(a, x, block_brows=block_brows,
+                                   interpret=interpret),
+        rmatvec=lambda y: bcsr_spmv(at, y, block_brows=block_brows,
+                                    interpret=interpret),
+        prox_update=_fused_l1_prox(prox, reg, interpret),
+        shape=(a.m, a.n), format="bcsr", backend="pallas",
+        stats=dict(blocks=a.nnz_blocks, bm=a.bm, bn=a.bn,
+                   blocks_t=at.nnz_blocks))
+
+
+def build_from_coo(coo: COO, fmt: str, backend: str, *, prox=None,
+                   reg: float = 0.0, **opts) -> LinearOperator:
+    """Convert a COO matrix to ``fmt`` and build on ``backend``.
+
+    opts (all optional): pad_to, band_size, bm, bn, bm_t, bn_t, block_rows,
+    block_cols, block_brows, interpret. Converter options irrelevant to the
+    requested format are ignored, so one call site can serve all formats.
+    Unknown (fmt, backend) pairs raise the registry's KeyError.
+    """
+    pad_to = opts.pop("pad_to", None)               # default differs per fmt
+    band_size = opts.pop("band_size", 512)
+    bm, bn = opts.pop("bm", 8), opts.pop("bn", 128)
+    bm_t, bn_t = opts.pop("bm_t", bm), opts.pop("bn_t", bn)
+    builder = get_builder(fmt, backend)             # validate the pair first
+    if fmt == "dense":
+        from repro.sparse.formats import coo_to_dense
+        return builder(jnp.asarray(coo_to_dense(coo)))
+    if fmt == "coo":
+        return builder(coo)
+    if fmt == "ell":
+        a = coo_to_ell(coo, pad_to=pad_to or 8)
+        if backend == "pallas":
+            at = coo_to_banded(coo, band_size=band_size, pad_to=pad_to or 8)
+            return builder(a, at, prox, reg, **opts)
+        at = coo_to_ell(transpose_coo(coo), pad_to=pad_to or 8)
+        return builder(a, at)
+    if fmt == "bcsr":
+        a = coo_to_bcsr(coo, bm=bm, bn=bn, pad_to=pad_to or 1)
+        at = coo_to_bcsr(transpose_coo(coo), bm=bm_t, bn=bn_t,
+                         pad_to=pad_to or 1)
+        if backend == "pallas":
+            return builder(a, at, prox, reg, **opts)
+        return builder(a, at)
+    raise KeyError(f"unknown format {fmt!r} for build_from_coo")

@@ -1,0 +1,73 @@
+"""Registry of LinearOperator builders keyed by (format, backend).
+
+Formats:  "dense", "coo", "ell", "bcsr" (single device) — plus the
+          strategy-local shards registered by repro.operators.dist.
+Backends: "jnp" (reference), "pallas" (TPU kernels, interpret off-TPU),
+          and one backend per distributed strategy ("rowpart", "colpart",
+          "dualpart", "block2d", "replicated").
+
+``make_operator`` dispatches to the registered builder; ``from_coo`` is the
+high-level entry point that also performs the host-side format conversion
+(and, with format="auto", runs the roofline-driven selector). New formats
+or backends plug in with @register and become visible to every call site —
+solver tests, benchmarks, launch cells — without touching them.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.operators.base import LinearOperator
+
+_REGISTRY: dict[tuple[str, str], Callable[..., LinearOperator]] = {}
+
+
+def register(fmt: str, backend: str):
+    """Decorator: register a builder under (format, backend)."""
+    def deco(fn: Callable[..., LinearOperator]):
+        _REGISTRY[(fmt, backend)] = fn
+        return fn
+    return deco
+
+
+def get_builder(fmt: str, backend: str) -> Callable[..., LinearOperator]:
+    try:
+        return _REGISTRY[(fmt, backend)]
+    except KeyError:
+        avail = ", ".join(f"{f}/{b}" for f, b in sorted(_REGISTRY))
+        raise KeyError(
+            f"no operator builder for format={fmt!r} backend={backend!r}; "
+            f"available: {avail}") from None
+
+
+def available() -> list[tuple[str, str]]:
+    return sorted(_REGISTRY)
+
+
+def make_operator(fmt: str, backend: str, *args, **kwargs) -> LinearOperator:
+    """Build a LinearOperator from pre-converted format arrays."""
+    return get_builder(fmt, backend)(*args, **kwargs)
+
+
+def from_coo(coo, fmt: str = "auto", backend: str = "jnp", *,
+             prox=None, reg: float = 0.0, **opts) -> LinearOperator:
+    """COO -> LinearOperator, converting to ``fmt`` on the host.
+
+    fmt="auto" picks the format and block sizes from matrix statistics via
+    the roofline selector (repro.operators.select). ``opts`` are forwarded
+    to the converter/builder (band_size, bm, bn, pad_to, block_rows, ...).
+    """
+    from repro.operators import builders
+
+    if fmt == "auto":
+        from repro.operators.select import select_format
+        plan = select_format(coo, backend=backend)
+        fmt = plan.format
+        opts = {**plan.params, **opts}
+    return builders.build_from_coo(coo, fmt, backend, prox=prox, reg=reg,
+                                   **opts)
+
+
+def make_solver_ops(coo, fmt: str = "auto", backend: str = "jnp", *,
+                    prox=None, reg: float = 0.0, **opts):
+    """One-call convenience: COO -> SolverOps through the registry."""
+    return from_coo(coo, fmt, backend, prox=prox, reg=reg, **opts).solver_ops()

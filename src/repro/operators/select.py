@@ -1,0 +1,135 @@
+"""Heuristic format selection from matrix statistics.
+
+Reuses the roofline machinery (repro.roofline.hw peaks + the 3-term time
+model of repro.roofline.analysis) to estimate the per-apply time of each
+candidate format and picks the cheapest:
+
+  ELL        — VPU gather path; bytes grow with the padded width
+               k_max = max row nnz, so row imbalance inflates it.
+  BandedELL  — same VPU path for A^T y, but y is staged per band; required
+               (not just preferred) once y no longer fits VMEM.
+  BCSR       — dense (bm, bn) tiles contracted on the MXU; pays for
+               zero-fill inside tiles (occupancy), wins when nonzeros
+               cluster so tiles are dense enough that the MXU's ~50x flop
+               advantage over the VPU covers the fill.
+
+The estimates are arithmetic-intensity arguments, not measurements — the
+same modeling the dry-run roofline uses for collectives — and are recorded
+in the returned plan so benchmarks can compare prediction vs measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.roofline import hw
+
+# VPU fp32 peak (v5e: 4 MXU-adjacent vector units, 8x128 lanes, ~940 MHz,
+# 2 flops/lane/cycle) — the gather-path ceiling. The MXU peak is hw's bf16
+# number; fp32 tiles run at half.
+PEAK_FLOPS_VPU = 3.9e12
+PEAK_FLOPS_MXU_F32 = hw.PEAK_FLOPS_BF16 / 2.0
+VMEM_BYTES = 16 * 2 ** 20          # v5e per-core VMEM
+_IDX = 4                           # int32 index bytes
+_VAL = 4                           # fp32 value bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatPlan:
+    format: str                    # "ell" | "banded_ell" | "bcsr"
+    backend: str
+    params: dict                   # converter kwargs (band_size, bm, bn, ...)
+    estimates: dict                # per-candidate modeled seconds + notes
+
+
+def matrix_stats(coo) -> dict:
+    """Cheap global statistics (the paper computes these with MapReduce
+    counters during the read stage)."""
+    rows = np.asarray(coo.rows)
+    cols = np.asarray(coo.cols)
+    rc = np.bincount(rows, minlength=coo.m)
+    cc = np.bincount(cols, minlength=coo.n)
+    return dict(
+        m=coo.m, n=coo.n, nnz=int(coo.nnz),
+        density=float(coo.nnz) / float(max(1, coo.m * coo.n)),
+        row_nnz_mean=float(rc.mean()), row_nnz_max=int(rc.max(initial=0)),
+        col_nnz_mean=float(cc.mean()), col_nnz_max=int(cc.max(initial=0)),
+    )
+
+
+def _roofline_s(flops: float, bytes_hbm: float, peak_flops: float) -> float:
+    return max(flops / peak_flops, bytes_hbm / hw.HBM_BW)
+
+
+def _bcsr_block_count(coo, bm: int, bn: int) -> int:
+    nbc = max(1, -(-coo.n // bn))
+    bi = np.asarray(coo.rows) // bm
+    bj = np.asarray(coo.cols) // bn
+    return int(np.unique(bi.astype(np.int64) * nbc + bj).size)
+
+
+def estimate_formats(coo, bm_bn_candidates=((8, 128), (16, 128), (32, 128),
+                                            (8, 256))) -> dict:
+    """Modeled per-apply seconds for each candidate (format, params)."""
+    st = matrix_stats(coo)
+    m, n, nnz = st["m"], st["n"], st["nnz"]
+    vec_bytes = (m + n) * _VAL
+    out = {}
+
+    # ELL: m * k_max stored entries (vals + idx), 2 flops each, VPU.
+    k = max(1, st["row_nnz_max"])
+    ell_bytes = m * k * (_VAL + _IDX) + vec_bytes
+    out["ell"] = dict(
+        s=_roofline_s(2.0 * m * k, ell_bytes, PEAK_FLOPS_VPU),
+        bytes=ell_bytes, pad_ratio=m * k / max(1, nnz),
+        params=dict())
+
+    # BandedELL (backward pass layout): same stored volume keyed by columns,
+    # k_max over columns; viable at any m (y staged per band), mandatory
+    # once y exceeds VMEM.
+    kc = max(1, st["col_nnz_max"])
+    band_bytes = n * kc * (_VAL + _IDX) + vec_bytes
+    out["banded_ell"] = dict(
+        s=_roofline_s(2.0 * n * kc, band_bytes, PEAK_FLOPS_VPU),
+        bytes=band_bytes, pad_ratio=n * kc / max(1, nnz),
+        params=dict(band_size=max(8, min(4096, VMEM_BYTES // (8 * _VAL)))))
+
+    # BCSR: dense tiles on the MXU; zero-fill costs bytes AND flops but at
+    # the ~50x higher MXU ceiling.
+    best = None
+    for bm, bn in bm_bn_candidates:
+        nblocks = _bcsr_block_count(coo, bm, bn)
+        tile_entries = nblocks * bm * bn
+        bytes_ = tile_entries * _VAL + nblocks * _IDX + vec_bytes
+        s = _roofline_s(2.0 * tile_entries, bytes_, PEAK_FLOPS_MXU_F32)
+        cand = dict(s=s, bytes=bytes_,
+                    occupancy=nnz / max(1, tile_entries),
+                    params=dict(bm=bm, bn=bn))
+        if best is None or s < best["s"]:
+            best = cand
+    out["bcsr"] = best
+    return out
+
+
+def select_format(coo, backend: str = "pallas",
+                  y_vmem_budget: int = VMEM_BYTES) -> FormatPlan:
+    """Pick the cheapest modeled format; force the banded backward layout
+    when y cannot be VMEM-resident (the flat gather is then impossible on
+    a real TPU regardless of modeled time)."""
+    est = estimate_formats(coo)
+    y_bytes = coo.m * _VAL
+    if y_bytes > y_vmem_budget:
+        choice = "banded_ell"
+    else:
+        choice = min(("ell", "bcsr"), key=lambda f: est[f]["s"])
+        # tiny/irregular matrices: an almost-empty tiling wastes MXU work
+        if choice == "bcsr" and est["bcsr"]["occupancy"] < 0.02:
+            choice = "ell"
+    params = dict(est[choice]["params"])
+    fmt = "ell" if choice == "banded_ell" else choice
+    if choice == "banded_ell":
+        # the ELL/pallas bundle already uses the banded layout backward
+        params = dict(band_size=params["band_size"])
+    return FormatPlan(format=fmt, backend=backend, params=params,
+                      estimates=est)

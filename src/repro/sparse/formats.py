@@ -11,6 +11,13 @@ aligned tiles. We provide:
                      needed slice of ``y`` fits VMEM during ``A^T y``:
                      ``vals (B, n, kb)``, ``rows (B, n, kb)`` (row indices are
                      band-local). The backward operator's kernel format.
+  * ``BCSR``       — block-compressed-sparse-row with dense ``(bm, bn)`` tiles
+                     padded to a fixed number of tiles per block-row (an
+                     ELL-of-blocks): ``vals (nbr, kb, bm, bn)``,
+                     ``bcols (nbr, kb)``. Each tile is a dense matrix, so the
+                     spmv contracts tiles with ``dot_general`` on the MXU
+                     instead of VPU gathers — the format of choice when
+                     nonzeros cluster (see repro.operators.select).
 
 All formats are registered pytrees: they pass through jit/shard_map/lower and
 can be built from ``jax.ShapeDtypeStruct`` leaves for allocation-free dry-runs.
@@ -84,6 +91,48 @@ class BandedELL:
     @property
     def kb(self) -> int:
         return self.vals.shape[2]
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["vals", "bcols"],
+         meta_fields=["m", "n"])
+@dataclasses.dataclass
+class BCSR:
+    """Tiled block-sparse rows, padded ELL-of-blocks layout.
+
+    vals:  (nbr, kb, bm, bn)  dense tiles (padding tiles are all-zero)
+    bcols: (nbr, kb)          block-column index of each tile (padding: 0)
+    m, n:  logical (unpadded) matrix shape; rows/cols beyond m/n inside the
+           edge tiles are zero-padded and contribute nothing.
+    """
+
+    vals: jax.Array
+    bcols: jax.Array
+    m: int
+    n: int
+
+    @property
+    def nbr(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def kb(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def bm(self) -> int:
+        return self.vals.shape[2]
+
+    @property
+    def bn(self) -> int:
+        return self.vals.shape[3]
+
+    @property
+    def nbc(self) -> int:
+        return -(-self.n // self.bn)
+
+    @property
+    def nnz_blocks(self) -> int:
+        return self.nbr * self.kb
 
 
 # --------------------------------------------------------------------------
@@ -173,6 +222,52 @@ def coo_to_banded(a: COO, band_size: int, kb: int | None = None,
         m=a.m, band_size=band_size)
 
 
+def coo_to_bcsr(a: COO, bm: int = 8, bn: int = 128, kb: int | None = None,
+                pad_to: int = 1) -> BCSR:
+    """Tile the matrix into dense (bm, bn) blocks; keep only nonzero blocks,
+    padded per block-row to the max block count (ELL-of-blocks).
+
+    Duplicate (i, j) entries accumulate, matching ``coo_to_dense``.
+    """
+    rows = np.asarray(a.rows)
+    cols = np.asarray(a.cols)
+    vals = np.asarray(a.vals)
+    nbr = max(1, -(-a.m // bm))
+    nbc = max(1, -(-a.n // bn))
+    bi = rows // bm
+    bj = cols // bn
+    block_key = bi.astype(np.int64) * nbc + bj
+    uniq = np.unique(block_key) if block_key.size else np.zeros(0, np.int64)
+    ubi = (uniq // nbc).astype(np.int64)
+    ubj = (uniq % nbc).astype(np.int64)
+    counts = np.bincount(ubi, minlength=nbr)
+    kmax = int(counts.max()) if counts.size else 0
+    kb = max(kb or 0, kmax)
+    kb = max(1, -(-kb // pad_to) * pad_to)
+    start = np.zeros(nbr, dtype=np.int64)
+    np.cumsum(counts[:-1], out=start[1:])
+    slot_of_uniq = np.arange(len(uniq)) - start[ubi]
+    ev = np.zeros((nbr, kb, bm, bn), dtype=vals.dtype)
+    ec = np.zeros((nbr, kb), dtype=np.int32)
+    ec[ubi, slot_of_uniq] = ubj.astype(np.int32)
+    if block_key.size:
+        slot = slot_of_uniq[np.searchsorted(uniq, block_key)]
+        np.add.at(ev, (bi, slot, rows - bi * bm, cols - bj * bn), vals)
+    return BCSR(vals=jnp.asarray(ev), bcols=jnp.asarray(ec), m=a.m, n=a.n)
+
+
+def bcsr_to_dense(a: BCSR) -> np.ndarray:
+    vals = np.asarray(a.vals)
+    bcols = np.asarray(a.bcols)
+    m_pad, n_pad = a.nbr * a.bm, a.nbc * a.bn
+    out = np.zeros((m_pad, n_pad), dtype=vals.dtype)
+    for i in range(a.nbr):
+        for s in range(a.kb):
+            j = int(bcols[i, s])
+            out[i * a.bm:(i + 1) * a.bm, j * a.bn:(j + 1) * a.bn] += vals[i, s]
+    return out[:a.m, :a.n]
+
+
 def dense_to_coo(d: np.ndarray) -> COO:
     r, c = np.nonzero(d)
     return COO(rows=jnp.asarray(r, jnp.int32), cols=jnp.asarray(c, jnp.int32),
@@ -194,3 +289,10 @@ def banded_spec(m: int, n: int, band_size: int, kb: int,
     return BandedELL(vals=jax.ShapeDtypeStruct((bands, n, kb), dtype),
                      rows=jax.ShapeDtypeStruct((bands, n, kb), jnp.int32),
                      m=m, band_size=band_size)
+
+
+def bcsr_spec(m: int, n: int, bm: int, bn: int, kb: int,
+              dtype=jnp.float32) -> BCSR:
+    nbr = max(1, -(-m // bm))
+    return BCSR(vals=jax.ShapeDtypeStruct((nbr, kb, bm, bn), dtype),
+                bcols=jax.ShapeDtypeStruct((nbr, kb), jnp.int32), m=m, n=n)

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.sparse.formats import COO, ELL, BandedELL
+from repro.sparse.formats import BCSR, COO, ELL, BandedELL
 
 
 def ell_matvec(a: ELL, x: jax.Array) -> jax.Array:
@@ -38,6 +38,26 @@ def banded_rmatvec(a: BandedELL, y: jax.Array) -> jax.Array:
 
     contribs = jax.vmap(band_contrib)(a.vals, a.rows, ybands)  # (B, n)
     return jnp.sum(contribs, axis=0)
+
+
+def bcsr_matvec(a: BCSR, x: jax.Array) -> jax.Array:
+    """y = A @ x, A in tiled BCSR. Tiles are dense, so the contraction is a
+    batched (bm, bn) @ (bn,) — MXU-shaped work; this jnp path is the oracle
+    the Pallas kernel (repro.kernels.bcsr_spmv) is tested against."""
+    pad = a.nbc * a.bn - x.shape[0]
+    xt = (jnp.pad(x, (0, pad)) if pad else x).reshape(a.nbc, a.bn)
+    g = jnp.take(xt, a.bcols, axis=0)                 # (nbr, kb, bn)
+    y = jax.lax.dot_general(
+        a.vals.astype(jnp.float32), g.astype(jnp.float32),
+        dimension_numbers=(((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)           # (nbr, kb, bm)
+    return jnp.sum(y, axis=1).reshape(-1)[:a.m].astype(x.dtype)
+
+
+def bcsr_rmatvec(at: BCSR, y: jax.Array) -> jax.Array:
+    """z = A^T y given the BCSR of A^T (the dual-copy trade: store both
+    orientations so the backward pass is also gather+dot, never scatter)."""
+    return bcsr_matvec(at, y)
 
 
 def coo_matvec(a: COO, x: jax.Array) -> jax.Array:

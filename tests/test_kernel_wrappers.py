@@ -1,0 +1,123 @@
+"""Padding edge cases for the jit'd kernel wrappers (repro.kernels.ops):
+m not a multiple of block_rows, tiny m (< 8), zero-nnz rows/cols, and
+dtype preservation through ell_spmv / banded_spmv_t / bcsr_spmv."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import banded_spmv_t, bcsr_spmv, ell_spmv
+from repro.sparse import (
+    COO, coo_to_banded, coo_to_bcsr, coo_to_dense, coo_to_ell, random_coo,
+)
+
+
+def _coo(m, n, k, seed=0):
+    coo = random_coo(m, n, min(k, n), seed=seed)
+    return coo, coo_to_dense(coo).astype(np.float32)
+
+
+@pytest.mark.parametrize("m", [33, 100, 257])
+def test_ell_spmv_m_not_block_multiple(m):
+    """block_rows doesn't divide m: wrapper pads rows, output sliced back."""
+    coo, d = _coo(m, 40, 3)
+    ell = coo_to_ell(coo, pad_to=8)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(40), jnp.float32)
+    out = ell_spmv(ell, x, block_rows=32)
+    assert out.shape == (m,)
+    np.testing.assert_allclose(np.asarray(out), d @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m", [1, 3, 7])
+def test_ell_spmv_tiny_m(m):
+    """m < 8 (one sublane tile): block_rows clamps to 8, rows pad up."""
+    coo, d = _coo(m, 5, 2)
+    ell = coo_to_ell(coo, pad_to=8)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(5), jnp.float32)
+    out = ell_spmv(ell, x)
+    assert out.shape == (m,)
+    np.testing.assert_allclose(np.asarray(out), d @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ell_spmv_zero_nnz_rows():
+    """Rows with no nonzeros (ELL padding entries col=0/val=0) contribute
+    exactly zero, even when x[0] != 0."""
+    m, n = 24, 10
+    rows = np.array([0, 0, 5, 23], np.int32)       # rows 1-4, 6-22 empty
+    cols = np.array([1, 9, 4, 0], np.int32)
+    vals = np.array([2.0, -1.0, 3.0, 4.0], np.float32)
+    coo = COO(rows=jnp.asarray(rows), cols=jnp.asarray(cols),
+              vals=jnp.asarray(vals), m=m, n=n)
+    x = jnp.arange(1.0, n + 1.0, dtype=jnp.float32)   # x[0] = 1 != 0
+    out = np.asarray(ell_spmv(coo_to_ell(coo, pad_to=8), x, block_rows=8))
+    d = coo_to_dense(coo)
+    np.testing.assert_allclose(out, d @ np.asarray(x), rtol=1e-5, atol=1e-5)
+    empty = np.setdiff1d(np.arange(m), rows)
+    np.testing.assert_array_equal(out[empty], np.zeros(len(empty)))
+
+
+def test_banded_spmv_t_m_not_band_multiple():
+    """band_size doesn't divide m: y pads to num_bands * band_size."""
+    coo, d = _coo(130, 20, 3, seed=3)
+    bell = coo_to_banded(coo, band_size=64, pad_to=4)
+    assert bell.num_bands * bell.band_size > 130
+    y = jnp.asarray(np.random.default_rng(4).standard_normal(130), jnp.float32)
+    out = banded_spmv_t(bell, y, block_cols=8)
+    assert out.shape == (20,)
+    np.testing.assert_allclose(np.asarray(out), d.T @ np.asarray(y),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_banded_spmv_t_zero_nnz_cols():
+    """Columns with no nonzeros return exactly zero."""
+    m, n = 40, 12
+    rows = np.array([0, 17, 39], np.int32)
+    cols = np.array([3, 3, 11], np.int32)          # all other cols empty
+    vals = np.array([1.0, 2.0, -1.0], np.float32)
+    coo = COO(rows=jnp.asarray(rows), cols=jnp.asarray(cols),
+              vals=jnp.asarray(vals), m=m, n=n)
+    bell = coo_to_banded(coo, band_size=16, pad_to=2)
+    y = jnp.ones(m, jnp.float32)
+    out = np.asarray(banded_spmv_t(bell, y, block_cols=4))
+    d = coo_to_dense(coo)
+    np.testing.assert_allclose(out, d.T @ np.ones(m), rtol=1e-5, atol=1e-5)
+    empty = np.setdiff1d(np.arange(n), cols)
+    np.testing.assert_array_equal(out[empty], np.zeros(len(empty)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wrappers_preserve_dtype(dtype):
+    """Outputs carry the vector dtype through all three spmv wrappers
+    (accumulation is fp32 in-kernel, cast back on store)."""
+    coo, d = _coo(50, 30, 4, seed=5)
+    coo.vals = coo.vals.astype(dtype)
+    x = jnp.asarray(np.random.default_rng(6).standard_normal(30), dtype)
+    y = jnp.asarray(np.random.default_rng(7).standard_normal(50), dtype)
+    out_f = ell_spmv(coo_to_ell(coo, pad_to=8), x, block_rows=16)
+    out_b = banded_spmv_t(coo_to_banded(coo, band_size=16, pad_to=4), y,
+                          block_cols=8)
+    out_c = bcsr_spmv(coo_to_bcsr(coo, bm=8, bn=16), x, block_brows=2)
+    assert out_f.dtype == dtype and out_f.shape == (50,)
+    assert out_b.dtype == dtype and out_b.shape == (30,)
+    assert out_c.dtype == dtype and out_c.shape == (50,)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out_f, np.float32),
+                               d @ np.asarray(x, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(out_c, np.float32),
+                               d @ np.asarray(x, np.float32), **tol)
+
+
+@pytest.mark.parametrize("nbr_block", [1, 3, 5])
+def test_bcsr_spmv_blockrow_padding(nbr_block):
+    """block_brows doesn't divide the block-row count: wrapper pads the
+    tile stream with zero tiles and slices the result."""
+    coo, d = _coo(77, 23, 3, seed=8)               # nbr = ceil(77/8) = 10
+    b = coo_to_bcsr(coo, bm=8, bn=16)
+    x = jnp.asarray(np.random.default_rng(9).standard_normal(23), jnp.float32)
+    out = bcsr_spmv(b, x, block_brows=nbr_block)
+    assert out.shape == (77,)
+    np.testing.assert_allclose(np.asarray(out), d @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)

@@ -6,10 +6,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import (
-    banded_spmv_t, ell_spmv, fused_dual_update, prox_update,
+    banded_spmv_t, bcsr_spmv, ell_spmv, fused_dual_update, prox_update,
 )
 from repro.kernels import ref as kref
-from repro.sparse import coo_to_banded, coo_to_dense, coo_to_ell, random_coo
+from repro.sparse import (
+    coo_to_banded, coo_to_bcsr, coo_to_dense, coo_to_ell, random_coo,
+    transpose_coo,
+)
 
 DTYPES = [jnp.float32, jnp.bfloat16]
 SHAPES = [(64, 16, 3), (300, 70, 5), (512, 128, 8), (1000, 333, 7)]
@@ -57,6 +60,30 @@ def test_banded_spmv_t_sweep(m, n, k, dtype, band_size):
                                  bell.band_size)[:n]
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bm,bn", [(8, 16), (16, 64)])
+def test_bcsr_spmv_sweep(m, n, k, dtype, bm, bn):
+    """Tiled-BCSR MXU kernel vs its oracle and the dense matrix, both
+    orientations (rmatvec = matvec on the transpose BCSR)."""
+    coo, d = _mk(m, n, k, dtype, seed=9)
+    rng = np.random.default_rng(10)
+    for a, dd, vlen in [(coo_to_bcsr(coo, bm=bm, bn=bn), d, n),
+                        (coo_to_bcsr(transpose_coo(coo), bm=bm, bn=bn),
+                         d.T, m)]:
+        v = jnp.asarray(rng.standard_normal(vlen), dtype)
+        out = bcsr_spmv(a, v, block_brows=4)
+        pad = a.nbc * a.bn - vlen
+        vt = jnp.pad(v, (0, pad)).reshape(a.nbc, a.bn)
+        ref = kref.bcsr_spmv_ref(a.vals, a.bcols, vt).reshape(-1)[:a.m]
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **_tol(dtype))
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), dd @ np.asarray(v, np.float32),
+            rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+            atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
 
 
 @pytest.mark.parametrize("m,n,k", SHAPES[:3])

@@ -1,0 +1,232 @@
+"""The LinearOperator layer: registry dispatch, BCSR vs dense oracles,
+format selection, and cross-backend solver equivalence (incl. bitwise
+identity of the registry path vs the legacy constructors it replaced)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_problems import small_config
+from repro.core.prox import get_prox
+from repro.core.solver import dense_ops, ell_ops, solve
+from repro.kernels import kernel_ops
+from repro.operators import (
+    available, estimate_formats, from_coo, make_operator, make_solver_ops,
+    select_format,
+)
+from repro.sparse import (
+    bcsr_matvec, bcsr_to_dense, coo_to_banded, coo_to_bcsr, coo_to_dense,
+    coo_to_ell, col_partitioned_ell, make_lasso, random_coo, transpose_coo,
+)
+
+CFG = small_config()
+
+
+@pytest.fixture(scope="module")
+def problem():
+    coo, b, x_true = make_lasso(CFG, seed=3)
+    d = coo_to_dense(coo).astype(np.float64)
+    return coo, d, b, float((d ** 2).sum())
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_formats_and_strategies():
+    have = set(available())
+    for key in [("dense", "jnp"), ("coo", "jnp"), ("ell", "jnp"),
+                ("bcsr", "jnp"), ("ell", "pallas"), ("bcsr", "pallas"),
+                ("ell", "rowpart"), ("ell", "colpart"), ("ell", "dualpart"),
+                ("ell", "block2d"), ("ell", "replicated")]:
+        assert key in have, key
+
+
+def test_registry_unknown_key_raises():
+    with pytest.raises(KeyError, match="available"):
+        make_operator("csr", "cuda")
+
+
+def test_operator_metadata_and_adjoint(problem):
+    coo, d, b, lg = problem
+    op = from_coo(coo, "bcsr", "jnp", bm=8, bn=32)
+    assert op.shape == (coo.m, coo.n)
+    assert op.format == "bcsr" and op.backend == "jnp"
+    assert op.stats["bm"] == 8 and op.stats["bn"] == 32
+    y = jnp.ones(coo.m, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(op.T.matvec(y)),
+                                  np.asarray(op.rmatvec(y)))
+    assert op.T.shape == (coo.n, coo.m)
+
+
+# ---------------------------------------------------------------------------
+# BCSR vs the COO dense oracle (acceptance: 1e-5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [(64, 16, 3), (300, 70, 5), (1000, 333, 7)])
+@pytest.mark.parametrize("bm,bn", [(8, 16), (8, 128), (16, 64)])
+def test_bcsr_matches_dense_oracle(m, n, k, bm, bn):
+    coo = random_coo(m, n, min(k, n), seed=1)
+    d = coo_to_dense(coo).astype(np.float32)
+    a = coo_to_bcsr(coo, bm=bm, bn=bn)
+    at = coo_to_bcsr(transpose_coo(coo), bm=bm, bn=bn)
+    np.testing.assert_allclose(bcsr_to_dense(a), d, atol=1e-6)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    np.testing.assert_allclose(np.asarray(bcsr_matvec(a, x)), d @ np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bcsr_matvec(at, y)),
+                               d.T @ np.asarray(y), rtol=1e-5, atol=1e-5)
+
+
+def test_bcsr_accumulates_duplicate_entries():
+    from repro.sparse import COO
+    coo = COO(rows=jnp.asarray([0, 0, 1], jnp.int32),
+              cols=jnp.asarray([1, 1, 0], jnp.int32),
+              vals=jnp.asarray([2.0, 3.0, 1.0], jnp.float32), m=2, n=2)
+    d = bcsr_to_dense(coo_to_bcsr(coo, bm=2, bn=2))
+    np.testing.assert_allclose(d, [[0.0, 5.0], [1.0, 0.0]])
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bcsr_operator_matches_dense(problem, backend):
+    coo, d, b, lg = problem
+    op = from_coo(coo, "bcsr", backend, bm=8, bn=32)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(coo.n), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(coo.m), jnp.float32)
+    d32 = d.astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matvec(x)), d32 @ np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(op.rmatvec(y)), d32.T @ np.asarray(y),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Format selector
+# ---------------------------------------------------------------------------
+
+def test_selector_prefers_ell_for_scattered_rows():
+    coo = random_coo(4000, 500, 4, seed=0)          # uniform scatter
+    plan = select_format(coo)
+    assert plan.format == "ell"
+    assert set(plan.estimates) == {"ell", "banded_ell", "bcsr"}
+    assert all(v["s"] > 0 for v in plan.estimates.values())
+
+
+def test_selector_prefers_bcsr_for_clustered_blocks():
+    """Block-diagonal-ish matrix: dense 8x128 tiles -> MXU wins the model."""
+    rng = np.random.default_rng(0)
+    rows, cols, vals = [], [], []
+    for blk in range(16):                            # 16 dense 8x128 blocks
+        r0, c0 = blk * 8, (blk % 4) * 128
+        r, c = np.meshgrid(np.arange(8), np.arange(128), indexing="ij")
+        rows.append((r0 + r).reshape(-1))
+        cols.append((c0 + c).reshape(-1))
+        vals.append(rng.standard_normal(8 * 128))
+    from repro.sparse import COO
+    coo = COO(rows=jnp.asarray(np.concatenate(rows), jnp.int32),
+              cols=jnp.asarray(np.concatenate(cols), jnp.int32),
+              vals=jnp.asarray(np.concatenate(vals), jnp.float32),
+              m=128, n=512)
+    plan = select_format(coo)
+    assert plan.format == "bcsr"
+    assert plan.params["bn"] == 128
+    assert plan.estimates["bcsr"]["occupancy"] > 0.9
+
+
+def test_selector_forces_banded_when_y_exceeds_vmem():
+    coo = random_coo(2000, 100, 3, seed=1)
+    plan = select_format(coo, y_vmem_budget=1000)    # pretend tiny VMEM
+    assert plan.format == "ell"                      # ELL/pallas bundle...
+    assert "band_size" in plan.params                # ...with banded backward
+
+
+def test_estimates_scale_with_padding_waste():
+    est_uniform = estimate_formats(random_coo(1000, 200, 4, seed=2))
+    assert est_uniform["ell"]["pad_ratio"] >= 1.0
+    assert est_uniform["bcsr"]["occupancy"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend solver equivalence through the registry
+# ---------------------------------------------------------------------------
+
+def _solve(ops, prox, b, lg, alg):
+    s, _ = solve(ops, prox, b, lg, 100.0, iterations=60, algorithm=alg)
+    return s
+
+
+@pytest.mark.parametrize("alg", ["a1", "a2"])
+def test_registry_path_bitwise_equals_legacy_constructors(problem, alg):
+    """The legacy constructors (dense_ops/ell_ops/kernel_ops) are thin
+    registry adapters: iterates must be bitwise-identical to operators
+    obtained directly from the registry."""
+    coo, d, b, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    d32 = jnp.asarray(d, jnp.float32)
+
+    ell, ellt = coo_to_ell(coo), col_partitioned_ell(coo, parts=1)
+    ell8 = coo_to_ell(coo, pad_to=8)
+    bell = coo_to_banded(coo, band_size=512, pad_to=8)
+    pairs = [
+        (dense_ops(d32), make_operator("dense", "jnp", d32).solver_ops()),
+        (ell_ops(ell, ellt),
+         make_operator("ell", "jnp", ell, ellt).solver_ops()),
+        (kernel_ops(ell8, bell, prox, CFG.reg),
+         make_operator("ell", "pallas", ell8, bell, prox,
+                       CFG.reg).solver_ops()),
+    ]
+    for legacy, registry in pairs:
+        s_l = _solve(legacy, prox, b, lg, alg)
+        s_r = _solve(registry, prox, b, lg, alg)
+        np.testing.assert_array_equal(np.asarray(s_l.xbar),
+                                      np.asarray(s_r.xbar))
+        np.testing.assert_array_equal(np.asarray(s_l.xstar),
+                                      np.asarray(s_r.xstar))
+        np.testing.assert_array_equal(np.asarray(s_l.yhat),
+                                      np.asarray(s_r.yhat))
+
+
+@pytest.mark.parametrize("alg", ["a1", "a2"])
+def test_all_backends_agree_on_iterates(problem, alg):
+    """jnp / kernel / BCSR / distributed backends from the registry land on
+    the same A1/A2 iterates (float tolerance across accumulation orders)."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import solve_distributed
+
+    coo, d, b, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    ref = _solve(make_solver_ops(coo, "dense", "jnp"), prox, b, lg, alg)
+
+    for ops in [make_solver_ops(coo, "ell", "jnp"),
+                make_solver_ops(coo, "ell", "pallas", prox=prox, reg=CFG.reg,
+                                band_size=512, block_rows=256,
+                                block_cols=128),
+                make_solver_ops(coo, "bcsr", "jnp", bm=8, bn=32),
+                make_solver_ops(coo, "bcsr", "pallas", prox=prox,
+                                reg=CFG.reg, bm=8, bn=32, block_brows=4)]:
+        s = _solve(ops, prox, b, lg, alg)
+        np.testing.assert_allclose(np.asarray(s.xbar), np.asarray(ref.xbar),
+                                   atol=1e-4)
+
+    mesh = Mesh(np.array(jax.devices()).reshape(1), ("p",))
+    for strategy in ("replicated", "dualpart"):
+        xbar, _ = solve_distributed(coo, b, prox, mesh, strategy,
+                                    gamma0=100.0, iterations=60,
+                                    algorithm=alg)
+        np.testing.assert_allclose(np.asarray(xbar), np.asarray(ref.xbar),
+                                   atol=1e-4)
+
+
+def test_auto_format_produces_working_solver(problem):
+    coo, d, b, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    op = from_coo(coo, "auto", "pallas", prox=prox, reg=CFG.reg)
+    assert op.format in ("ell", "bcsr")
+    s = _solve(op.solver_ops(), prox, b, lg, "a2")
+    ref = _solve(make_solver_ops(coo, "dense", "jnp"), prox, b, lg, "a2")
+    np.testing.assert_allclose(np.asarray(s.xbar), np.asarray(ref.xbar),
+                               atol=1e-4)

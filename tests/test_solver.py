@@ -73,6 +73,33 @@ def test_kernel_ops_equal_dense(problem):
     np.testing.assert_allclose(s_k.xbar, s_d.xbar, atol=1e-4)
 
 
+@pytest.mark.parametrize("algorithm", ["a1", "a2"])
+def test_registry_backends_identical_iterates(problem, algorithm):
+    """A1/A2 iterates across registry-obtained backends: the jnp ELL path
+    is the reference; the kernel and BCSR paths agree to float tolerance,
+    and re-building the SAME (format, backend) twice is bitwise-stable."""
+    from repro.operators import make_solver_ops
+
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    runs = {}
+    for name, kw in [("ell/jnp", dict(fmt="ell", backend="jnp")),
+                     ("ell/pallas", dict(fmt="ell", backend="pallas",
+                                         block_rows=256, block_cols=128)),
+                     ("bcsr/pallas", dict(fmt="bcsr", backend="pallas",
+                                          bm=8, bn=32))]:
+        ops = make_solver_ops(coo, prox=prox, reg=CFG.reg, **kw)
+        s, _ = solve(ops, prox, b, lg, 100.0, iterations=60,
+                     algorithm=algorithm)
+        runs[name] = np.asarray(s.xbar)
+        ops2 = make_solver_ops(coo, prox=prox, reg=CFG.reg, **kw)
+        s2, _ = solve(ops2, prox, b, lg, 100.0, iterations=60,
+                      algorithm=algorithm)
+        np.testing.assert_array_equal(runs[name], np.asarray(s2.xbar))
+    np.testing.assert_allclose(runs["ell/pallas"], runs["ell/jnp"], atol=1e-4)
+    np.testing.assert_allclose(runs["bcsr/pallas"], runs["ell/jnp"], atol=1e-4)
+
+
 def test_feasibility_rate_order_k2(problem):
     """Paper claim: accelerated O(1/k^2); fit the decay exponent."""
     coo, d, b, x_true, lg = problem
