@@ -14,9 +14,14 @@
   network  per-iteration collective wire bytes per strategy from lowered
            HLO on 8 devices — the quantitative version of the paper's
            MR1-4 shuffle-traffic analysis (+ A1 vs A2 fused comparison)
+  solver_serving  requests/sec of the batched solver serving engine
+           (bucketed + slot-batched vmapped A2, per-slot early exit) vs a
+           sequential solve_tol loop over the same ragged request stream —
+           the Dünner-et-al. per-task-overhead comparison; also records a
+           jit-cached sequential steelman
 
 Prints ``name,us_per_call,derived`` CSV; details land in
-experiments/bench/*.json.
+experiments/bench/*.json (schema documented in benchmarks/README.md).
 """
 from __future__ import annotations
 
@@ -283,12 +288,106 @@ def network_per_strategy():
     return out
 
 
+def solver_serving():
+    """Throughput of the batched solver serving engine vs sequential solves
+    over one ragged request stream (3 shape families x 2 regularizers).
+
+    Baselines:
+      sequential      — the natural loop: registry ops + solve_tol per
+                        request (re-traces/compiles per call, exactly like
+                        the repo's examples) — the per-task overhead the
+                        engine amortizes away via bucketing.
+      sequential_jit  — steelman: one jit-cached solve per shape family
+                        (zero per-request compile; only reachable when the
+                        operator pytrees are hand-threaded through jit).
+    The engine is measured warm (bucket step functions compiled by a first
+    stream — the serving steady state).  Emits
+    experiments/bench/solver_serving.json.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.core.prox import get_prox
+    from repro.core.solver import solve_tol
+    from repro.launch.solver_serve import make_requests, solve_sequentially
+    from repro.serve import SolverEngine
+
+    num, slots, tol, check_every = 24, 8, 1e-2, 16
+
+    eng = SolverEngine(slots=slots, fmt="ell", backend="jnp",
+                       check_every=check_every)
+    for r in make_requests(num, seed=10, tol=tol):     # warm: compile buckets
+        eng.submit(r)
+    eng.run()
+    eng.stats = {"steps": 0, "iterations": 0, "admitted": 0}
+    t0 = _time.perf_counter()
+    for r in make_requests(num, seed=11, tol=tol):
+        eng.submit(r)
+    done = eng.run()
+    dt_eng = _time.perf_counter() - t0
+    assert len(done) == num
+
+    t0 = _time.perf_counter()
+    solve_sequentially(make_requests(num, seed=11, tol=tol), check_every)
+    dt_seq = _time.perf_counter() - t0
+
+    from functools import partial
+
+    from repro.operators import make_operator
+    from repro.sparse.formats import ELL, coo_to_ell, transpose_coo
+
+    @partial(jax.jit, static_argnames=("n_ell", "m_ell"))
+    def _jit_solve(vals, cols, tvals, tcols, n_ell, m_ell, b, lg, g0, reg):
+        ops = make_operator("ell", "jnp", ELL(vals, cols, n_ell),
+                            ELL(tvals, tcols, m_ell)).solver_ops()
+        return solve_tol(ops, get_prox("l1", reg=reg), b, lg, g0,
+                         max_iterations=4000, tol=tol,
+                         check_every=check_every)
+
+    def run_jit_seq(reqs):
+        for r in reqs:
+            e = coo_to_ell(r.coo, pad_to=8)
+            et = coo_to_ell(transpose_coo(r.coo), pad_to=8)
+            jax.block_until_ready(_jit_solve(
+                e.vals, e.cols, et.vals, et.cols, e.n, et.n, r.b, r.lg,
+                r.gamma0, r.reg))
+
+    run_jit_seq(make_requests(num, seed=10, tol=tol))          # warm
+    t0 = _time.perf_counter()
+    run_jit_seq(make_requests(num, seed=11, tol=tol))
+    dt_jit = _time.perf_counter() - t0
+
+    rec = dict(
+        requests=num, slots=slots, tol=tol, check_every=check_every,
+        buckets=len(eng.buckets),
+        engine_s=dt_eng, sequential_s=dt_seq, sequential_jit_s=dt_jit,
+        rps_engine=num / dt_eng, rps_sequential=num / dt_seq,
+        rps_sequential_jit=num / dt_jit,
+        speedup_vs_sequential=dt_seq / dt_eng,
+        speedup_vs_sequential_jit=dt_jit / dt_eng,
+        iterations=eng.stats["iterations"])
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "solver_serving.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    emit("solver_serving/engine", dt_eng / num * 1e6,
+         f"rps={rec['rps_engine']:.1f};slots={slots}")
+    emit("solver_serving/sequential", dt_seq / num * 1e6,
+         f"rps={rec['rps_sequential']:.1f};"
+         f"speedup={rec['speedup_vs_sequential']:.1f}x")
+    emit("solver_serving/sequential_jit", dt_jit / num * 1e6,
+         f"rps={rec['rps_sequential_jit']:.1f};"
+         f"speedup={rec['speedup_vs_sequential_jit']:.2f}x")
+    return rec
+
+
 def main() -> None:
     os.makedirs(OUT_DIR, exist_ok=True)
     results = {}
     print("name,us_per_call,derived")
     results["table1"] = table1_datasets()
     results["spmv_formats"] = spmv_formats()
+    results["solver_serving"] = solver_serving()
     results["table2_4"] = table2_4_stage_timings()
     results["table5"] = table5_strong_scaling()
     results["fig2b"] = fig2b_datasize_scaling()

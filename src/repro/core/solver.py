@@ -16,12 +16,36 @@ A2 per iteration: 1 forward (on the linearity-combined vector) + 1 backward,
 iterates (verified in tests, mirroring the paper's Matlab check).
 
 The operator bundle ``SolverOps`` abstracts the execution substrate: plain
-jnp (reference), Pallas kernels (fused HBM-pass versions), or shard_map'ped
-distributed operators (repro.core.distributed) — the solver body is reused
-verbatim inside shard_map, since everything but the operators is elementwise.
-Bundles are constructed exclusively through the (format, backend) registry
-in ``repro.operators`` (LinearOperator.solver_ops() is the one construction
-site); ``dense_ops``/``ell_ops`` below are thin adapters kept for callers.
+jnp (reference), Pallas kernels (fused HBM-pass versions), shard_map'ped
+distributed operators (repro.core.distributed), or the stacked batched
+operators of the serving engine — the solver body is reused verbatim on all
+of them, since everything but the operators is elementwise.  Bundles are
+constructed exclusively through the (format, backend) registry in
+``repro.operators`` (``LinearOperator.solver_ops()`` is the one
+construction site); ``dense_ops``/``ell_ops`` below are thin adapters over
+that registry kept for legacy callers — do not build ``SolverOps`` by hand.
+
+Two families of drivers:
+
+* single problem — ``solve`` (fixed iterations, lax.scan) and ``solve_tol``
+  (early exit on the relative-feasibility criterion, checked every
+  ``check_every`` iterations).
+* batched — ``batched_init`` / ``batched_step`` / ``batched_solve`` /
+  ``batched_solve_tol`` run B independent problems (stacked operands with a
+  leading batch axis, per-slot ``lg``/``gamma0``/``k`` schedules) through
+  the same A1/A2 bodies.  ``batched_step`` takes a per-slot boolean
+  ``mask``: finished slots are frozen (their state re-emitted unchanged),
+  which is what lets the serving engine (repro.serve.solver_engine) retire
+  problems independently while the bucket keeps stepping.
+
+Schedule helpers double as the numeric reference (c = 3):
+
+>>> tau_k(0.0), tau_k(1.0)
+(0.6, 0.5)
+>>> gamma_j(0, 2.0), gamma_j(3, 2.0)
+(2.0, 1.25)
+>>> beta_j(0, 1.0, 1.0)
+1.08
 """
 from __future__ import annotations
 
@@ -183,6 +207,13 @@ def solve(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
 
     history (when record_every>0): dict of per-record feasibility ||A xbar - b||,
     objective f(xbar), and the iterate snapshots' k.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.prox import get_prox
+    >>> st, _ = solve(dense_ops(2.0 * jnp.eye(2)), get_prox("zero"),
+    ...               jnp.ones(2), lg=8.0, gamma0=1.0, iterations=300)
+    >>> round(float(st.xbar[0]), 2)   # min 0 s.t. 2x = 1
+    0.5
     """
     init = (a2_init if algorithm == "a2" else a1_init)(
         ops, prox, b, lg, gamma0, c, xc=xc, yc=yc, n=n)
@@ -225,6 +256,179 @@ def solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
             state)
 
     return jax.lax.while_loop(cond, body, init)
+
+
+# --------------------------------------------------------------------------
+# Batched drivers — B independent problems, one vmapped A2 body
+# --------------------------------------------------------------------------
+#
+# Operands carry a leading batch axis: b (B, m), lg (B,), gamma0 (B,),
+# every PDState leaf (B, ...) — gamma and k are per-slot, so each problem
+# runs its own schedule (tau_k/gamma_j/beta_j broadcast elementwise over
+# the slot axis).  These bodies deliberately mirror a1_step/a2_step above
+# term for term (incl. the eq-13 k==0 gk_eff case): any numeric change
+# there must be made here too — the batched-vs-sequential equality tests
+# in tests/test_solver_engine.py enforce the pairing.  ``ops`` must be a *batched* SolverOps whose
+# matvec/rmatvec/fused_dual map (B, n) -> (B, m): build one through the
+# stacked formats in the registry (``make_operator("stacked_ell", ...)``).
+# Padding inside a bucket is exact, not approximate: padded rows are
+# all-zero with b=0 (dual coordinate stays 0), padded columns are all-zero
+# with the prox centered at 0 (primal coordinate stays 0), so a problem's
+# iterates in a padded slot match its standalone solve to float tolerance.
+
+
+def mask_state(mask: jax.Array, new: PDState, old: PDState) -> PDState:
+    """Per-slot freeze: keep ``new`` where mask is True, ``old`` elsewhere."""
+    m2 = mask[:, None]
+    return PDState(xbar=jnp.where(m2, new.xbar, old.xbar),
+                   xstar=jnp.where(m2, new.xstar, old.xstar),
+                   yhat=jnp.where(m2, new.yhat, old.yhat),
+                   gamma=jnp.where(mask, new.gamma, old.gamma),
+                   k=jnp.where(mask, new.k, old.k))
+
+
+def batched_init(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
+                 algorithm: str = "a2", c: float = 3.0,
+                 n: int | None = None) -> PDState:
+    """Batched a1/a2 init: b (B, m), lg (B,), gamma0 (B,) -> PDState (B, ...)."""
+    bsz = b.shape[0]
+    lg = jnp.asarray(lg, b.dtype)
+    g0 = jnp.asarray(gamma0, b.dtype)
+    n = n if n is not None else ops.rmatvec(jnp.zeros_like(b)).shape[-1]
+    xc = jnp.zeros((bsz, n), b.dtype)
+    zc = ops.rmatvec(jnp.zeros_like(b))
+    if algorithm == "a2":
+        # steps 7-9: one primal block with tau_{-1} = 1, then yhat := 0
+        xstar, _ = ops.primal(prox, zc, g0[:, None],
+                              jnp.ones((bsz, 1), b.dtype), xc, xc)
+        return PDState(xbar=xstar, xstar=xstar, yhat=jnp.zeros_like(b),
+                       gamma=g0, k=jnp.zeros((bsz,), jnp.int32))
+    beta0 = beta_j(0.0, g0, lg, c)
+    xbar0 = prox.apply(zc, g0[:, None], xc)
+    ybar0 = (ops.matvec(xbar0) - b) / beta0[:, None]
+    return PDState(xbar=xbar0, xstar=xbar0, yhat=ybar0, gamma=g0,
+                   k=jnp.zeros((bsz,), jnp.int32))
+
+
+def batched_step(ops: SolverOps, prox: ProxOp, b, lg, gamma0, state: PDState,
+                 algorithm: str = "a2", c: float = 3.0,
+                 mask: jax.Array | None = None) -> PDState:
+    """One masked batched iteration; slots where ``mask`` is False are frozen.
+
+    The compute still runs for frozen slots (SIMD batch), but their state is
+    re-emitted unchanged — k does not advance, iterates do not move — so a
+    retired problem's result is immutable while its bucket keeps stepping.
+    """
+    lg = jnp.asarray(lg, b.dtype)
+    g0 = jnp.asarray(gamma0, b.dtype)
+    k = state.k.astype(b.dtype)
+    tk = tau_k(k, c)                                   # (B,)
+    gk1 = gamma_j(k + 1.0, g0, c)
+    xc = None
+    if algorithm == "a2":
+        bk = beta_j(k, g0, lg, c)
+        gk_eff = jnp.where(state.k == 0, lg / beta_j(0.0, g0, lg, c),
+                           state.gamma)
+        c0 = 1.0 - tk
+        c1 = (1.0 - tk) * gk_eff / lg
+        c2 = tk / bk
+        c3 = c1 + c2
+        yhat = ops.dual(state.yhat, state.xstar, state.xbar, b, c0[:, None],
+                        c1[:, None], c2[:, None], c3[:, None])
+        zhat = ops.rmatvec(yhat)
+        xc = jnp.zeros_like(zhat)
+        xstar, xbar = ops.primal(prox, zhat, gk1[:, None], tk[:, None],
+                                 state.xbar, xc)
+        new = PDState(xbar=xbar, xstar=xstar, yhat=yhat, gamma=gk1,
+                      k=state.k + 1)
+    else:
+        bk = beta_j(k, g0, lg, c)
+        ystar = (ops.matvec(state.xbar) - b) / bk[:, None]
+        yhat = (1.0 - tk)[:, None] * state.yhat + tk[:, None] * ystar
+        zhat = ops.rmatvec(yhat)
+        xc = jnp.zeros_like(zhat)
+        xstar, xbar = ops.primal(prox, zhat, gk1[:, None], tk[:, None],
+                                 state.xbar, xc)
+        ybar = yhat + (gk1 / lg)[:, None] * (ops.matvec(xstar) - b)
+        new = PDState(xbar=xbar, xstar=xstar, yhat=ybar, gamma=gk1,
+                      k=state.k + 1)
+    if mask is None:
+        return new
+    return mask_state(mask, new, state)
+
+
+def batched_feasibility(ops: SolverOps, b, state: PDState) -> jax.Array:
+    """Per-slot relative feasibility ||A xbar - b|| / max(1, ||b||) -> (B,)."""
+    r = ops.matvec(state.xbar) - b
+    return (jnp.linalg.norm(r, axis=-1)
+            / jnp.maximum(jnp.linalg.norm(b, axis=-1), 1.0))
+
+
+def batched_solve(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
+                  iterations: int = 100, algorithm: str = "a2",
+                  c: float = 3.0, unroll: int = 1) -> PDState:
+    """Fixed-iteration batched solve (no masking — all slots step together).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.prox import get_prox
+    >>> from repro.operators import make_operator
+    >>> d = jnp.stack([2.0 * jnp.eye(2), 4.0 * jnp.eye(2)])
+    >>> ops = make_operator("stacked_dense", "jnp", d).solver_ops()
+    >>> st = batched_solve(ops, get_prox("zero"), jnp.ones((2, 2)),
+    ...                    lg=jnp.array([8.0, 32.0]),
+    ...                    gamma0=jnp.array([1.0, 1.0]), iterations=300)
+    >>> [round(float(v), 2) for v in st.xbar[:, 0]]   # solves Ax = 1 per slot
+    [0.5, 0.25]
+    """
+    init = batched_init(ops, prox, b, lg, gamma0, algorithm, c)
+
+    def body(state, _):
+        return batched_step(ops, prox, b, lg, gamma0, state, algorithm, c), ()
+
+    final, _ = jax.lax.scan(body, init, None, length=iterations,
+                            unroll=unroll)
+    return final
+
+
+def batched_solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
+                      max_iterations=10_000, tol=1e-6,
+                      algorithm: str = "a2", c: float = 3.0,
+                      check_every: int = 8,
+                      active: jax.Array | None = None) -> PDState:
+    """Batched early-exit solve: per-slot ``solve_tol`` semantics.
+
+    tol / max_iterations may be scalars or (B,) arrays.  Each slot stops
+    (is mask-frozen) once its relative feasibility drops below its tol or
+    its k reaches its max_iterations, checked every ``check_every``
+    iterations — the same cadence as ``solve_tol``, so a slot's final state
+    matches the standalone call.  ``active`` pre-masks slots so a partially
+    filled batch never steps its empty slots.  (The serving engine
+    implements the same semantics with its own jit'd bodies —
+    repro.serve.solver_engine — because it also needs mid-stream admission;
+    this driver is the one-shot batch API.)
+    """
+    bsz = b.shape[0]
+    tol = jnp.broadcast_to(jnp.asarray(tol, b.dtype), (bsz,))
+    maxit = jnp.broadcast_to(jnp.asarray(max_iterations, jnp.int32), (bsz,))
+    state = batched_init(ops, prox, b, lg, gamma0, algorithm, c)
+    act = jnp.ones((bsz,), bool) if active is None else active
+    act = act & (batched_feasibility(ops, b, state) >= tol) & (state.k < maxit)
+
+    def cond(carry):
+        return jnp.any(carry[1])
+
+    def body(carry):
+        state, act = carry
+        state = jax.lax.fori_loop(
+            0, check_every,
+            lambda _, s: batched_step(ops, prox, b, lg, gamma0, s, algorithm,
+                                      c, mask=act),
+            state)
+        feas = batched_feasibility(ops, b, state)
+        return state, act & (feas >= tol) & (state.k < maxit)
+
+    state, _ = jax.lax.while_loop(cond, body, (state, act))
+    return state
 
 
 def dense_ops(a: jax.Array) -> SolverOps:

@@ -1,12 +1,16 @@
 # Pallas TPU kernels for the compute hot-spots the paper optimizes: the
 # forward/backward sparse operators and the two fused update passes that
 # realize pseudocode A2's "one forward application" observation in-kernel.
-# Validated in interpret mode on CPU (no TPU in this container); written
-# with explicit BlockSpec VMEM tiling for the v5e target.
+# The batched_* variants carry a leading batch axis (batch grid dimension /
+# vmap-over-pallas_call) for the solver serving engine. Validated in
+# interpret mode on CPU (no TPU in this container); written with explicit
+# BlockSpec VMEM tiling for the v5e target.
 from repro.kernels.ops import (
-    banded_spmv_t, bcsr_spmv, ell_spmv, fused_dual_update, kernel_ops,
-    prox_update,
+    banded_spmv_t, batched_bcsr_spmv, batched_ell_spmv,
+    batched_fused_dual_update, bcsr_spmv, ell_spmv, fused_dual_update,
+    kernel_ops, prox_update,
 )
 
-__all__ = ["banded_spmv_t", "bcsr_spmv", "ell_spmv", "fused_dual_update",
-           "kernel_ops", "prox_update"]
+__all__ = ["banded_spmv_t", "batched_bcsr_spmv", "batched_ell_spmv",
+           "batched_fused_dual_update", "bcsr_spmv", "ell_spmv",
+           "fused_dual_update", "kernel_ops", "prox_update"]

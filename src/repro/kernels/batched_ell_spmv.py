@@ -1,0 +1,53 @@
+"""Batched forward operator  y_b = A_b @ x_b  over stacked row-ELL.
+
+The serving-engine kernel: B independent same-shape problems stacked on a
+leading batch axis, the grid gaining a batch dimension — grid
+``(B, m // block_rows)`` — so one ``pallas_call`` covers the whole slot
+batch.  Each (b, i) program streams one row tile of problem b HBM->VMEM and
+gathers from that problem's VMEM-resident x_b; problems never read each
+other's operands (block index maps select slot b in every spec).
+
+This is the kernel-level version of the multi-tenant batching argument
+(Dünner et al.): per-call fixed costs — dispatch, grid setup, pipeline
+prologue — are paid once per *bucket* instead of once per *problem*.
+
+interpret=True by default: this container is CPU-only, so the kernel runs
+under the Pallas interpreter; on a real TPU pass interpret=False (the
+wrappers in repro.kernels.ops do this automatically) to lower through
+Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, cols_ref, x_ref, out_ref):
+    vals = vals_ref[0]                          # (TM, k)
+    cols = cols_ref[0]                          # (TM, k) int32
+    x = x_ref[0]                                # (n,) slot-resident
+    gathered = jnp.take(x, cols, axis=0)        # VMEM vector gather
+    acc = jnp.sum(vals.astype(jnp.float32) * gathered.astype(jnp.float32),
+                  axis=1)
+    out_ref[0, :] = acc.astype(out_ref.dtype)
+
+
+def batched_ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                            *, block_rows: int = 512, interpret: bool = True):
+    """vals/cols: (B, m, k);  x: (B, n)  ->  y: (B, m)."""
+    bsz, m, k = vals.shape
+    assert m % block_rows == 0, (m, block_rows)
+    n = x.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(bsz, m // block_rows),
+        in_specs=[
+            pl.BlockSpec((1, block_rows, k), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_rows, k), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, n), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m), x.dtype),
+        interpret=interpret,
+    )(vals, cols, x)

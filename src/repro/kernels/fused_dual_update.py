@@ -10,6 +10,19 @@ forward matrix operator".
 
 Scalars (c0..c3) arrive as a (4,)-vector operand (per-iteration traced
 values, so they cannot be compile-time constants).
+
+``interpret=True`` is the default at this layer: the container this repo
+develops on is CPU-only, so the kernel executes under the Pallas
+interpreter (functionally exact, orders of magnitude slower than compiled).
+On a TPU you want ``interpret=False`` so the kernel lowers through Mosaic
+onto the VPU with real HBM->VMEM pipelining — the jit'd wrappers in
+``repro.kernels.ops`` pick this automatically from
+``jax.default_backend()``; only call these ``*_pallas`` entry points
+directly if you are managing interpret mode yourself.
+
+``batched_fused_dual_update_pallas`` is the serving-engine variant: stacked
+operands with a leading batch axis, per-slot coefficient rows (B, 4), and a
+batch grid dimension — one launch covers every problem in a bucket.
 """
 from __future__ import annotations
 
@@ -53,5 +66,50 @@ def fused_dual_update_pallas(coefs: jax.Array, vals: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((m,), yhat.dtype),
+        interpret=interpret,
+    )(coefs, vals, cols, xstar, xbar, yhat, b)
+
+
+def _batched_kernel(coef_ref, vals_ref, cols_ref, xstar_ref, xbar_ref,
+                    yhat_ref, b_ref, out_ref):
+    c = coef_ref[0].astype(jnp.float32)            # (4,) this slot's schedule
+    u = (c[1] * xstar_ref[0].astype(jnp.float32)
+         + c[2] * xbar_ref[0].astype(jnp.float32))             # (n,) in VMEM
+    vals = vals_ref[0].astype(jnp.float32)                     # (TM, k)
+    gathered = jnp.take(u, cols_ref[0], axis=0)
+    au = jnp.sum(vals * gathered, axis=1)                      # (TM,)
+    out = (c[0] * yhat_ref[0].astype(jnp.float32) + au
+           - c[3] * b_ref[0].astype(jnp.float32))
+    out_ref[0, :] = out.astype(out_ref.dtype)
+
+
+def batched_fused_dual_update_pallas(coefs: jax.Array, vals: jax.Array,
+                                     cols: jax.Array, xstar: jax.Array,
+                                     xbar: jax.Array, yhat: jax.Array,
+                                     b: jax.Array, *, block_rows: int = 512,
+                                     interpret: bool = True):
+    """Per-slot eq. 15 over stacked ELL: one launch for the whole bucket.
+
+    coefs: (B, 4) per-slot (c0..c3) — each problem sits at its own iteration
+    k with its own (lg, gamma0), so the schedule coefficients differ per
+    slot.  vals/cols: (B, m, k);  xstar/xbar: (B, n);  yhat/b: (B, m).
+    """
+    bsz, m, k = vals.shape
+    assert m % block_rows == 0, (m, block_rows)
+    n = xstar.shape[1]
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=(bsz, m // block_rows),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda bi, i: (bi, 0)),
+            pl.BlockSpec((1, block_rows, k), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, block_rows, k), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, n), lambda bi, i: (bi, 0)),
+            pl.BlockSpec((1, n), lambda bi, i: (bi, 0)),
+            pl.BlockSpec((1, block_rows), lambda bi, i: (bi, i)),
+            pl.BlockSpec((1, block_rows), lambda bi, i: (bi, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m), yhat.dtype),
         interpret=interpret,
     )(coefs, vals, cols, xstar, xbar, yhat, b)

@@ -15,23 +15,33 @@ import jax.numpy as jnp
 
 from repro.core.prox import ProxOp
 from repro.kernels.banded_spmv_t import banded_spmv_t_pallas
+from repro.kernels.batched_ell_spmv import batched_ell_spmv_pallas
 from repro.kernels.bcsr_spmv import bcsr_spmv_pallas
 from repro.kernels.ell_spmv import ell_spmv_pallas
-from repro.kernels.fused_dual_update import fused_dual_update_pallas
+from repro.kernels.fused_dual_update import (
+    batched_fused_dual_update_pallas, fused_dual_update_pallas,
+)
 from repro.kernels.prox_update import prox_update_pallas
-from repro.sparse.formats import BCSR, ELL, BandedELL
+from repro.sparse.formats import BCSR, ELL, BandedELL, StackedBCSR, StackedELL
 
 
 def _interp(flag):
     return jax.default_backend() != "tpu" if flag is None else flag
 
 
-def _pad_rows(arr, mult):
-    m = arr.shape[0]
-    pad = (-m) % mult
+def _pad_multiple(arr, mult, axis=0):
+    """Pad ``axis`` up to a multiple of ``mult``; returns (arr, orig_size)."""
+    size = arr.shape[axis]
+    pad = (-size) % mult
     if pad:
-        arr = jnp.pad(arr, ((0, pad),) + ((0, 0),) * (arr.ndim - 1))
-    return arr, m
+        widths = [(0, 0)] * arr.ndim
+        widths[axis] = (0, pad)
+        arr = jnp.pad(arr, widths)
+    return arr, size
+
+
+def _pad_rows(arr, mult):
+    return _pad_multiple(arr, mult, axis=0)
 
 
 @partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -111,6 +121,46 @@ def prox_update(zhat, xbar, xc, gamma, tau, reg, *, block: int = 1024,
     xs, xb_new = prox_update_pallas(coefs, zp, xb, xcp, block=block,
                                     interpret=_interp(interpret))
     return xs[:n], xb_new[:n]
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def batched_ell_spmv(a: StackedELL, x: jax.Array, *, block_rows: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """y_b = A_b @ x_b over stacked row-ELL: (B, n) -> (B, m), one launch."""
+    block_rows = min(block_rows, max(8, a.m))
+    vals, m = _pad_multiple(a.vals, block_rows, axis=1)
+    cols, _ = _pad_multiple(a.cols, block_rows, axis=1)
+    y = batched_ell_spmv_pallas(vals, cols, x, block_rows=block_rows,
+                                interpret=_interp(interpret))
+    return y[:, :m]
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def batched_fused_dual_update(a: StackedELL, xstar, xbar, yhat, b, coefs,
+                              *, block_rows: int = 512,
+                              interpret: bool | None = None) -> jax.Array:
+    """Per-slot eq. 15 over stacked ELL; coefs (B, 4) = per-slot (c0..c3)."""
+    block_rows = min(block_rows, max(8, a.m))
+    vals, m = _pad_multiple(a.vals, block_rows, axis=1)
+    cols, _ = _pad_multiple(a.cols, block_rows, axis=1)
+    yhat_p, _ = _pad_multiple(yhat, block_rows, axis=1)
+    b_p, _ = _pad_multiple(b, block_rows, axis=1)
+    out = batched_fused_dual_update_pallas(
+        jnp.asarray(coefs, jnp.float32), vals, cols, xstar, xbar, yhat_p,
+        b_p, block_rows=block_rows, interpret=_interp(interpret))
+    return out[:, :m]
+
+
+@partial(jax.jit, static_argnames=("block_brows", "interpret"))
+def batched_bcsr_spmv(a: StackedBCSR, x: jax.Array, *, block_brows: int = 8,
+                      interpret: bool | None = None) -> jax.Array:
+    """y_b = A_b @ x_b over stacked BCSR — vmap-over-pallas_call fallback
+    (the batching rule adds the leading grid dimension for us)."""
+    def one(vals, bcols, xb):
+        return bcsr_spmv(BCSR(vals=vals, bcols=bcols, m=a.m, n=a.n), xb,
+                         block_brows=block_brows, interpret=interpret)
+
+    return jax.vmap(one)(a.vals, a.bcols, x)
 
 
 def kernel_ops(a: ELL, at: BandedELL, prox: ProxOp, reg: float,

@@ -1,15 +1,18 @@
 # The unified LinearOperator layer: one protocol + a (format, backend)
 # registry over which every solver in the repo is constructed — jnp
-# reference ops, Pallas kernel bundles (ELL and tiled-BCSR/MXU), and the
-# shard_map-local operators of each distributed strategy. See DESIGN.md
-# section 3.
+# reference ops, Pallas kernel bundles (ELL and tiled-BCSR/MXU), the
+# shard_map-local operators of each distributed strategy, and the stacked
+# batched operators of the solver serving engine. See DESIGN.md sections
+# 3 and 5.
 from repro.operators.base import LinearOperator
 from repro.operators.registry import (
     available, from_coo, get_builder, make_operator, make_solver_ops,
     register,
 )
 from repro.operators import builders as _builders          # noqa: F401
+from repro.operators import batched as _batched            # noqa: F401
 from repro.operators import dist as _dist                  # noqa: F401
+from repro.operators.batched import stack_coos
 from repro.operators.dist import local_operator
 from repro.operators.select import (
     FormatPlan, estimate_formats, matrix_stats, select_format,
@@ -19,4 +22,5 @@ __all__ = [
     "LinearOperator", "FormatPlan", "available", "estimate_formats",
     "from_coo", "get_builder", "local_operator", "make_operator",
     "make_solver_ops", "matrix_stats", "register", "select_format",
+    "stack_coos",
 ]

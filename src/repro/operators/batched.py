@@ -1,0 +1,148 @@
+"""Batched LinearOperator builders: B independent problems, one operator.
+
+The serving engine (repro.serve.solver_engine) buckets concurrent
+``min f(x) s.t. Ax = b`` requests by padded shape and runs one vmapped A2
+step per bucket.  The operator side of that is here: stacked formats
+(``StackedELL`` / ``StackedBCSR`` / a plain (B, m, n) dense stack) whose
+matvec/rmatvec/fused_dual carry a leading batch axis, registered under the
+same (format, backend) table as the single-problem builders, so the batched
+path is reachable from every call site (``make_operator("stacked_ell",
+"pallas", ...)``) and inherits the registry's discoverability.
+
+Backend notes:
+  jnp    — vmapped reference matvecs (repro.sparse.linalg.stacked_*).
+  pallas — stacked-ELL runs real batch-grid kernels (the grid gains a batch
+           dimension: kernels/batched_ell_spmv.py and the batched fused
+           dual update); stacked-BCSR uses the vmap-over-pallas_call
+           fallback (JAX's batching rule adds the grid dimension).
+
+All builders take BOTH orientations (A, A^T) pre-stacked — the batched path
+keeps the repo's memory-for-gather trade: the backward pass is a gather
+over the transpose stack, never a scatter.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+
+from repro.operators.base import LinearOperator
+from repro.operators.registry import register
+from repro.sparse.formats import (
+    COO, StackedBCSR, StackedELL, coo_bcsr_width, coo_to_bcsr, coo_to_ell,
+    pad_coo, stack_bcsrs, stack_ells, transpose_coo,
+)
+from repro.sparse.linalg import stacked_bcsr_matvec, stacked_ell_matvec
+
+
+@register("stacked_dense", "jnp")
+def stacked_dense_operator(d) -> LinearOperator:
+    """d: (B, m, n) — B independent dense matrices (batched matmul path)."""
+    return LinearOperator(
+        matvec=lambda x: jnp.einsum("bmn,bn->bm", d, x),
+        rmatvec=lambda y: jnp.einsum("bmn,bm->bn", d, y),
+        shape=(int(d.shape[1]), int(d.shape[2])), format="stacked_dense",
+        backend="jnp", nnz=int(d.shape[0] * d.shape[1] * d.shape[2]),
+        stats=dict(batch=int(d.shape[0])))
+
+
+@register("stacked_ell", "jnp")
+def stacked_ell_operator(a: StackedELL, at: StackedELL) -> LinearOperator:
+    """(stacked ELL of A, stacked ELL of A^T), vmapped gather reference."""
+    return LinearOperator(
+        matvec=partial(stacked_ell_matvec, a),
+        rmatvec=partial(stacked_ell_matvec, at),
+        shape=(a.m, at.m), format="stacked_ell", backend="jnp",
+        stats=dict(batch=a.batch, k=a.k, k_t=at.k))
+
+
+@register("stacked_ell", "pallas")
+def stacked_ell_pallas_operator(a: StackedELL, at: StackedELL, prox=None,
+                                reg=0.0, *, block_rows: int = 512,
+                                interpret: bool | None = None
+                                ) -> LinearOperator:
+    """Batch-grid kernels: grid (B, m/block_rows); per-slot fused dual (the
+    (B, 4) coefficient rows carry each slot's own schedule position)."""
+    from repro.kernels.ops import batched_ell_spmv, batched_fused_dual_update
+
+    def fused(yhat, xstar, xbar, b, c0, c1, c2, c3):
+        coefs = jnp.concatenate(
+            [jnp.broadcast_to(jnp.asarray(c, jnp.float32),
+                              (yhat.shape[0], 1)) for c in (c0, c1, c2, c3)],
+            axis=1)
+        return batched_fused_dual_update(a, xstar, xbar, yhat, b, coefs,
+                                         block_rows=block_rows,
+                                         interpret=interpret)
+
+    return LinearOperator(
+        matvec=lambda x: batched_ell_spmv(a, x, block_rows=block_rows,
+                                          interpret=interpret),
+        rmatvec=lambda y: batched_ell_spmv(at, y, block_rows=block_rows,
+                                           interpret=interpret),
+        fused_dual=fused,
+        shape=(a.m, at.m), format="stacked_ell", backend="pallas",
+        stats=dict(batch=a.batch, k=a.k, k_t=at.k))
+
+
+@register("stacked_bcsr", "jnp")
+def stacked_bcsr_operator(a: StackedBCSR, at: StackedBCSR) -> LinearOperator:
+    return LinearOperator(
+        matvec=partial(stacked_bcsr_matvec, a),
+        rmatvec=partial(stacked_bcsr_matvec, at),
+        shape=(a.m, a.n), format="stacked_bcsr", backend="jnp",
+        stats=dict(batch=a.batch, blocks=a.nbr * a.kb, bm=a.bm, bn=a.bn))
+
+
+@register("stacked_bcsr", "pallas")
+def stacked_bcsr_pallas_operator(a: StackedBCSR, at: StackedBCSR, prox=None,
+                                 reg=0.0, *, block_brows: int = 8,
+                                 interpret: bool | None = None
+                                 ) -> LinearOperator:
+    from repro.kernels.ops import batched_bcsr_spmv
+
+    return LinearOperator(
+        matvec=lambda x: batched_bcsr_spmv(a, x, block_brows=block_brows,
+                                           interpret=interpret),
+        rmatvec=lambda y: batched_bcsr_spmv(at, y, block_brows=block_brows,
+                                            interpret=interpret),
+        shape=(a.m, a.n), format="stacked_bcsr", backend="pallas",
+        stats=dict(batch=a.batch, blocks=a.nbr * a.kb, bm=a.bm, bn=a.bn))
+
+
+# --------------------------------------------------------------------------
+# Host-side bucket assembly
+# --------------------------------------------------------------------------
+
+def stack_coos(coos: list[COO], fmt: str, m_pad: int, n_pad: int, *,
+               k: int | None = None, k_t: int | None = None, bm: int = 8,
+               bn: int = 128, kb: int | None = None, kb_t: int | None = None,
+               pad_to: int = 8):
+    """Pad each COO to (m_pad, n_pad), convert to ``fmt``, stack both
+    orientations.  Returns (stacked_A, stacked_AT) ready for
+    ``make_operator("stacked_<fmt>", backend, a, at)``.
+
+    k/k_t (ELL widths) and kb/kb_t (BCSR blocks per block-row) set the
+    bucket-wide padded widths; callers pass the bucket maxima so every
+    problem in the bucket stacks to the same shape.
+    """
+    padded = [pad_coo(c, m_pad, n_pad) for c in coos]
+    if fmt == "ell":
+        k = k or max(1, *(int(jnp.max(jnp.bincount(
+            c.rows, length=m_pad))) for c in padded))
+        k_t = k_t or max(1, *(int(jnp.max(jnp.bincount(
+            c.cols, length=n_pad))) for c in padded))
+        a = stack_ells([coo_to_ell(c, k=k, pad_to=pad_to) for c in padded])
+        at = stack_ells([coo_to_ell(transpose_coo(c), k=k_t, pad_to=pad_to)
+                         for c in padded])
+        return a, at
+    if fmt == "bcsr":
+        # size the bucket widths without materializing tiles, then convert
+        # each problem exactly once at the common widths
+        kb = kb or max(coo_bcsr_width(c, bm=bm, bn=bn) for c in padded)
+        kb_t = kb_t or max(coo_bcsr_width(transpose_coo(c), bm=bm, bn=bn)
+                           for c in padded)
+        fwd = [coo_to_bcsr(c, bm=bm, bn=bn, kb=kb, pad_to=1) for c in padded]
+        bwd = [coo_to_bcsr(transpose_coo(c), bm=bm, bn=bn, kb=kb_t, pad_to=1)
+               for c in padded]
+        return stack_bcsrs(fwd), stack_bcsrs(bwd)
+    raise KeyError(f"unknown stacked format {fmt!r} (ell | bcsr)")

@@ -1,1 +1,11 @@
+# Two continuous-batching engines over fixed slots: Engine serves token
+# decode traffic (models), SolverEngine serves primal-dual solve traffic
+# (bucketed, padded, vmapped A2 with per-slot early exit).
 from repro.serve.engine import Engine, Request
+from repro.serve.solver_engine import (
+    BATCHED_PROX_FAMILIES, BucketKey, SolveRequest, SolverEngine,
+    batched_prox,
+)
+
+__all__ = ["BATCHED_PROX_FAMILIES", "BucketKey", "Engine", "Request",
+           "SolveRequest", "SolverEngine", "batched_prox"]

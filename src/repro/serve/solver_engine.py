@@ -1,0 +1,434 @@
+"""Batched solver serving engine: many concurrent primal-dual problems.
+
+The solver analogue of the token-serving engine next door (serve/engine.py):
+where that one continuous-batches *sequences* over decode slots, this one
+continuous-batches *optimization problems* over solve slots.
+
+Serving traffic is many independent ``min f(x) s.t. Ax = b`` requests with
+heterogeneous shapes, sparsity and regularizers.  Solving them one at a
+time pays the per-call fixed costs — dispatch, trace/compile per shape,
+pipeline prologue — once per problem per iteration; the whole point of the
+paper's A2 schedule (2 sync points per iteration) is that everything else
+batches.  So:
+
+  1. **Bucket**: requests are grouped by (padded shape, storage format,
+     prox family).  Padded dims round up to powers of two, so a handful of
+     buckets covers a ragged workload, and every problem in a bucket
+     stacks to identical arrays.
+  2. **Pad + stack**: each bucket owns fixed slot-batched operands — a
+     ``StackedELL``/``StackedBCSR`` pair (both orientations), b, lg,
+     gamma0, reg, tol — with a leading slot axis.  Padding is exact by
+     construction (zero rows/cols with b=0 and a zero prox center do not
+     move), so a padded slot reproduces the standalone solve.
+  3. **Step**: one jit'd masked batched A2 step per bucket
+     (core.solver.batched_step) advances every active slot at once;
+     schedule coefficients are per-slot because each problem sits at its
+     own iteration k with its own (lg, gamma0).
+  4. **Early-exit per slot**: the ``solve_tol`` stopping criterion
+     (relative feasibility < tol, checked every ``check_every``
+     iterations) is evaluated per slot; finished slots are mask-frozen —
+     their iterates stop moving — harvested, and freed.
+  5. **Continuous admission**: freed slots take queued requests
+     immediately; a new problem's init splices into the running batch
+     without disturbing neighbours.
+
+Throughput, not latency: a single request finishes no faster than a
+standalone ``solve_tol`` (slightly slower — it rides along until its
+check boundary), but requests/sec scales with slot count
+(``benchmarks/run.py solver_serving`` measures the ratio).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prox import ProxOp, get_prox
+from repro.core.solver import (
+    PDState, batched_feasibility, batched_init, batched_step, mask_state,
+)
+from repro.sparse.formats import (
+    COO, coo_bcsr_width, coo_to_bcsr, coo_to_ell, pad_coo, transpose_coo,
+)
+
+#: prox families the batched path supports: elementwise, parameterized by at
+#: most a per-slot ``reg`` (group proxes would couple coordinates across the
+#: slot axis after stacking and are not served).
+BATCHED_PROX_FAMILIES = ("l1", "sq_l2", "elastic_net", "zero", "nonneg",
+                         "dummy")
+
+
+def batched_prox(name: str, reg: jax.Array) -> ProxOp:
+    """Family ``name`` with per-slot regularization reg (S,) -> ProxOp whose
+    closures broadcast (S, 1) against (S, n) iterates."""
+    if name not in BATCHED_PROX_FAMILIES:
+        raise KeyError(f"prox family {name!r} not servable in a batch; "
+                       f"supported: {BATCHED_PROX_FAMILIES}")
+    if name in ("l1", "sq_l2", "elastic_net"):
+        return get_prox(name, reg=reg[:, None])
+    return get_prox(name)
+
+
+def _next_pow2(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One primal-dual solve: min f(x) s.t. Ax = b over the COO matrix A.
+
+    ``lg`` (= sum_i ||A_i||^2, the paper's init step 1) is computed at
+    construction when None.  Results land in x / iterations / feasibility /
+    done.
+    """
+
+    uid: int
+    coo: COO
+    b: Any                               # (m,)
+    prox: str = "l1"
+    reg: float = 0.1
+    lg: float | None = None
+    gamma0: float = 100.0
+    tol: float = 1e-3
+    max_iterations: int = 10_000
+    # filled by the engine on completion
+    x: np.ndarray | None = None          # (n,) final xbar
+    iterations: int = 0
+    feasibility: float = float("inf")
+    done: bool = False
+
+    def __post_init__(self):
+        if self.lg is None:    # host-side: no device dispatch per request
+            vals = np.asarray(self.coo.vals)
+            self.lg = float(np.sum(np.square(vals)))
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Requests sharing a key share slot buffers and one compiled step."""
+
+    m_pad: int
+    n_pad: int
+    width: int          # ELL k / BCSR kb of A, padded bucket-wide
+    width_t: int        # same for A^T
+    fmt: str
+    prox: str
+
+
+@dataclasses.dataclass
+class _Bucket:
+    """Slot-batched operand buffers for one (shape, fmt, prox) bucket.
+
+    Operand masters live host-side in numpy and are mutated in place at
+    admission (an eager device scatter per slot write costs milliseconds;
+    a numpy slice write is free).  ``dev`` caches the device-resident
+    stacked pytrees and is rebuilt — one transfer per array — only when an
+    admission dirtied the masters.  Solver state stays device-resident.
+    """
+
+    key: BucketKey
+    a_vals: np.ndarray        # (S, ...) stacked A values
+    a_idx: np.ndarray         # ELL cols / BCSR bcols of A
+    at_vals: np.ndarray       # same for A^T
+    at_idx: np.ndarray
+    b: np.ndarray             # (S, m_pad)
+    lg: np.ndarray            # (S,)
+    gamma0: np.ndarray        # (S,)
+    reg: np.ndarray           # (S,)
+    tol: np.ndarray           # (S,)
+    maxit: np.ndarray         # (S,) int32
+    state: PDState            # batched, device
+    active: np.ndarray        # (S,) bool occupancy mask
+    dirty: bool = True
+    dev: tuple | None = None
+    requests: dict[int, SolveRequest] = dataclasses.field(default_factory=dict)
+
+
+class SolverEngine:
+    """Continuous-batching server for primal-dual solve requests.
+
+    slots:   problems resident per bucket (the vmapped batch width).
+    fmt:     "ell" (gather kernels) or "bcsr" (MXU tile kernels).
+    backend: "jnp" (vmapped reference) or "pallas" (batch-grid kernels).
+    check_every: iterations between per-slot feasibility checks — the
+             early-exit granularity (matches solve_tol's check_every).
+    """
+
+    def __init__(self, slots: int = 8, fmt: str = "ell",
+                 backend: str = "jnp", algorithm: str = "a2",
+                 check_every: int = 16, min_rows: int = 64,
+                 min_cols: int = 16, interpret: bool | None = None):
+        if fmt not in ("ell", "bcsr"):
+            raise ValueError(f"fmt must be ell|bcsr, got {fmt!r}")
+        self.slots = slots
+        self.fmt = fmt
+        self.backend = backend
+        self.algorithm = algorithm
+        self.check_every = check_every
+        self.min_rows = min_rows
+        self.min_cols = min_cols
+        self.interpret = interpret
+        self.queues: dict[BucketKey, deque[SolveRequest]] = {}
+        self.buckets: dict[BucketKey, _Bucket] = {}
+        self.completed: list[SolveRequest] = []
+        self.stats = {"steps": 0, "iterations": 0, "admitted": 0}
+        # per-instance jit closures: the compile cache lives on the engine
+        # (a static `self` argname would pin every engine — and its bucket
+        # masters — in jit's global cache for the process lifetime)
+        self._splice_init = jax.jit(self._splice_init_impl,
+                                    static_argnames=("key",))
+        self._advance = jax.jit(self._advance_impl, static_argnames=("key",))
+
+    # -- bucketing policy --------------------------------------------------
+
+    def bucket_key(self, req: SolveRequest) -> BucketKey:
+        """(shape-bucket, format, prox family): dims round up to powers of
+        two (floors min_rows/min_cols), ELL/BCSR widths to powers of two,
+        so ragged traffic collapses onto few compiled step functions."""
+        coo = req.coo
+        m_pad = max(self.min_rows, _next_pow2(coo.m))
+        n_pad = max(self.min_cols, _next_pow2(coo.n))
+        if self.fmt == "ell":
+            rows = np.asarray(coo.rows)
+            cols = np.asarray(coo.cols)
+            w = int(np.bincount(rows, minlength=coo.m).max()) if rows.size else 1
+            wt = int(np.bincount(cols, minlength=coo.n).max()) if cols.size else 1
+            w, wt = _next_pow2(max(8, w)), _next_pow2(max(8, wt))
+        else:
+            c = pad_coo(coo, m_pad, n_pad)
+            w = _next_pow2(coo_bcsr_width(c, bm=8, bn=min(128, n_pad)))
+            wt = _next_pow2(coo_bcsr_width(transpose_coo(c), bm=8,
+                                           bn=min(128, m_pad)))
+        return BucketKey(m_pad=m_pad, n_pad=n_pad, width=w, width_t=wt,
+                         fmt=self.fmt, prox=req.prox)
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, req: SolveRequest) -> BucketKey:
+        if req.prox not in BATCHED_PROX_FAMILIES:
+            raise KeyError(f"prox family {req.prox!r} not servable; "
+                           f"supported: {BATCHED_PROX_FAMILIES}")
+        key = self.bucket_key(req)
+        self.queues.setdefault(key, deque()).append(req)
+        return key
+
+    def _new_bucket(self, key: BucketKey) -> _Bucket:
+        s, m, n = self.slots, key.m_pad, key.n_pad
+        if key.fmt == "ell":
+            a_shape = (s, m, key.width)
+            at_shape = (s, n, key.width_t)
+        else:
+            bm, bn = 8, min(128, n)
+            bnt = min(128, m)
+            a_shape = (s, -(-m // bm), key.width, bm, bn)
+            at_shape = (s, -(-n // bm), key.width_t, bm, bnt)
+        zeros_x = jnp.zeros((s, n), jnp.float32)
+        zeros_y = jnp.zeros((s, m), jnp.float32)
+        state = PDState(xbar=zeros_x, xstar=zeros_x, yhat=zeros_y,
+                        gamma=jnp.ones((s,), jnp.float32),
+                        k=jnp.zeros((s,), jnp.int32))
+        return _Bucket(
+            key=key,
+            a_vals=np.zeros(a_shape, np.float32),
+            a_idx=np.zeros(a_shape[:3], np.int32),
+            at_vals=np.zeros(at_shape, np.float32),
+            at_idx=np.zeros(at_shape[:3], np.int32),
+            b=np.zeros((s, m), np.float32),
+            lg=np.ones((s,), np.float32),
+            gamma0=np.ones((s,), np.float32),
+            reg=np.zeros((s,), np.float32),
+            tol=np.full((s,), np.inf, np.float32),
+            maxit=np.zeros((s,), np.int32),
+            state=state, active=np.zeros((s,), bool))
+
+    def _convert(self, key: BucketKey, coo: COO):
+        """Host-side: pad to bucket dims, build both orientations at the
+        bucket's fixed widths (numpy per-slot arrays, ready to splice)."""
+        c = pad_coo(coo, key.m_pad, key.n_pad)
+        if key.fmt == "ell":
+            fa = coo_to_ell(c, k=key.width)
+            fat = coo_to_ell(transpose_coo(c), k=key.width_t)
+            return (fa.vals, fa.cols), (fat.vals, fat.cols)
+        bm, bn = 8, min(128, key.n_pad)
+        bnt = min(128, key.m_pad)
+        fa = coo_to_bcsr(c, bm=bm, bn=bn, kb=key.width)
+        fat = coo_to_bcsr(transpose_coo(c), bm=bm, bn=bnt, kb=key.width_t)
+        return (fa.vals, fa.bcols), (fat.vals, fat.bcols)
+
+    def _admit(self, key: BucketKey, bucket: _Bucket) -> np.ndarray:
+        queue = self.queues.get(key)
+        new = np.zeros((self.slots,), bool)
+        if not queue:
+            return new
+        for slot in range(self.slots):
+            if not queue:
+                break
+            if bucket.active[slot]:
+                continue
+            req = queue.popleft()
+            (av, ai), (atv, ati) = self._convert(key, req.coo)
+            bucket.a_vals[slot] = np.asarray(av)
+            bucket.a_idx[slot] = np.asarray(ai)
+            bucket.at_vals[slot] = np.asarray(atv)
+            bucket.at_idx[slot] = np.asarray(ati)
+            bucket.b[slot, :req.coo.m] = np.asarray(req.b, np.float32)
+            bucket.b[slot, req.coo.m:] = 0.0
+            bucket.lg[slot] = req.lg
+            bucket.gamma0[slot] = req.gamma0
+            bucket.reg[slot] = req.reg
+            bucket.tol[slot] = req.tol
+            bucket.maxit[slot] = req.max_iterations
+            bucket.requests[slot] = req
+            bucket.active[slot] = True
+            bucket.dirty = True
+            new[slot] = True
+            self.stats["admitted"] += 1
+        return new
+
+    def _device_operands(self, bucket: _Bucket) -> tuple:
+        """Device-resident (a, at, b, lg, gamma0, reg, tol, maxit); one
+        transfer per array, only after admissions dirtied the masters."""
+        if bucket.dirty or bucket.dev is None:
+            key = bucket.key
+            if key.fmt == "ell":
+                from repro.sparse.formats import StackedELL
+                a = StackedELL(vals=jnp.asarray(bucket.a_vals),
+                               cols=jnp.asarray(bucket.a_idx), n=key.n_pad)
+                at = StackedELL(vals=jnp.asarray(bucket.at_vals),
+                                cols=jnp.asarray(bucket.at_idx), n=key.m_pad)
+            else:
+                from repro.sparse.formats import StackedBCSR
+                a = StackedBCSR(vals=jnp.asarray(bucket.a_vals),
+                                bcols=jnp.asarray(bucket.a_idx),
+                                m=key.m_pad, n=key.n_pad)
+                at = StackedBCSR(vals=jnp.asarray(bucket.at_vals),
+                                 bcols=jnp.asarray(bucket.at_idx),
+                                 m=key.n_pad, n=key.m_pad)
+            bucket.dev = (a, at, jnp.asarray(bucket.b),
+                          jnp.asarray(bucket.lg), jnp.asarray(bucket.gamma0),
+                          jnp.asarray(bucket.reg), jnp.asarray(bucket.tol),
+                          jnp.asarray(bucket.maxit))
+            bucket.dirty = False
+        return bucket.dev
+
+    # -- the compiled per-bucket bodies ------------------------------------
+
+    def _operator(self, key: BucketKey, a, at):
+        from repro.operators import make_operator
+        fmt = "stacked_ell" if key.fmt == "ell" else "stacked_bcsr"
+        if self.backend == "pallas":
+            return make_operator(fmt, "pallas", a, at,
+                                 interpret=self.interpret)
+        return make_operator(fmt, self.backend, a, at)
+
+    def _splice_init_impl(self, key, a, at, b, lg, gamma0, reg, state,
+                          new_mask, active, tol, maxit):
+        """Init only the freshly admitted slots (others keep their state),
+        then re-check every active slot — a request that is already feasible
+        at k=0 must finish with 0 iterations, like solve_tol."""
+        ops = self._operator(key, a, at).solver_ops()
+        prox = batched_prox(key.prox, reg)
+        fresh = batched_init(ops, prox, b, lg, gamma0, self.algorithm)
+        state = mask_state(new_mask, fresh, state)
+        feas = batched_feasibility(ops, b, state)
+        still = active & (feas >= tol) & (state.k < maxit)
+        return state, feas, still
+
+    def _advance_impl(self, key, a, at, b, lg, gamma0, reg, state, active,
+                      tol, maxit):
+        """check_every masked steps + per-slot feasibility verdicts."""
+        ops = self._operator(key, a, at).solver_ops()
+        prox = batched_prox(key.prox, reg)
+
+        def one(_, st):
+            return batched_step(ops, prox, b, lg, gamma0, st, self.algorithm,
+                                mask=active)
+
+        state = jax.lax.fori_loop(0, self.check_every, one, state)
+        feas = batched_feasibility(ops, b, state)
+        still = active & (feas >= tol) & (state.k < maxit)
+        return state, feas, still
+
+    # -- the serve loop ----------------------------------------------------
+
+    def _harvest(self, bucket: _Bucket, feas, still) -> None:
+        """Retire slots whose verdict flipped: copy out iterates, free."""
+        still_h = np.asarray(still)
+        finished = bucket.active & ~still_h
+        if finished.any():
+            feas_h = np.asarray(feas)
+            ks = np.asarray(bucket.state.k)
+            xbar = np.asarray(bucket.state.xbar)
+            for slot in np.nonzero(finished)[0]:
+                req = bucket.requests.pop(int(slot))
+                req.x = xbar[slot, :req.coo.n].copy()
+                req.iterations = int(ks[slot])
+                req.feasibility = float(feas_h[slot])
+                req.done = True
+                self.completed.append(req)
+            bucket.active = bucket.active & still_h
+
+    def step(self) -> bool:
+        """One engine tick: admit -> splice inits -> advance -> harvest.
+        Returns False when every bucket is drained (queues empty, no active
+        slots)."""
+        alive = False
+        # every bucket's key stays in self.queues (entries are never
+        # deleted), so iterating the queues covers all buckets
+        for key in list(self.queues):
+            bucket = self.buckets.get(key)
+            if bucket is None:
+                if not self.queues.get(key):
+                    continue
+                bucket = self.buckets[key] = self._new_bucket(key)
+            new = self._admit(key, bucket)
+            if new.any():
+                a, at, b, lg, gamma0, reg, tol, maxit = \
+                    self._device_operands(bucket)
+                bucket.state, feas, still = self._splice_init(
+                    key, a, at, b, lg, gamma0, reg, bucket.state,
+                    jnp.asarray(new), jnp.asarray(bucket.active), tol, maxit)
+                self._harvest(bucket, feas, still)
+            if not bucket.active.any():
+                continue
+            alive = True
+            a, at, b, lg, gamma0, reg, tol, maxit = \
+                self._device_operands(bucket)
+            bucket.state, feas, still = self._advance(
+                key, a, at, b, lg, gamma0, reg, bucket.state,
+                jnp.asarray(bucket.active), tol, maxit)
+            self.stats["steps"] += 1
+            self.stats["iterations"] += self.check_every * int(
+                bucket.active.sum())
+            self._harvest(bucket, feas, still)
+        pending = any(self.queues.values())
+        return alive or pending
+
+    def run(self) -> list[SolveRequest]:
+        """Drain all queues; returns the completed requests (also recorded
+        on each request in place)."""
+        while self.step():
+            pass
+        done, self.completed = self.completed, []
+        return done
+
+    def evict_idle_buckets(self) -> int:
+        """Free operand masters + device caches of buckets with no active
+        slots and no queued requests; returns how many were evicted.
+
+        Buckets (and their compiled step functions, which stay in this
+        engine's jit caches) are otherwise retained forever as warm state —
+        right for steady traffic, unbounded for a long-lived engine seeing
+        ever-new shapes.  Call this between traffic waves to bound memory;
+        the next request for an evicted key pays one bucket rebuild and, if
+        its shapes were never seen, one compile."""
+        idle = [k for k, bkt in self.buckets.items()
+                if not bkt.active.any() and not self.queues.get(k)]
+        for k in idle:
+            del self.buckets[k]
+            self.queues.pop(k, None)
+        return len(idle)

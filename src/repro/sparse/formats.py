@@ -18,6 +18,12 @@ aligned tiles. We provide:
                      spmv contracts tiles with ``dot_general`` on the MXU
                      instead of VPU gathers — the format of choice when
                      nonzeros cluster (see repro.operators.select).
+  * ``StackedELL`` / ``StackedBCSR`` — B independent same-shape matrices with
+                     a leading batch axis (``vals (B, m, k)`` etc.), the
+                     storage of the batched solver serving engine
+                     (repro.serve.solver_engine): problems bucketed to a
+                     common padded shape stack into one array so a single
+                     vmapped/batch-grid kernel serves the whole bucket.
 
 All formats are registered pytrees: they pass through jit/shard_map/lower and
 can be built from ``jax.ShapeDtypeStruct`` leaves for allocation-free dry-runs.
@@ -135,6 +141,97 @@ class BCSR:
         return self.nbr * self.kb
 
 
+@partial(jax.tree_util.register_dataclass, data_fields=["vals", "cols"],
+         meta_fields=["n"])
+@dataclasses.dataclass
+class StackedELL:
+    """B independent row-ELL matrices of identical padded shape.
+
+    vals/cols: (B, m, k). All matrices share the logical column count ``n``
+    (smaller problems are zero-padded: extra entries have col=0, val=0 and
+    contribute nothing, exactly like single-ELL padding).
+    """
+
+    vals: jax.Array
+    cols: jax.Array
+    n: int
+
+    @property
+    def batch(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def k(self) -> int:
+        return self.vals.shape[2]
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["vals", "bcols"],
+         meta_fields=["m", "n"])
+@dataclasses.dataclass
+class StackedBCSR:
+    """B independent tiled-BCSR matrices of identical padded shape.
+
+    vals: (B, nbr, kb, bm, bn);  bcols: (B, nbr, kb).
+    """
+
+    vals: jax.Array
+    bcols: jax.Array
+    m: int
+    n: int
+
+    @property
+    def batch(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def nbr(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def kb(self) -> int:
+        return self.vals.shape[2]
+
+    @property
+    def bm(self) -> int:
+        return self.vals.shape[3]
+
+    @property
+    def bn(self) -> int:
+        return self.vals.shape[4]
+
+    @property
+    def nbc(self) -> int:
+        return -(-self.n // self.bn)
+
+
+def stack_ells(ells: list[ELL], n: int | None = None) -> StackedELL:
+    """Stack same-shape ELL matrices along a new leading batch axis."""
+    shapes = {tuple(e.vals.shape) for e in ells}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack ragged ELL shapes {sorted(shapes)}; "
+                         "pad to a common (m, k) first")
+    n = n if n is not None else max(e.n for e in ells)
+    return StackedELL(vals=jnp.stack([e.vals for e in ells]),
+                      cols=jnp.stack([e.cols for e in ells]), n=n)
+
+
+def stack_bcsrs(bcsrs: list[BCSR], m: int | None = None,
+                n: int | None = None) -> StackedBCSR:
+    """Stack same-shape BCSR matrices along a new leading batch axis."""
+    shapes = {tuple(b.vals.shape) for b in bcsrs}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack ragged BCSR shapes {sorted(shapes)}; "
+                         "pad to a common (nbr, kb, bm, bn) first")
+    m = m if m is not None else max(b.m for b in bcsrs)
+    n = n if n is not None else max(b.n for b in bcsrs)
+    return StackedBCSR(vals=jnp.stack([b.vals for b in bcsrs]),
+                       bcols=jnp.stack([b.bcols for b in bcsrs]), m=m, n=n)
+
+
 # --------------------------------------------------------------------------
 # Host-side conversions (numpy; construction path, not jit code)
 # --------------------------------------------------------------------------
@@ -191,6 +288,18 @@ def transpose_coo(a: COO) -> COO:
     return COO(rows=a.cols, cols=a.rows, vals=a.vals, m=a.n, n=a.m)
 
 
+def pad_coo(a: COO, m: int, n: int) -> COO:
+    """Embed A in the top-left of an (m, n) zero matrix (bucket padding).
+
+    Padded rows are all-zero (their dual coordinate stays 0 when b=0 there);
+    padded columns are all-zero (their primal coordinate stays at the prox
+    center) — so padding does not perturb the solver iterates.
+    """
+    if m < a.m or n < a.n:
+        raise ValueError(f"pad target ({m}, {n}) smaller than ({a.m}, {a.n})")
+    return COO(rows=a.rows, cols=a.cols, vals=a.vals, m=m, n=n)
+
+
 def coo_to_banded(a: COO, band_size: int, kb: int | None = None,
                   pad_to: int = 1) -> BandedELL:
     """Column-major banded ELL: bucket nonzeros by (row // band_size), pad the
@@ -220,6 +329,21 @@ def coo_to_banded(a: COO, band_size: int, kb: int | None = None,
         vals=jnp.asarray(ev.reshape(num_bands, a.n, kb)),
         rows=jnp.asarray(er.reshape(num_bands, a.n, kb)),
         m=a.m, band_size=band_size)
+
+
+def coo_bcsr_width(a: COO, bm: int = 8, bn: int = 128) -> int:
+    """The natural kb ``coo_to_bcsr(a, bm, bn)`` would produce — max count
+    of nonzero (bm, bn) tiles over block-rows — without materializing any
+    tiles.  Used for bucket sizing before the real conversion."""
+    rows = np.asarray(a.rows)
+    cols = np.asarray(a.cols)
+    if rows.size == 0:
+        return 1
+    nbr = max(1, -(-a.m // bm))
+    nbc = max(1, -(-a.n // bn))
+    uniq = np.unique((rows // bm).astype(np.int64) * nbc + cols // bn)
+    counts = np.bincount((uniq // nbc).astype(np.int64), minlength=nbr)
+    return max(1, int(counts.max()))
 
 
 def coo_to_bcsr(a: COO, bm: int = 8, bn: int = 128, kb: int | None = None,

@@ -147,6 +147,48 @@ def test_solve_tol_stops_early(problem):
     assert feas / float(jnp.linalg.norm(b)) < 3.5e-2
 
 
+def test_solve_tol_hits_tolerance(problem):
+    """The returned iterate satisfies the RELATIVE criterion the loop
+    tests: ||A xbar - b|| / max(1, ||b||) < tol."""
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    ops = dense_ops(jnp.asarray(d, jnp.float32))
+    tol = 5e-2
+    s = solve_tol(ops, prox, b, lg, 1000.0, max_iterations=4000, tol=tol,
+                  check_every=8)
+    rel = float(jnp.linalg.norm(ops.matvec(s.xbar) - b)
+                / jnp.maximum(jnp.linalg.norm(b), 1.0))
+    assert rel < tol
+    assert int(s.k) > 0
+
+
+def test_solve_tol_respects_max_iterations(problem):
+    """An unreachable tolerance stops exactly at the max_iterations
+    boundary (k lands on the check_every grid)."""
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    ops = dense_ops(jnp.asarray(d, jnp.float32))
+    s = solve_tol(ops, prox, b, lg, 1000.0, max_iterations=40, tol=1e-12,
+                  check_every=8)
+    assert int(s.k) == 40
+
+
+def test_solve_tol_check_every_granularity(problem):
+    """k is a multiple of check_every, and coarser checking overshoots the
+    fine-grained stopping point by less than one check interval."""
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    ops = dense_ops(jnp.asarray(d, jnp.float32))
+    ks = {}
+    for ce in (1, 4, 16):
+        s = solve_tol(ops, prox, b, lg, 1000.0, max_iterations=4000,
+                      tol=3e-2, check_every=ce)
+        ks[ce] = int(s.k)
+        assert ks[ce] % ce == 0
+    assert ks[1] <= ks[4] <= ks[16]
+    assert ks[16] - ks[1] < 16
+
+
 def test_certificates_match_reference(problem):
     coo, d, b, x_true, lg = problem
     prox = get_prox("l1", reg=CFG.reg)

@@ -1,0 +1,262 @@
+"""Batched solver serving: stacked operators == single-problem oracles;
+engine results == standalone solve_tol on ragged shape mixes; masked
+early-exit semantics; bucketing policy."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import PaperProblemConfig
+from repro.core.prox import get_prox
+from repro.core.solver import (
+    batched_feasibility, batched_init, batched_solve, batched_solve_tol,
+    batched_step, dense_ops, solve, solve_tol,
+)
+from repro.operators import make_operator, stack_coos
+from repro.serve import BATCHED_PROX_FAMILIES, SolveRequest, SolverEngine
+from repro.sparse import coo_to_dense, make_lasso, stacked_ell_matvec
+
+M_PAD, N_PAD = 96, 24
+
+
+def _mk_problem(i, m, n, row_nnz=6):
+    cfg = PaperProblemConfig(name="t", m=m, n=n, nnz=m * row_nnz, reg=0.1)
+    return make_lasso(cfg, seed=i)
+
+
+@pytest.fixture(scope="module")
+def ragged():
+    """Three ragged problems padded into one (M_PAD, N_PAD) bucket."""
+    shapes = [(96, 24), (64, 16), (80, 20)]
+    probs = [_mk_problem(i, m, n) for i, (m, n) in enumerate(shapes)]
+    coos = [p[0] for p in probs]
+    bs = [p[1] for p in probs]
+    bmat = jnp.stack([jnp.pad(b, (0, M_PAD - b.shape[0])) for b in bs])
+    lg = jnp.array([float(jnp.sum(c.vals * c.vals)) for c in coos])
+    return coos, bs, bmat, lg
+
+
+def test_stacked_operators_match_dense_oracle(ragged):
+    coos, bs, bmat, lg = ragged
+    x = jnp.stack([jnp.asarray(np.random.default_rng(0).standard_normal(
+        (N_PAD,)), jnp.float32) for _ in coos])
+    y = jnp.stack([jnp.asarray(np.random.default_rng(1).standard_normal(
+        (M_PAD,)), jnp.float32) for _ in coos])
+    a, at = stack_coos(coos, "ell", M_PAD, N_PAD, pad_to=8)
+    ab, atb = stack_coos(coos, "bcsr", M_PAD, N_PAD, bm=8, bn=8)
+    dense = [np.zeros((M_PAD, N_PAD), np.float32) for _ in coos]
+    for d, c in zip(dense, coos):
+        d[:c.m, :c.n] = coo_to_dense(c)
+    for fmt, backend, args in [("stacked_ell", "jnp", (a, at)),
+                               ("stacked_ell", "pallas", (a, at)),
+                               ("stacked_bcsr", "jnp", (ab, atb)),
+                               ("stacked_bcsr", "pallas", (ab, atb))]:
+        op = make_operator(fmt, backend, *args)
+        fwd = np.asarray(op.matvec(x))
+        bwd = np.asarray(op.rmatvec(y))
+        for i, d in enumerate(dense):
+            np.testing.assert_allclose(fwd[i], d @ np.asarray(x[i]),
+                                       atol=1e-4, err_msg=f"{fmt}/{backend}")
+            np.testing.assert_allclose(bwd[i], d.T @ np.asarray(y[i]),
+                                       atol=1e-4, err_msg=f"{fmt}/{backend}")
+
+
+def test_batched_fused_dual_matches_composed(ragged):
+    """The batch-grid fused kernel (per-slot coefficient rows) == the
+    composed c0*yhat + A(c1*xstar + c2*xbar) - c3*b reference."""
+    coos, bs, bmat, lg = ragged
+    a, at = stack_coos(coos, "ell", M_PAD, N_PAD, pad_to=8)
+    op = make_operator("stacked_ell", "pallas", a, at)
+    rng = np.random.default_rng(2)
+    B = len(coos)
+    xstar = jnp.asarray(rng.standard_normal((B, N_PAD)), jnp.float32)
+    xbar = jnp.asarray(rng.standard_normal((B, N_PAD)), jnp.float32)
+    yhat = jnp.asarray(rng.standard_normal((B, M_PAD)), jnp.float32)
+    cs = [jnp.asarray(rng.standard_normal((B, 1)), jnp.float32)
+          for _ in range(4)]
+    got = op.fused_dual(yhat, xstar, xbar, bmat, *cs)
+    want = (cs[0] * yhat + stacked_ell_matvec(a, cs[1] * xstar + cs[2] * xbar)
+            - cs[3] * bmat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("algorithm", ["a1", "a2"])
+def test_batched_solve_matches_sequential(ragged, algorithm):
+    """Fixed-iteration batched iterates == per-problem solve within 1e-5
+    on the ragged mix (padding is exact, slots are independent)."""
+    coos, bs, bmat, lg = ragged
+    prox = get_prox("l1", reg=0.1)
+    a, at = stack_coos(coos, "ell", M_PAD, N_PAD, pad_to=8)
+    ops = make_operator("stacked_ell", "jnp", a, at).solver_ops()
+    st = batched_solve(ops, prox, bmat, lg, jnp.full((len(coos),), 100.0),
+                       iterations=60, algorithm=algorithm)
+    for i, (c, b) in enumerate(zip(coos, bs)):
+        d = jnp.asarray(coo_to_dense(c))
+        s, _ = solve(dense_ops(d), prox, b, float(lg[i]), 100.0,
+                     iterations=60, algorithm=algorithm)
+        np.testing.assert_allclose(np.asarray(st.xbar[i, :c.n]),
+                                   np.asarray(s.xbar), atol=1e-5)
+        if c.n < N_PAD:     # padded coordinates never move off zero
+            assert float(jnp.max(jnp.abs(st.xbar[i, c.n:]))) == 0.0
+
+
+def test_batched_solve_tol_matches_sequential(ragged):
+    """Per-slot early exit stops at the same iteration as solve_tol and
+    returns the same iterates."""
+    coos, bs, bmat, lg = ragged
+    prox = get_prox("l1", reg=0.1)
+    a, at = stack_coos(coos, "ell", M_PAD, N_PAD, pad_to=8)
+    ops = make_operator("stacked_ell", "jnp", a, at).solver_ops()
+    st = batched_solve_tol(ops, prox, bmat, lg,
+                           jnp.full((len(coos),), 1000.0),
+                           max_iterations=4000, tol=3e-2, check_every=16)
+    for i, (c, b) in enumerate(zip(coos, bs)):
+        d = jnp.asarray(coo_to_dense(c))
+        s = solve_tol(dense_ops(d), prox, b, float(lg[i]), 1000.0,
+                      max_iterations=4000, tol=3e-2, check_every=16)
+        assert int(st.k[i]) == int(s.k)
+        np.testing.assert_allclose(np.asarray(st.xbar[i, :c.n]),
+                                   np.asarray(s.xbar), atol=1e-5)
+
+
+def test_masked_step_freezes_slots(ragged):
+    """A frozen slot's state is bitwise unchanged by further steps."""
+    coos, bs, bmat, lg = ragged
+    prox = get_prox("l1", reg=0.1)
+    a, at = stack_coos(coos, "ell", M_PAD, N_PAD, pad_to=8)
+    ops = make_operator("stacked_ell", "jnp", a, at).solver_ops()
+    g0 = jnp.full((len(coos),), 100.0)
+    st = batched_init(ops, prox, bmat, lg, g0)
+    mask = jnp.array([True, False, True])
+    st2 = batched_step(ops, prox, bmat, lg, g0, st, mask=mask)
+    np.testing.assert_array_equal(np.asarray(st2.xbar[1]),
+                                  np.asarray(st.xbar[1]))
+    assert int(st2.k[1]) == 0 and int(st2.k[0]) == 1
+    assert float(jnp.max(jnp.abs(st2.xbar[0] - st.xbar[0]))) > 0.0
+
+
+def _mk_requests(num, shapes, **kw):
+    reqs = []
+    for i in range(num):
+        m, n = shapes[i % len(shapes)]
+        coo, b, _ = _mk_problem(100 + i, m, n)
+        reqs.append(SolveRequest(uid=i, coo=coo, b=b, gamma0=1000.0,
+                                 tol=3e-2, max_iterations=4000, **kw))
+    return reqs
+
+
+@pytest.mark.parametrize("fmt,backend", [("ell", "jnp"), ("ell", "pallas"),
+                                         ("bcsr", "jnp")])
+def test_engine_matches_solve_tol(fmt, backend):
+    """More ragged requests than slots (continuous admission): every
+    request stops at the standalone solve_tol iteration with iterates
+    within 1e-5."""
+    reqs = _mk_requests(6, [(96, 24), (64, 16), (80, 20)])
+    eng = SolverEngine(slots=2, fmt=fmt, backend=backend, check_every=16)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == len(reqs) and all(r.done for r in done)
+    for r in done:
+        d = jnp.asarray(coo_to_dense(r.coo))
+        s = solve_tol(dense_ops(d), get_prox(r.prox, reg=r.reg), r.b, r.lg,
+                      r.gamma0, max_iterations=r.max_iterations, tol=r.tol,
+                      check_every=16)
+        assert r.iterations == int(s.k), (fmt, backend, r.uid)
+        np.testing.assert_allclose(r.x, np.asarray(s.xbar), atol=1e-5)
+        assert r.feasibility < r.tol
+
+
+def test_engine_respects_max_iterations():
+    """An unreachable tolerance stops at max_iterations (on the
+    check_every grid, like solve_tol)."""
+    reqs = _mk_requests(2, [(64, 16)], )
+    for r in reqs:
+        r.tol = 1e-12
+        r.max_iterations = 32
+    eng = SolverEngine(slots=2, check_every=16)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert all(r.iterations == 32 for r in done)
+    assert all(not r.feasibility < 1e-12 for r in done)
+
+
+def test_engine_bucketing_policy():
+    """Nearby shapes collapse into one bucket; prox family splits it."""
+    eng = SolverEngine(slots=2)
+    r1 = _mk_requests(1, [(90, 20)])[0]
+    r2 = _mk_requests(1, [(70, 17)])[0]
+    r3 = _mk_requests(1, [(90, 20)], prox="sq_l2", reg=0.5)[0]
+    k1, k2, k3 = eng.submit(r1), eng.submit(r2), eng.submit(r3)
+    assert k1.m_pad == k2.m_pad == 128 and k1.n_pad == k2.n_pad == 32
+    assert (k1.m_pad, k1.n_pad) == (k3.m_pad, k3.n_pad) and k1 != k3
+    done = eng.run()
+    assert len(done) == 3 and len(eng.buckets) >= 2
+
+
+def test_engine_mixed_prox_families():
+    """l1 and sq_l2 tenants in one stream both converge to their own
+    standalone results."""
+    reqs = (_mk_requests(2, [(64, 16)])
+            + _mk_requests(2, [(64, 16)], prox="sq_l2", reg=0.5))
+    for i, r in enumerate(reqs):
+        r.uid = i
+    eng = SolverEngine(slots=4, check_every=16)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 4
+    for r in done:
+        d = jnp.asarray(coo_to_dense(r.coo))
+        s = solve_tol(dense_ops(d), get_prox(r.prox, reg=r.reg), r.b, r.lg,
+                      r.gamma0, max_iterations=r.max_iterations, tol=r.tol,
+                      check_every=16)
+        assert r.iterations == int(s.k)
+        np.testing.assert_allclose(r.x, np.asarray(s.xbar), atol=1e-5)
+
+
+def test_engine_evicts_idle_buckets():
+    """Draining then evicting frees the bucket; resubmitting the same
+    shape rebuilds it and still matches the standalone solve."""
+    eng = SolverEngine(slots=2, check_every=16)
+    for r in _mk_requests(2, [(64, 16)]):
+        eng.submit(r)
+    eng.run()
+    assert len(eng.buckets) == 1
+    assert eng.evict_idle_buckets() == 1
+    assert not eng.buckets
+    r = _mk_requests(1, [(64, 16)])[0]
+    eng.submit(r)
+    done = eng.run()
+    assert len(done) == 1
+    d = jnp.asarray(coo_to_dense(r.coo))
+    s = solve_tol(dense_ops(d), get_prox(r.prox, reg=r.reg), r.b, r.lg,
+                  r.gamma0, max_iterations=r.max_iterations, tol=r.tol,
+                  check_every=16)
+    assert r.iterations == int(s.k)
+    np.testing.assert_allclose(r.x, np.asarray(s.xbar), atol=1e-5)
+
+
+def test_engine_rejects_unservable_prox():
+    r = _mk_requests(1, [(64, 16)])[0]
+    r.prox = "group_l1"
+    eng = SolverEngine()
+    with pytest.raises(KeyError, match="not servable"):
+        eng.submit(r)
+    assert "group_l1" not in BATCHED_PROX_FAMILIES
+
+
+def test_batched_feasibility_matches_per_problem(ragged):
+    coos, bs, bmat, lg = ragged
+    prox = get_prox("l1", reg=0.1)
+    a, at = stack_coos(coos, "ell", M_PAD, N_PAD, pad_to=8)
+    ops = make_operator("stacked_ell", "jnp", a, at).solver_ops()
+    st = batched_solve(ops, prox, bmat, lg, jnp.full((len(coos),), 100.0),
+                       iterations=20)
+    feas = np.asarray(batched_feasibility(ops, bmat, st))
+    for i, (c, b) in enumerate(zip(coos, bs)):
+        d = jnp.asarray(coo_to_dense(c))
+        want = float(jnp.linalg.norm(d @ st.xbar[i, :c.n] - b)
+                     / jnp.maximum(jnp.linalg.norm(b), 1.0))
+        np.testing.assert_allclose(feas[i], want, rtol=1e-4)
