@@ -19,7 +19,11 @@
            sequential solve_tol loop over the same ragged request stream —
            the Dünner-et-al. per-task-overhead comparison; also records a
            jit-cached sequential steelman
+  api_overhead  the declarative facade (repro.api Problem -> plan ->
+           Result) vs the raw kernel layer on identical work; asserts the
+           planner + Result assembly cost <5%
 
+Usage: ``python benchmarks/run.py [mode ...]`` (default: all modes).
 Prints ``name,us_per_call,derived`` CSV; details land in
 experiments/bench/*.json (schema documented in benchmarks/README.md).
 """
@@ -293,10 +297,13 @@ def solver_serving():
     over one ragged request stream (3 shape families x 2 regularizers).
 
     Baselines:
-      sequential      — the natural loop: registry ops + solve_tol per
-                        request (re-traces/compiles per call, exactly like
-                        the repo's examples) — the per-task overhead the
-                        engine amortizes away via bucketing.
+      sequential      — the natural loop: one facade solve per request
+                        (re-traces/compiles per call, exactly like the
+                        repo's examples) — the per-task overhead the
+                        engine amortizes away via bucketing.  Includes the
+                        facade's planning cost, which the ``api_overhead``
+                        mode separately bounds at <5% of a raw solve_tol
+                        call, so the ratio still measures batching.
       sequential_jit  — steelman: one jit-cached solve per shape family
                         (zero per-request compile; only reachable when the
                         operator pytrees are hand-threaded through jit).
@@ -310,26 +317,31 @@ def solver_serving():
 
     from repro.core.prox import get_prox
     from repro.core.solver import solve_tol
-    from repro.launch.solver_serve import make_requests, solve_sequentially
-    from repro.serve import SolverEngine
+    from repro.launch.solver_serve import make_problems, solve_sequentially
+    from repro.serve import create_engine
 
     num, slots, tol, check_every = 24, 8, 1e-2, 16
 
-    eng = SolverEngine(slots=slots, fmt="ell", backend="jnp",
-                       check_every=check_every)
-    for r in make_requests(num, seed=10, tol=tol):     # warm: compile buckets
+    def requests(seed):
+        return [p.to_request(uid=i, tol=tol, max_iterations=4000)
+                for i, p in enumerate(make_problems(num, seed=seed))]
+
+    eng = create_engine("solver", slots=slots, fmt="ell", backend="jnp",
+                        check_every=check_every)
+    for r in requests(seed=10):                        # warm: compile buckets
         eng.submit(r)
     eng.run()
     eng.stats = {"steps": 0, "iterations": 0, "admitted": 0}
     t0 = _time.perf_counter()
-    for r in make_requests(num, seed=11, tol=tol):
+    for r in requests(seed=11):
         eng.submit(r)
     done = eng.run()
     dt_eng = _time.perf_counter() - t0
     assert len(done) == num
 
     t0 = _time.perf_counter()
-    solve_sequentially(make_requests(num, seed=11, tol=tol), check_every)
+    solve_sequentially(make_problems(num, seed=11), tol=tol,
+                       check_every=check_every)
     dt_seq = _time.perf_counter() - t0
 
     from functools import partial
@@ -353,9 +365,9 @@ def solver_serving():
                 e.vals, e.cols, et.vals, et.cols, e.n, et.n, r.b, r.lg,
                 r.gamma0, r.reg))
 
-    run_jit_seq(make_requests(num, seed=10, tol=tol))          # warm
+    run_jit_seq(requests(seed=10))                             # warm
     t0 = _time.perf_counter()
-    run_jit_seq(make_requests(num, seed=11, tol=tol))
+    run_jit_seq(requests(seed=11))
     dt_jit = _time.perf_counter() - t0
 
     rec = dict(
@@ -381,17 +393,96 @@ def solver_serving():
     return rec
 
 
-def main() -> None:
+def api_overhead():
+    """Facade overhead vs the raw kernel layer it compiles to.
+
+    Both sides run the *same* cold-start regime (fresh operator closures per
+    call -> re-trace, exactly like the sequential serving baseline): raw =
+    registry ops + hand-computed Lg + ``solve_tol``; facade =
+    ``Problem(...).solve(...)`` pinned to the identical (format, backend,
+    tol, check_every) so the only delta is planning + Result assembly.
+    Asserts the facade adds <5% and emits
+    experiments/bench/api_overhead.json.
+
+    (This benchmark intentionally imports the kernel-layer ``solve_tol``
+    directly — it IS the comparison target; everywhere else in the repo the
+    facade is the entry point, enforced by tests/test_api.py's grep test.)
+    """
+    import jax
+
+    from repro.api import Problem
+    from repro.core.prox import get_prox
+    from repro.core.solver import solve_tol
+    from repro.operators import make_solver_ops
+    from repro.configs.base import PaperProblemConfig
+    from repro.sparse import make_lasso
+
+    cfg = PaperProblemConfig(name="api", m=256, n=64, nnz=256 * 8, reg=0.1)
+    coo, b, _ = make_lasso(cfg, seed=0)
+    lg = float(np.sum(np.asarray(coo.vals) ** 2))
+    tol, gamma0, reps = 1e-3, 1000.0, 5
+
+    def raw_once():
+        ops = make_solver_ops(coo, "ell", "jnp")
+        s = solve_tol(ops, get_prox("l1", reg=cfg.reg), b, lg, gamma0,
+                      max_iterations=20_000, tol=tol, check_every=8)
+        jax.block_until_ready(s)
+
+    def facade_once():
+        Problem(coo, b, prox="l1", reg=cfg.reg, gamma0=gamma0).solve(
+            tol=tol, max_iterations=20_000, check_every=8,
+            format="ell", backend="jnp")
+
+    def best_of(fn):
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times), times
+
+    raw_once(); facade_once()                  # one throwaway of each
+    raw_s, raw_all = best_of(raw_once)
+    fac_s, fac_all = best_of(facade_once)
+    ratio = fac_s / raw_s
+    rec = dict(m=cfg.m, n=cfg.n, nnz=int(coo.nnz), tol=tol, reps=reps,
+               raw_s=raw_s, facade_s=fac_s, overhead_ratio=ratio,
+               raw_all_s=raw_all, facade_all_s=fac_all)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "api_overhead.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    emit("api_overhead/raw", raw_s * 1e6, f"tol={tol}")
+    emit("api_overhead/facade", fac_s * 1e6,
+         f"overhead={100*(ratio-1):+.1f}%")
+    assert ratio < 1.05, (
+        f"facade overhead {100*(ratio-1):.1f}% exceeds the 5% budget "
+        f"(raw {raw_s:.3f}s vs facade {fac_s:.3f}s)")
+    return rec
+
+
+MODES = {
+    "table1": table1_datasets,
+    "spmv_formats": spmv_formats,
+    "solver_serving": solver_serving,
+    "api_overhead": api_overhead,
+    "table2_4": table2_4_stage_timings,
+    "table5": table5_strong_scaling,
+    "fig2b": fig2b_datasize_scaling,
+    "network": network_per_strategy,
+}
+
+
+def main(argv=None) -> None:
+    """``python benchmarks/run.py [mode ...]`` — default: every mode."""
+    names = list(argv if argv is not None else sys.argv[1:]) or list(MODES)
+    unknown = [n for n in names if n not in MODES]
+    if unknown:
+        raise SystemExit(f"unknown modes {unknown}; available: {list(MODES)}")
     os.makedirs(OUT_DIR, exist_ok=True)
     results = {}
     print("name,us_per_call,derived")
-    results["table1"] = table1_datasets()
-    results["spmv_formats"] = spmv_formats()
-    results["solver_serving"] = solver_serving()
-    results["table2_4"] = table2_4_stage_timings()
-    results["table5"] = table5_strong_scaling()
-    results["fig2b"] = fig2b_datasize_scaling()
-    results["network"] = network_per_strategy()
+    for name in names:
+        results[name] = MODES[name]()
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
     with open(os.path.join(OUT_DIR, "results.csv"), "w") as f:

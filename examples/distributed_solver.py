@@ -1,7 +1,8 @@
-"""End-to-end driver: the paper's workload, distributed.
+"""End-to-end driver: the paper's workload, distributed through the facade.
 
 Solves a scaled Table-1 dataset with every distribution strategy on 8
-simulated devices and compares iterate agreement + wall time + the
+simulated devices — each strategy is one `override` away on the same
+declarative Problem — and compares iterate agreement + wall time + the
 per-iteration collective signature (the MR1-4/Spark comparison, Section 5
 of the paper, reproduced on a JAX mesh).
 
@@ -11,18 +12,16 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+import repro as pd
 from repro.configs.paper_problems import PaperProblemConfig
-from repro.core.distributed import build_problem, make_step_fn, solve_distributed
+from repro.core.distributed import build_problem, make_step_fn
 from repro.core.prox import get_prox
-from repro.core.solver import PDState, solve
-from repro.operators import make_solver_ops
+from repro.core.solver import PDState
 from repro.roofline.analysis import collective_stats
 from repro.sparse import make_lasso
 
@@ -31,25 +30,23 @@ def main():
     cfg = PaperProblemConfig(name="d1/100", m=10_000, n=1_000, nnz=100_000,
                              reg=0.1, gamma0=100.0)
     coo, b, x_true = make_lasso(cfg, seed=0)
-    lg = float(jnp.sum(coo.vals ** 2))
-    prox = get_prox("l1", reg=cfg.reg)
-    ref, _ = solve(make_solver_ops(coo, "dense", "jnp"), prox, b, lg,
-                   cfg.gamma0, iterations=100)
+    prob = pd.Problem(coo, b, prox="l1", reg=cfg.reg, gamma0=cfg.gamma0)
+    ref = prob.solve(iterations=100, format="dense", backend="jnp")
 
     devs = np.array(jax.devices())
     mesh1 = Mesh(devs.reshape(8), ("p",))
     mesh2 = Mesh(devs.reshape(2, 4), ("data", "model"))
+    prox = get_prox("l1", reg=cfg.reg)
     print(f"{'strategy':10s} {'alg':3s} {'err vs dense':>12s} {'t/iter':>9s} "
           f"{'wire B/iter':>12s}  collective signature")
     for strategy, mesh in [("rowpart", mesh1), ("colpart", mesh1),
                            ("dualpart", mesh1), ("block2d", mesh2)]:
         for alg in ("a1", "a2"):
-            t0 = time.perf_counter()
-            xbar, state = solve_distributed(coo, b, prox, mesh, strategy,
-                                            gamma0=cfg.gamma0,
-                                            iterations=100, algorithm=alg)
-            dt = (time.perf_counter() - t0) / 100
-            err = float(jnp.max(jnp.abs(xbar - ref.xbar)))
+            res = prob.solve(iterations=100, strategy=strategy, mesh=mesh,
+                             algorithm=alg)
+            dt = res.timings["solve_s"] / 100
+            err = float(jnp.max(jnp.abs(res.x - ref.x)))
+            # collective signature of one compiled step (kernel layer)
             problem = build_problem(coo, mesh, strategy)
             step = make_step_fn(problem, prox, cfg.gamma0, algorithm=alg)
             xs = jax.ShapeDtypeStruct((problem.n_pad,), jnp.float32)

@@ -1,18 +1,20 @@
-"""Quickstart: solve a paper-style LASSO/basis-pursuit instance with the
-smoothed accelerated primal-dual solver (A2, fused — the paper's optimized
-schedule), on Pallas kernel ops, and verify A1 == A2.
+"""Quickstart: state the problem, let the planner pick the execution design.
+
+The facade (`repro.api`) is the paper's system pitch in one line: you
+declare `min f(x) s.t. Ax = b` as a `Problem`, the planner turns intent
+(`SolveSpec`) into an inspectable `ExecutionPlan` — storage format via the
+roofline selector, backend, Lipschitz constant, schedule — and `solve()`
+compiles it down to the A2 kernel layer and returns a `Result` with gap
+certificates.  Any decision can be overridden and re-solved; A1 and A2
+produce identical iterates (the paper's Matlab check).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
+import repro as pd
 from repro.configs.paper_problems import small_config
-from repro.core.gap import certificates
-from repro.core.prox import get_prox
-from repro.core.solver import solve
-from repro.operators import make_solver_ops, select_format
-from repro.sparse import col_partitioned_ell, ell_col_norms_sq, make_lasso
+from repro.sparse import make_lasso
 
 
 def main():
@@ -21,39 +23,33 @@ def main():
           f"uniform-sparse)")
     coo, b, x_true = make_lasso(cfg, seed=0)
 
-    # paper init steps 1-2: Lg = sum_i ||A_i||^2, local per column block
-    ellt = col_partitioned_ell(coo, parts=1)
-    lg = float(jnp.sum(ell_col_norms_sq(ellt)))
-    prox = get_prox("l1", reg=cfg.reg)
+    # declare the problem; the planner estimates Lg (paper init steps 1-2),
+    # picks the storage format from matrix statistics, and schedules A2
+    prob = pd.Problem(coo, b, prox="l1", reg=cfg.reg, gamma0=1000.0)
+    plan = prob.plan(iterations=600, record_every=100)
+    print(plan)
+    print(plan.explain())
 
-    # operator registry: the roofline selector picks the storage format
-    # (ELL vs tiled BCSR) from matrix statistics; "pallas" = fused kernels
-    plan = select_format(coo)
-    print(f"selector: format={plan.format} params={plan.params}")
-    ops = make_solver_ops(coo, plan.format, "pallas", prox=prox, reg=cfg.reg,
-                          **{"band_size": 512, **plan.params})
-
-    state, hist = solve(ops, prox, b, lg, gamma0=1000.0, iterations=600,
-                        algorithm="a2", record_every=100)
-    for k, feas, obj in zip(np.asarray(hist["k"]),
-                            np.asarray(hist["feasibility"]),
-                            np.asarray(hist["objective"])):
+    res = plan.solve()
+    for k, feas, obj in zip(np.asarray(res.history["k"]),
+                            np.asarray(res.history["feasibility"]),
+                            np.asarray(res.history["objective"])):
         print(f"  k={k:4d}  ||Ax-b||={feas:9.4f}  f(x)={obj:9.4f}")
 
-    cert = certificates(ops, prox, b, lg, 1000.0, state)
-    rel = float(jnp.linalg.norm(state.xbar - x_true)
-                / jnp.linalg.norm(x_true))
-    print(f"final: feasibility={float(cert['feasibility']):.4f} "
-          f"gap={float(cert['gap']):.4f} recovery_rel_err={rel:.4f}")
+    cert = res.certificates()
+    rel = float(np.linalg.norm(np.asarray(res.x) - np.asarray(x_true))
+                / np.linalg.norm(np.asarray(x_true)))
+    print(f"final: feasibility={cert['feasibility']:.4f} "
+          f"gap={cert['gap']:.4f} recovery_rel_err={rel:.4f} "
+          f"({res.timings['solve_s']*1e3:.0f}ms solve)")
 
-    # the paper's Matlab check: A1 (faithful) == A2 (fused)
-    dops = make_solver_ops(coo, "dense", "jnp")
-    s1, _ = solve(dops, prox, b, lg, 1000.0, iterations=100,
-                  algorithm="a1")
-    s2, _ = solve(dops, prox, b, lg, 1000.0, iterations=100,
-                  algorithm="a2")
-    print(f"A1 vs A2 max|dx| = {float(jnp.max(jnp.abs(s1.xbar - s2.xbar))):.2e}"
-          " (identical iterates, as the paper verifies in Matlab)")
+    # override round-trip — the paper's Matlab check, A1 == A2, through the
+    # same plan with two decisions swapped
+    s1 = plan.override(algorithm="a1", format="dense", iterations=100).solve()
+    s2 = plan.override(algorithm="a2", format="dense", iterations=100).solve()
+    dx = float(np.max(np.abs(np.asarray(s1.x) - np.asarray(s2.x))))
+    print(f"A1 vs A2 max|dx| = {dx:.2e} (identical iterates, as the paper "
+          "verifies in Matlab)")
 
 
 if __name__ == "__main__":

@@ -10,14 +10,14 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serve import Engine, Request
+from repro.serve import Request, TokenEngine
 
 
 def run_arch(arch: str, n_requests: int = 5, max_new: int = 8):
     cfg = reduced(get_config(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, slots=4, max_len=48)
+    eng = TokenEngine(model, slots=4, max_len=48)
     eng.init_state(params)
     rng = np.random.default_rng(0)
     reqs = []

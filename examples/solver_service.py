@@ -1,69 +1,75 @@
-"""Solver-as-a-service demo: many concurrent primal-dual problems through
-the batched serving engine.
+"""Solver-as-a-service demo: a fleet of declarative Problems through the
+batched serving engine.
 
 A multi-tenant request stream — mixed shapes, mixed regularizers, mixed
-prox families — is bucketed by (padded shape, format, prox family), padded
-into fixed slot batches, and advanced by one jit'd vmapped A2 step per
-bucket with per-slot early exit (each problem stops at ITS feasibility
-tolerance) and continuous admission (freed slots immediately take queued
-requests).  One request is re-solved standalone to show the engine returns
-the same iterates as solve_tol.
+prox families — is stated as `repro.api.Problem`s.  `pd.solve_many` routes
+the fleet through the slot-batched engine (bucketed by padded shape /
+format / prox family, one jit'd masked A2 step per bucket, per-slot early
+exit, continuous admission); the engine itself admits Problems directly
+via `serve.create_engine("solver")` when you want the bucket-level view.
+One problem is re-solved standalone to show the engine returns the same
+iterates as a single-problem plan.
 
     PYTHONPATH=src python examples/solver_service.py
 """
 import numpy as np
-import jax.numpy as jnp
 
+import repro as pd
 from repro.configs.base import PaperProblemConfig
-from repro.core.prox import get_prox
-from repro.core.solver import solve_tol
-from repro.operators import make_solver_ops
-from repro.serve import SolveRequest, SolverEngine
-from repro.sparse import make_lasso
+from repro.serve import create_engine
 
 
-def main():
+def make_problems(num: int = 18) -> list[pd.Problem]:
+    from repro.sparse import make_lasso
+
     rng = np.random.default_rng(0)
     shapes = [(192, 48), (128, 32), (96, 24)]
     proxes = [("l1", 0.1), ("l1", 0.05), ("sq_l2", 0.5)]
-    reqs = []
-    for i in range(18):
+    probs = []
+    for i in range(num):
         m, n = shapes[i % len(shapes)]
         name, reg = proxes[i % len(proxes)]
         cfg = PaperProblemConfig(name=f"tenant-{i}", m=m, n=n, nnz=m * 8,
                                  reg=reg)
         coo, b, _ = make_lasso(cfg, seed=int(rng.integers(1 << 30)))
-        reqs.append(SolveRequest(uid=i, coo=coo, b=b, prox=name, reg=reg,
-                                 gamma0=1000.0, tol=1e-2,
-                                 max_iterations=4000))
+        probs.append(pd.Problem(coo, b, prox=name, reg=reg, gamma0=1000.0))
+    return probs
 
-    eng = SolverEngine(slots=4, fmt="ell", backend="jnp", check_every=16)
-    for r in reqs:
-        key = eng.submit(r)
-        print(f"submit req {r.uid:2d}: m={r.coo.m:3d} n={r.coo.n:2d} "
-              f"prox={r.prox}/{r.reg} -> bucket "
-              f"({key.m_pad}x{key.n_pad}, k={key.width}/{key.width_t}, "
-              f"{key.prox})")
 
-    done = eng.run()
-    print(f"\nserved {len(done)} requests over {len(eng.buckets)} buckets x "
-          f"{eng.slots} slots ({eng.stats['iterations']} slot-iterations, "
-          f"{eng.stats['steps']} engine ticks)")
-    for r in sorted(done, key=lambda r: r.uid):
-        print(f"  req {r.uid:2d}: k={r.iterations:4d} "
-              f"feas={r.feasibility:.4f} ||x||_0="
-              f"{int(np.sum(np.abs(r.x) > 1e-6))}/{r.coo.n}")
+def main():
+    probs = make_problems()
 
-    # the engine's contract: same iterates as a standalone solve_tol
-    r = sorted(done, key=lambda r: r.uid)[0]
-    ops = make_solver_ops(r.coo, "ell", "jnp")
-    s = solve_tol(ops, get_prox(r.prox, reg=r.reg), r.b, r.lg, r.gamma0,
-                  max_iterations=r.max_iterations, tol=r.tol,
-                  check_every=16)
-    err = float(jnp.max(jnp.abs(jnp.asarray(r.x) - s.xbar)))
-    print(f"\nreq {r.uid} vs standalone solve_tol: k {r.iterations} vs "
-          f"{int(s.k)}, max|dx| = {err:.2e} (identical stopping iteration, "
-          f"iterates to float tolerance)")
+    # the facade's fleet path: solve_many picks the engine when the fleet
+    # is servable (named prox families, concrete matrices, tol set)
+    results = pd.solve_many(probs, tol=1e-2, max_iterations=4000,
+                            check_every=16, slots=4)
+    print(f"solve_many: {len(results)} problems via "
+          f"execution={results[0].plan.execution!r} "
+          f"({results[0].plan.params['buckets']} buckets x "
+          f"{results[0].plan.params['slots']} slots)")
+    for i, (p, r) in enumerate(zip(probs, results)):
+        print(f"  req {i:2d}: m={p.m:3d} n={p.n:2d} prox={p.prox_name}/"
+              f"{p.reg} k={r.iterations:4d} feas={r.feasibility:.4f} "
+              f"||x||_0={int(np.sum(np.abs(np.asarray(r.x)) > 1e-6))}/{p.n}")
+
+    # under the hood: the engine admits Problems directly and shows its
+    # bucketing decisions
+    eng = create_engine("solver", slots=4, fmt="ell", backend="jnp",
+                        check_every=16)
+    for p in probs[:6]:
+        key = eng.submit(p)         # a Problem is the engine's request type
+        print(f"submit {p} -> bucket ({key.m_pad}x{key.n_pad}, "
+              f"k={key.width}/{key.width_t}, {key.prox})")
+    eng.run()
+
+    # the engine's contract: same iterates as a standalone single plan
+    r0 = results[0]
+    ref = probs[0].solve(tol=1e-2, max_iterations=4000, check_every=16,
+                         format="ell", backend="jnp")
+    err = float(np.max(np.abs(np.asarray(r0.x) - np.asarray(ref.x))))
+    print(f"\nreq 0 vs standalone plan: k {r0.iterations} vs "
+          f"{ref.iterations}, max|dx| = {err:.2e} (identical stopping "
+          "iteration, iterates to float tolerance)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""repro — a JAX/Pallas reproduction of "A scalable system for primal-dual
+optimization", grown into a serving-oriented solver platform.
+
+The top-level namespace is the declarative facade (loaded lazily so
+``import repro`` stays cheap):
+
+    import repro as pd
+    result = pd.Problem(A, b, prox="l1", reg=0.1).solve(tol=1e-4)
+
+Everything else lives in the subpackages (repro.core, repro.operators,
+repro.sparse, repro.kernels, repro.serve, ...) — see README.md's repo map.
+"""
+_FACADE = ("ExecutionPlan", "Problem", "Result", "SolveSpec", "plan",
+           "solve", "solve_many")
+
+__all__ = list(_FACADE)
+
+
+def __getattr__(name):
+    if name in _FACADE:
+        from repro import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_FACADE))

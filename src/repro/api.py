@@ -1,0 +1,304 @@
+"""The declarative facade: ``Problem -> plan -> Result``.
+
+One entry point over every solver execution path in the repo.  The caller
+states the optimization problem — ``min f(x) s.t. Ax = b`` — and the
+planner (repro.plan) picks the execution design: storage format (roofline
+selector), backend (jnp vs Pallas kernels), single-device vs shard_map
+strategy vs the slot-batched serving engine, and the Lipschitz constant
+``Lg`` when none is supplied.  The low-level drivers in ``repro.core`` /
+``repro.serve`` remain the kernel layer that plans compile to.
+
+    import repro as pd
+    result = pd.Problem(A, b, prox="l1", reg=0.1).solve(tol=1e-4)
+    print(result.plan.explain(), result.iterations, result.feasibility)
+
+``A`` may be a dense array, a ``repro.sparse`` COO/ELL/BCSR, or any
+``repro.operators.LinearOperator`` (matrix-free).  ``solve_many`` routes a
+fleet of Problems through the batched serving engine when they are
+servable, falling back to sequential plans otherwise.
+
+>>> import numpy as np
+>>> res = solve(np.diag([2.0, 4.0]).astype(np.float32),
+...             np.ones(2, np.float32), prox="zero", iterations=300,
+...             gamma0=1.0)
+>>> [round(float(v), 2) for v in res.x]   # min 0 s.t. diag(2,4) x = 1
+[0.5, 0.25]
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.plan import ExecutionPlan, Result, SolveSpec
+from repro.plan import plan as _plan
+from repro.plan import resolve_spec
+
+__all__ = ["ExecutionPlan", "Problem", "Result", "SolveSpec", "plan",
+           "solve", "solve_many"]
+
+#: prox families whose constructor takes a ``reg`` weight.
+_REG_FAMILIES = ("l1", "sq_l2", "elastic_net")
+
+
+class Problem:
+    """Declarative ``min f(x) s.t. Ax = b``.
+
+    A      dense (m, n) array, ``repro.sparse`` COO/ELL/BCSR, or a
+           ``LinearOperator`` (matrix-free; restricts planning to the
+           operator's own execution).
+    b      right-hand side, length m.
+    prox   a prox-family name from ``repro.core.prox`` (f is built with
+           ``reg``/``prox_kwargs``) or a ready ``ProxOp``.
+    lg     optional Lipschitz constant ``Lg``; when None the planner
+           computes ``sum_i ||A_i||^2`` (paper init) or power-iterates.
+    gamma0 optional smoothing schedule start; planner default otherwise.
+    """
+
+    def __init__(self, A: Any, b: Any, prox: Any = "l1",
+                 reg: Optional[float] = None, *, lg: Optional[float] = None,
+                 gamma0: Optional[float] = None,
+                 prox_kwargs: Optional[dict] = None):
+        import jax.numpy as jnp
+
+        from repro.core.prox import ProxOp, get_prox
+        from repro.operators.base import LinearOperator
+        from repro.sparse.formats import (
+            BCSR, COO, ELL, bcsr_to_coo, ell_to_coo,
+        )
+
+        self.operator: Optional[LinearOperator] = None
+        self._coo = None
+        self._dense = None
+        if isinstance(A, LinearOperator):
+            self.operator = A
+            m, n = A.shape
+            if m is None or n is None:
+                raise ValueError("matrix-free operators must carry a shape")
+        elif isinstance(A, COO):
+            self._coo = A
+            m, n = A.m, A.n
+        elif isinstance(A, ELL):
+            self._coo = ell_to_coo(A)      # O(stored entries), no densify
+            m, n = A.m, A.n
+        elif isinstance(A, BCSR):
+            self._coo = bcsr_to_coo(A)
+            m, n = A.m, A.n
+        else:
+            arr = np.asarray(A, np.float32)
+            if arr.ndim != 2:
+                raise ValueError(f"A must be 2-D, got shape {arr.shape}")
+            self._dense = arr
+            m, n = arr.shape
+        self.m, self.n = int(m), int(n)
+        self.lg = float(lg) if lg is not None else None
+        self.gamma0 = float(gamma0) if gamma0 is not None else None
+
+        self.b = jnp.asarray(b, jnp.float32)
+        if self.b.shape != (self.m,):
+            raise ValueError(f"b has shape {self.b.shape}, expected "
+                             f"({self.m},)")
+
+        if isinstance(prox, ProxOp):
+            # reg=None means the instance's weight is un-introspectable: the
+            # planner must not hand it to fused prox kernels (which take a
+            # scalar reg) — ExecutionPlan.operator() falls back to the
+            # composed ProxOp.apply path, which is always correct.
+            self.prox = prox
+            self.prox_name = prox.name
+            self.reg = float(reg) if reg is not None else None
+            self._prox_is_named = False
+        else:
+            kw = dict(prox_kwargs or {})
+            if prox in _REG_FAMILIES:
+                kw.setdefault("reg", 1.0 if reg is None else float(reg))
+            elif reg is not None:
+                raise ValueError(f"prox family {prox!r} takes no reg")
+            self.prox = get_prox(prox, **kw)
+            self.prox_name = prox
+            self.reg = float(kw.get("reg", 0.0))
+            self._prox_is_named = not kw or set(kw) == {"reg"}
+
+    # -- canonical views ---------------------------------------------------
+
+    @property
+    def coo(self):
+        """The COO view (None for matrix-free problems); built lazily from
+        a dense input."""
+        if self._coo is None and self._dense is not None:
+            from repro.sparse.formats import dense_to_coo
+            self._coo = dense_to_coo(self._dense)
+        return self._coo
+
+    def dense_array(self) -> np.ndarray:
+        """The dense (m, n) view; built lazily from COO."""
+        if self._dense is None:
+            if self._coo is None:
+                raise ValueError("matrix-free problem has no dense view")
+            from repro.sparse.formats import coo_to_dense
+            self._dense = np.asarray(coo_to_dense(self._coo))
+        return self._dense
+
+    @property
+    def nnz(self) -> Optional[int]:
+        if self._coo is not None:
+            return int(self._coo.nnz)
+        if self._dense is not None:
+            return int(np.count_nonzero(self._dense))
+        return self.operator.nnz if self.operator is not None else None
+
+    @property
+    def density(self) -> float:
+        nnz = self.nnz
+        if nnz is None:
+            return float("nan")
+        return nnz / max(1, self.m * self.n)
+
+    def __repr__(self):
+        kind = ("operator" if self.operator is not None else
+                "coo" if self._coo is not None else "dense")
+        return (f"Problem({self.m}x{self.n} {kind}, nnz={self.nnz}, "
+                f"prox={self.prox_name!r}, reg={self.reg})")
+
+    # -- the facade --------------------------------------------------------
+
+    def plan(self, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
+        """Plan without executing — inspect/override, then ``.solve()``."""
+        return _plan(self, spec, **overrides)
+
+    def solve(self, spec: SolveSpec | None = None, **overrides) -> Result:
+        """Plan and execute in one call; kwargs are SolveSpec fields."""
+        return self.plan(spec, **overrides).solve()
+
+    # -- engine admission --------------------------------------------------
+
+    def to_request(self, uid: int = 0, tol: float = 1e-3,
+                   max_iterations: int = 10_000,
+                   gamma0: Optional[float] = None):
+        """Adapt to the serving engine's request type (SolveRequest): the
+        engine continuous-batches Problems whose prox is a servable named
+        family over a concrete sparse matrix."""
+        from repro.serve.solver_engine import (
+            BATCHED_PROX_FAMILIES, SolveRequest,
+        )
+
+        if self.coo is None:
+            raise ValueError("engine admission needs a concrete matrix")
+        if not self._prox_is_named or \
+                self.prox_name not in BATCHED_PROX_FAMILIES:
+            raise ValueError(
+                f"prox {self.prox_name!r} is not a servable family "
+                f"(supported: {BATCHED_PROX_FAMILIES})")
+        g0 = gamma0 if gamma0 is not None else \
+            (self.gamma0 if self.gamma0 is not None else 100.0)
+        return SolveRequest(uid=uid, coo=self.coo, b=self.b,
+                            prox=self.prox_name, reg=self.reg, lg=self.lg,
+                            gamma0=float(g0), tol=tol,
+                            max_iterations=max_iterations)
+
+    # -- planner/result helpers (host-side) --------------------------------
+
+    def relative_feasibility(self, x: np.ndarray) -> float:
+        """Host-side ||A x - b|| / max(1, ||b||) (solve_tol's criterion)."""
+        b = np.asarray(self.b)
+        if self._coo is not None:
+            coo = self._coo
+            r = np.zeros(self.m, np.float64)
+            np.add.at(r, np.asarray(coo.rows),
+                      np.asarray(coo.vals, np.float64)
+                      * np.asarray(x, np.float64)[np.asarray(coo.cols)])
+            r -= b
+        elif self._dense is not None:
+            r = self._dense @ np.asarray(x, np.float32) - b
+        else:
+            import jax.numpy as jnp
+            r = np.asarray(self.operator.matvec(jnp.asarray(x))) - b
+        return float(np.linalg.norm(r) / max(1.0, np.linalg.norm(b)))
+
+    def reference_operator(self):
+        """A jnp reference LinearOperator over this matrix (certificates,
+        power iteration); the caller-provided operator when matrix-free."""
+        if self.operator is not None:
+            return self.operator
+        from repro.operators import make_operator
+        return make_operator("coo", "jnp", self.coo)
+
+    def reference_ops(self):
+        return self.reference_operator().solver_ops()
+
+
+def plan(problem: Problem, spec: SolveSpec | None = None,
+         **overrides) -> ExecutionPlan:
+    """Module-level alias of ``Problem.plan`` (``repro.plan.plan``)."""
+    return _plan(problem, spec, **overrides)
+
+
+def solve(A, b, prox: Any = "l1", reg: Optional[float] = None,
+          **spec_overrides) -> Result:
+    """One-shot convenience: ``Problem(A, b, prox, reg).solve(...)``."""
+    return Problem(A, b, prox, reg).solve(**spec_overrides)
+
+
+def solve_many(problems: list[Problem], spec: SolveSpec | None = None,
+               **overrides) -> list[Result]:
+    """Solve a fleet of Problems, batched when possible.
+
+    When every problem is servable (concrete sparse matrix + named prox
+    family in ``BATCHED_PROX_FAMILIES``), a tolerance is set, and no
+    distributed strategy was requested, the fleet runs through the
+    slot-batched serving engine (``repro.serve.SolverEngine``) — one
+    compiled masked A2 step per shape bucket, per-slot early exit.
+    Otherwise each problem is planned and solved sequentially.  Results
+    come back in input order; engine-batched Results share one descriptive
+    ExecutionPlan (execution="engine") and carry no PDState.
+    """
+    import time
+
+    spec = resolve_spec(spec, overrides)
+    from repro.serve.solver_engine import BATCHED_PROX_FAMILIES
+
+    servable = (spec.batch != "never" and spec.tol is not None
+                and spec.strategy is None and spec.mesh is None
+                and len(problems) > 1
+                and all(p.coo is not None and p._prox_is_named
+                        and p.prox_name in BATCHED_PROX_FAMILIES
+                        for p in problems))
+    if not servable:
+        return [_plan(p, spec).solve() for p in problems]
+
+    from repro.serve.solver_engine import SolverEngine
+
+    fmt = spec.format if spec.format in ("ell", "bcsr") else "ell"
+    backend = spec.backend if spec.backend in ("jnp", "pallas") else "jnp"
+    eng = SolverEngine(slots=spec.slots, fmt=fmt, backend=backend,
+                       check_every=spec.check_every,
+                       interpret=spec.interpret)
+    requests = [p.to_request(uid=i, tol=spec.tol,
+                             max_iterations=spec.max_iterations,
+                             gamma0=spec.gamma0)
+                for i, p in enumerate(problems)]
+    t0 = time.perf_counter()
+    for r in requests:
+        eng.submit(r)
+    done = {r.uid: r for r in eng.run()}
+    wall = time.perf_counter() - t0
+    shared = ExecutionPlan(
+        problem=None, spec=spec, execution="engine", algorithm="a2",
+        format=fmt, backend=backend, strategy=None, mesh=None,
+        lg=float("nan"), gamma0=float("nan"),
+        params=dict(slots=spec.slots, buckets=len(eng.buckets)),
+        reasons=dict(execution=(
+            f"{len(problems)} servable problems with tol set: slot-batched "
+            "engine (one compiled masked step per shape bucket)")))
+    results = []
+    for i, p in enumerate(problems):
+        req = done[i]
+        import jax.numpy as jnp
+        x = jnp.asarray(req.x)
+        results.append(Result(
+            x=x, plan=shared, iterations=req.iterations,
+            feasibility=float(req.feasibility),
+            objective=float(p.prox.value(x)),
+            timings=dict(total_s=wall, per_request_s=wall / len(problems)),
+            state=None))
+    return results

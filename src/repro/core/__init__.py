@@ -6,7 +6,7 @@ from repro.core.gap import certificates
 from repro.core.prox import ProxOp, get_prox
 from repro.core.solver import (
     PDState, SolverOps, a1_init, a1_step, a2_init, a2_step, beta_j,
-    dense_ops, ell_ops, gamma_j, solve, solve_tol, tau_k,
+    dense_ops, ell_ops, estimate_lg, gamma_j, solve, solve_tol, tau_k,
 )
 
 __all__ = [n for n in dir() if not n.startswith("_")]

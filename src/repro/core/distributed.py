@@ -175,18 +175,30 @@ def _pad_to(v, size):
     return jnp.pad(v, (0, size - v.shape[0])) if size > v.shape[0] else v
 
 
+def _algo_fns(algorithm: str):
+    """(init_fn, step_fn) for the requested schedule."""
+    if algorithm == "a2":
+        return a2_init, a2_step
+    return a1_init, a1_step
+
+
+def _local_n(problem: DistProblem) -> int:
+    """Per-device primal dimension: n_pad divided over the x-sharded axes."""
+    nloc = problem.n_pad
+    for ax in (problem.x_spec or ()):
+        if ax is not None:
+            nloc //= problem.mesh.devices.shape[problem.mesh.axis_names.index(ax)]
+    return nloc
+
+
 def make_solve_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
                   iterations: int, algorithm: str = "a2", c: float = 3.0):
     """Returns jit(shard_map(full solve)): (operands, b_padded) -> PDState.
 
     The whole iteration loop lives inside one shard_map so operands stay
     device-resident across iterations — the RDD-persistence analogue."""
-    init_fn = a2_init if algorithm == "a2" else a1_init
-    step_fn = a2_step if algorithm == "a2" else a1_step
-    nloc = problem.n_pad
-    for ax in (problem.x_spec or ()):
-        if ax is not None:
-            nloc //= problem.mesh.devices.shape[problem.mesh.axis_names.index(ax)]
+    init_fn, step_fn = _algo_fns(algorithm)
+    nloc = _local_n(problem)
 
     def local_solve(operands, b):
         ops = make_local_ops(problem, operands)
@@ -204,10 +216,58 @@ def make_solve_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
     return jax.jit(mapped)
 
 
+def make_solve_tol_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
+                      tol: float, max_iterations: int = 10_000,
+                      algorithm: str = "a2", c: float = 3.0,
+                      check_every: int = 8):
+    """jit(shard_map(solve_tol)): early exit on *global* relative feasibility
+    ``||A xbar - b|| / max(1, ||b||) < tol`` checked every ``check_every``
+    iterations — the distributed counterpart of ``core.solver.solve_tol``.
+
+    Partial squared norms are computed per shard and psum'd over whatever
+    mesh axes the residual is sharded on (``problem.y_spec``), so every
+    device evaluates the same stopping verdict; the while loop lives inside
+    shard_map, keeping operands device-resident across iterations like
+    ``make_solve_fn``.
+    """
+    init_fn, step_fn = _algo_fns(algorithm)
+    nloc = _local_n(problem)
+    y_axes = tuple(ax for ax in (problem.y_spec or ()) if ax is not None)
+
+    def global_sq(v):
+        s = jnp.sum(v * v)
+        for ax in y_axes:
+            s = jax.lax.psum(s, ax)
+        return s
+
+    def local_solve(operands, b):
+        ops = make_local_ops(problem, operands)
+        lg = jnp.asarray(problem.lg, b.dtype)
+        state = init_fn(ops, prox, b, lg, gamma0, c, n=nloc)
+        bnorm = jnp.maximum(jnp.sqrt(global_sq(b)), 1.0)
+
+        def cond(s):
+            feas = jnp.sqrt(global_sq(ops.matvec(s.xbar) - b)) / bnorm
+            return jnp.logical_and(s.k < max_iterations, feas >= tol)
+
+        def body(s):
+            return jax.lax.fori_loop(
+                0, check_every,
+                lambda _, t: step_fn(ops, prox, b, lg, gamma0, t, c), s)
+
+        return jax.lax.while_loop(cond, body, state)
+
+    mapped = _shard_map(
+        local_solve, mesh=problem.mesh,
+        in_specs=(problem.operand_specs, problem.y_spec),
+        out_specs=problem.state_specs)
+    return jax.jit(mapped)
+
+
 def make_step_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
                  algorithm: str = "a2", c: float = 3.0):
     """One shard_map'd iteration (the dry-run / roofline unit)."""
-    step_fn = a2_step if algorithm == "a2" else a1_step
+    _, step_fn = _algo_fns(algorithm)
 
     def local_step(operands, b, state):
         ops = make_local_ops(problem, operands)
@@ -225,7 +285,16 @@ def solve_distributed(coo: COO, b, prox: ProxOp, mesh: Mesh,
                       strategy: str = "dualpart", gamma0: float = 1.0,
                       iterations: int = 100, algorithm: str = "a2",
                       dual_copy: bool = True):
-    """End-to-end convenience: partition, solve, return (xbar[:n], state)."""
+    """Deprecated shim: partition, solve, return (xbar[:n], state).
+
+    State the problem through the facade instead —
+    ``repro.api.Problem(coo, b, prox).solve(strategy=..., mesh=...)`` — which
+    compiles to the same ``build_problem`` + ``make_solve_fn`` kernel layer.
+    """
+    from repro.deprecation import warn_once
+
+    warn_once("repro.core.distributed.solve_distributed",
+              "repro.api.Problem(A, b, prox).solve(strategy=..., mesh=...)")
     problem = build_problem(coo, mesh, strategy, dual_copy=dual_copy)
     solve_fn = make_solve_fn(problem, prox, gamma0, iterations, algorithm)
     bp = _pad_to(b, problem.m_pad)

@@ -54,8 +54,10 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.prox import ProxOp
+from repro.deprecation import warn_once
 
 
 # --------------------------------------------------------------------------
@@ -72,6 +74,55 @@ def gamma_j(j, gamma0: float, c: float = 3.0):
 
 def beta_j(j, gamma0: float, lg, c: float = 3.0):
     return lg * c * c * (j + c + 3.0) / (gamma0 * (c + 2.0) * (j + c + 2.0) * (j + 2.0))
+
+
+# --------------------------------------------------------------------------
+# Lipschitz-constant estimation
+# --------------------------------------------------------------------------
+
+def estimate_lg(op, n: int | None = None, max_iters: int = 500,
+                tol: float = 1e-6, seed: int = 0) -> float:
+    """Estimate ``Lg = ||A||_2^2`` (the top eigenvalue of A^T A) by power
+    iteration using only ``matvec``/``rmatvec`` — so the planner never needs
+    the caller to hand-pass ``lg``, even for matrix-free operators.
+
+    ``op`` is anything exposing ``matvec`` and ``rmatvec`` (a
+    ``LinearOperator`` or a ``SolverOps``); ``n`` is the primal dimension,
+    inferred from ``op.shape`` when available.  The start vector is
+    deterministic (``seed``), iteration stops once the eigenvalue estimate
+    is ``tol``-relatively converged.
+
+    Note the distinction from the paper's init step 1: the paper uses
+    ``sum_i ||A_i||^2 = ||A||_F^2`` (exact, host-side, needs the values);
+    this helper returns the tight constant ``||A||_2^2 <= ||A||_F^2`` and
+    is the fallback when only the operator's action is available.
+
+    >>> import jax.numpy as jnp
+    >>> d = jnp.diag(jnp.asarray([3.0, 1.0, 0.5]))
+    >>> ops = SolverOps(matvec=lambda x: d @ x, rmatvec=lambda y: d.T @ y)
+    >>> round(estimate_lg(ops, n=3), 4)   # ||A||_2^2 = 9
+    9.0
+    """
+    if n is None:
+        shape = getattr(op, "shape", None)
+        if shape is not None and shape[1] is not None:
+            n = shape[1]
+        else:
+            raise ValueError("estimate_lg needs n when op has no shape")
+    rng = np.random.default_rng(seed)
+    v0 = rng.standard_normal(n).astype(np.float32)
+    v = jnp.asarray(v0 / np.linalg.norm(v0))
+    lam = 0.0
+    for _ in range(max_iters):
+        w = op.rmatvec(op.matvec(v))
+        new = float(jnp.linalg.norm(w))
+        if new == 0.0:                       # A == 0
+            return 0.0
+        v = w / new
+        if abs(new - lam) <= tol * max(new, 1.0):
+            return new
+        lam = new
+    return lam
 
 
 # --------------------------------------------------------------------------
@@ -210,8 +261,10 @@ def solve(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
 
     >>> import jax.numpy as jnp
     >>> from repro.core.prox import get_prox
-    >>> st, _ = solve(dense_ops(2.0 * jnp.eye(2)), get_prox("zero"),
-    ...               jnp.ones(2), lg=8.0, gamma0=1.0, iterations=300)
+    >>> from repro.operators import make_operator
+    >>> ops = make_operator("dense", "jnp", 2.0 * jnp.eye(2)).solver_ops()
+    >>> st, _ = solve(ops, get_prox("zero"), jnp.ones(2), lg=8.0,
+    ...               gamma0=1.0, iterations=300)
     >>> round(float(st.xbar[0]), 2)   # min 0 s.t. 2x = 1
     0.5
     """
@@ -432,14 +485,23 @@ def batched_solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
 
 
 def dense_ops(a: jax.Array) -> SolverOps:
-    """Thin adapter over the (dense, jnp) registry operator."""
+    """Deprecated shim over the (dense, jnp) registry operator — state the
+    problem through the facade (``repro.api.Problem``) or build operators
+    via ``repro.operators.make_operator`` instead."""
     from repro.operators import make_operator
 
+    warn_once("repro.core.solver.dense_ops",
+              "repro.api.Problem(...).solve() or "
+              "make_operator('dense', 'jnp', a).solver_ops()")
     return make_operator("dense", "jnp", a).solver_ops()
 
 
 def ell_ops(ell_a, ell_at) -> SolverOps:
-    """Single-device sparse ops from (ELL of A, ELL of A^T), via registry."""
+    """Deprecated shim: (ELL of A, ELL of A^T) -> SolverOps via registry —
+    use the facade or ``make_operator('ell', 'jnp', ...)`` instead."""
     from repro.operators import make_operator
 
+    warn_once("repro.core.solver.ell_ops",
+              "repro.api.Problem(...).solve() or "
+              "make_operator('ell', 'jnp', a, at).solver_ops()")
     return make_operator("ell", "jnp", ell_a, ell_at).solver_ops()

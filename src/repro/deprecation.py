@@ -1,0 +1,31 @@
+"""One-shot deprecation warnings for the pre-facade entry points.
+
+The repo grew five hand-wired solver entry points before the declarative
+``Problem -> plan -> Result`` facade (repro.api / repro.plan) existed.  The
+low-level drivers stay as the kernel layer the plans compile to; the *old
+signatures* that callers used to wire by hand (``dense_ops``, ``ell_ops``,
+``solve_distributed``, ``serve.Engine``) are kept working as thin shims that
+emit a single ``DeprecationWarning`` per process pointing at the facade.
+"""
+from __future__ import annotations
+
+import warnings
+
+_SEEN: set[str] = set()
+
+
+def warn_once(old: str, new: str) -> None:
+    """Emit one DeprecationWarning per process for ``old`` (repeat calls are
+    silent), pointing callers at the facade replacement ``new``."""
+    if old in _SEEN:
+        return
+    _SEEN.add(old)
+    warnings.warn(
+        f"{old} is deprecated; use {new} — see the Problem -> plan -> Result "
+        "facade in repro.api",
+        DeprecationWarning, stacklevel=3)
+
+
+def reset() -> None:
+    """Clear the emitted-warning registry (tests only)."""
+    _SEEN.clear()

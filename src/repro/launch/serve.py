@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import build_model
-from repro.serve import Engine, Request
+from repro.serve import Request, TokenEngine
 
 
 def main(argv=None):
@@ -31,7 +31,7 @@ def main(argv=None):
         cfg = reduced(cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, slots=args.slots, max_len=args.max_len)
+    eng = TokenEngine(model, slots=args.slots, max_len=args.max_len)
     eng.init_state(params)
 
     rng = np.random.default_rng(0)

@@ -1,10 +1,12 @@
 """Solver-serving launcher: continuous-batching engine over solve requests.
 
-Generates a ragged stream of paper-style LASSO instances (mixed shapes and
-regularizers — the multi-tenant traffic the serving engine buckets), drains
-it through ``repro.serve.SolverEngine``, and reports requests/sec.  With
+Generates a ragged stream of paper-style LASSO instances as declarative
+``repro.api.Problem``s (mixed shapes and regularizers — the multi-tenant
+traffic the serving engine buckets), drains it through the solver engine
+(``repro.serve.create_engine("solver")``), and reports requests/sec.  With
 ``--compare-sequential`` the same stream is also solved one-by-one through
-``solve_tol`` for the throughput ratio the batching exists for.
+single-problem facade plans for the throughput ratio the batching exists
+for.
 
   PYTHONPATH=src python -m repro.launch.solver_serve --requests 16 \
       --slots 8 --fmt ell --backend jnp --tol 1e-2 --compare-sequential
@@ -16,47 +18,36 @@ import time
 
 import numpy as np
 
+from repro.api import Problem
 from repro.configs.base import PaperProblemConfig
-from repro.serve import SolveRequest, SolverEngine
+from repro.serve import create_engine
 from repro.sparse import make_lasso
 
 
-def make_requests(num: int, seed: int = 0, tol: float = 1e-2,
-                  gamma0: float = 1000.0) -> list[SolveRequest]:
-    """Ragged request stream: 3 shape families x 2 regularizers."""
+def make_problems(num: int, seed: int = 0,
+                  gamma0: float = 1000.0) -> list[Problem]:
+    """Ragged problem stream: 3 shape families x 2 regularizers."""
     rng = np.random.default_rng(seed)
     shapes = [(192, 48), (128, 32), (256, 64)]
-    reqs = []
+    probs = []
     for i in range(num):
         m, n = shapes[i % len(shapes)]
         cfg = PaperProblemConfig(name=f"req{i}", m=m, n=n, nnz=m * 8,
                                  reg=0.1)
         coo, b, _ = make_lasso(cfg, seed=int(rng.integers(1 << 30)))
-        reqs.append(SolveRequest(
-            uid=i, coo=coo, b=b, prox="l1", reg=float([0.1, 0.05][i % 2]),
-            gamma0=gamma0, tol=tol, max_iterations=4000))
-    return reqs
+        probs.append(Problem(coo, b, prox="l1",
+                             reg=float([0.1, 0.05][i % 2]), gamma0=gamma0))
+    return probs
 
 
-def solve_sequentially(reqs: list[SolveRequest], check_every: int = 16):
-    """The baseline the engine replaces: one solve_tol call per request,
-    honoring each request's own tol/max_iterations (the same work the
-    engine does per slot)."""
-    import jax
-
-    from repro.core.prox import get_prox
-    from repro.core.solver import solve_tol
-    from repro.operators import make_solver_ops
-
-    out = []
-    for r in reqs:
-        ops = make_solver_ops(r.coo, "ell", "jnp")
-        prox = get_prox(r.prox, reg=r.reg)
-        s = solve_tol(ops, prox, r.b, r.lg, r.gamma0,
-                      max_iterations=r.max_iterations, tol=r.tol,
-                      check_every=check_every)
-        out.append(jax.block_until_ready(s))
-    return out
+def solve_sequentially(probs: list[Problem], tol: float = 1e-2,
+                       check_every: int = 16, max_iterations: int = 4000):
+    """The baseline the engine replaces: one single-problem facade plan per
+    request (same format/backend/stopping rule the engine applies per
+    slot)."""
+    return [p.solve(tol=tol, max_iterations=max_iterations,
+                    check_every=check_every, format="ell", backend="jnp")
+            for p in probs]
 
 
 def main(argv=None):
@@ -70,9 +61,11 @@ def main(argv=None):
     ap.add_argument("--compare-sequential", action="store_true")
     args = ap.parse_args(argv)
 
-    reqs = make_requests(args.requests, tol=args.tol)
-    eng = SolverEngine(slots=args.slots, fmt=args.fmt, backend=args.backend,
-                       check_every=args.check_every)
+    probs = make_problems(args.requests)
+    eng = create_engine("solver", slots=args.slots, fmt=args.fmt,
+                        backend=args.backend, check_every=args.check_every)
+    reqs = [p.to_request(uid=i, tol=args.tol, max_iterations=4000)
+            for i, p in enumerate(probs)]
     for r in reqs:
         eng.submit(r)
     t0 = time.time()
@@ -87,10 +80,11 @@ def main(argv=None):
           f"slots, {eng.stats['iterations']} slot-iterations)")
     if args.compare_sequential:
         t0 = time.time()
-        solve_sequentially(reqs, args.check_every)
+        solve_sequentially(probs, tol=args.tol,
+                           check_every=args.check_every)
         dts = time.time() - t0
         print(f"[solver-serve] sequential loop: {dts:.2f}s "
-              f"({len(reqs)/max(dts,1e-9):.1f} req/s) -> "
+              f"({len(probs)/max(dts,1e-9):.1f} req/s) -> "
               f"batched speedup {dts/max(dt,1e-9):.2f}x")
     return 0
 

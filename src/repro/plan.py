@@ -1,0 +1,474 @@
+"""The planner layer: ``SolveSpec`` (intent) -> ``ExecutionPlan`` (decisions)
+-> ``Result`` (iterate + certificates + timings).
+
+The paper's pitch is that the *system* picks the execution design: the user
+states ``min f(x) s.t. Ax = b`` and the platform chooses the storage format,
+kernels, and distribution strategy (MR1-MR4 / the Spark dual-RDD trick) for
+them.  This module is that planner for the repo:
+
+  * it reuses the roofline format selector (``repro.operators.select``) to
+    pick ELL vs tiled BCSR vs dense from matrix statistics,
+  * it estimates the Lipschitz constant when the caller has none — the
+    paper's exact ``Lg = sum_i ||A_i||^2`` when values are available, power
+    iteration (``repro.core.solver.estimate_lg``) for matrix-free operators,
+  * and it compiles the choice down to the kernel-layer drivers it leaves
+    untouched: ``core.solver.solve/solve_tol`` (single device),
+    ``core.distributed.make_solve_fn/make_solve_tol_fn`` (shard_map
+    strategies), and the batched serving engine (via ``repro.api.solve_many``).
+
+Every decision lands in an inspectable ``ExecutionPlan`` with a one-line
+reason per choice; ``plan.override(...)`` swaps any decision and re-solves,
+which is how the equivalence tests pin every emittable plan to the same
+iterates.
+
+>>> import numpy as np
+>>> from repro.api import Problem
+>>> p = Problem(np.diag([2.0, 2.0, 2.0]).astype(np.float32),
+...             np.ones(3, np.float32), prox="zero")
+>>> pl = p.plan(iterations=300, gamma0=1.0)
+>>> (pl.algorithm, pl.format, pl.backend, pl.execution)
+('a2', 'dense', 'jnp', 'single')
+>>> [round(float(v), 2) for v in pl.solve().x]   # min 0 s.t. 2x = 1
+[0.5, 0.5, 0.5]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = ["ExecutionPlan", "Result", "SolveSpec", "plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveSpec:
+    """Caller intent — *what* to solve for, not *how*.
+
+    Every field has a planner default; anything set explicitly is honored
+    and recorded as a user override in the plan's reasons.
+
+    tol=None means a fixed ``iterations`` budget (``core.solver.solve``
+    semantics); tol set means early exit on relative feasibility
+    (``solve_tol`` semantics, capped at ``max_iterations``).
+    """
+
+    algorithm: str = "auto"              # "a1" | "a2" | "auto"
+    tol: Optional[float] = None
+    iterations: int = 300
+    max_iterations: int = 10_000
+    check_every: int = 8
+    format: str = "auto"                 # "dense"|"coo"|"ell"|"bcsr"|"auto"
+    backend: str = "auto"                # "jnp"|"pallas"|"auto"
+    strategy: Optional[str] = None       # distributed strategy name
+    mesh: Any = None                     # jax Mesh (hint for strategies)
+    gamma0: Optional[float] = None
+    c: float = 3.0
+    lg: Optional[float] = None
+    lg_method: str = "auto"              # "auto"|"frobenius"|"power"
+    record_every: int = 0
+    batch: str = "auto"                  # "auto"|"never" (solve_many policy)
+    slots: int = 8                       # engine slot count (solve_many)
+    interpret: Optional[bool] = None     # Pallas interpret-mode override
+    format_params: dict = dataclasses.field(default_factory=dict)
+
+
+def resolve_spec(spec: SolveSpec | None, overrides: dict) -> SolveSpec:
+    """spec + keyword overrides -> one SolveSpec (overrides win)."""
+    if spec is None:
+        return SolveSpec(**overrides)
+    return dataclasses.replace(spec, **overrides) if overrides else spec
+
+
+@dataclasses.dataclass
+class Result:
+    """What a solve hands back: the iterate plus its evidence.
+
+    x            primal iterate (xbar), trimmed to the problem's n.
+    iterations   iterations executed (the solver's k).
+    feasibility  relative feasibility ||A x - b|| / max(1, ||b||) — the
+                 paper's stopping criterion, evaluated host-side.
+    objective    f(x) from the prox's value function.
+    timings      dict(build_s, solve_s, total_s) wall-clock seconds; the
+                 first solve of a shape includes compile time in solve_s.
+    state        final PDState (None for engine-batched results).
+    history      per-record feasibility/objective when record_every was set.
+    plan         the ExecutionPlan that produced this result.
+    """
+
+    x: Any
+    plan: "ExecutionPlan"
+    iterations: int
+    feasibility: float
+    objective: float
+    timings: dict
+    state: Any = None
+    history: Optional[dict] = None
+    _certs: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def certificates(self) -> dict:
+        """Convergence certificates from ``repro.core.gap`` (smoothed gap,
+        absolute feasibility, objective) for the final state; computed
+        lazily on the jnp reference operator and cached."""
+        if self._certs is None:
+            if self.state is None:
+                raise ValueError(
+                    "no solver state attached (engine-batched results carry "
+                    "only the iterate); re-solve via Problem.solve for "
+                    "certificates")
+            from repro.core.gap import certificates as _certificates
+
+            prob, p = self.plan.problem, self.plan
+            ops = prob.reference_ops()
+            out = _certificates(ops, prob.prox, prob.b, p.lg, p.gamma0,
+                                self.state, c=p.spec.c,
+                                algorithm=p.algorithm)
+            self._certs = {k: float(v) for k, v in out.items()}
+        return self._certs
+
+    @property
+    def gap(self) -> Optional[float]:
+        """Smoothed-gap certificate G_{gamma,beta} (None when no state)."""
+        return None if self.state is None else self.certificates()["gap"]
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """The planner's decisions, inspectable and overridable.
+
+    ``execution`` is "single" (registry operator + core.solver drivers),
+    "distributed" (shard_map strategy via core.distributed), or "engine"
+    (slot-batched serving via repro.api.solve_many — such plans describe a
+    shared engine run and are not individually solvable).
+
+    ``reasons`` maps each decision to a one-line why; ``estimates`` carries
+    the roofline selector's modeled per-apply seconds when it ran.
+    """
+
+    problem: Any
+    spec: SolveSpec
+    execution: str
+    algorithm: str
+    format: str
+    backend: str
+    strategy: Optional[str]
+    mesh: Any
+    lg: float
+    gamma0: float
+    params: dict
+    reasons: dict
+    estimates: Optional[dict] = None
+    _op: Any = dataclasses.field(default=None, repr=False, compare=False)
+
+    def __repr__(self):
+        shape = ("?" if self.problem is None
+                 else f"{self.problem.m}x{self.problem.n}")
+        mode = self.execution if self.strategy is None \
+            else f"{self.execution}:{self.strategy}"
+        return (f"ExecutionPlan({mode}, problem={shape}, "
+                f"algorithm={self.algorithm!r}, format={self.format!r}, "
+                f"backend={self.backend!r}, lg={self.lg:.6g}, "
+                f"gamma0={self.gamma0:.6g}, params={self.params!r})")
+
+    def explain(self) -> str:
+        """Human-readable decision table (one line per choice + reason)."""
+        rows = [("execution", self.execution), ("algorithm", self.algorithm),
+                ("format", self.format), ("backend", self.backend),
+                ("strategy", self.strategy), ("lg", f"{self.lg:.6g}"),
+                ("gamma0", f"{self.gamma0:.6g}")]
+        lines = []
+        for key, choice in rows:
+            why = self.reasons.get(key, "")
+            lines.append(f"{key:10s} = {str(choice):14s} {why}")
+        if self.estimates:
+            modeled = "  ".join(f"{k}={v['s']:.3g}s"
+                                for k, v in self.estimates.items())
+            lines.append(f"{'modeled':10s} = {modeled}")
+        return "\n".join(lines)
+
+    def override(self, **changes) -> "ExecutionPlan":
+        """A new plan with some decisions (or spec fields) replaced; all
+        other choices are kept, so overridden plans stay comparable to the
+        planner's pick.  Setting/clearing ``strategy`` flips between the
+        distributed and single-device executions."""
+        plan_fields = {f.name for f in dataclasses.fields(ExecutionPlan)
+                       if f.init and f.name not in ("problem", "spec")}
+        spec_fields = {f.name for f in dataclasses.fields(SolveSpec)}
+        pc = {k: v for k, v in changes.items() if k in plan_fields}
+        sc = {k: v for k, v in changes.items() if k not in plan_fields}
+        unknown = [k for k in sc if k not in spec_fields]
+        if unknown:
+            raise TypeError(f"unknown plan/spec fields: {unknown}")
+        spec = dataclasses.replace(self.spec, **sc) if sc else self.spec
+        new = dataclasses.replace(self, spec=spec, **pc, _op=None,
+                                  reasons={**self.reasons,
+                                           **{k: "user override"
+                                              for k in changes}})
+        if "strategy" in pc or "mesh" in pc:
+            # mirror plan()'s semantics: a mesh is a distributed hint
+            # (defaulting to dualpart), and strategies need matrix values;
+            # an explicit strategy in this call (including None) wins
+            if "strategy" not in pc and new.mesh is not None \
+                    and new.strategy is None:
+                new.strategy = "dualpart"
+            new.execution = "distributed" if new.strategy else "single"
+            if new.execution == "distributed" and new.problem.coo is None:
+                raise ValueError(
+                    "distributed strategies need a concrete matrix "
+                    "(COO/dense), not a matrix-free operator")
+        return new
+
+    # -- execution ---------------------------------------------------------
+
+    def operator(self):
+        """Build (and cache) the LinearOperator this plan runs on."""
+        if self._op is None:
+            prob = self.problem
+            if prob.operator is not None:
+                self._op = prob.operator
+            elif self.format == "dense":
+                import jax.numpy as jnp
+
+                from repro.operators import make_operator
+                self._op = make_operator(
+                    "dense", "jnp", jnp.asarray(prob.dense_array()))
+            else:
+                from repro.operators import from_coo
+                opts = dict(self.params)
+                if self.backend == "pallas" and self.spec.interpret is not None:
+                    opts["interpret"] = self.spec.interpret
+                # fused prox kernels take a scalar reg; when the Problem's
+                # weight is unknown (reg=None: a ProxOp instance with its
+                # own closure), withhold the prox so the builder composes
+                # the always-correct ProxOp.apply path instead
+                kprox, kreg = prob.prox, prob.reg
+                if kreg is None:
+                    kprox, kreg = None, 0.0
+                self._op = from_coo(prob.coo, self.format, self.backend,
+                                    prox=kprox, reg=kreg, **opts)
+        return self._op
+
+    def solve(self) -> Result:
+        """Execute the plan through the kernel layer it compiled to."""
+        if self.execution == "engine":
+            raise RuntimeError(
+                "engine plans describe a shared batched run; execute them "
+                "through repro.api.solve_many")
+        import jax
+
+        from repro.core import solver as _solver
+
+        prob, spec = self.problem, self.spec
+        t0 = time.perf_counter()
+        history = None
+        if self.execution == "distributed":
+            state, build_s, t1 = self._solve_distributed()
+        else:
+            ops = self.operator().solver_ops()
+            build_s = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            if spec.tol is None:
+                state, history = _solver.solve(
+                    ops, prob.prox, prob.b, self.lg, self.gamma0,
+                    iterations=spec.iterations, algorithm=self.algorithm,
+                    c=spec.c, record_every=spec.record_every)
+            else:
+                state = _solver.solve_tol(
+                    ops, prob.prox, prob.b, self.lg, self.gamma0,
+                    max_iterations=spec.max_iterations, tol=spec.tol,
+                    algorithm=self.algorithm, c=spec.c,
+                    check_every=spec.check_every)
+            state = jax.block_until_ready(state)
+        solve_s = time.perf_counter() - t1
+        x = state.xbar
+        feas = prob.relative_feasibility(np.asarray(x))
+        objective = float(prob.prox.value(x))
+        timings = dict(build_s=build_s, solve_s=solve_s,
+                       total_s=time.perf_counter() - t0)
+        return Result(x=x, plan=self, iterations=int(state.k),
+                      feasibility=feas, objective=objective,
+                      timings=timings, state=state, history=history)
+
+    def _solve_distributed(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import distributed as D
+        from repro.core.solver import PDState
+
+        prob, spec = self.problem, self.spec
+        t0 = time.perf_counter()
+        mesh = self.mesh if self.mesh is not None else _default_mesh(
+            self.strategy)
+        dp = D.build_problem(prob.coo, mesh, self.strategy)
+        dp.lg = self.lg                     # honor the plan's (overridable) Lg
+        bp = D._pad_to(jnp.asarray(prob.b), dp.m_pad)
+        if spec.tol is None:
+            fn = D.make_solve_fn(dp, prob.prox, self.gamma0,
+                                 spec.iterations, self.algorithm, spec.c)
+        else:
+            fn = D.make_solve_tol_fn(dp, prob.prox, self.gamma0,
+                                     tol=spec.tol,
+                                     max_iterations=spec.max_iterations,
+                                     algorithm=self.algorithm, c=spec.c,
+                                     check_every=spec.check_every)
+        build_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        state = jax.block_until_ready(fn(dp.operands, bp))
+        # trim the partition padding back to the logical problem
+        state = PDState(xbar=state.xbar[:prob.n], xstar=state.xstar[:prob.n],
+                        yhat=state.yhat[:prob.m], gamma=state.gamma,
+                        k=state.k)
+        return state, build_s, t1
+
+
+def _default_mesh(strategy: str):
+    import jax
+    import numpy as _np
+    from jax.sharding import Mesh
+
+    devs = _np.array(jax.devices())
+    if strategy == "block2d":
+        return Mesh(devs.reshape(1, -1), ("data", "model"))
+    return Mesh(devs.reshape(-1), ("p",))
+
+
+# ---------------------------------------------------------------------------
+# The planner
+# ---------------------------------------------------------------------------
+
+_DENSE_DENSITY = 0.25     # above this, padded sparse formats store >= dense
+
+
+def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
+    """Resolve caller intent into an ExecutionPlan (no device work yet
+    beyond Lg estimation when values are unavailable)."""
+    spec = resolve_spec(spec, overrides)
+    reasons: dict[str, str] = {}
+    estimates = None
+
+    # algorithm ------------------------------------------------------------
+    if spec.algorithm != "auto":
+        algorithm = spec.algorithm
+        reasons["algorithm"] = "user override"
+    else:
+        algorithm = "a2"
+        reasons["algorithm"] = ("fused schedule: identical iterates to A1 "
+                                "with 1 fwd + 1 bwd pass, 2 sync points "
+                                "(paper Alg. 2)")
+
+    # gamma0 ---------------------------------------------------------------
+    if spec.gamma0 is not None:
+        gamma0, reasons["gamma0"] = float(spec.gamma0), "user override"
+    elif getattr(problem, "gamma0", None) is not None:
+        gamma0, reasons["gamma0"] = float(problem.gamma0), "problem default"
+    else:
+        gamma0, reasons["gamma0"] = 100.0, "planner default (paper Sec. 5)"
+
+    # execution / strategy -------------------------------------------------
+    distributed = spec.strategy is not None or spec.mesh is not None
+    if distributed and problem.coo is None:
+        raise ValueError("distributed strategies need a concrete matrix "
+                         "(COO/dense), not a matrix-free operator")
+    if distributed:
+        strategy = spec.strategy or "dualpart"
+        reasons["strategy"] = ("user override" if spec.strategy else
+                               "mesh given: dualpart caches both "
+                               "orientations (Spark dual-RDD), "
+                               "reduce-scatter on both passes")
+        execution = "single" if strategy is None else "distributed"
+        fmt, backend = "ell", "jnp"
+        reasons["format"] = ("strategies partition ELL in both orientations "
+                             "(repro.sparse.partition)")
+        reasons["backend"] = "shard_map-local jnp operators"
+        params: dict = {}
+    else:
+        strategy = None
+        reasons["strategy"] = ("single device (pass strategy=/mesh= or use "
+                               "repro.api.solve_many for fleets)")
+        execution = "single"
+        fmt, backend, params, estimates, why = _choose_format(problem, spec)
+        reasons.update(why)
+
+    # lg -------------------------------------------------------------------
+    lg, reasons["lg"] = _choose_lg(problem, spec)
+
+    return ExecutionPlan(problem=problem, spec=spec, execution=execution,
+                         algorithm=algorithm, format=fmt, backend=backend,
+                         strategy=strategy, mesh=spec.mesh, lg=lg,
+                         gamma0=gamma0, params=params, reasons=reasons,
+                         estimates=estimates)
+
+
+def _choose_format(problem, spec: SolveSpec):
+    """(format, backend, params, estimates, reasons) for a single-device
+    solve — the roofline selector extended with dense/matrix-free cases."""
+    reasons: dict[str, str] = {}
+    estimates = None
+    if problem.operator is not None:
+        reasons["format"] = reasons["backend"] = \
+            "caller-provided LinearOperator (matrix-free)"
+        return (problem.operator.format, problem.operator.backend,
+                dict(spec.format_params), None, reasons)
+
+    if spec.backend != "auto":
+        backend, reasons["backend"] = spec.backend, "user override"
+    else:
+        import jax
+        on_tpu = jax.default_backend() == "tpu"
+        backend = "pallas" if on_tpu else "jnp"
+        reasons["backend"] = ("TPU: fused Pallas kernels" if on_tpu else
+                              f"{jax.default_backend()}: jnp reference ops "
+                              "(Pallas would run in interpret mode)")
+
+    if spec.format != "auto":
+        fmt, reasons["format"] = spec.format, "user override"
+        params = dict(spec.format_params)
+    else:
+        density = problem.density
+        if density >= _DENSE_DENSITY:
+            fmt = "dense"
+            reasons["format"] = (f"density {density:.2f} >= "
+                                 f"{_DENSE_DENSITY}: padded sparse formats "
+                                 "would store at least the dense array")
+            params = {}
+        else:
+            from repro.operators.select import select_format
+            fp = select_format(problem.coo, backend=backend)
+            fmt, params, estimates = fp.format, dict(fp.params), fp.estimates
+            reasons["format"] = ("roofline selector: cheapest modeled "
+                                 "per-apply time over {ell, banded_ell, "
+                                 "bcsr} (repro.operators.select)")
+            params.update(spec.format_params)
+    if fmt in ("dense", "coo") and backend != "jnp":
+        backend = "jnp"
+        reasons["backend"] = f"{fmt} format is registered for jnp only"
+    return fmt, backend, params, estimates, reasons
+
+
+def _choose_lg(problem, spec: SolveSpec):
+    """Lg resolution: explicit > problem > Frobenius (paper init steps 1-2,
+    exact when values are host-available) > power iteration (matrix-free)."""
+    if spec.lg is not None:
+        return float(spec.lg), "user override"
+    if getattr(problem, "lg", None) is not None:
+        return float(problem.lg), "problem-supplied"
+    method = spec.lg_method
+    if method == "auto":
+        method = "frobenius" if problem.coo is not None else "power"
+    if method == "frobenius":
+        if problem.coo is None:
+            raise ValueError("lg_method='frobenius' needs matrix values; "
+                             "use 'power' for matrix-free operators")
+        lg = float(np.sum(np.square(np.asarray(problem.coo.vals))))
+        return lg, ("Lg = sum_i ||A_i||^2 (paper init steps 1-2; exact "
+                    "upper bound on ||A||^2)")
+    from repro.core.solver import estimate_lg
+
+    op = problem.operator if problem.operator is not None \
+        else problem.reference_operator()
+    lg = 1.05 * estimate_lg(op, n=problem.n)
+    return lg, ("power iteration on A^T A (core.solver.estimate_lg) "
+                "x 1.05 safety margin")

@@ -1,11 +1,43 @@
-# Two continuous-batching engines over fixed slots: Engine serves token
-# decode traffic (models), SolverEngine serves primal-dual solve traffic
-# (bucketed, padded, vmapped A2 with per-slot early exit).
-from repro.serve.engine import Engine, Request
+# The serving layer behind ONE entry point: ``create_engine(kind)``.
+#
+# Two continuous-batching engines over fixed slots exist — TokenEngine
+# (serve/engine.py: token decode traffic, serves Models) and SolverEngine
+# (serve/solver_engine.py: primal-dual solve traffic, serves
+# repro.api.Problem / SolveRequest, bucketed + padded + vmapped A2 with
+# per-slot early exit).  ``Engine`` was the token engine's old name and is
+# kept as a deprecated alias.
+from repro.serve.engine import Request, TokenEngine
 from repro.serve.solver_engine import (
     BATCHED_PROX_FAMILIES, BucketKey, SolveRequest, SolverEngine,
     batched_prox,
 )
 
-__all__ = ["BATCHED_PROX_FAMILIES", "BucketKey", "Engine", "Request",
-           "SolveRequest", "SolverEngine", "batched_prox"]
+__all__ = ["BATCHED_PROX_FAMILIES", "BucketKey", "Request", "SolveRequest",
+           "SolverEngine", "TokenEngine", "batched_prox", "create_engine"]
+
+_ENGINES = {"solver": SolverEngine, "token": TokenEngine}
+
+
+def create_engine(kind: str = "solver", **kwargs):
+    """The single serving entry point.
+
+    kind="solver" -> SolverEngine (continuous-batched primal-dual solves;
+    submit ``repro.api.Problem``s or ``SolveRequest``s).
+    kind="token"  -> TokenEngine (continuous-batched decode; submit
+    ``Request``s).  Keyword arguments go to the engine constructor.
+    """
+    try:
+        cls = _ENGINES[kind]
+    except KeyError:
+        raise KeyError(f"unknown engine kind {kind!r}; "
+                       f"available: {sorted(_ENGINES)}") from None
+    return cls(**kwargs)
+
+
+def __getattr__(name):
+    if name == "Engine":        # pre-facade name of the token engine
+        from repro.deprecation import warn_once
+        warn_once("repro.serve.Engine",
+                  "repro.serve.TokenEngine (or create_engine('token'))")
+        return TokenEngine
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

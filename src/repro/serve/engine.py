@@ -1,4 +1,4 @@
-"""Batched serving engine: continuous batching over fixed decode slots.
+"""Token serving engine: continuous batching over fixed decode slots.
 
 vLLM-style slot management reduced to its JAX-native core: a fixed decode
 batch of `slots` sequences sharing one jit'd decode_step; prefill fills a
@@ -6,6 +6,11 @@ free slot's cache region; finished sequences (EOS or max_len) free their
 slot for the next queued request. Works with any family's cache pytree
 (the slot axis is the cache's batch axis — updated functionally via
 dynamic_update_index_in_dim).
+
+This is the *token* engine (decode traffic, serves Models); its solver
+sibling is ``repro.serve.solver_engine.SolverEngine`` (solve traffic,
+serves ``repro.api.Problem``s).  Both are reached through the single
+``repro.serve.create_engine`` entry point.
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ class Request:
     done: bool = False
 
 
-class Engine:
+class TokenEngine:
     def __init__(self, model: Model, slots: int = 4, max_len: int = 64,
                  sh=None):
         self.model = model

@@ -176,6 +176,7 @@ class SolverEngine:
         self.buckets: dict[BucketKey, _Bucket] = {}
         self.completed: list[SolveRequest] = []
         self.stats = {"steps": 0, "iterations": 0, "admitted": 0}
+        self._auto_uid = 0
         # per-instance jit closures: the compile cache lives on the engine
         # (a static `self` argname would pin every engine — and its bucket
         # masters — in jit's global cache for the process lifetime)
@@ -208,7 +209,21 @@ class SolverEngine:
 
     # -- request lifecycle -------------------------------------------------
 
-    def submit(self, req: SolveRequest) -> BucketKey:
+    def submit(self, req) -> BucketKey:
+        """Queue one solve.  Accepts a ``SolveRequest`` or anything with a
+        ``to_request`` adapter — i.e. a ``repro.api.Problem``, which makes
+        the declarative Problem the engine's native admission type (uids
+        are assigned engine-side)."""
+        if not isinstance(req, SolveRequest):
+            to_request = getattr(req, "to_request", None)
+            if to_request is None:
+                raise TypeError(
+                    f"submit() takes a SolveRequest or a repro.api.Problem, "
+                    f"got {type(req).__name__}")
+            req = to_request(uid=self._auto_uid)
+        # auto uids stay clear of every uid seen so far, so mixing explicit
+        # SolveRequests and auto-uid'd Problems cannot collide
+        self._auto_uid = max(self._auto_uid, req.uid + 1)
         if req.prox not in BATCHED_PROX_FAMILIES:
             raise KeyError(f"prox family {req.prox!r} not servable; "
                            f"supported: {BATCHED_PROX_FAMILIES}")

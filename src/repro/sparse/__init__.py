@@ -1,8 +1,9 @@
 from repro.sparse.formats import (
     BCSR, COO, ELL, BandedELL, StackedBCSR, StackedELL, banded_spec,
-    banded_to_dense, bcsr_spec, bcsr_to_dense, coo_to_banded, coo_to_bcsr,
-    coo_bcsr_width, coo_to_dense, coo_to_ell, dense_to_coo, ell_spec,
-    ell_to_dense, pad_coo, stack_bcsrs, stack_ells, transpose_coo,
+    banded_to_dense, bcsr_spec, bcsr_to_coo, bcsr_to_dense, coo_to_banded,
+    coo_to_bcsr, coo_bcsr_width, coo_to_dense, coo_to_ell, dense_to_coo,
+    ell_spec, ell_to_coo, ell_to_dense, pad_coo, stack_bcsrs, stack_ells,
+    transpose_coo,
 )
 from repro.sparse.linalg import (
     banded_rmatvec, bcsr_matvec, bcsr_rmatvec, col_norms_sq, coo_matvec,

@@ -398,6 +398,39 @@ def dense_to_coo(d: np.ndarray) -> COO:
                vals=jnp.asarray(d[r, c]), m=d.shape[0], n=d.shape[1])
 
 
+def ell_to_coo(a: ELL) -> COO:
+    """Drop ELL padding back to coordinates — O(stored entries), never
+    densifies (the facade's conversion path for ELL-held Problems).
+    Explicitly-stored zeros are dropped (they contribute nothing)."""
+    vals = np.asarray(a.vals)
+    cols = np.asarray(a.cols)
+    rows = np.broadcast_to(np.arange(a.m, dtype=np.int32)[:, None],
+                           vals.shape)
+    keep = vals != 0
+    return COO(rows=jnp.asarray(rows[keep], jnp.int32),
+               cols=jnp.asarray(cols[keep], jnp.int32),
+               vals=jnp.asarray(vals[keep]), m=a.m, n=a.n)
+
+
+def bcsr_to_coo(a: BCSR) -> COO:
+    """Expand BCSR tiles back to coordinates — O(stored tile entries),
+    never densifies.  Zero fill inside tiles (and padding tiles) is
+    dropped; edge-tile rows/cols beyond (m, n) are all-zero by
+    construction, so filtering zeros also trims them."""
+    vals = np.asarray(a.vals)                         # (nbr, kb, bm, bn)
+    bcols = np.asarray(a.bcols)
+    rows = np.broadcast_to(
+        np.arange(a.nbr, dtype=np.int32)[:, None, None, None] * a.bm
+        + np.arange(a.bm, dtype=np.int32)[None, None, :, None], vals.shape)
+    cols = np.broadcast_to(
+        (bcols.astype(np.int32) * a.bn)[:, :, None, None]
+        + np.arange(a.bn, dtype=np.int32)[None, None, None, :], vals.shape)
+    keep = vals != 0
+    return COO(rows=jnp.asarray(rows[keep], jnp.int32),
+               cols=jnp.asarray(cols[keep], jnp.int32),
+               vals=jnp.asarray(vals[keep]), m=a.m, n=a.n)
+
+
 # --------------------------------------------------------------------------
 # Dry-run stand-ins (ShapeDtypeStruct leaves; no allocation)
 # --------------------------------------------------------------------------

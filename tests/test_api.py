@@ -1,0 +1,340 @@
+"""The declarative facade: Problem -> plan -> Result.
+
+Covers the API-layer contracts from DESIGN.md section 6: every plan the
+planner can emit returns the same iterates (1e-5), plans round-trip
+(repr -> override -> solve) and match the legacy entry points, Lg is never
+hand-passed (Frobenius / power-iteration estimation), the serving engine
+admits Problems, deprecation shims warn exactly once, and no in-repo
+consumer outside the kernel layer imports the legacy signatures.
+"""
+import re
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import deprecation
+from repro.api import Problem, solve_many
+from repro.core.prox import get_prox
+from repro.core.solver import estimate_lg, solve_tol
+from repro.operators import make_operator, make_solver_ops
+from repro.sparse import coo_to_bcsr, coo_to_dense, coo_to_ell, random_coo
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _lasso(m=64, n=16, k=4, seed=0):
+    coo = random_coo(m, n, k, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    x_true = np.zeros(n, np.float32)
+    x_true[rng.choice(n, 3, replace=False)] = 1.0
+    d = coo_to_dense(coo)
+    b = jnp.asarray(d @ x_true)
+    return coo, d, b
+
+
+# ---------------------------------------------------------------------------
+# estimate_lg (power iteration)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,seed", [(200, 50, 0), (64, 16, 1), (300, 120, 2)])
+def test_estimate_lg_matches_dense_oracle(m, n, seed):
+    coo = random_coo(m, n, 6, seed=seed)
+    d = coo_to_dense(coo).astype(np.float64)
+    op = make_operator("dense", "jnp", jnp.asarray(d, jnp.float32))
+    oracle = float(np.linalg.norm(d, 2) ** 2)
+    assert abs(estimate_lg(op) - oracle) <= 1e-3 * oracle
+
+
+def test_planner_power_iterates_for_matrix_free():
+    """lg is never hand-passed: a matrix-free Problem gets Lg from power
+    iteration (x1.05 safety), close to the dense ||A||^2 oracle."""
+    coo, d, b = _lasso(seed=5)
+    op = make_operator("dense", "jnp", jnp.asarray(d))
+    prob = Problem(op, b, prox="l1", reg=0.1)
+    pl = prob.plan(iterations=10)
+    assert "power iteration" in pl.reasons["lg"]
+    oracle = float(np.linalg.norm(d.astype(np.float64), 2) ** 2)
+    assert abs(pl.lg / 1.05 - oracle) <= 1e-3 * oracle
+    assert pl.solve().iterations == 10          # and the plan executes
+
+
+def test_planner_frobenius_for_concrete_matrices():
+    coo, d, b = _lasso(seed=6)
+    pl = Problem(coo, b, prox="l1", reg=0.1).plan(iterations=5)
+    np.testing.assert_allclose(pl.lg, float((d.astype(np.float64) ** 2).sum()),
+                               rtol=1e-6)
+    assert "paper init" in pl.reasons["lg"]
+
+
+# ---------------------------------------------------------------------------
+# Plan equivalence: every emittable plan returns the same x (1e-5)
+# ---------------------------------------------------------------------------
+
+SINGLE_VARIANTS = [("dense", "jnp"), ("ell", "jnp"), ("bcsr", "jnp"),
+                   ("ell", "pallas"), ("bcsr", "pallas")]
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_every_emittable_plan_matches_reference(seed):
+    """Property-style: for random COO problems, every ExecutionPlan the
+    planner can emit (a1 vs a2, dense vs ELL vs BCSR, jnp vs
+    pallas-interpret, 1-device strategies) returns x within 1e-5 of the
+    reference solve."""
+    coo, d, b = _lasso(seed=seed)
+    prob = Problem(coo, b, prox="l1", reg=0.1, gamma0=100.0)
+    base = prob.plan(iterations=60)
+    ref = base.override(format="dense", backend="jnp").solve()
+    for fmt, backend in SINGLE_VARIANTS:
+        for alg in ("a1", "a2"):
+            r = base.override(format=fmt, backend=backend,
+                              algorithm=alg).solve()
+            np.testing.assert_allclose(
+                np.asarray(r.x), np.asarray(ref.x), atol=1e-5,
+                err_msg=f"{fmt}/{backend}/{alg}")
+    for strategy in ("replicated", "dualpart"):
+        r = base.override(strategy=strategy).solve()
+        np.testing.assert_allclose(np.asarray(r.x), np.asarray(ref.x),
+                                   atol=1e-5, err_msg=strategy)
+
+
+def test_auto_plan_solves_and_explains():
+    coo, d, b = _lasso(seed=7)
+    res = Problem(coo, b, prox="l1", reg=0.1, gamma0=100.0).solve(tol=1e-2)
+    assert res.feasibility < 1e-2
+    assert res.iterations > 0
+    exp = res.plan.explain()
+    for key in ("algorithm", "format", "backend", "lg", "gamma0"):
+        assert key in exp
+    assert res.timings["total_s"] > 0
+    certs = res.certificates()
+    assert set(certs) >= {"feasibility", "objective", "gap"}
+    assert res.gap == certs["gap"]
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: repr -> override -> solve, matching the legacy entry points
+# ---------------------------------------------------------------------------
+
+def test_plan_roundtrip_matches_legacy_solve_tol():
+    coo, d, b = _lasso(seed=1)
+    prob = Problem(coo, b, prox="l1", reg=0.1, gamma0=100.0)
+    pl = prob.plan(tol=1e-3, check_every=8)
+    r = repr(pl)
+    assert "ExecutionPlan" in r and "format=" in r and "gamma0=" in r
+    over = pl.override(format="ell", backend="jnp", algorithm="a2")
+    assert over.reasons["format"] == "user override"
+    res = over.solve()
+    legacy = solve_tol(make_solver_ops(coo, "ell", "jnp"),
+                       get_prox("l1", reg=0.1), b, over.lg, 100.0,
+                       max_iterations=10_000, tol=1e-3, check_every=8)
+    assert res.iterations == int(legacy.k)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(legacy.xbar),
+                               atol=1e-5)
+
+
+def test_distributed_plan_matches_legacy_solve_distributed():
+    from jax.sharding import Mesh
+    from repro.core.distributed import solve_distributed
+
+    coo, d, b = _lasso(seed=2)
+    mesh = Mesh(np.array(jax.devices()).reshape(1), ("p",))
+    prob = Problem(coo, b, prox="l1", reg=0.1, gamma0=100.0)
+    res = prob.solve(iterations=40, strategy="dualpart", mesh=mesh)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        xbar, _ = solve_distributed(coo, b, get_prox("l1", reg=0.1), mesh,
+                                    "dualpart", gamma0=100.0, iterations=40)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(xbar),
+                               atol=1e-5)
+
+
+def test_proxop_instance_is_correct_on_pallas_backend():
+    """A ProxOp instance carries its weight in a closure; the planner must
+    not hand it to the fused prox kernel (which takes a scalar reg) — the
+    pallas path has to match the named-family path exactly."""
+    coo, d, b = _lasso(seed=8)
+    spec = dict(iterations=60, format="ell", backend="pallas", gamma0=100.0)
+    named = Problem(coo, b, prox="l1", reg=0.5).solve(**spec)
+    inst = Problem(coo, b, prox=get_prox("l1", reg=0.5)).solve(**spec)
+    np.testing.assert_allclose(np.asarray(inst.x), np.asarray(named.x),
+                               atol=1e-6)
+
+
+def test_override_mirrors_planner_validation():
+    coo, d, b = _lasso(seed=9)
+    op = make_operator("dense", "jnp", jnp.asarray(d))
+    pl = Problem(op, b, prox="l1", reg=0.1).plan(iterations=5)
+    with pytest.raises(ValueError, match="matrix-free"):
+        pl.override(strategy="dualpart")
+    # a mesh-only override is a distributed hint, like in plan()
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()).reshape(1), ("p",))
+    pl2 = Problem(coo, b, prox="l1", reg=0.1).plan(iterations=5)
+    over = pl2.override(mesh=mesh)
+    assert over.execution == "distributed" and over.strategy == "dualpart"
+    back = over.override(strategy=None)
+    assert back.execution == "single"
+
+
+def test_mixed_request_and_problem_uids_do_not_collide():
+    from repro.serve import create_engine
+
+    eng = create_engine("solver", slots=2, fmt="ell", backend="jnp",
+                        check_every=16)
+    coo, d, b = _lasso(seed=32)
+    coo2, _, b2 = _lasso(seed=33)
+    p1 = Problem(coo, b, prox="l1", reg=0.1, gamma0=100.0)
+    p2 = Problem(coo2, b2, prox="l1", reg=0.1, gamma0=100.0)
+    eng.submit(p1.to_request(uid=0, tol=1e-2))     # explicit uid 0
+    eng.submit(p2)                                  # auto uid must skip 0
+    done = eng.run()
+    assert len(done) == 2
+    assert len({r.uid for r in done}) == 2
+
+
+def test_problem_accepts_every_matrix_container():
+    """dense array, COO, ELL and BCSR inputs land on the same iterates."""
+    coo, d, b = _lasso(seed=4)
+    spec = dict(iterations=40, format="dense", backend="jnp", gamma0=100.0)
+    ref = Problem(coo, b, prox="l1", reg=0.1).solve(**spec)
+    for A in (d, coo_to_ell(coo), coo_to_bcsr(coo, bm=8, bn=16)):
+        r = Problem(A, b, prox="l1", reg=0.1).solve(**spec)
+        np.testing.assert_allclose(np.asarray(r.x), np.asarray(ref.x),
+                                   atol=1e-5, err_msg=type(A).__name__)
+
+
+# ---------------------------------------------------------------------------
+# The batched path: solve_many + engine admission of Problems
+# ---------------------------------------------------------------------------
+
+def test_solve_many_engine_path_matches_standalone():
+    probs = []
+    for i, (m, n) in enumerate([(96, 24), (64, 16), (80, 20), (64, 16)]):
+        coo, d, b = _lasso(m, n, 4, seed=10 + i)
+        probs.append(Problem(coo, b, prox="l1", reg=0.1, gamma0=100.0))
+    results = solve_many(probs, tol=1e-2, max_iterations=4000,
+                         check_every=16, slots=2)
+    assert results[0].plan.execution == "engine"
+    for p, r in zip(probs, results):
+        assert r.feasibility < 1e-2
+        ref = p.solve(tol=1e-2, max_iterations=4000, check_every=16,
+                      format="ell", backend="jnp")
+        assert r.iterations == ref.iterations
+        np.testing.assert_allclose(np.asarray(r.x), np.asarray(ref.x),
+                                   atol=1e-5)
+        with pytest.raises(ValueError, match="no solver state"):
+            r.certificates()
+    with pytest.raises(RuntimeError, match="solve_many"):
+        results[0].plan.solve()
+
+
+def test_solve_many_sequential_fallbacks():
+    coo, d, b = _lasso(seed=20)
+    coo2, _, b2 = _lasso(seed=21)
+    # un-servable prox (ProxOp instance) -> sequential single plans
+    probs = [Problem(coo, b, prox=get_prox("l1", reg=0.1), gamma0=100.0),
+             Problem(coo2, b2, prox=get_prox("l1", reg=0.1), gamma0=100.0)]
+    rs = solve_many(probs, tol=1e-2)
+    assert all(r.plan.execution == "single" for r in rs)
+    # batch="never" forces sequential even for servable fleets
+    probs = [Problem(coo, b, prox="l1", reg=0.1, gamma0=100.0),
+             Problem(coo2, b2, prox="l1", reg=0.1, gamma0=100.0)]
+    rs = solve_many(probs, tol=1e-2, batch="never")
+    assert all(r.plan.execution == "single" for r in rs)
+
+
+def test_engine_admits_problems_directly():
+    from repro.serve import SolverEngine, create_engine
+
+    eng = create_engine("solver", slots=2, fmt="ell", backend="jnp",
+                        check_every=16)
+    assert isinstance(eng, SolverEngine)
+    coo, d, b = _lasso(seed=30)
+    eng.submit(Problem(coo, b, prox="l1", reg=0.1, gamma0=100.0))
+    done = eng.run()
+    assert len(done) == 1 and done[0].done
+    with pytest.raises(TypeError, match="SolveRequest or a repro.api"):
+        eng.submit(object())
+    with pytest.raises(KeyError, match="unknown engine kind"):
+        create_engine("tokens")
+
+
+def test_unservable_problem_rejected_by_to_request():
+    coo, d, b = _lasso(seed=31)
+    with pytest.raises(ValueError, match="not a servable family"):
+        Problem(coo, b, prox="group_l1").to_request()
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: one warning per process, pointing at the facade
+# ---------------------------------------------------------------------------
+
+def test_legacy_shims_warn_once_then_stay_silent():
+    from repro.core.solver import dense_ops
+
+    deprecation.reset()
+    d = jnp.eye(2)
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        dense_ops(d)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # a second warning would raise
+        dense_ops(d)
+
+
+def test_serve_engine_alias_warns():
+    deprecation.reset()
+    with pytest.warns(DeprecationWarning, match="TokenEngine"):
+        from repro.serve import Engine
+    from repro.serve import TokenEngine
+    assert Engine is TokenEngine
+
+
+def test_solve_distributed_warns():
+    from jax.sharding import Mesh
+    from repro.core.distributed import solve_distributed
+
+    deprecation.reset()
+    coo, d, b = _lasso(seed=40)
+    mesh = Mesh(np.array(jax.devices()).reshape(1), ("p",))
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        solve_distributed(coo, b, get_prox("l1", reg=0.1), mesh,
+                          "replicated", gamma0=100.0, iterations=2)
+
+
+# ---------------------------------------------------------------------------
+# Grep-style: no in-repo caller outside the kernel layer uses the legacy
+# signatures directly (they go through the facade)
+# ---------------------------------------------------------------------------
+
+_LEGACY = re.compile(
+    r"\b(dense_ops|ell_ops|solve_distributed)\b"
+    r"|serve import Engine\b|serve\.Engine\b")
+
+#: the kernel layer / shim implementations themselves
+_ALLOWED = {
+    "src/repro/core/solver.py",          # defines the shims
+    "src/repro/core/distributed.py",     # defines solve_distributed
+    "src/repro/core/__init__.py",        # re-exports the kernel layer
+    "src/repro/deprecation.py",
+    "src/repro/serve/__init__.py",       # implements the Engine alias
+}
+
+
+def test_no_legacy_imports_outside_kernel_layer():
+    offenders = []
+    for root in ("src/repro", "examples", "benchmarks"):
+        for path in sorted((REPO / root).rglob("*.py")):
+            rel = str(path.relative_to(REPO))
+            if rel in _ALLOWED:
+                continue
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if _LEGACY.search(line):
+                    offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, (
+        "legacy solver signatures used outside core/ shims — route through "
+        "repro.api instead:\n" + "\n".join(offenders))

@@ -15,7 +15,7 @@ from repro.core.solver import ell_ops, solve, solve_tol
 from repro.data import SyntheticTokens
 from repro.kernels import kernel_ops
 from repro.models import build_model
-from repro.serve import Engine, Request
+from repro.serve import Request, TokenEngine
 from repro.sparse import (
     coo_to_banded, coo_to_ell, col_partitioned_ell, ell_col_norms_sq,
     make_lasso,
@@ -61,7 +61,7 @@ def test_engine_serves_batched_requests(arch, key):
     cfg = reduced(get_config(arch))
     model = build_model(cfg)
     params = model.init(key)
-    eng = Engine(model, slots=2, max_len=32)
+    eng = TokenEngine(model, slots=2, max_len=32)
     eng.init_state(params)
     rng = np.random.default_rng(0)
     reqs = []
@@ -83,7 +83,7 @@ def test_engine_greedy_determinism(key):
     params = model.init(key)
     outs = []
     for _ in range(2):
-        eng = Engine(model, slots=1, max_len=24)
+        eng = TokenEngine(model, slots=1, max_len=24)
         eng.init_state(params)
         r = Request(uid=0, prompt=np.array([5, 6, 7], np.int32),
                     max_new_tokens=6)
