@@ -10,8 +10,29 @@ via `serve.create_engine("solver")` when you want the bucket-level view.
 One problem is re-solved standalone to show the engine returns the same
 iterates as a single-problem plan.
 
-    PYTHONPATH=src python examples/solver_service.py
+``--devices N`` serves the fleet on a mesh of N (forced host) devices:
+buckets land round-robin and any problem above the sharded-placement
+threshold (here shrunk with ``--shard-above``) is partitioned mesh-wide.
+The flag must be processed before jax initialises, hence the argv peek
+ahead of the repro imports.
+
+    PYTHONPATH=src python examples/solver_service.py [--devices 4]
 """
+import argparse
+
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--shard-above", type=int, default=None)
+    return ap.parse_known_args()[0]
+
+
+ARGS = _parse_args()
+from repro.launch.devices import force_host_devices  # noqa: E402 (pre-jax)
+
+force_host_devices(ARGS.devices)
+
 import numpy as np
 
 import repro as pd
@@ -53,13 +74,15 @@ def main():
               f"||x||_0={int(np.sum(np.abs(np.asarray(r.x)) > 1e-6))}/{p.n}")
 
     # under the hood: the engine admits Problems directly and shows its
-    # bucketing decisions
+    # bucketing + placement decisions (mesh-wide with --devices)
     eng = create_engine("solver", slots=4, fmt="ell", backend="jnp",
-                        check_every=16)
+                        check_every=16, devices=ARGS.devices,
+                        shard_above=ARGS.shard_above)
     for p in probs[:6]:
         key = eng.submit(p)         # a Problem is the engine's request type
-        print(f"submit {p} -> bucket ({key.m_pad}x{key.n_pad}, "
-              f"k={key.width}/{key.width_t}, {key.prox})")
+        kind = type(key).__name__
+        print(f"submit {p} -> {kind}({key.m_pad}x{key.n_pad}, "
+              f"k={key.width}, {key.prox}) on {len(eng.devices)} device(s)")
     eng.run()
 
     # the engine's contract: same iterates as a standalone single plan

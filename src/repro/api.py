@@ -40,6 +40,45 @@ __all__ = ["ExecutionPlan", "Problem", "Result", "SolveSpec", "plan",
 #: prox families whose constructor takes a ``reg`` weight.
 _REG_FAMILIES = ("l1", "sq_l2", "elastic_net")
 
+_DOWNCAST_WARNED: set = set()
+
+
+def _warn_downcast(what: str, src) -> None:
+    """One warning per (operand, dtype) per process: float64 inputs are
+    canonicalized to float32 (jax default), which silently changes the
+    caller's tolerance semantics — say so instead."""
+    import warnings
+
+    key = (what, str(src))
+    if key in _DOWNCAST_WARNED:
+        return
+    _DOWNCAST_WARNED.add(key)
+    warnings.warn(
+        f"Problem {what} is {src} but operands are canonicalized to "
+        "float32 (jax runs with x64 disabled by default), so float64 "
+        "tolerance/conditioning semantics are NOT preserved. Pass "
+        "dtype=np.float32 to acknowledge the downcast, or dtype=np.float64 "
+        "after jax.config.update('jax_enable_x64', True).",
+        UserWarning, stacklevel=4)
+
+
+def _resolve_dtype(dtype):
+    """Explicit dtype > float32 canon; float64 demands jax x64 (otherwise
+    jnp.asarray would silently hand back float32 anyway)."""
+    if dtype is None:
+        return np.dtype(np.float32)
+    dt = np.dtype(dtype)
+    if dt not in (np.dtype(np.float32), np.dtype(np.float64)):
+        raise ValueError(f"dtype must be float32 or float64, got {dt}")
+    if dt == np.float64:
+        import jax
+
+        if not jax.config.jax_enable_x64:
+            raise ValueError(
+                "dtype=float64 needs jax x64: call "
+                "jax.config.update('jax_enable_x64', True) at startup")
+    return dt
+
 
 class Problem:
     """Declarative ``min f(x) s.t. Ax = b``.
@@ -53,12 +92,16 @@ class Problem:
     lg     optional Lipschitz constant ``Lg``; when None the planner
            computes ``sum_i ||A_i||^2`` (paper init) or power-iterates.
     gamma0 optional smoothing schedule start; planner default otherwise.
+    dtype  operand dtype, canonicalized explicitly: None means float32
+           (with a one-time warning when that downcasts float64 inputs —
+           the tolerance the caller stated in float64 semantics would
+           otherwise silently change); float64 requires jax x64.
     """
 
     def __init__(self, A: Any, b: Any, prox: Any = "l1",
                  reg: Optional[float] = None, *, lg: Optional[float] = None,
                  gamma0: Optional[float] = None,
-                 prox_kwargs: Optional[dict] = None):
+                 prox_kwargs: Optional[dict] = None, dtype: Any = None):
         import jax.numpy as jnp
 
         from repro.core.prox import ProxOp, get_prox
@@ -67,6 +110,7 @@ class Problem:
             BCSR, COO, ELL, bcsr_to_coo, ell_to_coo,
         )
 
+        self.dtype = _resolve_dtype(dtype)
         self.operator: Optional[LinearOperator] = None
         self._coo = None
         self._dense = None
@@ -85,16 +129,29 @@ class Problem:
             self._coo = bcsr_to_coo(A)
             m, n = A.m, A.n
         else:
-            arr = np.asarray(A, np.float32)
+            arr = np.asarray(A)
             if arr.ndim != 2:
                 raise ValueError(f"A must be 2-D, got shape {arr.shape}")
-            self._dense = arr
+            if dtype is None and arr.dtype == np.float64:
+                _warn_downcast("A", arr.dtype)
+            self._dense = arr.astype(self.dtype, copy=False)
             m, n = arr.shape
+        if self._coo is not None and \
+                np.dtype(self._coo.vals.dtype) != self.dtype:
+            if dtype is None and \
+                    np.dtype(self._coo.vals.dtype) == np.float64:
+                _warn_downcast("A.vals", self._coo.vals.dtype)
+            self._coo = COO(rows=self._coo.rows, cols=self._coo.cols,
+                            vals=jnp.asarray(self._coo.vals, self.dtype),
+                            m=self._coo.m, n=self._coo.n)
         self.m, self.n = int(m), int(n)
         self.lg = float(lg) if lg is not None else None
         self.gamma0 = float(gamma0) if gamma0 is not None else None
 
-        self.b = jnp.asarray(b, jnp.float32)
+        b_arr = np.asarray(b)
+        if dtype is None and b_arr.dtype == np.float64:
+            _warn_downcast("b", b_arr.dtype)
+        self.b = jnp.asarray(b_arr, self.dtype)
         if self.b.shape != (self.m,):
             raise ValueError(f"b has shape {self.b.shape}, expected "
                              f"({self.m},)")
@@ -272,7 +329,8 @@ def solve_many(problems: list[Problem], spec: SolveSpec | None = None,
     backend = spec.backend if spec.backend in ("jnp", "pallas") else "jnp"
     eng = SolverEngine(slots=spec.slots, fmt=fmt, backend=backend,
                        check_every=spec.check_every,
-                       interpret=spec.interpret)
+                       interpret=spec.interpret, devices=spec.devices,
+                       shard_above=spec.shard_above)
     requests = [p.to_request(uid=i, tol=spec.tol,
                              max_iterations=spec.max_iterations,
                              gamma0=spec.gamma0)
@@ -286,10 +344,14 @@ def solve_many(problems: list[Problem], spec: SolveSpec | None = None,
         problem=None, spec=spec, execution="engine", algorithm="a2",
         format=fmt, backend=backend, strategy=None, mesh=None,
         lg=float("nan"), gamma0=float("nan"),
-        params=dict(slots=spec.slots, buckets=len(eng.buckets)),
+        params=dict(slots=spec.slots, buckets=len(eng.buckets),
+                    devices=len(eng.devices),
+                    sharded_admitted=eng.stats["sharded_admitted"]),
+        placement="replicated" if len(eng.devices) > 1 else "single",
         reasons=dict(execution=(
             f"{len(problems)} servable problems with tol set: slot-batched "
-            "engine (one compiled masked step per shape bucket)")))
+            "engine (one compiled masked step per shape bucket, "
+            f"{len(eng.devices)} device(s))")))
     results = []
     for i, p in enumerate(problems):
         req = done[i]

@@ -294,7 +294,12 @@ def solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
               max_iterations: int = 10_000, tol: float = 1e-6,
               algorithm: str = "a2", c: float = 3.0, check_every: int = 8):
     """Early-stopping solve (paper step 8/10 stopping_criterion):
-    relative feasibility ||A xbar - b|| / max(1, ||b||) < tol."""
+    relative feasibility ||A xbar - b|| / max(1, ||b||) < tol.
+
+    ``max_iterations`` is a hard cap: the inner block is clamped to
+    ``min(check_every, max_iterations - k)`` so the final partial block
+    never oversteps the budget (feasibility is still only *checked* on the
+    ``check_every`` grid and once at the cap)."""
     init = (a2_init if algorithm == "a2" else a1_init)(ops, prox, b, lg, gamma0, c)
     step = a2_step if algorithm == "a2" else a1_step
     bnorm = jnp.maximum(jnp.linalg.norm(b), 1.0)
@@ -303,10 +308,10 @@ def solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
         feas = jnp.linalg.norm(ops.matvec(state.xbar) - b) / bnorm
         return jnp.logical_and(state.k < max_iterations, feas >= tol)
 
-    def body(state):  # check_every inner steps per feasibility check
+    def body(state):  # <= check_every inner steps per feasibility check
         return jax.lax.fori_loop(
-            0, check_every, lambda _, s: step(ops, prox, b, lg, gamma0, s, c),
-            state)
+            0, jnp.minimum(check_every, max_iterations - state.k),
+            lambda _, s: step(ops, prox, b, lg, gamma0, s, c), state)
 
     return jax.lax.while_loop(cond, body, init)
 
@@ -454,7 +459,10 @@ def batched_solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
     (is mask-frozen) once its relative feasibility drops below its tol or
     its k reaches its max_iterations, checked every ``check_every``
     iterations — the same cadence as ``solve_tol``, so a slot's final state
-    matches the standalone call.  ``active`` pre-masks slots so a partially
+    matches the standalone call.  Like ``solve_tol``, max_iterations is a
+    hard per-slot cap: inside a check block each slot additionally freezes
+    at ``k == max_iterations``, so ragged budgets never overrun by a
+    partial block.  ``active`` pre-masks slots so a partially
     filled batch never steps its empty slots.  (The serving engine
     implements the same semantics with its own jit'd bodies —
     repro.serve.solver_engine — because it also needs mid-stream admission;
@@ -475,7 +483,7 @@ def batched_solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
         state = jax.lax.fori_loop(
             0, check_every,
             lambda _, s: batched_step(ops, prox, b, lg, gamma0, s, algorithm,
-                                      c, mask=act),
+                                      c, mask=act & (s.k < maxit)),
             state)
         feas = batched_feasibility(ops, b, state)
         return state, act & (feas >= tol) & (state.k < maxit)

@@ -4,7 +4,12 @@
 # The batched_* variants carry a leading batch axis (batch grid dimension /
 # vmap-over-pallas_call) for the solver serving engine. Validated in
 # interpret mode on CPU (no TPU in this container); written with explicit
-# BlockSpec VMEM tiling for the v5e target.
+# BlockSpec VMEM tiling for the v5e target.  Interpret mode is resolved in
+# exactly one place — ``default_interpret`` (explicit flag > env
+# REPRO_PALLAS_INTERPRET > jax.default_backend() != "tpu") — so the
+# "pallas" backend compiles through Mosaic on a real TPU instead of
+# silently running under the interpreter.
+from repro.kernels.interpret import default_interpret
 from repro.kernels.ops import (
     banded_spmv_t, batched_bcsr_spmv, batched_ell_spmv,
     batched_fused_dual_update, bcsr_spmv, ell_spmv, fused_dual_update,
@@ -12,5 +17,5 @@ from repro.kernels.ops import (
 )
 
 __all__ = ["banded_spmv_t", "batched_bcsr_spmv", "batched_ell_spmv",
-           "batched_fused_dual_update", "bcsr_spmv", "ell_spmv",
-           "fused_dual_update", "kernel_ops", "prox_update"]
+           "batched_fused_dual_update", "bcsr_spmv", "default_interpret",
+           "ell_spmv", "fused_dual_update", "kernel_ops", "prox_update"]

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import default_interpret
+
 
 def _kernel(vals_ref, rows_ref, y_ref, out_ref):
     band = pl.program_id(1)
@@ -37,7 +39,7 @@ def _kernel(vals_ref, rows_ref, y_ref, out_ref):
 
 def banded_spmv_t_pallas(vals: jax.Array, rows: jax.Array, y: jax.Array,
                          band_size: int, *, block_cols: int = 512,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     num_bands, n, kb = vals.shape
     assert n % block_cols == 0, (n, block_cols)
     assert y.shape[0] == num_bands * band_size
@@ -51,5 +53,5 @@ def banded_spmv_t_pallas(vals: jax.Array, rows: jax.Array, y: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_cols,), lambda j, b: (j,)),
         out_shape=jax.ShapeDtypeStruct((n,), y.dtype),
-        interpret=interpret,
+        interpret=default_interpret(interpret),
     )(vals, rows, y)

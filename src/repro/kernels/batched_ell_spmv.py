@@ -11,16 +11,17 @@ This is the kernel-level version of the multi-tenant batching argument
 (Dünner et al.): per-call fixed costs — dispatch, grid setup, pipeline
 prologue — are paid once per *bucket* instead of once per *problem*.
 
-interpret=True by default: this container is CPU-only, so the kernel runs
-under the Pallas interpreter; on a real TPU pass interpret=False (the
-wrappers in repro.kernels.ops do this automatically) to lower through
-Mosaic.
+interpret=None by default, resolved by ``repro.kernels.default_interpret``
+(interpreter off-TPU — this container is CPU-only — Mosaic-compiled on a
+real TPU; env REPRO_PALLAS_INTERPRET overrides).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import default_interpret
 
 
 def _kernel(vals_ref, cols_ref, x_ref, out_ref):
@@ -34,7 +35,7 @@ def _kernel(vals_ref, cols_ref, x_ref, out_ref):
 
 
 def batched_ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
-                            *, block_rows: int = 512, interpret: bool = True):
+                            *, block_rows: int = 512, interpret: bool | None = None):
     """vals/cols: (B, m, k);  x: (B, n)  ->  y: (B, m)."""
     bsz, m, k = vals.shape
     assert m % block_rows == 0, (m, block_rows)
@@ -49,5 +50,5 @@ def batched_ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, block_rows), lambda b, i: (b, i)),
         out_shape=jax.ShapeDtypeStruct((bsz, m), x.dtype),
-        interpret=interpret,
+        interpret=default_interpret(interpret),
     )(vals, cols, x)

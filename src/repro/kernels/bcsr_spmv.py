@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import default_interpret
+
 
 def _kernel(vals_ref, bcols_ref, x_ref, out_ref):
     vals = vals_ref[...]                       # (TB, kb, bm, bn)
@@ -40,7 +42,7 @@ def _kernel(vals_ref, bcols_ref, x_ref, out_ref):
 
 
 def bcsr_spmv_pallas(vals: jax.Array, bcols: jax.Array, xt: jax.Array,
-                     *, block_brows: int = 8, interpret: bool = True):
+                     *, block_brows: int = 8, interpret: bool | None = None):
     nbr, kb, bm, bn = vals.shape
     assert nbr % block_brows == 0, (nbr, block_brows)
     nbc = xt.shape[0]
@@ -55,5 +57,5 @@ def bcsr_spmv_pallas(vals: jax.Array, bcols: jax.Array, xt: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_brows, bm), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nbr, bm), xt.dtype),
-        interpret=interpret,
+        interpret=default_interpret(interpret),
     )(vals, bcols, xt)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import default_interpret
+
 
 def _kernel(vals_ref, cols_ref, x_ref, out_ref):
     vals = vals_ref[...]                       # (TM, k)
@@ -29,7 +31,7 @@ def _kernel(vals_ref, cols_ref, x_ref, out_ref):
 
 
 def ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
-                    *, block_rows: int = 512, interpret: bool = True):
+                    *, block_rows: int = 512, interpret: bool | None = None):
     m, k = vals.shape
     assert m % block_rows == 0, (m, block_rows)
     n = x.shape[0]
@@ -43,5 +45,5 @@ def ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
-        interpret=interpret,
+        interpret=default_interpret(interpret),
     )(vals, cols, x)

@@ -11,14 +11,13 @@ forward matrix operator".
 Scalars (c0..c3) arrive as a (4,)-vector operand (per-iteration traced
 values, so they cannot be compile-time constants).
 
-``interpret=True`` is the default at this layer: the container this repo
-develops on is CPU-only, so the kernel executes under the Pallas
-interpreter (functionally exact, orders of magnitude slower than compiled).
-On a TPU you want ``interpret=False`` so the kernel lowers through Mosaic
-onto the VPU with real HBM->VMEM pipelining — the jit'd wrappers in
-``repro.kernels.ops`` pick this automatically from
-``jax.default_backend()``; only call these ``*_pallas`` entry points
-directly if you are managing interpret mode yourself.
+``interpret=None`` (the default) resolves through
+``repro.kernels.default_interpret``: interpreter execution off-TPU
+(functionally exact, orders of magnitude slower than compiled — this
+container is CPU-only), Mosaic-compiled on a TPU so the kernel lowers onto
+the VPU with real HBM->VMEM pipelining.  ``REPRO_PALLAS_INTERPRET=0|1``
+overrides the auto rule; pass an explicit bool only if you are managing
+interpret mode yourself.
 
 ``batched_fused_dual_update_pallas`` is the serving-engine variant: stacked
 operands with a leading batch axis, per-slot coefficient rows (B, 4), and a
@@ -29,6 +28,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import default_interpret
 
 
 def _kernel(coef_ref, vals_ref, cols_ref, xstar_ref, xbar_ref, yhat_ref,
@@ -48,7 +49,7 @@ def fused_dual_update_pallas(coefs: jax.Array, vals: jax.Array,
                              cols: jax.Array, xstar: jax.Array,
                              xbar: jax.Array, yhat: jax.Array, b: jax.Array,
                              *, block_rows: int = 512,
-                             interpret: bool = True):
+                             interpret: bool | None = None):
     m, k = vals.shape
     assert m % block_rows == 0, (m, block_rows)
     n = xstar.shape[0]
@@ -66,7 +67,7 @@ def fused_dual_update_pallas(coefs: jax.Array, vals: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((m,), yhat.dtype),
-        interpret=interpret,
+        interpret=default_interpret(interpret),
     )(coefs, vals, cols, xstar, xbar, yhat, b)
 
 
@@ -87,7 +88,7 @@ def batched_fused_dual_update_pallas(coefs: jax.Array, vals: jax.Array,
                                      cols: jax.Array, xstar: jax.Array,
                                      xbar: jax.Array, yhat: jax.Array,
                                      b: jax.Array, *, block_rows: int = 512,
-                                     interpret: bool = True):
+                                     interpret: bool | None = None):
     """Per-slot eq. 15 over stacked ELL: one launch for the whole bucket.
 
     coefs: (B, 4) per-slot (c0..c3) — each problem sits at its own iteration
@@ -111,5 +112,5 @@ def batched_fused_dual_update_pallas(coefs: jax.Array, vals: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, block_rows), lambda bi, i: (bi, i)),
         out_shape=jax.ShapeDtypeStruct((bsz, m), yhat.dtype),
-        interpret=interpret,
+        interpret=default_interpret(interpret),
     )(coefs, vals, cols, xstar, xbar, yhat, b)

@@ -1,0 +1,43 @@
+"""The ONE resolution point for Pallas interpret mode.
+
+Every kernel in this package takes ``interpret: bool | None = None`` and
+resolves it here.  Historically the kernels hardcoded ``interpret=True``
+(correct for this CPU-only container, silently catastrophic on a real TPU:
+the "pallas" backend would run under the interpreter, orders of magnitude
+slower than Mosaic-compiled kernels).  The default is now keyed on the
+actual runtime backend:
+
+    explicit flag  >  REPRO_PALLAS_INTERPRET env var  >  auto
+                                  (auto = jax.default_backend() != "tpu")
+
+The env var accepts 1/0/true/false/yes/no/on/off (case-insensitive;
+"auto"/"" fall through to the backend rule) so a deployment can force
+either mode without touching call sites.  The planner records the resolved
+value in every pallas plan's reasons (repro.plan).
+"""
+from __future__ import annotations
+
+import os
+
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def default_interpret(flag: bool | None = None) -> bool:
+    """Resolve an interpret-mode flag: explicit > env > backend-keyed auto.
+
+    >>> default_interpret(True), default_interpret(False)
+    (True, False)
+    >>> default_interpret() == (__import__("jax").default_backend() != "tpu")
+    True
+    """
+    if flag is not None:
+        return bool(flag)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -1,10 +1,11 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Handle padding to tile multiples, pick interpret mode automatically
-(interpret=True off-TPU — this container is CPU-only; on a real TPU the same
-calls lower through Mosaic), and expose a ``kernel_ops`` factory that wires
-the kernels into a ``SolverOps`` bundle so the solver's hot loop runs
-entirely on fused kernels.
+Handle padding to tile multiples, resolve interpret mode through the one
+``repro.kernels.default_interpret`` helper (interpret=True off-TPU — this
+container is CPU-only; on a real TPU the same calls lower through Mosaic;
+env REPRO_PALLAS_INTERPRET overrides), and expose a ``kernel_ops`` factory
+that wires the kernels into a ``SolverOps`` bundle so the solver's hot loop
+runs entirely on fused kernels.
 """
 from __future__ import annotations
 
@@ -15,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.prox import ProxOp
 from repro.kernels.banded_spmv_t import banded_spmv_t_pallas
+from repro.kernels.interpret import default_interpret
 from repro.kernels.batched_ell_spmv import batched_ell_spmv_pallas
 from repro.kernels.bcsr_spmv import bcsr_spmv_pallas
 from repro.kernels.ell_spmv import ell_spmv_pallas
@@ -25,8 +27,7 @@ from repro.kernels.prox_update import prox_update_pallas
 from repro.sparse.formats import BCSR, ELL, BandedELL, StackedBCSR, StackedELL
 
 
-def _interp(flag):
-    return jax.default_backend() != "tpu" if flag is None else flag
+_interp = default_interpret
 
 
 def _pad_multiple(arr, mult, axis=0):

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import default_interpret
+
 
 def _kernel(coef_ref, zhat_ref, xbar_ref, xc_ref, xstar_out, xbar_out):
     c = coef_ref[...].astype(jnp.float32)
@@ -30,7 +32,7 @@ def _kernel(coef_ref, zhat_ref, xbar_ref, xc_ref, xstar_out, xbar_out):
 
 def prox_update_pallas(coefs: jax.Array, zhat: jax.Array, xbar: jax.Array,
                        xc: jax.Array, *, block: int = 1024,
-                       interpret: bool = True):
+                       interpret: bool | None = None):
     n = zhat.shape[0]
     assert n % block == 0, (n, block)
     vec = pl.BlockSpec((block,), lambda i: (i,))
@@ -41,5 +43,5 @@ def prox_update_pallas(coefs: jax.Array, zhat: jax.Array, xbar: jax.Array,
         in_specs=[pl.BlockSpec((3,), lambda i: (0,)), vec, vec, vec],
         out_specs=(vec, vec),
         out_shape=(out_sds, out_sds),
-        interpret=interpret,
+        interpret=default_interpret(interpret),
     )(coefs, zhat, xbar, xc)

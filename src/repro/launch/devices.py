@@ -1,0 +1,26 @@
+"""Device-count bootstrap for CLIs: one place for the XLA_FLAGS dance.
+
+The host platform's device count locks at jax initialisation, so a
+``--devices N`` knob must append ``--xla_force_host_platform_device_count``
+to ``XLA_FLAGS`` *before* anything imports jax.  Importing this module is
+safe pre-jax (``import repro`` is lazy and pulls no jax).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def force_host_devices(n: int | None) -> bool:
+    """Request ``n`` forced host devices; returns whether the flag was set.
+
+    A no-op (returning False) when ``n`` is falsy or jax is already
+    imported — in the latter case the flag would be silently ignored, so
+    the caller's engine just takes the first ``n`` existing devices.
+    """
+    if not n or "jax" in sys.modules:
+        return False
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(n)}")
+    return True

@@ -8,30 +8,43 @@ traffic the serving engine buckets), drains it through the solver engine
 single-problem facade plans for the throughput ratio the batching exists
 for.
 
+``--devices N`` serves on a mesh of N devices (forced host devices when the
+platform has fewer — the CPU-bringup path): buckets are pinned round-robin
+and requests above ``--shard-above`` stored entries are admitted into
+mesh-wide sharded buckets.  Device count locks at jax initialisation, so
+the flag must be handled before anything imports jax — which is why this
+module's repro imports live inside the functions.
+
   PYTHONPATH=src python -m repro.launch.solver_serve --requests 16 \
-      --slots 8 --fmt ell --backend jnp --tol 1e-2 --compare-sequential
+      --slots 8 --fmt ell --backend jnp --tol 1e-2 --compare-sequential \
+      --devices 4 --shard-above 2000
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import numpy as np
 
-from repro.api import Problem
-from repro.configs.base import PaperProblemConfig
-from repro.serve import create_engine
-from repro.sparse import make_lasso
+def make_problems(num: int, seed: int = 0, gamma0: float = 1000.0,
+                  big_every: int = 0, big_shape=(1024, 128), shapes=None):
+    """Ragged problem stream: 3 shape families x 2 regularizers; with
+    ``big_every`` > 0 every big_every-th request is an oversized instance
+    (``big_shape``) — the traffic that exercises sharded placement."""
+    import numpy as np
 
+    from repro.api import Problem
+    from repro.configs.base import PaperProblemConfig
+    from repro.sparse import make_lasso
 
-def make_problems(num: int, seed: int = 0,
-                  gamma0: float = 1000.0) -> list[Problem]:
-    """Ragged problem stream: 3 shape families x 2 regularizers."""
     rng = np.random.default_rng(seed)
-    shapes = [(192, 48), (128, 32), (256, 64)]
+    shapes = shapes or [(192, 48), (128, 32), (256, 64)]
     probs = []
     for i in range(num):
-        m, n = shapes[i % len(shapes)]
+        if big_every and i % big_every == big_every - 1:
+            m, n = big_shape
+        else:
+            m, n = shapes[i % len(shapes)]
         cfg = PaperProblemConfig(name=f"req{i}", m=m, n=n, nnz=m * 8,
                                  reg=0.1)
         coo, b, _ = make_lasso(cfg, seed=int(rng.integers(1 << 30)))
@@ -40,7 +53,7 @@ def make_problems(num: int, seed: int = 0,
     return probs
 
 
-def solve_sequentially(probs: list[Problem], tol: float = 1e-2,
+def solve_sequentially(probs, tol: float = 1e-2,
                        check_every: int = 16, max_iterations: int = 4000):
     """The baseline the engine replaces: one single-problem facade plan per
     request (same format/backend/stopping rule the engine applies per
@@ -59,11 +72,27 @@ def main(argv=None):
     ap.add_argument("--tol", type=float, default=1e-2)
     ap.add_argument("--check-every", type=int, default=16)
     ap.add_argument("--compare-sequential", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="serve on a mesh of N devices (forces host "
+                         "devices when the platform has fewer; must run "
+                         "before jax initialises)")
+    ap.add_argument("--shard-above", type=int, default=None,
+                    help="per-device stored-entry capacity for the "
+                         "sharded-placement rule (default: planner's)")
+    ap.add_argument("--big-every", type=int, default=0,
+                    help="make every N-th request oversized (routes to a "
+                         "sharded bucket when above --shard-above)")
     args = ap.parse_args(argv)
 
-    probs = make_problems(args.requests)
+    from repro.launch.devices import force_host_devices
+    force_host_devices(args.devices)
+
+    from repro.serve import create_engine
+
+    probs = make_problems(args.requests, big_every=args.big_every)
     eng = create_engine("solver", slots=args.slots, fmt=args.fmt,
-                        backend=args.backend, check_every=args.check_every)
+                        backend=args.backend, check_every=args.check_every,
+                        devices=args.devices, shard_above=args.shard_above)
     reqs = [p.to_request(uid=i, tol=args.tol, max_iterations=4000)
             for i, p in enumerate(probs)]
     for r in reqs:
@@ -77,7 +106,9 @@ def main(argv=None):
     rps = len(done) / max(dt, 1e-9)
     print(f"[solver-serve] {len(done)} requests in {dt:.2f}s "
           f"({rps:.1f} req/s; {len(eng.buckets)} buckets x {args.slots} "
-          f"slots, {eng.stats['iterations']} slot-iterations)")
+          f"slots, {eng.stats['iterations']} slot-iterations, "
+          f"{len(eng.devices)} devices, "
+          f"{eng.stats['sharded_admitted']} sharded admissions)")
     if args.compare_sequential:
         t0 = time.time()
         solve_sequentially(probs, tol=args.tol,

@@ -121,6 +121,53 @@ def block2d_operator(problem, operands) -> LinearOperator:
                           backend="block2d")
 
 
+@register("stacked_ell", "rowpart")
+def stacked_rowpart_operator(a, axis: str, at_vals=None,
+                             at_rows=None) -> LinearOperator:
+    """Slot-batched row-partitioned local operator (runs INSIDE shard_map) —
+    the serving engine's mesh-wide buckets (core.distributed
+    .make_sharded_bucket_fns).
+
+    ``a`` is the device-local shard of a StackedELL: vals/cols (S, m_loc, k)
+    with GLOBAL column indices into [0, n).  x (S, n) is replicated, y
+    (S, m_loc) row-sharded — the batched rowpart signature: fwd local
+    gather, bwd partial A^T y + psum(n) ~ MR1/MR3 per slot.  The gathers
+    are flattened with slot offsets (one flat gather for the whole slot
+    batch, like sparse.linalg.stacked_ell_matvec).
+
+    ``at_vals``/``at_rows`` (S, n, k_t), when given, are this shard's
+    TRANSPOSE blocks (``sparse.partition.rowshard_transpose_ell``, row
+    indices local to the shard's y slice) — the dual-copy memory-for-
+    gather trade applied per row shard, so the backward is gather-only
+    instead of scatter-add.  Without them the backward falls back to a
+    flat scatter-add.
+    """
+    from repro.sparse.linalg import stacked_ell_matvec
+
+    n = a.n
+
+    def rmatvec_scatter(y):              # (S, m_loc) -> (S, n) partial
+        off = (jnp.arange(a.batch, dtype=a.cols.dtype) * n)[:, None, None]
+        contrib = a.vals.astype(y.dtype) * y[:, :, None]
+        z = jnp.zeros((a.batch * n,), y.dtype).at[
+            (a.cols + off).reshape(-1)].add(contrib.reshape(-1))
+        return jax.lax.psum(z.reshape(a.batch, n), axis)
+
+    def rmatvec_gather(y):               # (S, m_loc) -> (S, n) partial
+        m_loc = y.shape[1]
+        off = (jnp.arange(a.batch, dtype=at_rows.dtype)
+               * m_loc)[:, None, None]
+        g = jnp.take(y.reshape(-1), at_rows + off, axis=0)  # (S, n, k_t)
+        return jax.lax.psum(jnp.sum(at_vals * g, axis=2), axis)
+
+    return LinearOperator(
+        matvec=lambda x: stacked_ell_matvec(a, x),
+        rmatvec=rmatvec_scatter if at_vals is None else rmatvec_gather,
+        shape=(a.m, n), format="stacked_ell", backend="rowpart",
+        stats=dict(batch=a.batch, k=a.k,
+                   dual_copy=at_vals is not None))
+
+
 def local_operator(problem, operands) -> LinearOperator:
     """Dispatch a DistProblem's local shard through the registry."""
     return make_operator("ell", problem.strategy, problem, operands)

@@ -39,7 +39,8 @@ from typing import Any, Optional
 
 import numpy as np
 
-__all__ = ["ExecutionPlan", "Result", "SolveSpec", "plan"]
+__all__ = ["ExecutionPlan", "Result", "SolveSpec", "decide_placement",
+           "plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +72,9 @@ class SolveSpec:
     batch: str = "auto"                  # "auto"|"never" (solve_many policy)
     slots: int = 8                       # engine slot count (solve_many)
     interpret: Optional[bool] = None     # Pallas interpret-mode override
+    placement: str = "auto"              # "auto"|"single"|"replicated"|"sharded"
+    devices: Any = None                  # engine devices (count or list)
+    shard_above: Optional[int] = None    # per-device nnz capacity override
     format_params: dict = dataclasses.field(default_factory=dict)
 
 
@@ -143,8 +147,15 @@ class ExecutionPlan:
     (slot-batched serving via repro.api.solve_many — such plans describe a
     shared engine run and are not individually solvable).
 
-    ``reasons`` maps each decision to a one-line why; ``estimates`` carries
-    the roofline selector's modeled per-apply seconds when it ran.
+    ``placement`` is the serving-placement decision (how this problem
+    should land on a device mesh): "single" (whole problem on one device),
+    "replicated" (whole problem per device — engine buckets are pinned
+    round-robin so independent buckets advance concurrently), or "sharded"
+    (operands partitioned mesh-wide; the engine admits such requests into
+    shard_map'd buckets, and a direct ``.solve()`` runs a distributed
+    strategy).  ``reasons`` maps each decision to a one-line why;
+    ``estimates`` carries the roofline selector's modeled per-apply seconds
+    when it ran.
     """
 
     problem: Any
@@ -160,6 +171,7 @@ class ExecutionPlan:
     params: dict
     reasons: dict
     estimates: Optional[dict] = None
+    placement: str = "single"
     _op: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     def __repr__(self):
@@ -174,7 +186,8 @@ class ExecutionPlan:
 
     def explain(self) -> str:
         """Human-readable decision table (one line per choice + reason)."""
-        rows = [("execution", self.execution), ("algorithm", self.algorithm),
+        rows = [("execution", self.execution), ("placement", self.placement),
+                ("algorithm", self.algorithm),
                 ("format", self.format), ("backend", self.backend),
                 ("strategy", self.strategy), ("lg", f"{self.lg:.6g}"),
                 ("gamma0", f"{self.gamma0:.6g}")]
@@ -214,6 +227,7 @@ class ExecutionPlan:
                     and new.strategy is None:
                 new.strategy = "dualpart"
             new.execution = "distributed" if new.strategy else "single"
+            new.placement = "sharded" if new.strategy else "single"
             if new.execution == "distributed" and new.problem.coo is None:
                 raise ValueError(
                     "distributed strategies need a concrete matrix "
@@ -341,6 +355,58 @@ def _default_mesh(strategy: str):
 
 _DENSE_DENSITY = 0.25     # above this, padded sparse formats store >= dense
 
+#: stored entries a single device is assumed to serve comfortably; problems
+#: above it are placed "sharded" (mesh-wide operands) when devices exist.
+#: Deliberately conservative for real accelerators; tests/benchmarks shrink
+#: it (spec.shard_above / the engine's shard_above / env) to exercise the
+#: sharded path on fake CPU devices.
+_SHARD_ABOVE_NNZ = 4_000_000
+
+
+def _shard_threshold(shard_above: Optional[int] = None) -> int:
+    if shard_above is not None:
+        return int(shard_above)
+    import os
+    env = os.environ.get("REPRO_SHARD_ABOVE_NNZ")
+    return int(env) if env else _SHARD_ABOVE_NNZ
+
+
+def decide_placement(m: int, n: int, nnz: Optional[int], n_devices: int,
+                     shard_above: Optional[int] = None,
+                     override: str = "auto") -> tuple[str, str]:
+    """The serving-placement decision: (placement, reason).
+
+    single     whole problem on one device (the only choice at 1 device).
+    replicated whole problem per device; many such problems are spread
+               round-robin over devices (the engine's bucket placement).
+    sharded    operands exceed the per-device threshold: partition them
+               mesh-wide (distributed strategy / shard_map'd bucket).
+
+    ``nnz`` falls back to the dense m*n when unknown; the threshold is
+    ``shard_above`` > env REPRO_SHARD_ABOVE_NNZ > ``_SHARD_ABOVE_NNZ``.
+    Shared by ``plan()`` and the serving engine's admission
+    (repro.serve.solver_engine), so both route by the same rule.
+    """
+    if override != "auto":
+        return override, "user override"
+    size = int(nnz) if nnz is not None else int(m) * int(n)
+    limit = _shard_threshold(shard_above)
+    if n_devices <= 1:
+        if size >= limit:
+            return "single", (
+                f"one device visible, but {size} stored entries exceed its "
+                f"{limit} capacity: operands cannot stay resident (the "
+                "serving engine streams them per step block)")
+        return "single", "one device visible: nothing to place"
+    if size >= limit:
+        return "sharded", (
+            f"{size} stored entries >= per-device threshold {limit}: "
+            f"partition operands over {n_devices} devices")
+    return "replicated", (
+        f"{size} stored entries < per-device threshold {limit}: "
+        f"problem fits one device; independent problems spread "
+        f"round-robin over {n_devices} devices")
+
 
 def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
     """Resolve caller intent into an ExecutionPlan (no device work yet
@@ -367,18 +433,40 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
     else:
         gamma0, reasons["gamma0"] = 100.0, "planner default (paper Sec. 5)"
 
-    # execution / strategy -------------------------------------------------
+    # execution / strategy / placement -------------------------------------
     distributed = spec.strategy is not None or spec.mesh is not None
     if distributed and problem.coo is None:
         raise ValueError("distributed strategies need a concrete matrix "
                          "(COO/dense), not a matrix-free operator")
+    if not distributed:
+        # serving placement: does this problem fit one device, and should a
+        # too-large one be auto-upgraded to a mesh-wide (sharded) solve?
+        import jax
+        placement, why_p = decide_placement(
+            problem.m, problem.n, problem.nnz, len(jax.devices()),
+            spec.shard_above, spec.placement)
+        if placement == "sharded":
+            if problem.coo is not None:
+                distributed = True
+                reasons["strategy"] = (
+                    "placement=sharded: auto-upgraded to a distributed "
+                    "strategy (dualpart caches both orientations)")
+            else:
+                placement = "single"
+                why_p += ("; matrix-free operators cannot be partitioned — "
+                          "kept single")
+        reasons["placement"] = why_p
+    else:
+        placement = "sharded"
+        reasons["placement"] = ("strategy/mesh given: operands partitioned "
+                                "mesh-wide")
     if distributed:
         strategy = spec.strategy or "dualpart"
-        reasons["strategy"] = ("user override" if spec.strategy else
-                               "mesh given: dualpart caches both "
-                               "orientations (Spark dual-RDD), "
-                               "reduce-scatter on both passes")
-        execution = "single" if strategy is None else "distributed"
+        reasons.setdefault("strategy", (
+            "user override" if spec.strategy else
+            "mesh given: dualpart caches both orientations (Spark "
+            "dual-RDD), reduce-scatter on both passes"))
+        execution = "distributed"
         fmt, backend = "ell", "jnp"
         reasons["format"] = ("strategies partition ELL in both orientations "
                              "(repro.sparse.partition)")
@@ -391,6 +479,19 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
         execution = "single"
         fmt, backend, params, estimates, why = _choose_format(problem, spec)
         reasons.update(why)
+    if backend == "pallas":
+        import jax
+
+        from repro.kernels import default_interpret
+        resolved = default_interpret(spec.interpret)
+        reasons["interpret"] = (
+            f"pallas interpret={resolved} "
+            f"(kernels.default_interpret: explicit flag > env "
+            f"REPRO_PALLAS_INTERPRET > backend={jax.default_backend()!r})")
+    if getattr(problem, "dtype", None) is not None:
+        reasons["dtype"] = (f"operands canonicalized to "
+                            f"{np.dtype(problem.dtype).name} "
+                            f"(repro.api.Problem; dtype= overrides)")
 
     # lg -------------------------------------------------------------------
     lg, reasons["lg"] = _choose_lg(problem, spec)
@@ -399,7 +500,7 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
                          algorithm=algorithm, format=fmt, backend=backend,
                          strategy=strategy, mesh=spec.mesh, lg=lg,
                          gamma0=gamma0, params=params, reasons=reasons,
-                         estimates=estimates)
+                         estimates=estimates, placement=placement)
 
 
 def _choose_format(problem, spec: SolveSpec):

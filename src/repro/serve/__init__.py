@@ -8,12 +8,13 @@
 # kept as a deprecated alias.
 from repro.serve.engine import Request, TokenEngine
 from repro.serve.solver_engine import (
-    BATCHED_PROX_FAMILIES, BucketKey, SolveRequest, SolverEngine,
-    batched_prox,
+    BATCHED_PROX_FAMILIES, BucketKey, ShardedBucketKey, SolveRequest,
+    SolverEngine, batched_prox,
 )
 
-__all__ = ["BATCHED_PROX_FAMILIES", "BucketKey", "Request", "SolveRequest",
-           "SolverEngine", "TokenEngine", "batched_prox", "create_engine"]
+__all__ = ["BATCHED_PROX_FAMILIES", "BucketKey", "Request",
+           "ShardedBucketKey", "SolveRequest", "SolverEngine", "TokenEngine",
+           "batched_prox", "create_engine"]
 
 _ENGINES = {"solver": SolverEngine, "token": TokenEngine}
 

@@ -32,15 +32,49 @@ batches.  So:
      immediately; a new problem's init splices into the running batch
      without disturbing neighbours.
 
+The engine also serves a **device mesh** (the paper's whole point is a
+cluster of workers; one device is the degenerate case).  ``slots`` is a
+per-device budget, and placement is decided per bucket from the planner's
+``decide_placement`` rule plus queue pressure (DESIGN.md section 5 has
+the decision table):
+
+  6. **Bucket placement** (placement="replicated"): a lightly-queued
+     bucket is pinned to the least-loaded device (``jax.device_put``,
+     round-robin on ties) — ``step()`` dispatches every bucket's advance
+     before harvesting any, so independent buckets advance *concurrently*
+     instead of serially on device 0; a deeply-queued bucket instead
+     widens its slot axis to ``slots x ndev`` shard_map'd over a
+     demand-sized sub-mesh (sharded batch axes, collective-free — slots
+     are independent), so aggregate slot capacity scales with the mesh.
+  7. **Sharded buckets** (placement="sharded"): a request whose
+     planner-resolved placement says it exceeds the per-device capacity
+     (``repro.plan.decide_placement`` — the same rule ``Problem.plan()``
+     records) is admitted into a mesh-wide bucket: operands are
+     row-partitioned over a capacity-sized sub-mesh (with per-shard
+     transpose blocks, block2d's dual-copy trade, so the backward is
+     gather-only) and the advance body is the
+     ``core.distributed.make_solve_tol_fn`` loop body (check_every steps
+     + psum'd per-slot relative feasibility) run inside shard_map under
+     this engine's masked-slot machinery
+     (``core.distributed.make_sharded_bucket_fns``).  Sharded buckets are
+     always row-ELL; operands stay device-resident across ticks exactly
+     like single-device buckets.  On a 1-device engine the same request
+     can neither shard nor stay resident: it is served **streamed** — the
+     operand fraction beyond capacity re-uploads every iteration (chunked
+     per check block) — which is the data-locality cost the mesh
+     placements exist to avoid.
+
 Throughput, not latency: a single request finishes no faster than a
 standalone ``solve_tol`` (slightly slower — it rides along until its
-check boundary), but requests/sec scales with slot count
-(``benchmarks/run.py solver_serving`` measures the ratio).
+check boundary), but requests/sec scales with slot count and, on a mesh,
+with bucket concurrency and aggregate capacity (``benchmarks/run.py
+solver_serving`` and ``sharded_serving`` measure the ratios).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from functools import partial
 from typing import Any
 
 import jax
@@ -119,6 +153,24 @@ class BucketKey:
     prox: str
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedBucketKey:
+    """A mesh-wide bucket: operands row-partitioned over a capacity-sized
+    sub-mesh (always row-ELL — the batched rowpart layout of
+    ``core.distributed.make_sharded_bucket_fns``, with per-shard transpose
+    blocks so the backward is gather-only + psum).  ``ndev`` is the number
+    of devices the problem *needs* (ceil(stored entries / per-device
+    capacity)), not the whole mesh: collectives only span the devices
+    that hold shards."""
+
+    m_pad: int          # divisible by ndev
+    n_pad: int
+    width: int          # ELL k of A, padded bucket-wide
+    width_t: int        # per-shard transpose ELL k (dual-copy backward)
+    prox: str
+    ndev: int           # sub-mesh size
+
+
 @dataclasses.dataclass
 class _Bucket:
     """Slot-batched operand buffers for one (shape, fmt, prox) bucket.
@@ -146,6 +198,53 @@ class _Bucket:
     dirty: bool = True
     dev: tuple | None = None
     requests: dict[int, SolveRequest] = dataclasses.field(default_factory=dict)
+    device: Any = None        # round-robin pinned device (None: default)
+    slot_mesh: Any = None     # slot axis S = slots*ndev over this sub-mesh
+    active_dev: Any = None    # device-resident copy of ``active``
+    charge: Any = None        # [(device_id, slots)] budget charge
+    resident: bool = True     # False: operands exceed the device, streamed
+    stream_chunks: int = 1    # operand uploads per check block (streamed)
+
+    @property
+    def slot_sharded(self) -> bool:
+        return self.slot_mesh is not None
+
+    @property
+    def slots(self) -> int:
+        return self.active.shape[0]
+
+
+@dataclasses.dataclass
+class _ShardedBucket:
+    """Slot-batched operands for one mesh-wide (sharded) bucket.
+
+    Same master/dev lifecycle as ``_Bucket``; the device cache holds
+    NamedSharding-placed arrays (rows of A/b/yhat split over the mesh, x
+    and per-slot scalars replicated), so operands stay mesh-resident
+    across ticks."""
+
+    key: ShardedBucketKey
+    a_vals: np.ndarray        # (S, m_pad, width) row-ELL values
+    a_cols: np.ndarray        # (S, m_pad, width) GLOBAL column indices
+    at_vals: np.ndarray       # (ndev, S, n_pad, width_t) per-shard A^T
+    at_rows: np.ndarray       # (ndev, S, n_pad, width_t) shard-local rows
+    b: np.ndarray             # (S, m_pad)
+    lg: np.ndarray            # (S,)
+    gamma0: np.ndarray        # (S,)
+    reg: np.ndarray           # (S,)
+    tol: np.ndarray           # (S,)
+    maxit: np.ndarray         # (S,) int32
+    state: PDState            # batched; yhat row-sharded, x replicated
+    active: np.ndarray        # (S,) bool occupancy mask
+    dirty: bool = True
+    dev: tuple | None = None
+    requests: dict[int, SolveRequest] = dataclasses.field(default_factory=dict)
+    active_dev: Any = None    # device-resident copy of ``active``
+    charge: Any = None        # [(device_id, slots)] budget charge
+
+    @property
+    def slots(self) -> int:
+        return self.active.shape[0]
 
 
 class SolverEngine:
@@ -156,12 +255,43 @@ class SolverEngine:
     backend: "jnp" (vmapped reference) or "pallas" (batch-grid kernels).
     check_every: iterations between per-slot feasibility checks — the
              early-exit granularity (matches solve_tol's check_every).
+    devices: the device mesh to serve on — a list of jax devices, an int
+             (first N of jax.devices()), or None for every local device.
+             ``slots`` is a PER-DEVICE budget (resident problems one
+             device's memory holds), so aggregate capacity scales with the
+             mesh.  With >1 device, a replicated bucket is placed by queue
+             pressure at creation: a lightly-loaded key is pinned
+             round-robin to one device (jax.device_put — independent
+             buckets advance concurrently), while a key whose queue
+             exceeds ``slots`` gets a slot axis of ``slots * ndev``
+             shard_map'd over a demand-sized sub-mesh (sharded batch axes
+             — slots are independent, so the advance is collective-free
+             and the whole queue admits in one generation).  Oversized
+             requests go to mesh-wide sharded buckets on a capacity-sized
+             sub-mesh; at 1 device they cannot shard OR stay resident and
+             are served with streamed (re-uploaded per tick) operands.
+    shard_above: per-device stored-entry capacity override for the
+             placement rule (``repro.plan.decide_placement``; None -> env
+             REPRO_SHARD_ABOVE_NNZ -> the planner default).
+    device_budget: resident-slot capacity of ONE device (None =
+             unbounded, the legacy regime).  When set, bucket creation
+             allocates slot widths against each device's budget: a device
+             already hosting buckets hands out fewer slots to the next one
+             (floor 1 — every bucket keeps making progress, the serving
+             fairness requirement), so a 1-device engine under multi-
+             tenant traffic is capacity-starved into extra admission
+             generations while a mesh holds ``devices * device_budget``
+             problems resident.  This is the aggregate-capacity axis of
+             multi-device serving (the benchmark's ``sharded_serving``
+             regime).
     """
 
     def __init__(self, slots: int = 8, fmt: str = "ell",
                  backend: str = "jnp", algorithm: str = "a2",
                  check_every: int = 16, min_rows: int = 64,
-                 min_cols: int = 16, interpret: bool | None = None):
+                 min_cols: int = 16, interpret: bool | None = None,
+                 devices: Any = None, shard_above: int | None = None,
+                 device_budget: int | None = None):
         if fmt not in ("ell", "bcsr"):
             raise ValueError(f"fmt must be ell|bcsr, got {fmt!r}")
         self.slots = slots
@@ -172,19 +302,81 @@ class SolverEngine:
         self.min_rows = min_rows
         self.min_cols = min_cols
         self.interpret = interpret
-        self.queues: dict[BucketKey, deque[SolveRequest]] = {}
-        self.buckets: dict[BucketKey, _Bucket] = {}
+        if devices is None:
+            devices = jax.devices()
+        elif isinstance(devices, int):
+            devices = jax.devices()[:devices]
+        self.devices = list(devices)
+        self.shard_above = shard_above
+        self.device_budget = device_budget
+        self._budget_used: dict[int, int] = {d.id: 0 for d in self.devices}
+        self.mesh = None
+        if len(self.devices) > 1:
+            from jax.sharding import Mesh
+            self.mesh = Mesh(np.array(self.devices), ("p",))
+        self.queues: dict[Any, deque[SolveRequest]] = {}
+        self.buckets: dict[Any, Any] = {}
         self.completed: list[SolveRequest] = []
-        self.stats = {"steps": 0, "iterations": 0, "admitted": 0}
+        self.stats = {"steps": 0, "iterations": 0, "admitted": 0,
+                      "sharded_admitted": 0}
         self._auto_uid = 0
+        self._rr = 0                      # round-robin bucket device cursor
         # per-instance jit closures: the compile cache lives on the engine
         # (a static `self` argname would pin every engine — and its bucket
         # masters — in jit's global cache for the process lifetime)
         self._splice_init = jax.jit(self._splice_init_impl,
                                     static_argnames=("key",))
-        self._advance = jax.jit(self._advance_impl, static_argnames=("key",))
+        self._advance = jax.jit(self._advance_impl,
+                                static_argnames=("key", "steps"))
+        # (ndev, n_pad, prox) -> (splice_fn, advance_fn) row-shard bodies
+        self._sharded_fn_cache: dict = {}
+        # key -> (splice_fn, advance_fn) slot-axis shard_map bodies
+        self._slotshard_fn_cache: dict = {}
+        self._sub_meshes: dict = {}
 
     # -- bucketing policy --------------------------------------------------
+
+    def placement_for(self, req: SolveRequest) -> str:
+        """The planner's serving-placement verdict for one request
+        ("single" | "replicated" | "sharded") — the same
+        ``decide_placement`` rule ``Problem.plan()`` records."""
+        from repro.plan import decide_placement
+
+        placement, _ = decide_placement(
+            req.coo.m, req.coo.n, req.coo.nnz, len(self.devices),
+            self.shard_above)
+        return placement
+
+    def _ndev_for(self, nnz: int) -> int:
+        """Capacity-sized sub-mesh: the fewest devices whose combined
+        per-device capacity (the decide_placement threshold) holds the
+        operands — collectives should span the shards, not the world."""
+        from repro.plan import _shard_threshold
+
+        cap = _shard_threshold(self.shard_above)
+        need = -(-int(nnz) // max(1, cap))
+        return max(2, min(len(self.devices), need))
+
+    def sharded_bucket_key(self, req: SolveRequest) -> ShardedBucketKey:
+        """Mesh-wide bucket key: pow2 dims (m additionally a multiple of
+        the sub-mesh size — 8 rows per device floor) and pow2 ELL width,
+        so oversized ragged traffic also collapses onto few compiled
+        bodies."""
+        from repro.sparse.partition import rowshard_transpose_width
+
+        coo = req.coo
+        ndev = self._ndev_for(coo.nnz)
+        m_pad = max(self.min_rows, _next_pow2(coo.m), 8 * ndev)
+        if m_pad % ndev:
+            m_pad = -(-m_pad // ndev) * ndev
+        n_pad = max(self.min_cols, _next_pow2(coo.n))
+        rows = np.asarray(coo.rows)
+        w = int(np.bincount(rows, minlength=coo.m).max()) if rows.size else 1
+        wt = rowshard_transpose_width(pad_coo(coo, m_pad, n_pad), ndev)
+        return ShardedBucketKey(m_pad=m_pad, n_pad=n_pad,
+                                width=_next_pow2(max(8, w)),
+                                width_t=_next_pow2(max(8, wt)),
+                                prox=req.prox, ndev=ndev)
 
     def bucket_key(self, req: SolveRequest) -> BucketKey:
         """(shape-bucket, format, prox family): dims round up to powers of
@@ -227,12 +419,143 @@ class SolverEngine:
         if req.prox not in BATCHED_PROX_FAMILIES:
             raise KeyError(f"prox family {req.prox!r} not servable; "
                            f"supported: {BATCHED_PROX_FAMILIES}")
-        key = self.bucket_key(req)
+        # planner-resolved placement: oversized problems go to a mesh-wide
+        # sharded bucket; on a single device they cannot be sharded NOR
+        # stay resident — their bucket streams operands every tick (the
+        # data-locality cost the mesh placement exists to avoid)
+        placement = self.placement_for(req)
+        if self.mesh is not None and placement == "sharded":
+            key = self.sharded_bucket_key(req)
+        else:
+            key = self.bucket_key(req)
         self.queues.setdefault(key, deque()).append(req)
         return key
 
-    def _new_bucket(self, key: BucketKey) -> _Bucket:
-        s, m, n = self.slots, key.m_pad, key.n_pad
+    def _sub_mesh_of(self, devices: list):
+        """1-axis mesh over an explicit device list (cached)."""
+        ids = tuple(d.id for d in devices)
+        mesh = self._sub_meshes.get(ids)
+        if mesh is None:
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(devices), ("p",))
+            self._sub_meshes[ids] = mesh
+        return mesh
+
+    def _sub_mesh(self, ndev: int):
+        """1-axis mesh over the first ``ndev`` engine devices — the
+        row-sharded buckets' sub-mesh (one compiled body per ndev)."""
+        return self._sub_mesh_of(self.devices[:ndev])
+
+    def _pick_devices(self, count: int) -> list:
+        """The ``count`` least-budget-used devices (round-robin cursor
+        breaks ties, so unbudgeted engines keep pure round-robin)."""
+        ndev = len(self.devices)
+        order = sorted(range(ndev),
+                       key=lambda i: (self._budget_used[self.devices[i].id],
+                                      (i - self._rr) % ndev))
+        self._rr += 1
+        return [self.devices[i] for i in order[:count]]
+
+    def _charge(self, bucket, devices: list, per_dev: int) -> None:
+        for d in devices:
+            self._budget_used[d.id] += per_dev
+        bucket.charge = [(d.id, per_dev) for d in devices]
+
+    def _slot_width(self, devices: list) -> int:
+        """Slots one bucket may hold per device: the full per-device
+        budget when unbudgeted, otherwise what the busiest picked device
+        has left (floor 1 — every bucket keeps making progress even when
+        a device is oversubscribed; serving cannot park a tenant)."""
+        if self.device_budget is None:
+            return self.slots
+        left = min(self.device_budget - self._budget_used[d.id]
+                   for d in devices)
+        return max(1, min(self.slots, left))
+
+    def _make_bucket(self, key):
+        """Placement at bucket creation (queue pressure + budget decide):
+
+        * ShardedBucketKey -> operands row-partitioned over a
+          capacity-sized sub-mesh (the problem itself exceeds one device).
+        * deep queue (> one device's slot allowance) on a mesh -> slot
+          axis shard_map'd over enough devices that the whole queue
+          admits in one generation (capped by the mesh): aggregate slot
+          capacity scales with the device count.
+        * otherwise -> pinned to the least-loaded device (jax.device_put,
+          round-robin on ties): independent buckets advance concurrently
+          with zero cross-device traffic.
+        """
+        depth = len(self.queues.get(key) or ())
+        if isinstance(key, ShardedBucketKey):
+            bucket = self._new_sharded_bucket(
+                key, min(self.slots, max(1, depth)))
+            self._charge(bucket, self.devices[:key.ndev],
+                         -(-bucket.slots // key.ndev))
+            return bucket
+        ndev = len(self.devices)
+        from repro.plan import _shard_threshold
+        cap = _shard_threshold(self.shard_above)
+        if ndev == 1 and any(r.coo.nnz >= cap
+                             for r in (self.queues.get(key) or ())):
+            # an over-capacity request on a single device: nothing to pin,
+            # nothing to cache — slot width matches demand, transfers
+            # repeat per tick.  Decided per bucket CREATION from the live
+            # queue (not a sticky per-key flag), so a later wave of
+            # under-threshold traffic on the same shape key gets an
+            # ordinary resident bucket after an evict.
+            bucket = self._new_bucket(key, min(self.slots, max(1, depth)))
+            bucket.resident = False
+            return bucket
+        if ndev > 1 and depth > self.slots:
+            # capacity matched to demand: enough devices that the whole
+            # queue admits in one generation, never more than the mesh
+            ndev_s = min(ndev, -(-depth // self.slots))
+            picked = self._pick_devices(ndev_s)
+            width = self._slot_width(picked)
+            bucket = self._new_bucket(key, width * ndev_s)
+            bucket.slot_mesh = self._sub_mesh_of(picked)
+            self._charge(bucket, picked, width)
+            return bucket
+        # full provisioned width (NOT depth-matched): continuous admission
+        # means later traffic lands in this bucket, and a width frozen at
+        # a shallow creation-time queue would serialize it
+        picked = self._pick_devices(1)
+        bucket = self._new_bucket(key, self._slot_width(picked))
+        self._charge(bucket, picked, bucket.slots)
+        # pinned placement: this bucket's operands, state and compiled
+        # step live on one mesh device so independent buckets advance
+        # concurrently (jit follows its committed inputs)
+        if ndev > 1:
+            bucket.device = picked[0]
+            bucket.state = jax.device_put(bucket.state, bucket.device)
+        return bucket
+
+    def _new_sharded_bucket(self, key: ShardedBucketKey,
+                            s: int | None = None) -> _ShardedBucket:
+        s = self.slots if s is None else s
+        m, n = key.m_pad, key.n_pad
+        zeros_x = jnp.zeros((s, n), jnp.float32)
+        state = PDState(xbar=zeros_x, xstar=zeros_x,
+                        yhat=jnp.zeros((s, m), jnp.float32),
+                        gamma=jnp.ones((s,), jnp.float32),
+                        k=jnp.zeros((s,), jnp.int32))
+        return _ShardedBucket(
+            key=key,
+            a_vals=np.zeros((s, m, key.width), np.float32),
+            a_cols=np.zeros((s, m, key.width), np.int32),
+            at_vals=np.zeros((key.ndev, s, n, key.width_t), np.float32),
+            at_rows=np.zeros((key.ndev, s, n, key.width_t), np.int32),
+            b=np.zeros((s, m), np.float32),
+            lg=np.ones((s,), np.float32),
+            gamma0=np.ones((s,), np.float32),
+            reg=np.zeros((s,), np.float32),
+            tol=np.full((s,), np.inf, np.float32),
+            maxit=np.zeros((s,), np.int32),
+            state=state, active=np.zeros((s,), bool))
+
+    def _new_bucket(self, key: BucketKey, s: int | None = None) -> _Bucket:
+        s = self.slots if s is None else s
+        m, n = key.m_pad, key.n_pad
         if key.fmt == "ell":
             a_shape = (s, m, key.width)
             at_shape = (s, n, key.width_t)
@@ -274,22 +597,49 @@ class SolverEngine:
         fat = coo_to_bcsr(transpose_coo(c), bm=bm, bn=bnt, kb=key.width_t)
         return (fa.vals, fa.bcols), (fat.vals, fat.bcols)
 
-    def _admit(self, key: BucketKey, bucket: _Bucket) -> np.ndarray:
-        queue = self.queues.get(key)
-        new = np.zeros((self.slots,), bool)
-        if not queue:
-            return new
-        for slot in range(self.slots):
-            if not queue:
-                break
-            if bucket.active[slot]:
-                continue
-            req = queue.popleft()
+    def _write_slot(self, key, bucket, slot: int, req: SolveRequest) -> None:
+        """Splice one request's converted operands into slot ``slot`` of
+        the bucket's numpy masters."""
+        if isinstance(key, ShardedBucketKey):
+            from repro.sparse.partition import rowshard_transpose_ell
+
+            c = pad_coo(req.coo, key.m_pad, key.n_pad)
+            e = coo_to_ell(c, k=key.width)
+            bucket.a_vals[slot] = np.asarray(e.vals)
+            bucket.a_cols[slot] = np.asarray(e.cols)
+            tv, tr = rowshard_transpose_ell(c, key.ndev, k=key.width_t)
+            bucket.at_vals[:, slot] = np.asarray(tv)
+            bucket.at_rows[:, slot] = np.asarray(tr)
+            self.stats["sharded_admitted"] += 1
+        else:
             (av, ai), (atv, ati) = self._convert(key, req.coo)
             bucket.a_vals[slot] = np.asarray(av)
             bucket.a_idx[slot] = np.asarray(ai)
             bucket.at_vals[slot] = np.asarray(atv)
             bucket.at_idx[slot] = np.asarray(ati)
+            if not bucket.resident:
+                # the operand fraction beyond the device's capacity must
+                # re-stream every iteration: ceil(check_every * fraction)
+                # uploads per check block (floor 1)
+                from repro.plan import _shard_threshold
+                cap = _shard_threshold(self.shard_above)
+                frac = max(0.0, 1.0 - cap / max(1, req.coo.nnz))
+                bucket.stream_chunks = max(
+                    bucket.stream_chunks, 1,
+                    int(np.ceil(self.check_every * frac)))
+
+    def _admit(self, key, bucket) -> np.ndarray:
+        queue = self.queues.get(key)
+        new = np.zeros((bucket.slots,), bool)
+        if not queue:
+            return new
+        for slot in range(bucket.slots):
+            if not queue:
+                break
+            if bucket.active[slot]:
+                continue
+            req = queue.popleft()
+            self._write_slot(key, bucket, slot, req)
             bucket.b[slot, :req.coo.m] = np.asarray(req.b, np.float32)
             bucket.b[slot, req.coo.m:] = 0.0
             bucket.lg[slot] = req.lg
@@ -299,6 +649,7 @@ class SolverEngine:
             bucket.maxit[slot] = req.max_iterations
             bucket.requests[slot] = req
             bucket.active[slot] = True
+            bucket.active_dev = None
             bucket.dirty = True
             new[slot] = True
             self.stats["admitted"] += 1
@@ -306,29 +657,127 @@ class SolverEngine:
 
     def _device_operands(self, bucket: _Bucket) -> tuple:
         """Device-resident (a, at, b, lg, gamma0, reg, tol, maxit); one
-        transfer per array, only after admissions dirtied the masters."""
+        transfer per array, only after admissions dirtied the masters.
+        With a pinned bucket device the transfers target it, so the jit'd
+        bodies (which follow their committed inputs) run there too."""
         if bucket.dirty or bucket.dev is None:
             key = bucket.key
+            if bucket.slot_sharded:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                def put(v):
+                    # numpy master -> sharded buffers directly (jnp.asarray
+                    # first would materialize the FULL array on the default
+                    # device, the exact thing sharded placement avoids)
+                    sh = NamedSharding(
+                        bucket.slot_mesh,
+                        P("p", *([None] * (np.ndim(v) - 1))))
+                    return jax.device_put(v, sh)
+            elif bucket.device is None:
+                put = jnp.asarray
+            else:
+                put = lambda v: jax.device_put(v, bucket.device)
             if key.fmt == "ell":
                 from repro.sparse.formats import StackedELL
-                a = StackedELL(vals=jnp.asarray(bucket.a_vals),
-                               cols=jnp.asarray(bucket.a_idx), n=key.n_pad)
-                at = StackedELL(vals=jnp.asarray(bucket.at_vals),
-                                cols=jnp.asarray(bucket.at_idx), n=key.m_pad)
+                a = StackedELL(vals=put(bucket.a_vals),
+                               cols=put(bucket.a_idx), n=key.n_pad)
+                at = StackedELL(vals=put(bucket.at_vals),
+                                cols=put(bucket.at_idx), n=key.m_pad)
             else:
                 from repro.sparse.formats import StackedBCSR
-                a = StackedBCSR(vals=jnp.asarray(bucket.a_vals),
-                                bcols=jnp.asarray(bucket.a_idx),
+                a = StackedBCSR(vals=put(bucket.a_vals),
+                                bcols=put(bucket.a_idx),
                                 m=key.m_pad, n=key.n_pad)
-                at = StackedBCSR(vals=jnp.asarray(bucket.at_vals),
-                                 bcols=jnp.asarray(bucket.at_idx),
+                at = StackedBCSR(vals=put(bucket.at_vals),
+                                 bcols=put(bucket.at_idx),
                                  m=key.n_pad, n=key.m_pad)
-            bucket.dev = (a, at, jnp.asarray(bucket.b),
-                          jnp.asarray(bucket.lg), jnp.asarray(bucket.gamma0),
-                          jnp.asarray(bucket.reg), jnp.asarray(bucket.tol),
-                          jnp.asarray(bucket.maxit))
+            bucket.dev = (a, at, put(bucket.b),
+                          put(bucket.lg), put(bucket.gamma0),
+                          put(bucket.reg), put(bucket.tol),
+                          put(bucket.maxit))
             bucket.dirty = False
         return bucket.dev
+
+    def _sharded_device_operands(self, bucket: _ShardedBucket) -> tuple:
+        """Mesh-resident (vals, cols, b, lg, gamma0, reg, tol, maxit):
+        A/b rows split over the mesh axis, per-slot scalars replicated —
+        one sharded transfer per array, only after admissions dirtied the
+        masters, so operands stay device-resident across ticks."""
+        if bucket.dirty or bucket.dev is None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            mesh = self._sub_mesh(bucket.key.ndev)
+            row3 = NamedSharding(mesh, P(None, "p", None))
+            row2 = NamedSharding(mesh, P(None, "p"))
+            blocks = NamedSharding(mesh, P("p", None, None, None))
+            rep = NamedSharding(mesh, P())
+            # numpy masters -> sharded buffers directly: materializing on
+            # the default device first would need the whole over-capacity
+            # stack to fit one device
+            bucket.dev = (
+                jax.device_put(bucket.a_vals, row3),
+                jax.device_put(bucket.a_cols, row3),
+                jax.device_put(bucket.at_vals, blocks),
+                jax.device_put(bucket.at_rows, blocks),
+                jax.device_put(bucket.b, row2),
+                jax.device_put(bucket.lg, rep),
+                jax.device_put(bucket.gamma0, rep),
+                jax.device_put(bucket.reg, rep),
+                jax.device_put(bucket.tol, rep),
+                jax.device_put(bucket.maxit, rep))
+            bucket.dirty = False
+        return bucket.dev
+
+    def _sharded_fns(self, key: ShardedBucketKey):
+        """(splice_fn, advance_fn) shard_map bodies for mesh-wide buckets
+        (core.distributed.make_sharded_bucket_fns), cached per
+        (ndev, n_pad, prox) — jit retraces per operand shape underneath."""
+        cache_key = (key.ndev, key.n_pad, key.prox)
+        fns = self._sharded_fn_cache.get(cache_key)
+        if fns is None:
+            from repro.core.distributed import make_sharded_bucket_fns
+            fns = make_sharded_bucket_fns(
+                self._sub_mesh(key.ndev), key.n_pad,
+                partial(batched_prox, key.prox),
+                algorithm=self.algorithm, check_every=self.check_every)
+            self._sharded_fn_cache[cache_key] = fns
+        return fns
+
+    def _slotshard_fns(self, key: BucketKey, mesh, example_args):
+        """(splice_fn, advance_fn) for slot-axis-sharded buckets: the
+        engine's own jit bodies wrapped in shard_map with EVERY operand,
+        state leaf and mask split on its leading slot axis — slots are
+        independent problems, so the mapped body is collective-free and
+        each device advances its own slice of the bucket."""
+        cache_key = (key, tuple(d.id for d in mesh.devices.flat))
+        fns = self._slotshard_fn_cache.get(cache_key)
+        if fns is None:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.distributed.sharding import shard_map
+
+            def slot_spec(leaf):
+                return P("p", *([None] * (jnp.ndim(leaf) - 1)))
+
+            a, at, b, lg, gamma0, reg, tol, maxit = example_args
+            tree_specs = jax.tree_util.tree_map(slot_spec,
+                                                (a, at, b, lg, gamma0, reg))
+            state_specs = PDState(xbar=P("p", None), xstar=P("p", None),
+                                  yhat=P("p", None), gamma=P("p"), k=P("p"))
+            out_specs = (state_specs, P("p"), P("p"))
+            splice = shard_map(
+                lambda *args: self._splice_init_impl(key, *args),
+                mesh=mesh,
+                in_specs=(*tree_specs, state_specs, P("p"), P("p"), P("p"),
+                          P("p")),
+                out_specs=out_specs)
+            advance = shard_map(
+                lambda *args: self._advance_impl(key, *args),
+                mesh=mesh,
+                in_specs=(*tree_specs, state_specs, P("p"), P("p"), P("p")),
+                out_specs=out_specs)
+            fns = (jax.jit(splice), jax.jit(advance))
+            self._slotshard_fn_cache[cache_key] = fns
+        return fns
 
     # -- the compiled per-bucket bodies ------------------------------------
 
@@ -354,16 +803,23 @@ class SolverEngine:
         return state, feas, still
 
     def _advance_impl(self, key, a, at, b, lg, gamma0, reg, state, active,
-                      tol, maxit):
-        """check_every masked steps + per-slot feasibility verdicts."""
+                      tol, maxit, steps=None):
+        """``steps`` (default check_every) masked steps + per-slot
+        feasibility verdicts.  Each slot additionally freezes at its own
+        max_iterations inside the block (solve_tol's clamped inner loop,
+        per slot), so ragged budgets never overrun by a partial block.
+        Streamed buckets advance a check block in several chunks (operands
+        re-uploaded between chunks); the chunked trajectory is identical —
+        only the final chunk's verdicts are harvested."""
         ops = self._operator(key, a, at).solver_ops()
         prox = batched_prox(key.prox, reg)
+        steps = self.check_every if steps is None else steps
 
         def one(_, st):
             return batched_step(ops, prox, b, lg, gamma0, st, self.algorithm,
-                                mask=active)
+                                mask=active & (st.k < maxit))
 
-        state = jax.lax.fori_loop(0, self.check_every, one, state)
+        state = jax.lax.fori_loop(0, steps, one, state)
         feas = batched_feasibility(ops, b, state)
         still = active & (feas >= tol) & (state.k < maxit)
         return state, feas, still
@@ -386,12 +842,97 @@ class SolverEngine:
                 req.done = True
                 self.completed.append(req)
             bucket.active = bucket.active & still_h
+            bucket.active_dev = None
+
+    def _active_mask(self, key, bucket):
+        """Device-resident occupancy mask, re-transferred only when an
+        admission or harvest changed it (the mask is an input of every
+        tick; a fresh host scatter per tick costs more than the tick)."""
+        if bucket.active_dev is None:
+            m = jnp.asarray(bucket.active)
+            if isinstance(key, ShardedBucketKey):
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                m = jax.device_put(
+                    m, NamedSharding(self._sub_mesh(key.ndev), P()))
+            elif bucket.slot_sharded:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                m = jax.device_put(
+                    m, NamedSharding(bucket.slot_mesh, P("p")))
+            elif bucket.device is not None:
+                m = jax.device_put(m, bucket.device)
+            bucket.active_dev = m
+        return bucket.active_dev
+
+    def _dispatch_splice(self, key, bucket, new):
+        """Launch the (masked) init of freshly admitted slots; async."""
+        if isinstance(key, ShardedBucketKey):
+            vals, cols, atv, atr, b, lg, gamma0, reg, tol, maxit = \
+                self._sharded_device_operands(bucket)
+            splice_fn, _ = self._sharded_fns(key)
+            return splice_fn(vals, cols, atv, atr, b, lg, gamma0, reg,
+                             bucket.state, jnp.asarray(new),
+                             self._active_mask(key, bucket), tol, maxit)
+        args = self._device_operands(bucket)
+        a, at, b, lg, gamma0, reg, tol, maxit = args
+        if bucket.slot_sharded:
+            splice_fn, _ = self._slotshard_fns(key, bucket.slot_mesh, args)
+            return splice_fn(a, at, b, lg, gamma0, reg, bucket.state,
+                             jnp.asarray(new),
+                             self._active_mask(key, bucket), tol, maxit)
+        return self._splice_init(
+            key, a, at, b, lg, gamma0, reg, bucket.state,
+            jnp.asarray(new), self._active_mask(key, bucket), tol, maxit)
+
+    def _dispatch_advance(self, key, bucket):
+        """Launch one check_every block for the bucket; async — the result
+        arrays are only synced on when harvested."""
+        if isinstance(key, ShardedBucketKey):
+            vals, cols, atv, atr, b, lg, gamma0, reg, tol, maxit = \
+                self._sharded_device_operands(bucket)
+            _, advance_fn = self._sharded_fns(key)
+            return advance_fn(vals, cols, atv, atr, b, lg, gamma0, reg,
+                              bucket.state,
+                              self._active_mask(key, bucket), tol, maxit)
+        if not bucket.resident:
+            # out-of-core: the non-resident operand fraction re-streams
+            # every iteration; modeled as ceil(check_every * fraction)
+            # chunk uploads per check block (the chunked trajectory is
+            # step-for-step identical, verdicts read once at the end)
+            chunks = max(1, min(self.check_every, bucket.stream_chunks))
+            base, extra = divmod(self.check_every, chunks)
+            out = None
+            for i in range(chunks):
+                a, at, b, lg, gamma0, reg, tol, maxit = \
+                    self._device_operands(bucket)
+                out = self._advance(
+                    key, a, at, b, lg, gamma0, reg, bucket.state,
+                    self._active_mask(key, bucket), tol, maxit,
+                    steps=base + (1 if i < extra else 0))
+                bucket.state = out[0]
+                bucket.dev = None
+            return out
+        args = self._device_operands(bucket)
+        a, at, b, lg, gamma0, reg, tol, maxit = args
+        if bucket.slot_sharded:
+            _, advance_fn = self._slotshard_fns(key, bucket.slot_mesh, args)
+            return advance_fn(a, at, b, lg, gamma0, reg, bucket.state,
+                              self._active_mask(key, bucket), tol, maxit)
+        return self._advance(
+            key, a, at, b, lg, gamma0, reg, bucket.state,
+            self._active_mask(key, bucket), tol, maxit)
 
     def step(self) -> bool:
         """One engine tick: admit -> splice inits -> advance -> harvest.
         Returns False when every bucket is drained (queues empty, no active
-        slots)."""
+        slots).
+
+        Advances are dispatched for EVERY bucket before any bucket is
+        harvested: jax dispatch is async, so with buckets pinned to
+        different devices (or sharded mesh-wide) the per-bucket compute
+        overlaps — the harvest phase then blocks on each bucket's verdicts
+        in turn."""
         alive = False
+        ticking = []
         # every bucket's key stays in self.queues (entries are never
         # deleted), so iterating the queues covers all buckets
         for key in list(self.queues):
@@ -399,27 +940,24 @@ class SolverEngine:
             if bucket is None:
                 if not self.queues.get(key):
                     continue
-                bucket = self.buckets[key] = self._new_bucket(key)
+                bucket = self.buckets[key] = self._make_bucket(key)
             new = self._admit(key, bucket)
             if new.any():
-                a, at, b, lg, gamma0, reg, tol, maxit = \
-                    self._device_operands(bucket)
-                bucket.state, feas, still = self._splice_init(
-                    key, a, at, b, lg, gamma0, reg, bucket.state,
-                    jnp.asarray(new), jnp.asarray(bucket.active), tol, maxit)
+                bucket.state, feas, still = self._dispatch_splice(
+                    key, bucket, new)
                 self._harvest(bucket, feas, still)
             if not bucket.active.any():
                 continue
             alive = True
-            a, at, b, lg, gamma0, reg, tol, maxit = \
-                self._device_operands(bucket)
-            bucket.state, feas, still = self._advance(
-                key, a, at, b, lg, gamma0, reg, bucket.state,
-                jnp.asarray(bucket.active), tol, maxit)
+            bucket.state, feas, still = self._dispatch_advance(key, bucket)
+            ticking.append((bucket, feas, still))
             self.stats["steps"] += 1
             self.stats["iterations"] += self.check_every * int(
                 bucket.active.sum())
+        for bucket, feas, still in ticking:
             self._harvest(bucket, feas, still)
+            if not getattr(bucket, "resident", True):
+                bucket.dev = None      # streamed: re-upload next tick
         pending = any(self.queues.values())
         return alive or pending
 
@@ -444,6 +982,8 @@ class SolverEngine:
         idle = [k for k, bkt in self.buckets.items()
                 if not bkt.active.any() and not self.queues.get(k)]
         for k in idle:
+            for dev_id, per_dev in (self.buckets[k].charge or ()):
+                self._budget_used[dev_id] -= per_dev
             del self.buckets[k]
             self.queues.pop(k, None)
         return len(idle)

@@ -44,12 +44,15 @@ def col_partitioned_ell(a: COO, parts: int, pad_to: int = 8) -> ELL:
 
 
 def block_partitioned_ell(a: COO, grid_rows: int, grid_cols: int,
-                          pad_to: int = 8):
+                          pad_to: int = 8, k: int | None = None):
     """2-D block grid: returns (vals, cols) of shape (R, C, mb, k) with
     block-local column indices, plus (m_pad, n_pad).
 
     Device (i, j) of a (data=R, model=C) mesh owns block (i, j) — the
-    scalable generalization of the paper's row/col RDD caches.
+    scalable generalization of the paper's row/col RDD caches.  ``k``
+    fixes the shared pad width (callers stacking several matrices to one
+    bucket shape pass the bucket maximum); by default it is the data's
+    own max per-(block, row) count rounded to ``pad_to``.
     """
     R, C = grid_rows, grid_cols
     m_pad, n_pad = _ceil_to(a.m, R), _ceil_to(a.n, C)
@@ -64,7 +67,11 @@ def block_partitioned_ell(a: COO, grid_rows: int, grid_cols: int,
     order = np.argsort(key, kind="stable")
     key, lc_s, vals_s = key[order], lc[order], vals[order]
     counts = np.bincount(key, minlength=R * C * mb)
-    k = max(1, _ceil_to(int(counts.max()) if counts.size else 1, pad_to))
+    kmax = int(counts.max()) if counts.size else 1
+    if k is None:
+        k = max(1, _ceil_to(kmax, pad_to))
+    elif kmax > k:
+        raise ValueError(f"fixed width k={k} < max block-row count {kmax}")
     start = np.zeros(R * C * mb, dtype=np.int64)
     np.cumsum(counts[:-1], out=start[1:])
     slot = np.arange(len(key)) - start[key]
@@ -74,6 +81,33 @@ def block_partitioned_ell(a: COO, grid_rows: int, grid_cols: int,
     ec[key, slot] = lc_s
     return (jnp.asarray(ev.reshape(R, C, mb, k)),
             jnp.asarray(ec.reshape(R, C, mb, k)), m_pad, n_pad)
+
+
+def rowshard_transpose_width(a: COO, parts: int) -> int:
+    """Max per-(row-shard, column) entry count — the ELL width
+    ``rowshard_transpose_ell`` needs; callers take bucket maxima."""
+    if np.asarray(a.vals).size == 0:
+        return 1
+    rows = np.asarray(a.rows)
+    cols = np.asarray(a.cols).astype(np.int64)
+    mb = _ceil_to(a.m, parts) // parts
+    key = (rows // mb) * a.n + cols
+    return int(np.bincount(key).max())
+
+
+def rowshard_transpose_ell(a: COO, parts: int, k: int | None = None,
+                           pad_to: int = 8):
+    """Per-row-shard transpose blocks — the dual-copy trade applied to row
+    partitioning: returns (vals, rows) of shape (parts, n, k) where block
+    d is the column-ELL of ``A[d*mb:(d+1)*mb, :]^T`` with row indices
+    LOCAL to the shard, so a row-sharded backward pass is gather-only
+    (kernel-friendly) instead of scatter-add, then psum'd over shards.
+    """
+    m_pad = _ceil_to(a.m, parts)
+    at = COO(rows=a.cols, cols=a.rows, vals=a.vals, m=a.n, n=m_pad)
+    vals, rows, _, _ = block_partitioned_ell(at, 1, parts, pad_to=pad_to,
+                                             k=k)
+    return vals[0], rows[0]          # (parts, n, k) each
 
 
 # ---------------------------------------------------------------------------

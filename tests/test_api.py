@@ -338,3 +338,80 @@ def test_no_legacy_imports_outside_kernel_layer():
     assert not offenders, (
         "legacy solver signatures used outside core/ shims — route through "
         "repro.api instead:\n" + "\n".join(offenders))
+
+
+# ---------------------------------------------------------------------------
+# dtype canonicalization (explicit, warned) and the placement decision
+# ---------------------------------------------------------------------------
+
+
+def test_float64_operands_warn_once_and_downcast():
+    """float64 inputs are canonicalized to float32 with ONE UserWarning
+    (the caller's float64 tolerance semantics silently changing was the
+    bug); an explicit dtype=float32 acknowledges and silences it."""
+    from repro import api as api_mod
+
+    a64 = np.diag([2.0, 4.0]).astype(np.float64)
+    b64 = np.ones(2, np.float64)
+    api_mod._DOWNCAST_WARNED.clear()
+    with pytest.warns(UserWarning, match="float32"):
+        p = Problem(a64, b64, prox="zero")
+    assert p.dtype == np.float32 and p.b.dtype == jnp.float32
+    assert p.dense_array().dtype == np.float32
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # second build: already warned
+        Problem(a64, b64, prox="zero")
+    api_mod._DOWNCAST_WARNED.clear()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # explicit dtype: no warning
+        p2 = Problem(a64, b64, prox="zero", dtype=np.float32)
+    assert p2.dtype == np.float32
+
+
+def test_float64_dtype_requires_x64():
+    a = np.eye(2, dtype=np.float64)
+    with pytest.raises(ValueError, match="x64"):
+        Problem(a, np.ones(2), prox="zero", dtype=np.float64)
+    with pytest.raises(ValueError, match="float32 or float64"):
+        Problem(a, np.ones(2), prox="zero", dtype=np.int32)
+
+
+def test_coo_float64_vals_canonicalized():
+    from repro import api as api_mod
+    from repro.sparse.formats import COO
+
+    coo, d, b = _lasso(seed=50)
+    coo64 = COO(rows=coo.rows, cols=coo.cols,
+                vals=np.asarray(coo.vals, np.float64), m=coo.m, n=coo.n)
+    api_mod._DOWNCAST_WARNED.clear()
+    with pytest.warns(UserWarning, match="float32"):
+        p = Problem(coo64, b, prox="l1", reg=0.1)
+    assert p.coo.vals.dtype == jnp.float32
+    res = p.solve(iterations=5)
+    assert np.all(np.isfinite(np.asarray(res.x)))
+
+
+def test_plan_records_placement_and_dtype():
+    """The planner's serving-placement decision and operand dtype land in
+    the plan with reasons (single process has 1 device -> "single")."""
+    from repro.plan import decide_placement
+
+    coo, d, b = _lasso(seed=51)
+    pl = Problem(coo, b, prox="l1", reg=0.1).plan(iterations=5)
+    assert pl.placement == "single"
+    assert "placement" in pl.reasons and "dtype" in pl.reasons
+    assert "placement" in pl.explain()
+    # the rule itself, off-process: 1 device -> single, small problem on a
+    # mesh -> replicated, big problem -> sharded, override wins
+    assert decide_placement(10, 10, 50, 1, 1000)[0] == "single"
+    assert decide_placement(10, 10, 50, 8, 1000)[0] == "replicated"
+    assert decide_placement(10, 10, 5000, 8, 1000)[0] == "sharded"
+    assert decide_placement(10, 10, 5000, 8, 1000,
+                            override="single")[0] == "single"
+
+
+def test_pallas_plan_records_resolved_interpret():
+    coo, d, b = _lasso(seed=52)
+    pl = Problem(coo, b, prox="l1", reg=0.1).plan(
+        iterations=5, format="ell", backend="pallas")
+    assert "interpret=True" in pl.reasons["interpret"]   # CPU container

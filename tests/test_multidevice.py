@@ -10,6 +10,7 @@ import subprocess
 import sys
 import textwrap
 
+import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -61,6 +62,82 @@ print("PASS")
 def test_distributed_strategies_8dev():
     out = run_sub(STRATEGY_BODY)
     assert "PASS" in out
+
+
+SOLVE_TOL_CLAMP_BODY = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.sparse import make_lasso
+from repro.core.prox import get_prox
+from repro.core.distributed import build_problem, make_solve_tol_fn, _pad_to
+from repro.configs.paper_problems import small_config
+
+cfg = small_config()
+coo, b, _ = make_lasso(cfg, seed=3)
+prox = get_prox("l1", reg=cfg.reg)
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("p",))
+problem = build_problem(coo, mesh, "dualpart")
+bp = _pad_to(b, problem.m_pad)
+# max_iterations OFF the check_every grid: the clamped inner block must
+# stop at exactly the budget (regression: used to overrun by up to
+# check_every - 1 steps)
+for maxit, ce in ((10, 8), (21, 8), (5, 16)):
+    fn = make_solve_tol_fn(problem, prox, 1000.0, tol=1e-12,
+                           max_iterations=maxit, check_every=ce)
+    state = jax.block_until_ready(fn(problem.operands, bp))
+    assert int(state.k) == maxit, (maxit, ce, int(state.k))
+print("PASS clamp")
+"""
+
+
+def test_solve_tol_clamp_shard_map_8dev():
+    """The shard_map solve_tol variant never overruns max_iterations."""
+    out = run_sub(SOLVE_TOL_CLAMP_BODY)
+    assert "PASS" in out
+
+
+ENGINE_MIX_BODY = """
+import json
+import numpy as np, jax
+from repro.launch.solver_serve import make_problems
+from repro.serve import SolverEngine, ShardedBucketKey
+
+# ragged mix + 2 oversized requests (nnz = 512*8 > shard_above) -- on 8
+# devices they planner-route to a mesh-wide sharded bucket, on 1 device
+# to a streamed single-device bucket; iterates must agree either way
+probs = make_problems(10, seed=7, big_every=5, big_shape=(512, 64),
+                      shapes=[(96, 24), (64, 16)])
+reqs = [p.to_request(uid=i, tol=3e-2, max_iterations=4000)
+        for i, p in enumerate(probs)]
+eng = SolverEngine(slots=2, check_every=16, shard_above=2048)
+keys = [eng.submit(r) for r in reqs]
+if jax.device_count() > 1:
+    assert any(isinstance(k, ShardedBucketKey) for k in keys), keys
+done = eng.run()
+assert len(done) == len(reqs)
+out = {r.uid: {"k": r.iterations, "x": np.asarray(r.x).tolist()}
+       for r in done}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def test_sharded_engine_matches_single_device_engine():
+    """The same ragged request mix (including sharded-routed oversized
+    problems) served through a 1-device and an 8-fake-device engine must
+    report identical per-request iteration counts with iterates within
+    1e-5."""
+    import json
+
+    outs = {}
+    for devices in (1, 8):
+        out = run_sub(ENGINE_MIX_BODY, devices=devices)
+        line = next(l for l in out.splitlines() if l.startswith("RESULT "))
+        outs[devices] = json.loads(line[len("RESULT "):])
+    assert outs[1].keys() == outs[8].keys()
+    for uid in outs[1]:
+        assert outs[1][uid]["k"] == outs[8][uid]["k"], uid
+        np.testing.assert_allclose(outs[1][uid]["x"], outs[8][uid]["x"],
+                                   atol=1e-5, err_msg=f"uid {uid}")
 
 
 CONSENSUS_BODY = """

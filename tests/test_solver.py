@@ -173,6 +173,38 @@ def test_solve_tol_respects_max_iterations(problem):
     assert int(s.k) == 40
 
 
+def test_solve_tol_never_overruns_max_iterations(problem):
+    """Regression: with max_iterations OFF the check_every grid, the final
+    partial block must be clamped to min(check_every, max_iterations - k)
+    — historically the cond only gated full blocks, overrunning the budget
+    by up to check_every - 1 steps."""
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    ops = dense_ops(jnp.asarray(d, jnp.float32))
+    for maxit, ce in ((10, 8), (21, 8), (5, 16), (40, 16)):
+        s = solve_tol(ops, prox, b, lg, 1000.0, max_iterations=maxit,
+                      tol=1e-12, check_every=ce)
+        assert int(s.k) == maxit, (maxit, ce, int(s.k))
+
+
+def test_batched_solve_tol_never_overruns_ragged_max_iterations(problem):
+    """The per-slot variant: ragged max_iterations freeze each slot at
+    exactly its own budget inside the check block."""
+    from repro.core.solver import batched_solve_tol
+    from repro.operators import make_operator, stack_coos
+
+    coo, d, b, x_true, lg = problem
+    prox = get_prox("l1", reg=CFG.reg)
+    m_pad, n_pad = d.shape
+    a, at = stack_coos([coo, coo, coo], "ell", m_pad, n_pad, pad_to=8)
+    ops = make_operator("stacked_ell", "jnp", a, at).solver_ops()
+    maxit = jnp.asarray([10, 21, 64], jnp.int32)
+    st = batched_solve_tol(ops, prox, jnp.stack([b, b, b]),
+                           jnp.full((3,), lg), jnp.full((3,), 1000.0),
+                           max_iterations=maxit, tol=1e-12, check_every=8)
+    assert [int(k) for k in st.k] == [10, 21, 64]
+
+
 def test_solve_tol_check_every_granularity(problem):
     """k is a multiple of check_every, and coarser checking overshoots the
     fine-grained stopping point by less than one check interval."""

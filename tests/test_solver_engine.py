@@ -238,6 +238,45 @@ def test_engine_evicts_idle_buckets():
     np.testing.assert_allclose(r.x, np.asarray(s.xbar), atol=1e-5)
 
 
+def test_engine_ragged_max_iterations_exact():
+    """Regression: per-slot max_iterations off the check_every grid stop
+    at EXACTLY their budget (slots freeze mid-block), like the clamped
+    solve_tol."""
+    reqs = _mk_requests(2, [(64, 16)])
+    for r, maxit in zip(reqs, (10, 21)):
+        r.tol = 1e-12
+        r.max_iterations = maxit
+    eng = SolverEngine(slots=2, check_every=16)
+    for r in reqs:
+        eng.submit(r)
+    done = {r.uid: r for r in eng.run()}
+    assert [done[r.uid].iterations for r in reqs] == [10, 21]
+
+
+def test_engine_streams_oversized_requests_on_one_device():
+    """A request above the per-device capacity (decide_placement ->
+    "sharded") on a 1-device engine cannot be sharded OR stay resident:
+    it runs in a streamed bucket (operand cache dropped every tick) and
+    still matches the standalone solve_tol exactly."""
+    from repro.plan import decide_placement
+
+    reqs = _mk_requests(2, [(96, 24)])       # nnz = 96*6 > shard_above
+    eng = SolverEngine(slots=2, check_every=16, shard_above=500)
+    keys = [eng.submit(r) for r in reqs]
+    _, why = decide_placement(96, 24, reqs[0].coo.nnz, 1, 500)
+    assert "streams" in why
+    done = eng.run()
+    bucket = eng.buckets[keys[0]]
+    assert not bucket.resident and bucket.dev is None
+    for r in done:
+        d = jnp.asarray(coo_to_dense(r.coo))
+        s = solve_tol(dense_ops(d), get_prox(r.prox, reg=r.reg), r.b, r.lg,
+                      r.gamma0, max_iterations=r.max_iterations, tol=r.tol,
+                      check_every=16)
+        assert r.iterations == int(s.k)
+        np.testing.assert_allclose(r.x, np.asarray(s.xbar), atol=1e-5)
+
+
 def test_engine_rejects_unservable_prox():
     r = _mk_requests(1, [(64, 16)])[0]
     r.prox = "group_l1"
