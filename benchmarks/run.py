@@ -22,12 +22,15 @@
   sharded_serving  requests/sec of the serving engine vs device count
            (1/2/4/8 fake CPU devices, subprocess per point) on a mixed
            workload whose oversized requests planner-route to mesh-wide
-           sharded buckets — the placement composition of PR 2 + PR 3
+           sharded buckets, swept over the ``--format`` axis (ell gather
+           bodies vs tiled-BCSR MXU bodies) with the chosen bucket body
+           and modeled operand bytes recorded per point
   api_overhead  the declarative facade (repro.api Problem -> plan ->
            Result) vs the raw kernel layer on identical work; asserts the
            planner + Result assembly cost <5%
 
-Usage: ``python benchmarks/run.py [mode ...]`` (default: all modes).
+Usage: ``python benchmarks/run.py [mode ...] [--format ell|bcsr|both]``
+(default: all modes, both formats).
 Prints ``name,us_per_call,derived`` CSV; details land in
 experiments/bench/*.json (schema documented in benchmarks/README.md).
 """
@@ -402,7 +405,7 @@ import os, sys, time, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%DEV%"
 import numpy as np, jax
 from repro.launch.solver_serve import make_problems
-from repro.serve import SolverEngine
+from repro.serve import ShardedBucketKey, SolverEngine
 
 NUM, SLOTS, TOL, CHECK = %NUM%, %SLOTS%, 1e-2, 16
 SHARD_ABOVE = %SHARD_ABOVE%
@@ -414,7 +417,7 @@ def requests():
     return [p.to_request(uid=i, tol=TOL, max_iterations=4000)
             for i, p in enumerate(probs)]
 
-eng = SolverEngine(slots=SLOTS, fmt="ell", backend="jnp",
+eng = SolverEngine(slots=SLOTS, fmt="%FMT%", backend="jnp",
                    check_every=CHECK, shard_above=SHARD_ABOVE)
 for r in requests():            # warm: same stream, compile every bucket
     eng.submit(r)
@@ -429,14 +432,19 @@ for _ in range(2):              # best-of-2 warm repeats (steady state)
     done = eng.run()
     dt = min(dt, time.perf_counter() - t0)
     assert len(done) == NUM
+sharded = [k for k in eng.buckets if isinstance(k, ShardedBucketKey)]
 print(json.dumps({"dt": dt, "rps": NUM / dt,
                   "devices": len(eng.devices),
                   "buckets": len(eng.buckets),
-                  "sharded_admitted": eng.stats["sharded_admitted"] // 2}))
+                  "sharded_admitted": eng.stats["sharded_admitted"] // 2,
+                  "bucket_body": (f"{sharded[0].fmt}/{sharded[0].strategy}"
+                                  if sharded else None),
+                  "bucket_slot_bytes": (eng.bucket_slot_bytes(sharded[0])
+                                        if sharded else None)}))
 """
 
 
-def sharded_serving():
+def sharded_serving(formats=("ell", "bcsr")):
     """Serving-engine throughput vs device count on one mixed workload:
     ragged small requests (replicated buckets — pinned round-robin or
     slot-axis sharded by queue depth) plus ONE oversized request above
@@ -444,36 +452,54 @@ def sharded_serving():
     the oversized problem to a mesh-wide sharded bucket whose shards stay
     device-resident across ticks; a 1-device engine cannot hold it
     resident and must stream its operands every tick — the data-locality
-    gap (Dünner et al.) this benchmark exists to measure.  One subprocess
-    per device count (device count locks at jax init), engine measured
-    warm, best of 2 repeats; emits experiments/bench/sharded_serving.json.
-    The acceptance gate is ``speedup_8v1 > 1`` with
-    ``sharded_admitted >= 1`` at 8 devices."""
+    gap (Dünner et al.) this benchmark exists to measure.
+
+    The ``--format`` axis runs the sweep per storage format: "ell" (VPU
+    gather bodies, the full 1/2/4/8 curve) and "bcsr" (tiled MXU bodies,
+    endpoints 1/8) — the per-device bucket-body choice
+    (``repro.plan.decide_bucket_body``) and its modeled operand bytes are
+    recorded per point.  One subprocess per point (device count locks at
+    jax init), engine measured warm, best of 2 repeats; emits
+    experiments/bench/sharded_serving.json.  The acceptance gate is
+    ``speedup_8v1 > 1`` with ``sharded_admitted >= 1`` at 8 devices (on
+    the ell curve; the fake-CPU caveat in benchmarks/README.md applies)."""
     num, slots, shard_above = 25, 4, 20_000
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     out = {"requests": num, "slots": slots, "big_shape": [8192, 512],
-           "shard_above": shard_above, "by_devices": {}}
-    for dev in (1, 2, 4, 8):
-        code = (_SHARDED_SERVING_SNIPPET
-                .replace("%DEV%", str(dev)).replace("%NUM%", str(num))
-                .replace("%SLOTS%", str(slots))
-                .replace("%SHARD_ABOVE%", str(shard_above)))
-        p = subprocess.run([sys.executable, "-c", code], env=env,
-                           capture_output=True, text=True, timeout=900)
-        if p.returncode != 0:
-            raise RuntimeError(p.stderr[-2000:])
-        rec = json.loads(p.stdout.strip().splitlines()[-1])
-        out["by_devices"][str(dev)] = rec
-        emit(f"sharded_serving/dev{dev}", rec["dt"] / num * 1e6,
-             f"rps={rec['rps']:.1f};buckets={rec['buckets']};"
-             f"sharded={rec['sharded_admitted']}")
-    one, eight = out["by_devices"]["1"], out["by_devices"]["8"]
-    out["speedup_8v1"] = eight["rps"] / one["rps"]
-    emit("sharded_serving/speedup_8v1", 0.0,
-         f"speedup={out['speedup_8v1']:.2f}x;"
-         f"sharded_at_8={eight['sharded_admitted']}")
+           "shard_above": shard_above, "formats": {}}
+    for fmt in formats:
+        devs = (1, 2, 4, 8) if fmt == "ell" else (1, 8)
+        by_dev = {}
+        for dev in devs:
+            code = (_SHARDED_SERVING_SNIPPET
+                    .replace("%DEV%", str(dev)).replace("%NUM%", str(num))
+                    .replace("%SLOTS%", str(slots))
+                    .replace("%SHARD_ABOVE%", str(shard_above))
+                    .replace("%FMT%", fmt))
+            p = subprocess.run([sys.executable, "-c", code], env=env,
+                               capture_output=True, text=True, timeout=900)
+            if p.returncode != 0:
+                raise RuntimeError(p.stderr[-2000:])
+            rec = json.loads(p.stdout.strip().splitlines()[-1])
+            by_dev[str(dev)] = rec
+            emit(f"sharded_serving/{fmt}/dev{dev}", rec["dt"] / num * 1e6,
+                 f"rps={rec['rps']:.1f};buckets={rec['buckets']};"
+                 f"sharded={rec['sharded_admitted']};"
+                 f"body={rec['bucket_body']}")
+        one, eight = by_dev["1"], by_dev["8"]
+        speedup = eight["rps"] / one["rps"]
+        out["formats"][fmt] = {"by_devices": by_dev,
+                               "speedup_8v1": speedup}
+        emit(f"sharded_serving/{fmt}/speedup_8v1", 0.0,
+             f"speedup={speedup:.2f}x;"
+             f"sharded_at_8={eight['sharded_admitted']};"
+             f"slot_bytes={eight['bucket_slot_bytes']}")
+    if "ell" in out["formats"]:
+        # legacy top-level mirror of the ell curve (schema compatibility)
+        out["by_devices"] = out["formats"]["ell"]["by_devices"]
+        out["speedup_8v1"] = out["formats"]["ell"]["speedup_8v1"]
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, "sharded_serving.json"), "w") as f:
         json.dump(out, f, indent=1, default=float)
@@ -507,7 +533,7 @@ def api_overhead():
     cfg = PaperProblemConfig(name="api", m=256, n=64, nnz=256 * 8, reg=0.1)
     coo, b, _ = make_lasso(cfg, seed=0)
     lg = float(np.sum(np.asarray(coo.vals) ** 2))
-    tol, gamma0, reps = 1e-3, 1000.0, 5
+    tol, gamma0, reps = 1e-3, 1000.0, 21
 
     def raw_once():
         ops = make_solver_ops(coo, "ell", "jnp")
@@ -520,21 +546,34 @@ def api_overhead():
             tol=tol, max_iterations=20_000, check_every=8,
             format="ell", backend="jnp")
 
-    def best_of(fn):
-        times = []
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            fn()
-            times.append(time.perf_counter() - t0)
-        return min(times), times
+    def timed(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
 
     raw_once(); facade_once()                  # one throwaway of each
-    raw_s, raw_all = best_of(raw_once)
-    fac_s, fac_all = best_of(facade_once)
-    ratio = fac_s / raw_s
+    # the gate statistic is the MEDIAN OF PER-PAIR RATIOS over
+    # interleaved reps with alternating order: machine drift slower than
+    # one pair cancels inside each ratio, order bias cancels across
+    # pairs, and the median shrugs off outlier pairs — sequential
+    # best-of-block swung ±10% run to run on this shared CPU container
+    raw_all, fac_all, ratios = [], [], []
+    for i in range(reps):
+        if i % 2:
+            f = timed(facade_once)
+            r = timed(raw_once)
+        else:
+            r = timed(raw_once)
+            f = timed(facade_once)
+        raw_all.append(r)
+        fac_all.append(f)
+        ratios.append(f / r)
+    raw_s = sorted(raw_all)[reps // 2]
+    fac_s = sorted(fac_all)[reps // 2]
+    ratio = sorted(ratios)[reps // 2]
     rec = dict(m=cfg.m, n=cfg.n, nnz=int(coo.nnz), tol=tol, reps=reps,
                raw_s=raw_s, facade_s=fac_s, overhead_ratio=ratio,
-               raw_all_s=raw_all, facade_all_s=fac_all)
+               raw_all_s=raw_all, facade_all_s=fac_all)  # medians + samples
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, "api_overhead.json"), "w") as f:
         json.dump(rec, f, indent=1, default=float)
@@ -561,16 +600,31 @@ MODES = {
 
 
 def main(argv=None) -> None:
-    """``python benchmarks/run.py [mode ...]`` — default: every mode."""
-    names = list(argv if argv is not None else sys.argv[1:]) or list(MODES)
+    """``python benchmarks/run.py [mode ...] [--format ell|bcsr|both]`` —
+    default: every mode; ``--format`` selects the storage-format axis of
+    the ``sharded_serving`` sweep (both by default)."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("modes", nargs="*", default=[],
+                    help=f"benchmark modes (default: all of {list(MODES)})")
+    ap.add_argument("--format", default="both",
+                    choices=("ell", "bcsr", "both"),
+                    help="sharded_serving format axis (bucket-body kernel)")
+    args = ap.parse_args(argv)
+    names = list(args.modes) or list(MODES)
     unknown = [n for n in names if n not in MODES]
     if unknown:
         raise SystemExit(f"unknown modes {unknown}; available: {list(MODES)}")
+    formats = ("ell", "bcsr") if args.format == "both" else (args.format,)
     os.makedirs(OUT_DIR, exist_ok=True)
     results = {}
     print("name,us_per_call,derived")
     for name in names:
-        results[name] = MODES[name]()
+        if name == "sharded_serving":
+            results[name] = sharded_serving(formats=formats)
+        else:
+            results[name] = MODES[name]()
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
     with open(os.path.join(OUT_DIR, "results.csv"), "w") as f:

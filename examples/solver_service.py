@@ -25,6 +25,8 @@ def _parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=None)
     ap.add_argument("--shard-above", type=int, default=None)
+    ap.add_argument("--fmt", default="ell", choices=("ell", "bcsr"),
+                    help="bucket storage/kernel format (bcsr = MXU path)")
     return ap.parse_known_args()[0]
 
 
@@ -75,14 +77,18 @@ def main():
 
     # under the hood: the engine admits Problems directly and shows its
     # bucketing + placement decisions (mesh-wide with --devices)
-    eng = create_engine("solver", slots=4, fmt="ell", backend="jnp",
+    eng = create_engine("solver", slots=4, fmt=ARGS.fmt, backend="jnp",
                         check_every=16, devices=ARGS.devices,
                         shard_above=ARGS.shard_above)
     for p in probs[:6]:
         key = eng.submit(p)         # a Problem is the engine's request type
         kind = type(key).__name__
+        body = (f", body={key.fmt}/{key.strategy}"
+                if hasattr(key, "strategy") else "")
         print(f"submit {p} -> {kind}({key.m_pad}x{key.n_pad}, "
-              f"k={key.width}, {key.prox}) on {len(eng.devices)} device(s)")
+              f"k={key.width}, {key.prox}{body}, "
+              f"{eng.bucket_slot_bytes(key)}B/slot) "
+              f"on {len(eng.devices)} device(s)")
     eng.run()
 
     # the engine's contract: same iterates as a standalone single plan

@@ -25,6 +25,34 @@ The per-strategy local operators themselves live in repro.operators.dist
 (one LinearOperator builder per strategy, registered under
 (format="ell", backend=<strategy>)); this module owns the partitioning,
 the shard_map plumbing, and the drivers.
+
+Besides the direct drivers (``make_solve_fn`` / ``make_solve_tol_fn``),
+this module builds the SERVING-bucket bodies
+(``make_sharded_bucket_fns``): the solve_tol loop body wrapped in the
+engine's masked-slot machinery, with the kernel and layout picked per
+(fmt, strategy, backend) — row-ELL gathers or tiled-BCSR MXU
+contractions, rowpart or dualpart sharding (DESIGN.md section 5's
+table).  In the engine's bucket lifecycle (repro.serve.solver_engine:
+admit -> place -> advance -> freeze), these are the "advance" — every
+tick runs one check_every block via ``advance_fn`` and the engine
+freezes/harvests slots whose psum'd verdict flipped.
+
+The direct drivers compose the same way end to end — partition, solve
+inside one shard_map, trim the padding (works on a 1-device mesh too,
+the degenerate case):
+
+>>> import numpy as np, jax, jax.numpy as jnp
+>>> from jax.sharding import Mesh
+>>> from repro.core.prox import get_prox
+>>> from repro.sparse.formats import COO
+>>> eye = COO(rows=jnp.arange(4), cols=jnp.arange(4),
+...           vals=jnp.ones(4), m=4, n=4)
+>>> mesh = Mesh(np.array(jax.devices()[:1]), ("p",))
+>>> dp = build_problem(eye, mesh, "dualpart")   # both orientations cached
+>>> fn = make_solve_tol_fn(dp, get_prox("zero"), gamma0=10.0, tol=1e-5)
+>>> st = fn(dp.operands, _pad_to(2.0 * jnp.ones(4), dp.m_pad))
+>>> [round(float(v), 3) for v in st.xbar[:2]]   # min 0 s.t. I x = 2
+[2.0, 2.0]
 """
 from __future__ import annotations
 
@@ -272,41 +300,93 @@ def make_solve_tol_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
 # ---------------------------------------------------------------------------
 
 
+def sharded_bucket_specs(axis: str, fmt: str = "ell",
+                         strategy: str = "rowpart"):
+    """(a_specs, at_specs) PartitionSpec pairs for one mesh-wide bucket's
+    operand stacks — shared between ``make_sharded_bucket_fns`` (shard_map
+    in_specs) and the engine's NamedSharding transfers, so the two can
+    never disagree about a layout.
+
+      fmt="ell"   a: vals/cols (S, m_pad, k), rows sharded
+      fmt="bcsr"  a: vals (S, nbr, kb, bm, bn) + bcols (S, nbr, kb),
+                  block-rows sharded (GLOBAL block-column indices)
+      strategy="rowpart"   at: per-shard transpose blocks, sharded on the
+                  LEADING (ndev,) axis — each shard holds a full-n
+                  transpose of its own rows
+      strategy="dualpart"  at: the plain transpose, sharded on ITS row
+                  axis (= columns of A) — the dual-RDD cache: the
+                  transpose is stored once across the mesh
+    """
+    if strategy not in ("rowpart", "dualpart"):
+        raise KeyError(f"unknown sharded-bucket strategy {strategy!r}")
+    ell_a = (P(None, axis, None), P(None, axis, None))
+    bcsr_a = (P(None, axis, None, None, None), P(None, axis, None))
+    a_specs = ell_a if fmt == "ell" else bcsr_a
+    if strategy == "rowpart":
+        at_specs = ((P(axis, None, None, None),) * 2 if fmt == "ell" else
+                    (P(axis, None, None, None, None, None),
+                     P(axis, None, None, None)))
+    else:
+        at_specs = a_specs
+    return a_specs, at_specs
+
+
 def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
                             algorithm: str = "a2", c: float = 3.0,
-                            check_every: int = 8, axis: str | None = None):
+                            check_every: int = 8, axis: str | None = None,
+                            fmt: str = "ell", strategy: str = "rowpart",
+                            backend: str = "jnp",
+                            interpret: bool | None = None):
     """jit(shard_map) bodies for ONE mesh-wide serving bucket: the
     ``make_solve_tol_fn`` while-loop body (check_every steps + psum'd
     feasibility verdict) wrapped in the serving engine's masked-slot
     machinery (repro.serve.solver_engine), so problems too large for one
     device are continuous-batched across the whole mesh.
 
-    Layout (global shapes; S = slots, P devices, sharded axis = ``axis``):
+    The bucket body is picked by ``(fmt, strategy, backend)`` — the table
+    DESIGN.md section 5 documents — via the stacked shard-local operators
+    of ``repro.operators.dist``:
 
-      vals/cols   (S, m_pad, k)  row-ELL of each slot's A, rows sharded,
-                                 GLOBAL column indices into [0, n_pad)
-      at_vals/at_rows (P, S, n_pad, k_t)  per-shard TRANSPOSE blocks
-                                 (sparse.partition.rowshard_transpose_ell,
-                                 row indices local to the shard) — the
-                                 dual-copy trade, so the backward is
-                                 gather-only; sharded on the leading axis
-      b, yhat     (S, m_pad)     row-sharded with A
-      xbar/xstar  (S, n_pad)     replicated (harvest reads them host-side)
+      fmt      "ell" (VPU flat gathers) or "bcsr" (dense (bm, bn) tiles
+               contracted with dot_general — the MXU path; with
+               backend="pallas" the contraction runs the
+               ``kernels/bcsr_spmv.py`` Pallas kernel per shard,
+               ``interpret`` resolved by the caller).
+      strategy "rowpart": per-shard TRANSPOSE blocks
+               (sparse.partition.rowshard_transpose_ell/_bcsr) make the
+               backward gather-only + psum(n) ~ MR1/MR3 with block2d's
+               dual-copy trade; each shard stores a full-n transpose of
+               its own rows (ndev copies of the n axis).
+               "dualpart": BOTH orientations resident per shard — the row
+               block AND a 1/ndev slice of the plain transpose (the Spark
+               dual-RDD cache) — collective-free forward, backward via two
+               tiled all_gathers; transpose bytes stored once mesh-wide
+               (the memory/network trade ``repro.plan.sharded_bucket_bytes``
+               prices).
+
+    Layout (global shapes; S = slots, sharded axis = ``axis``):
+
+      a operands  row-ELL (S, m_pad, k) with GLOBAL columns, or BCSR
+                  (S, nbr, kb, bm, bn) tiles with GLOBAL block-columns;
+                  rows/block-rows sharded.
+      at operands rowpart: (ndev, S, n_pad, k_t) ELL / (ndev, S, nbt,
+                  kb_t, bm, bn_t) BCSR per-shard transpose blocks, sharded
+                  on the leading axis; dualpart: the plain transpose
+                  (S, n_pad, k_t) / (S, nbt, kb_t, bm, bn_t), sharded on
+                  its own row axis.
+      b, yhat     (S, m_pad)  row-sharded with A
+      xbar/xstar  (S, n_pad)  replicated (harvest reads them host-side)
       lg/gamma0/reg/tol/maxit/masks  (S,)  replicated
 
-    i.e. the batched analogue of the ``rowpart`` strategy with block2d's
-    ``dual_copy`` memory trade (fwd local gather; bwd per-shard transpose
-    gather + psum(n) ~ MR1/MR3 + the Spark dual-RDD cache), via the
-    ("stacked_ell", "rowpart") registry operator.  ``prox_builder`` maps a
-    per-slot reg array (S,) to a ProxOp (the engine passes
-    ``partial(batched_prox, family)``).
+    ``prox_builder`` maps a per-slot reg array (S,) to a ProxOp (the
+    engine passes ``partial(batched_prox, family)``).
 
     Returns ``(splice_fn, advance_fn)``:
 
-      splice_fn(vals, cols, at_vals, at_rows, b, lg, gamma0, reg, state,
+      splice_fn(a_vals, a_idx, at_vals, at_idx, b, lg, gamma0, reg, state,
                 new_mask, active, tol, maxit) -> (state, feas, still)
           batched_init masked into freshly admitted slots + verdicts.
-      advance_fn(vals, cols, at_vals, at_rows, b, lg, gamma0, reg, state,
+      advance_fn(a_vals, a_idx, at_vals, at_idx, b, lg, gamma0, reg, state,
                  active, tol, maxit) -> (state, feas, still)
           check_every masked batched steps (each slot additionally frozen
           at its max_iterations, like solve_tol's clamped inner block) +
@@ -317,15 +397,35 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
     sharded operand pytrees exactly like its single-device buckets.
     """
     from repro.core.solver import batched_init, batched_step, mask_state
-    from repro.sparse.formats import StackedELL
+    from repro.operators import make_operator
+    from repro.sparse.formats import StackedBCSR, StackedELL
 
     ax = axis if axis is not None else mesh.axis_names[-1]
+    psize = int(mesh.devices.shape[mesh.axis_names.index(ax)])
 
-    def local_ops(vals, cols, at_vals, at_rows):
-        from repro.operators import make_operator
-        return make_operator("stacked_ell", "rowpart",
-                             StackedELL(vals=vals, cols=cols, n=n_pad),
-                             ax, at_vals[0], at_rows[0]).solver_ops()
+    def local_ops(a_vals, a_idx, at_vals, at_idx):
+        if fmt == "ell":
+            a = StackedELL(vals=a_vals, cols=a_idx, n=n_pad)
+            if strategy == "rowpart":
+                op = make_operator("stacked_ell", "rowpart", a, ax,
+                                   at_vals[0], at_idx[0])
+            else:
+                at = StackedELL(vals=at_vals, cols=at_idx,
+                                n=a_vals.shape[1] * psize)
+                op = make_operator("stacked_ell", "dualpart", a, ax, at)
+        else:
+            bm = a_vals.shape[3]
+            m_loc = a_vals.shape[1] * bm
+            a = StackedBCSR(vals=a_vals, bcols=a_idx, m=m_loc, n=n_pad)
+            if strategy == "rowpart":
+                at = StackedBCSR(vals=at_vals[0], bcols=at_idx[0],
+                                 m=n_pad, n=m_loc)
+            else:
+                at = StackedBCSR(vals=at_vals, bcols=at_idx,
+                                 m=at_vals.shape[1] * bm, n=m_loc * psize)
+            op = make_operator("stacked_bcsr", strategy, a, ax, at,
+                               kernel_backend=backend, interpret=interpret)
+        return op.solver_ops()
 
     def global_sq(v):                       # (S, m_loc) -> (S,) global
         return jax.lax.psum(jnp.sum(v * v, axis=-1), ax)
@@ -335,9 +435,9 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
         return (jnp.sqrt(global_sq(r))
                 / jnp.maximum(jnp.sqrt(global_sq(b)), 1.0))
 
-    def splice(vals, cols, at_vals, at_rows, b, lg, gamma0, reg, state,
+    def splice(a_vals, a_idx, at_vals, at_idx, b, lg, gamma0, reg, state,
                new_mask, active, tol, maxit):
-        ops = local_ops(vals, cols, at_vals, at_rows)
+        ops = local_ops(a_vals, a_idx, at_vals, at_idx)
         prox = prox_builder(reg)
         fresh = batched_init(ops, prox, b, lg, gamma0, algorithm, c)
         state = mask_state(new_mask, fresh, state)
@@ -345,9 +445,9 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
         still = active & (feas >= tol) & (state.k < maxit)
         return state, feas, still
 
-    def advance(vals, cols, at_vals, at_rows, b, lg, gamma0, reg, state,
+    def advance(a_vals, a_idx, at_vals, at_idx, b, lg, gamma0, reg, state,
                 active, tol, maxit):
-        ops = local_ops(vals, cols, at_vals, at_rows)
+        ops = local_ops(a_vals, a_idx, at_vals, at_idx)
         prox = prox_builder(reg)
 
         def one(_, s):
@@ -360,10 +460,9 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
         return state, feas, still
 
     row = P(None, ax)
-    blocks = P(ax, None, None, None)
+    a_specs, at_specs = sharded_bucket_specs(ax, fmt, strategy)
     state_specs = PDState(xbar=P(), xstar=P(), yhat=row, gamma=P(), k=P())
-    operand_specs = (P(None, ax, None), P(None, ax, None), blocks, blocks,
-                     row, P(), P(), P())
+    operand_specs = (*a_specs, *at_specs, row, P(), P(), P())
     out_specs = (state_specs, P(), P())
     splice_fn = jax.jit(_shard_map(
         splice, mesh=mesh,

@@ -82,6 +82,15 @@ def main(argv=None):
     ap.add_argument("--big-every", type=int, default=0,
                     help="make every N-th request oversized (routes to a "
                          "sharded bucket when above --shard-above)")
+    ap.add_argument("--sharded-strategy", default=None,
+                    choices=("rowpart", "dualpart"),
+                    help="force the mesh-wide bucket body layout "
+                         "(default: the planner's operand-byte rule, "
+                         "repro.plan.decide_bucket_body)")
+    ap.add_argument("--device-budget", type=int, default=None,
+                    help="resident operand-byte capacity per device "
+                         "(bytes; buckets admit against it via the "
+                         "planner's cost model)")
     args = ap.parse_args(argv)
 
     from repro.launch.devices import force_host_devices
@@ -92,7 +101,9 @@ def main(argv=None):
     probs = make_problems(args.requests, big_every=args.big_every)
     eng = create_engine("solver", slots=args.slots, fmt=args.fmt,
                         backend=args.backend, check_every=args.check_every,
-                        devices=args.devices, shard_above=args.shard_above)
+                        devices=args.devices, shard_above=args.shard_above,
+                        sharded_strategy=args.sharded_strategy,
+                        device_budget=args.device_budget)
     reqs = [p.to_request(uid=i, tol=args.tol, max_iterations=4000)
             for i, p in enumerate(probs)]
     for r in reqs:

@@ -168,6 +168,102 @@ def stacked_rowpart_operator(a, axis: str, at_vals=None,
                    dual_copy=at_vals is not None))
 
 
+@register("stacked_bcsr", "rowpart")
+def stacked_bcsr_rowpart_operator(a, axis: str, at, *,
+                                  kernel_backend: str = "jnp",
+                                  interpret=None) -> LinearOperator:
+    """Slot-batched row-partitioned TILED local operator (runs INSIDE
+    shard_map) — the MXU-path body of the serving engine's mesh-wide
+    buckets.
+
+    ``a`` is the device-local shard of a StackedBCSR: vals
+    (S, nbr_loc, kb, bm, bn) dense tiles with GLOBAL block-column indices
+    into [0, n/bn), so the replicated x feeds each tile's ``dot_general``
+    directly.  ``at`` is this shard's TRANSPOSE tile block
+    (``sparse.partition.rowshard_transpose_bcsr``: the BCSR of
+    ``A_shard^T``, block-columns local to the shard's y slice) — the
+    dual-copy trade in tiles, so the backward is also gather + dot_general
+    (never scatter), psum'd over shards ~ MR1/MR3 per slot.
+
+    ``kernel_backend="pallas"`` contracts tiles through the Pallas MXU kernel
+    (``kernels.bcsr_spmv`` via the vmap-over-pallas_call batch wrapper);
+    ``"jnp"`` uses the reference ``stacked_bcsr_matvec``.
+    """
+    mv = _stacked_bcsr_mv(kernel_backend, interpret)
+    return LinearOperator(
+        matvec=lambda x: mv(a, x),
+        rmatvec=lambda y: jax.lax.psum(mv(at, y), axis),
+        shape=(a.m, a.n), format="stacked_bcsr", backend="rowpart",
+        stats=dict(batch=a.batch, kb=a.kb, kb_t=at.kb,
+                   body_backend=kernel_backend, dual_copy=True))
+
+
+@register("stacked_ell", "dualpart")
+def stacked_ell_dualpart_operator(a, axis: str, at) -> LinearOperator:
+    """Slot-batched dual-partitioned local operator (runs INSIDE
+    shard_map): each shard caches BOTH orientations — its row block of A
+    (vals/cols (S, m_loc, k), GLOBAL columns) AND its slice of the plain
+    transpose (``at``: (S, n_loc, k_t) rows of A^T = columns of A, GLOBAL
+    row indices) — the Spark dual-RDD cache per slot.
+
+    x is replicated, y row-sharded: the forward is a local gather
+    (collective-free); the backward reassembles y with a tiled all_gather,
+    gathers each shard's OWN primal coordinates from its transpose slice,
+    and all_gathers the result back to the replicated x space.  Against
+    ``rowpart`` this trades the psum(n) backward for two all_gathers
+    (m + n bytes) and stores the transpose ONCE across the mesh instead of
+    one full-n block per shard — ndev x less transpose memory, the axis
+    the byte cost model prices (repro.plan.sharded_bucket_bytes).
+    """
+    from repro.sparse.linalg import stacked_ell_matvec
+
+    def rmatvec(y):                      # (S, m_loc) -> (S, n) replicated
+        yg = jax.lax.all_gather(y, axis, axis=1, tiled=True)
+        z_loc = stacked_ell_matvec(at, yg)           # my columns only
+        return jax.lax.all_gather(z_loc, axis, axis=1, tiled=True)
+
+    return LinearOperator(
+        matvec=lambda x: stacked_ell_matvec(a, x),
+        rmatvec=rmatvec,
+        shape=(a.m, a.n), format="stacked_ell", backend="dualpart",
+        stats=dict(batch=a.batch, k=a.k, k_t=at.k, dual_copy=True))
+
+
+@register("stacked_bcsr", "dualpart")
+def stacked_bcsr_dualpart_operator(a, axis: str, at, *,
+                                   kernel_backend: str = "jnp",
+                                   interpret=None) -> LinearOperator:
+    """Dual-partitioned MXU-path body: the tiled analogue of
+    ``("stacked_ell", "dualpart")`` — row-block tiles forward
+    (collective-free), each shard's slice of the plain transpose BCSR
+    backward (all_gather y -> tile contraction -> all_gather z), with the
+    per-tile contraction on the Pallas kernel when ``kernel_backend="pallas"``.
+    """
+    mv = _stacked_bcsr_mv(kernel_backend, interpret)
+
+    def rmatvec(y):                      # (S, m_loc) -> (S, n) replicated
+        yg = jax.lax.all_gather(y, axis, axis=1, tiled=True)
+        return jax.lax.all_gather(mv(at, yg), axis, axis=1, tiled=True)
+
+    return LinearOperator(
+        matvec=lambda x: mv(a, x),
+        rmatvec=rmatvec,
+        shape=(a.m, a.n), format="stacked_bcsr", backend="dualpart",
+        stats=dict(batch=a.batch, kb=a.kb, kb_t=at.kb,
+                   body_backend=kernel_backend, dual_copy=True))
+
+
+def _stacked_bcsr_mv(backend: str, interpret):
+    """The per-shard stacked-BCSR apply: Pallas MXU tiles or jnp oracle."""
+    if backend == "pallas":
+        from repro.kernels.ops import batched_bcsr_spmv
+
+        return lambda s, v: batched_bcsr_spmv(s, v, interpret=interpret)
+    from repro.sparse.linalg import stacked_bcsr_matvec
+
+    return stacked_bcsr_matvec
+
+
 def local_operator(problem, operands) -> LinearOperator:
     """Dispatch a DistProblem's local shard through the registry."""
     return make_operator("ell", problem.strategy, problem, operands)

@@ -62,6 +62,23 @@ def _roofline_s(flops: float, bytes_hbm: float, peak_flops: float) -> float:
     return max(flops / peak_flops, bytes_hbm / hw.HBM_BW)
 
 
+def ell_bytes(rows: int, k: int) -> int:
+    """Stored bytes of ONE row-ELL orientation: fp32 vals + int32 cols at
+    the padded width ``k``.  The shared operand-byte primitive: the
+    roofline estimates below and the serving engine's byte-based
+    ``device_budget`` admission (repro.plan.bucket_operand_bytes /
+    sharded_bucket_bytes) price storage through this same formula."""
+    return int(rows) * int(k) * (_VAL + _IDX)
+
+
+def bcsr_bytes(nbr: int, kb: int, bm: int, bn: int) -> int:
+    """Stored bytes of ONE tiled-BCSR orientation: ``nbr * kb`` dense
+    fp32 (bm, bn) tiles + one int32 block-column index per tile.  Tile
+    zero-fill is real storage (and real HBM traffic), which is why BCSR
+    and ELL buckets price very differently per stored nonzero."""
+    return int(nbr) * int(kb) * (int(bm) * int(bn) * _VAL + _IDX)
+
+
 def _bcsr_block_count(coo, bm: int, bn: int) -> int:
     nbc = max(1, -(-coo.n // bn))
     bi = np.asarray(coo.rows) // bm
@@ -79,17 +96,17 @@ def estimate_formats(coo, bm_bn_candidates=((8, 128), (16, 128), (32, 128),
 
     # ELL: m * k_max stored entries (vals + idx), 2 flops each, VPU.
     k = max(1, st["row_nnz_max"])
-    ell_bytes = m * k * (_VAL + _IDX) + vec_bytes
+    ell_bytes_ = ell_bytes(m, k) + vec_bytes
     out["ell"] = dict(
-        s=_roofline_s(2.0 * m * k, ell_bytes, PEAK_FLOPS_VPU),
-        bytes=ell_bytes, pad_ratio=m * k / max(1, nnz),
+        s=_roofline_s(2.0 * m * k, ell_bytes_, PEAK_FLOPS_VPU),
+        bytes=ell_bytes_, pad_ratio=m * k / max(1, nnz),
         params=dict())
 
     # BandedELL (backward pass layout): same stored volume keyed by columns,
     # k_max over columns; viable at any m (y staged per band), mandatory
     # once y exceeds VMEM.
     kc = max(1, st["col_nnz_max"])
-    band_bytes = n * kc * (_VAL + _IDX) + vec_bytes
+    band_bytes = ell_bytes(n, kc) + vec_bytes
     out["banded_ell"] = dict(
         s=_roofline_s(2.0 * n * kc, band_bytes, PEAK_FLOPS_VPU),
         bytes=band_bytes, pad_ratio=n * kc / max(1, nnz),
@@ -101,7 +118,7 @@ def estimate_formats(coo, bm_bn_candidates=((8, 128), (16, 128), (32, 128),
     for bm, bn in bm_bn_candidates:
         nblocks = _bcsr_block_count(coo, bm, bn)
         tile_entries = nblocks * bm * bn
-        bytes_ = tile_entries * _VAL + nblocks * _IDX + vec_bytes
+        bytes_ = bcsr_bytes(nblocks, 1, bm, bn) + vec_bytes
         s = _roofline_s(2.0 * tile_entries, bytes_, PEAK_FLOPS_MXU_F32)
         cand = dict(s=s, bytes=bytes_,
                     occupancy=nnz / max(1, tile_entries),

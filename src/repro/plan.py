@@ -39,8 +39,9 @@ from typing import Any, Optional
 
 import numpy as np
 
-__all__ = ["ExecutionPlan", "Result", "SolveSpec", "decide_placement",
-           "plan"]
+__all__ = ["ExecutionPlan", "Result", "SolveSpec", "bucket_operand_bytes",
+           "decide_bucket_body", "decide_placement", "plan",
+           "sharded_bucket_bytes", "sharding_ndev"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -371,6 +372,202 @@ def _shard_threshold(shard_above: Optional[int] = None) -> int:
     return int(env) if env else _SHARD_ABOVE_NNZ
 
 
+def bucket_operand_bytes(fmt: str, slots: int, m_pad: int, n_pad: int,
+                         width: int, width_t: int) -> int:
+    """Resident operand bytes of ONE single-device serving bucket: both
+    orientations at the padded widths, plus b — the unit the engine's
+    byte-based ``device_budget`` admits in.
+
+    ell   slots x (m_pad*width + n_pad*width_t) stored entries, 8 B each
+          (fp32 val + int32 index) — the row-ELL + transpose-ELL pair.
+    bcsr  slots x dense (8, min(128, dim)) tiles per orientation
+          (``operators.select.bcsr_bytes``): tile zero-fill is real
+          storage, so a BCSR bucket can cost many times its ELL twin for
+          the same nonzeros — the gap slot-count accounting cannot see.
+    """
+    from repro.operators.select import _VAL, bcsr_bytes, ell_bytes
+
+    b_bytes = m_pad * _VAL
+    if fmt == "ell":
+        per_slot = ell_bytes(m_pad, width) + ell_bytes(n_pad, width_t)
+    elif fmt == "bcsr":
+        bm, bn, bn_t = 8, min(128, n_pad), min(128, m_pad)
+        per_slot = (bcsr_bytes(-(-m_pad // bm), width, bm, bn)
+                    + bcsr_bytes(-(-n_pad // bm), width_t, bm, bn_t))
+    else:                                   # dense and friends: the array
+        per_slot = 2 * m_pad * n_pad * _VAL
+    return slots * (per_slot + b_bytes)
+
+
+def sharded_bucket_bytes(fmt: str, strategy: str, slots: int, m_pad: int,
+                         n_pad: int, width: int, width_t: int,
+                         ndev: int) -> int:
+    """PER-DEVICE resident operand bytes of one mesh-wide sharded bucket
+    (the geometry ``core.distributed.make_sharded_bucket_fns`` lays out).
+
+    The forward operand is always 1/ndev of the row(-tile) stack.  The
+    strategies differ exactly where the byte model can see it:
+
+    rowpart   each shard stores a FULL-n transpose block of its own rows
+              (``rowshard_transpose_ell/_bcsr``) — n_pad * width_t per
+              shard, i.e. the transpose axis is replicated ndev times
+              mesh-wide, in exchange for a psum(n)-only backward.
+    dualpart  each shard stores a 1/ndev slice of the plain transpose
+              (the Spark dual-RDD cache) — the transpose is stored once
+              mesh-wide, in exchange for two all_gathers per backward.
+    """
+    from repro.operators.select import _VAL, bcsr_bytes, ell_bytes
+
+    b_bytes = (m_pad // ndev) * _VAL
+    if fmt == "ell":
+        a = ell_bytes(m_pad // ndev, width)
+        at = (ell_bytes(n_pad, width_t) if strategy == "rowpart"
+              else ell_bytes(-(-n_pad // ndev), width_t))
+    else:
+        bm, bn = 8, min(128, n_pad)
+        a = bcsr_bytes(m_pad // (bm * ndev), width, bm, bn)
+        nbt = -(-n_pad // bm)
+        if strategy == "rowpart":
+            at = bcsr_bytes(nbt, width_t, bm, min(128, m_pad // ndev))
+        else:
+            at = bcsr_bytes(-(-nbt // ndev), width_t, bm, min(128, m_pad))
+    return slots * (a + at + b_bytes)
+
+
+def decide_bucket_body(fmt: str, m_pad: int, n_pad: int, width: int,
+                       width_t_rowpart: int, width_t_dualpart: int,
+                       ndev: int, override: Optional[str] = None
+                       ) -> tuple[str, int, str]:
+    """The sharded-bucket body decision: (strategy, bytes_per_device,
+    reason).  Shared between ``plan()`` (which records it as the
+    ``bucket_body`` reason) and ``SolverEngine.sharded_bucket_key`` (which
+    builds the bucket it names), so the engine executes the same rule the
+    plan explains instead of silently rewriting it.
+
+    The rule is the operand-byte model above: pick the strategy whose
+    per-device resident bytes are smaller — dualpart wins whenever
+    replicating a full-n transpose block per shard (rowpart) costs more
+    than its extra all_gather traffic is worth, which is exactly the
+    feature- vs observation-partitioned layout choice of the paper's
+    Spark design.  Ties go to dualpart (both orientations cached, the
+    planner's default for direct distributed solves).
+
+    With ``override`` set only that strategy's width is consulted —
+    callers on a hot admission path may pass a placeholder for the other
+    (the engine skips computing it entirely)."""
+    if override is not None and override not in ("rowpart", "dualpart"):
+        raise KeyError(f"unknown sharded-bucket strategy override "
+                       f"{override!r} (rowpart | dualpart | None)")
+    args = (1, m_pad, n_pad, width)
+    if override is not None:
+        wt = width_t_rowpart if override == "rowpart" else width_t_dualpart
+        return override, sharded_bucket_bytes(fmt, override, *args, wt,
+                                              ndev), "user override"
+    by = {"rowpart": sharded_bucket_bytes(fmt, "rowpart", *args,
+                                          width_t_rowpart, ndev),
+          "dualpart": sharded_bucket_bytes(fmt, "dualpart", *args,
+                                           width_t_dualpart, ndev)}
+    strategy = "dualpart" if by["dualpart"] <= by["rowpart"] else "rowpart"
+    return strategy, by[strategy], (
+        f"operand-bytes model over {ndev} devices: dualpart "
+        f"{by['dualpart']}B/device vs rowpart {by['rowpart']}B/device "
+        f"per slot -> {strategy}")
+
+
+def sharding_ndev(nnz: int, n_devices: int,
+                  shard_above: Optional[int] = None) -> int:
+    """Capacity-sized sub-mesh for one sharded problem: the fewest devices
+    whose combined per-device capacity (the ``decide_placement`` threshold)
+    holds the operands — collectives should span the shards, not the
+    world.  Shared by the engine's sharded-bucket sizing and the planner's
+    bucket-body reason, so both price the same mesh."""
+    cap = _shard_threshold(shard_above)
+    need = -(-int(nnz) // max(1, cap))
+    return max(2, min(n_devices, need))
+
+
+#: above this nnz, _cost_reasons estimates widths from mean degrees
+#: instead of exact host passes — the reason string is advisory, and an
+#: O(nnz log nnz) scan per plan() would dwarf the planner itself.
+_EXACT_WIDTHS_NNZ = 1_000_000
+
+
+def _next_pow2(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+def _cost_reasons(problem, fmt: str, placement: str, n_devices: int,
+                  shard_above: Optional[int]) -> dict:
+    """The ``bucket_body`` / ``operand_bytes`` reasons: which serving body
+    this problem's placement maps to and what its operands cost resident,
+    from the same byte model the engine's admission charges against.
+
+    Dims and widths come from the engine's own helpers
+    (``SolverEngine.sharded_bucket_dims/sharded_bucket_widths`` /
+    ``bucket_key``'s padded tiling, at the default 64/16 floors), so the
+    recorded body matches the bucket a default-configured engine builds;
+    an engine with a different ``fmt`` / ``min_rows`` / forced
+    ``sharded_strategy`` re-evaluates the same rule at its own config.
+    Above ``_EXACT_WIDTHS_NNZ`` stored entries the widths are estimated
+    from mean degrees (labeled in the reason) instead of exact O(nnz)
+    host passes — the engine still computes exact widths at admission.
+    """
+    coo = problem.coo
+    fmt_b = fmt if fmt in ("ell", "bcsr") else "ell"
+    exact = coo.nnz <= _EXACT_WIDTHS_NNZ
+    est = "" if exact else " (widths estimated from mean degrees)"
+    floor = 8 if fmt_b == "ell" else 1
+    pow2 = lambda v: _next_pow2(max(floor, v))
+    mean_w = pow2(-(-coo.nnz // max(1, coo.m)))
+    mean_wt = pow2(-(-coo.nnz // max(1, coo.n)))
+    if placement == "sharded" and n_devices > 1:
+        from repro.serve.solver_engine import (
+            sharded_bucket_dims, sharded_bucket_widths,
+        )
+        ndev = sharding_ndev(coo.nnz, n_devices, shard_above)
+        m_pad, n_pad = sharded_bucket_dims(coo.m, coo.n, ndev)
+        if exact:     # the engine's own padded-width computation, shared
+            w, wt_row, wt_dual = sharded_bucket_widths(
+                coo, m_pad, n_pad, ndev, fmt_b)
+        else:
+            w, wt_row, wt_dual = mean_w, mean_wt, mean_wt
+        strategy, per_dev, why = decide_bucket_body(
+            fmt_b, m_pad, n_pad, w, wt_row, wt_dual, ndev)
+        return {
+            "bucket_body": (f"stacked_{fmt_b}/{strategy} mesh-wide bucket "
+                            f"over {ndev} devices ({why}){est}"),
+            "operand_bytes": (f"{per_dev} resident operand bytes/device "
+                              f"per slot — the unit the engine's "
+                              f"byte-based device_budget admits in{est}"),
+        }
+    m_pad = max(64, _next_pow2(coo.m))
+    n_pad = max(16, _next_pow2(coo.n))
+    if not exact:
+        w, wt = mean_w, mean_wt
+    elif fmt_b == "bcsr":   # mirror SolverEngine.bucket_key's padded tiling
+        from repro.sparse.formats import coo_bcsr_width, pad_coo, transpose_coo
+        c = pad_coo(coo, m_pad, n_pad)
+        w = pow2(coo_bcsr_width(c, bm=8, bn=min(128, n_pad)))
+        wt = pow2(coo_bcsr_width(transpose_coo(c), bm=8,
+                                 bn=min(128, m_pad)))
+    else:
+        rows = np.asarray(coo.rows)
+        cols = np.asarray(coo.cols)
+        w = pow2(int(np.bincount(rows, minlength=coo.m).max())
+                 if rows.size else 1)
+        wt = pow2(int(np.bincount(cols, minlength=coo.n).max())
+                  if cols.size else 1)
+    bytes_ = bucket_operand_bytes(fmt_b, 1, m_pad, n_pad, w, wt)
+    return {
+        "bucket_body": (f"stacked_{fmt_b} single-device bucket body "
+                        f"(placement={placement})"),
+        "operand_bytes": (f"{bytes_} resident operand bytes per slot at "
+                          f"the engine's default bucket padding "
+                          f"({m_pad}x{n_pad}, widths {w}/{wt}; both "
+                          f"orientations + b){est}"),
+    }
+
+
 def decide_placement(m: int, n: int, nnz: Optional[int], n_devices: int,
                      shard_above: Optional[int] = None,
                      override: str = "auto") -> tuple[str, str]:
@@ -495,6 +692,12 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
 
     # lg -------------------------------------------------------------------
     lg, reasons["lg"] = _choose_lg(problem, spec)
+
+    # serving cost model: bucket body + operand bytes ------------------------
+    if problem.coo is not None:
+        import jax
+        reasons.update(_cost_reasons(problem, fmt, placement,
+                                     len(jax.devices()), spec.shard_above))
 
     return ExecutionPlan(problem=problem, spec=spec, execution=execution,
                          algorithm=algorithm, format=fmt, backend=backend,

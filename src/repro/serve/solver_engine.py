@@ -50,25 +50,51 @@ the decision table):
      planner-resolved placement says it exceeds the per-device capacity
      (``repro.plan.decide_placement`` — the same rule ``Problem.plan()``
      records) is admitted into a mesh-wide bucket: operands are
-     row-partitioned over a capacity-sized sub-mesh (with per-shard
-     transpose blocks, block2d's dual-copy trade, so the backward is
-     gather-only) and the advance body is the
-     ``core.distributed.make_solve_tol_fn`` loop body (check_every steps
-     + psum'd per-slot relative feasibility) run inside shard_map under
-     this engine's masked-slot machinery
-     (``core.distributed.make_sharded_bucket_fns``).  Sharded buckets are
-     always row-ELL; operands stay device-resident across ticks exactly
-     like single-device buckets.  On a 1-device engine the same request
-     can neither shard nor stay resident: it is served **streamed** — the
-     operand fraction beyond capacity re-uploads every iteration (chunked
-     per check block) — which is the data-locality cost the mesh
-     placements exist to avoid.
+     partitioned over a capacity-sized sub-mesh and the advance body is
+     the ``core.distributed.make_solve_tol_fn`` loop body (check_every
+     steps + psum'd per-slot relative feasibility) run inside shard_map
+     under this engine's masked-slot machinery
+     (``core.distributed.make_sharded_bucket_fns``).  The bucket BODY is
+     picked per (fmt, strategy, backend) — DESIGN.md section 5's table:
+     row-ELL gathers or tiled-BCSR ``dot_general`` contractions (the MXU
+     path; Pallas kernels when backend="pallas"), laid out ``rowpart``
+     (per-shard transpose blocks, gather-only backward + psum(n)) or
+     ``dualpart`` (both orientations resident per shard — the Spark
+     dual-RDD cache — collective-free forward, all_gather backward, the
+     transpose stored once mesh-wide).  The strategy is the planner's
+     ``repro.plan.decide_bucket_body`` operand-byte rule, honored here
+     rather than rewritten.  Operands stay device-resident across ticks
+     exactly like single-device buckets.  On a 1-device engine the same
+     request can neither shard nor stay resident: it is served
+     **streamed** — the operand fraction beyond capacity re-uploads every
+     iteration (chunked per check block) — which is the data-locality
+     cost the mesh placements exist to avoid.
 
 Throughput, not latency: a single request finishes no faster than a
 standalone ``solve_tol`` (slightly slower — it rides along until its
 check boundary), but requests/sec scales with slot count and, on a mesh,
 with bucket concurrency and aggregate capacity (``benchmarks/run.py
 solver_serving`` and ``sharded_serving`` measure the ratios).
+
+The bucket lifecycle — **admit** (operand slices spliced into the numpy
+masters of the key's bucket) → **place** (pinned / slot-sharded /
+mesh-wide, charged against the byte-based ``device_budget``) →
+**advance** (check_every masked batched steps per tick) → **freeze**
+(verdict flips, iterates stop moving, slot harvested and refilled) —
+end to end:
+
+>>> import numpy as np
+>>> from repro.serve.solver_engine import SolveRequest, SolverEngine
+>>> from repro.sparse.formats import COO
+>>> eye = COO(rows=np.arange(8, dtype=np.int32),
+...           cols=np.arange(8, dtype=np.int32),
+...           vals=np.ones(8, np.float32), m=8, n=8)
+>>> eng = SolverEngine(slots=2, check_every=8)
+>>> key = eng.submit(SolveRequest(uid=0, coo=eye, b=np.ones(8, np.float32),
+...                               prox="zero", gamma0=10.0, tol=1e-3))
+>>> done = eng.run()      # admit -> place -> advance ... -> freeze+harvest
+>>> (done[0].done, done[0].feasibility < 1e-3, float(round(done[0].x[0], 2)))
+(True, True, 1.0)
 """
 from __future__ import annotations
 
@@ -155,20 +181,23 @@ class BucketKey:
 
 @dataclasses.dataclass(frozen=True)
 class ShardedBucketKey:
-    """A mesh-wide bucket: operands row-partitioned over a capacity-sized
-    sub-mesh (always row-ELL — the batched rowpart layout of
-    ``core.distributed.make_sharded_bucket_fns``, with per-shard transpose
-    blocks so the backward is gather-only + psum).  ``ndev`` is the number
-    of devices the problem *needs* (ceil(stored entries / per-device
-    capacity)), not the whole mesh: collectives only span the devices
-    that hold shards."""
+    """A mesh-wide bucket: operands partitioned over a capacity-sized
+    sub-mesh, advanced by the (fmt, strategy) body
+    ``core.distributed.make_sharded_bucket_fns`` builds (row-ELL gathers
+    or tiled-BCSR MXU contractions; rowpart per-shard transpose blocks or
+    dualpart dual-RDD caches — DESIGN.md section 5's table).  ``ndev`` is
+    the number of devices the problem *needs* (ceil(stored entries /
+    per-device capacity)), not the whole mesh: collectives only span the
+    devices that hold shards."""
 
-    m_pad: int          # divisible by ndev
-    n_pad: int
-    width: int          # ELL k of A, padded bucket-wide
-    width_t: int        # per-shard transpose ELL k (dual-copy backward)
+    m_pad: int          # divisible by 8 * ndev
+    n_pad: int          # divisible by 8 * ndev
+    width: int          # ELL k / BCSR kb of A, padded bucket-wide
+    width_t: int        # transpose width for the key's strategy
     prox: str
     ndev: int           # sub-mesh size
+    fmt: str            # "ell" | "bcsr"
+    strategy: str       # "rowpart" | "dualpart" (repro.plan.decide_bucket_body)
 
 
 @dataclasses.dataclass
@@ -201,7 +230,7 @@ class _Bucket:
     device: Any = None        # round-robin pinned device (None: default)
     slot_mesh: Any = None     # slot axis S = slots*ndev over this sub-mesh
     active_dev: Any = None    # device-resident copy of ``active``
-    charge: Any = None        # [(device_id, slots)] budget charge
+    charge: Any = None        # [(device_id, operand_bytes)] charge
     resident: bool = True     # False: operands exceed the device, streamed
     stream_chunks: int = 1    # operand uploads per check block (streamed)
 
@@ -219,15 +248,20 @@ class _ShardedBucket:
     """Slot-batched operands for one mesh-wide (sharded) bucket.
 
     Same master/dev lifecycle as ``_Bucket``; the device cache holds
-    NamedSharding-placed arrays (rows of A/b/yhat split over the mesh, x
-    and per-slot scalars replicated), so operands stay mesh-resident
-    across ticks."""
+    NamedSharding-placed arrays (rows/tiles of A, b and yhat split over
+    the mesh per ``core.distributed.sharded_bucket_specs``, x and per-slot
+    scalars replicated), so operands stay mesh-resident across ticks.
+    Array shapes follow the key's (fmt, strategy) layout
+    (``_sharded_slot_shapes``): ELL (S, m_pad, width) / BCSR tile stacks
+    (S, nbr, kb, bm, bn) forward; rowpart transpose blocks lead with an
+    extra (ndev,) axis, dualpart transposes are plain (S, ...) stacks
+    sharded on their own row axis."""
 
     key: ShardedBucketKey
-    a_vals: np.ndarray        # (S, m_pad, width) row-ELL values
-    a_cols: np.ndarray        # (S, m_pad, width) GLOBAL column indices
-    at_vals: np.ndarray       # (ndev, S, n_pad, width_t) per-shard A^T
-    at_rows: np.ndarray       # (ndev, S, n_pad, width_t) shard-local rows
+    a_vals: np.ndarray        # forward values (GLOBAL col/block-col inds)
+    a_idx: np.ndarray         # ELL cols / BCSR bcols of A
+    at_vals: np.ndarray       # transpose values per the key's strategy
+    at_idx: np.ndarray        # ELL rows / BCSR bcols of the transpose
     b: np.ndarray             # (S, m_pad)
     lg: np.ndarray            # (S,)
     gamma0: np.ndarray        # (S,)
@@ -240,11 +274,74 @@ class _ShardedBucket:
     dev: tuple | None = None
     requests: dict[int, SolveRequest] = dataclasses.field(default_factory=dict)
     active_dev: Any = None    # device-resident copy of ``active``
-    charge: Any = None        # [(device_id, slots)] budget charge
+    charge: Any = None        # [(device_id, operand_bytes)] charge
 
     @property
     def slots(self) -> int:
         return self.active.shape[0]
+
+
+def sharded_bucket_dims(m: int, n: int, ndev: int, min_rows: int = 64,
+                        min_cols: int = 16) -> tuple[int, int]:
+    """Padded (m_pad, n_pad) of a mesh-wide bucket: pow2 dims with the
+    engine floors, both additionally multiples of ``8 * ndev`` so ELL
+    rows AND BCSR 8-row tile stacks shard evenly in either orientation.
+    Shared with ``repro.plan._cost_reasons`` so the plan's recorded
+    bucket body is evaluated at the engine's own padding."""
+    align = 8 * ndev
+    m_pad = max(min_rows, _next_pow2(m), align)
+    n_pad = max(min_cols, _next_pow2(n))
+    return -(-m_pad // align) * align, -(-n_pad // align) * align
+
+
+def sharded_bucket_widths(coo: COO, m_pad: int, n_pad: int, ndev: int,
+                          fmt: str, need_row: bool = True,
+                          need_dual: bool = True) -> tuple[int, int, int]:
+    """pow2 ``(w, wt_row, wt_dual)`` storage widths at the PADDED dims —
+    the exact widths ``SolverEngine.sharded_bucket_key`` keys buckets by,
+    shared with ``repro.plan._cost_reasons`` so both sides feed
+    ``decide_bucket_body`` identical inputs (a mismatch here makes the
+    plan explain a different bucket than the engine builds).  Each is an
+    O(nnz) host pass; a skipped width (forced strategy) returns 1."""
+    from repro.sparse.partition import (
+        rowshard_transpose_bcsr_width, rowshard_transpose_width,
+    )
+
+    c = pad_coo(coo, m_pad, n_pad)
+    if fmt == "bcsr":
+        floor = 1
+        w = coo_bcsr_width(c, bm=8, bn=min(128, n_pad))
+        wt_row = rowshard_transpose_bcsr_width(
+            c, ndev, bm=8, bn=min(128, m_pad // ndev)) if need_row else 1
+        wt_dual = coo_bcsr_width(transpose_coo(c), bm=8,
+                                 bn=min(128, m_pad)) if need_dual else 1
+    else:
+        floor = 8
+        rows = np.asarray(coo.rows)
+        cols = np.asarray(coo.cols)
+        w = int(np.bincount(rows, minlength=coo.m).max()) if rows.size else 1
+        wt_row = rowshard_transpose_width(c, ndev) if need_row else 1
+        wt_dual = int(np.bincount(cols, minlength=coo.n).max()) \
+            if cols.size and need_dual else 1
+    return tuple(_next_pow2(max(floor, v)) for v in (w, wt_row, wt_dual))
+
+
+def _sharded_slot_shapes(key: ShardedBucketKey):
+    """(a_vals, a_idx, at_vals, at_idx) PER-SLOT master shapes for one
+    mesh-wide bucket layout — the host-side mirror of the specs
+    ``core.distributed.sharded_bucket_specs`` shards by.  The caller adds
+    the slot axis (rowpart transpose blocks additionally lead with the
+    (ndev,) shard axis; dualpart transposes are sharded on their own row
+    axis, so their masters are plain per-slot stacks)."""
+    m, n, nd = key.m_pad, key.n_pad, key.ndev
+    if key.fmt == "ell":
+        return (m, key.width), (m, key.width), \
+               (n, key.width_t), (n, key.width_t)
+    bm, bn = 8, min(128, n)
+    nbr, nbt = m // bm, -(-n // bm)
+    bn_t = min(128, m // nd) if key.strategy == "rowpart" else min(128, m)
+    return ((nbr, key.width, bm, bn), (nbr, key.width),
+            (nbt, key.width_t, bm, bn_t), (nbt, key.width_t))
 
 
 class SolverEngine:
@@ -273,17 +370,28 @@ class SolverEngine:
     shard_above: per-device stored-entry capacity override for the
              placement rule (``repro.plan.decide_placement``; None -> env
              REPRO_SHARD_ABOVE_NNZ -> the planner default).
-    device_budget: resident-slot capacity of ONE device (None =
+    device_budget: resident OPERAND-BYTE capacity of ONE device (None =
              unbounded, the legacy regime).  When set, bucket creation
-             allocates slot widths against each device's budget: a device
-             already hosting buckets hands out fewer slots to the next one
-             (floor 1 — every bucket keeps making progress, the serving
-             fairness requirement), so a 1-device engine under multi-
-             tenant traffic is capacity-starved into extra admission
-             generations while a mesh holds ``devices * device_budget``
-             problems resident.  This is the aggregate-capacity axis of
-             multi-device serving (the benchmark's ``sharded_serving``
-             regime).
+             allocates slot widths against each device's remaining bytes,
+             priced by the planner's cost model
+             (``repro.plan.bucket_operand_bytes`` /
+             ``sharded_bucket_bytes`` — BCSR tile bytes and ELL row bytes
+             differ a lot for the same nonzeros, which slot counting
+             cannot see): a device already hosting buckets hands out
+             fewer slots to the next one (floor 1 on a mesh — every
+             bucket keeps making progress, the serving fairness
+             requirement), and a 1-device engine whose budget cannot hold
+             even ONE slot of a bucket resident serves that bucket
+             streamed (operands re-uploaded per check block).  This is
+             the aggregate-capacity axis of multi-device serving (the
+             benchmark's ``sharded_serving`` regime).
+    sharded_strategy: bucket-body layout for mesh-wide buckets — None
+             (default) applies the planner's byte-model rule
+             (``repro.plan.decide_bucket_body``: rowpart vs dualpart by
+             per-device resident bytes), or force "rowpart"/"dualpart".
+             The fmt/backend knobs above select the kernel inside the
+             body (ELL gathers vs BCSR/Pallas MXU tiles), so the MXU path
+             and the mesh compose.
     """
 
     def __init__(self, slots: int = 8, fmt: str = "ell",
@@ -291,7 +399,8 @@ class SolverEngine:
                  check_every: int = 16, min_rows: int = 64,
                  min_cols: int = 16, interpret: bool | None = None,
                  devices: Any = None, shard_above: int | None = None,
-                 device_budget: int | None = None):
+                 device_budget: int | None = None,
+                 sharded_strategy: str | None = None):
         if fmt not in ("ell", "bcsr"):
             raise ValueError(f"fmt must be ell|bcsr, got {fmt!r}")
         self.slots = slots
@@ -309,6 +418,12 @@ class SolverEngine:
         self.devices = list(devices)
         self.shard_above = shard_above
         self.device_budget = device_budget
+        if sharded_strategy not in (None, "rowpart", "dualpart"):
+            raise ValueError("sharded_strategy must be None (byte-model "
+                             "rule) | 'rowpart' | 'dualpart', got "
+                             f"{sharded_strategy!r}")
+        self.sharded_strategy = sharded_strategy
+        # per-device resident operand BYTES charged by bucket creation
         self._budget_used: dict[int, int] = {d.id: 0 for d in self.devices}
         self.mesh = None
         if len(self.devices) > 1:
@@ -351,32 +466,37 @@ class SolverEngine:
         """Capacity-sized sub-mesh: the fewest devices whose combined
         per-device capacity (the decide_placement threshold) holds the
         operands — collectives should span the shards, not the world."""
-        from repro.plan import _shard_threshold
+        from repro.plan import sharding_ndev
 
-        cap = _shard_threshold(self.shard_above)
-        need = -(-int(nnz) // max(1, cap))
-        return max(2, min(len(self.devices), need))
+        return sharding_ndev(nnz, len(self.devices), self.shard_above)
 
     def sharded_bucket_key(self, req: SolveRequest) -> ShardedBucketKey:
-        """Mesh-wide bucket key: pow2 dims (m additionally a multiple of
-        the sub-mesh size — 8 rows per device floor) and pow2 ELL width,
-        so oversized ragged traffic also collapses onto few compiled
-        bodies."""
-        from repro.sparse.partition import rowshard_transpose_width
+        """Mesh-wide bucket key: pow2 dims (both additionally multiples of
+        ``8 * ndev`` so ELL rows AND BCSR 8-row tile stacks shard evenly
+        in either orientation) and pow2 widths, so oversized ragged
+        traffic also collapses onto few compiled bodies.  The bucket-body
+        strategy is the planner's byte-model rule
+        (``repro.plan.decide_bucket_body``) over the engine's fmt, unless
+        ``sharded_strategy`` forces one."""
+        from repro.plan import decide_bucket_body
 
         coo = req.coo
         ndev = self._ndev_for(coo.nnz)
-        m_pad = max(self.min_rows, _next_pow2(coo.m), 8 * ndev)
-        if m_pad % ndev:
-            m_pad = -(-m_pad // ndev) * ndev
-        n_pad = max(self.min_cols, _next_pow2(coo.n))
-        rows = np.asarray(coo.rows)
-        w = int(np.bincount(rows, minlength=coo.m).max()) if rows.size else 1
-        wt = rowshard_transpose_width(pad_coo(coo, m_pad, n_pad), ndev)
-        return ShardedBucketKey(m_pad=m_pad, n_pad=n_pad,
-                                width=_next_pow2(max(8, w)),
-                                width_t=_next_pow2(max(8, wt)),
-                                prox=req.prox, ndev=ndev)
+        m_pad, n_pad = sharded_bucket_dims(coo.m, coo.n, ndev,
+                                           self.min_rows, self.min_cols)
+        # only the widths the strategy decision can consult are computed
+        # (each is an O(nnz) host pass; a forced strategy skips the other)
+        w, wt_row, wt_dual = sharded_bucket_widths(
+            coo, m_pad, n_pad, ndev, self.fmt,
+            need_row=self.sharded_strategy in (None, "rowpart"),
+            need_dual=self.sharded_strategy in (None, "dualpart"))
+        strategy, _, _ = decide_bucket_body(
+            self.fmt, m_pad, n_pad, w, wt_row, wt_dual, ndev,
+            override=self.sharded_strategy)
+        return ShardedBucketKey(
+            m_pad=m_pad, n_pad=n_pad, width=w,
+            width_t=wt_row if strategy == "rowpart" else wt_dual,
+            prox=req.prox, ndev=ndev, fmt=self.fmt, strategy=strategy)
 
     def bucket_key(self, req: SolveRequest) -> BucketKey:
         """(shape-bucket, format, prox family): dims round up to powers of
@@ -456,21 +576,43 @@ class SolverEngine:
         self._rr += 1
         return [self.devices[i] for i in order[:count]]
 
-    def _charge(self, bucket, devices: list, per_dev: int) -> None:
-        for d in devices:
-            self._budget_used[d.id] += per_dev
-        bucket.charge = [(d.id, per_dev) for d in devices]
+    def bucket_slot_bytes(self, key) -> int:
+        """Per-device resident operand bytes ONE slot of this bucket
+        costs — the admission unit ``device_budget`` prices, from the
+        planner's cost model (repro.plan: ``sharded_bucket_bytes`` for
+        mesh-wide keys, ``bucket_operand_bytes`` otherwise), so BCSR tile
+        stacks and ELL row stacks charge what they actually store."""
+        from repro.plan import bucket_operand_bytes, sharded_bucket_bytes
 
-    def _slot_width(self, devices: list) -> int:
-        """Slots one bucket may hold per device: the full per-device
-        budget when unbudgeted, otherwise what the busiest picked device
-        has left (floor 1 — every bucket keeps making progress even when
-        a device is oversubscribed; serving cannot park a tenant)."""
+        if isinstance(key, ShardedBucketKey):
+            return sharded_bucket_bytes(
+                key.fmt, key.strategy, 1, key.m_pad, key.n_pad,
+                key.width, key.width_t, key.ndev)
+        return bucket_operand_bytes(key.fmt, 1, key.m_pad, key.n_pad,
+                                    key.width, key.width_t)
+
+    def _charge(self, bucket, devices: list, per_dev_bytes: int) -> None:
+        for d in devices:
+            self._budget_used[d.id] += per_dev_bytes
+        bucket.charge = [(d.id, per_dev_bytes) for d in devices]
+
+    def _slots_affordable(self, devices: list, key) -> int:
+        """Slots the tightest picked device's remaining byte budget holds
+        (may be 0 — the caller decides between floor-1 fairness on a mesh
+        and streaming on one device); unbudgeted engines afford the full
+        per-device slot allowance."""
         if self.device_budget is None:
             return self.slots
         left = min(self.device_budget - self._budget_used[d.id]
                    for d in devices)
-        return max(1, min(self.slots, left))
+        return max(0, left) // max(1, self.bucket_slot_bytes(key))
+
+    def _slot_width(self, devices: list, key) -> int:
+        """Slots one bucket may hold per device: the byte budget's
+        allowance clamped to ``slots`` (floor 1 — every bucket keeps
+        making progress even when a device is oversubscribed; serving
+        cannot park a tenant)."""
+        return max(1, min(self.slots, self._slots_affordable(devices, key)))
 
     def _make_bucket(self, key):
         """Placement at bucket creation (queue pressure + budget decide):
@@ -487,41 +629,66 @@ class SolverEngine:
         """
         depth = len(self.queues.get(key) or ())
         if isinstance(key, ShardedBucketKey):
-            bucket = self._new_sharded_bucket(
-                key, min(self.slots, max(1, depth)))
-            self._charge(bucket, self.devices[:key.ndev],
-                         -(-bucket.slots // key.ndev))
+            # slot width follows demand, clamped by the shard devices'
+            # remaining byte budget (floor 1 — a sharded request cannot
+            # stream on a mesh, so an over-budget tenant still gets one
+            # slot and the queue drains over extra admission generations)
+            shard_devs = self.devices[:key.ndev]
+            width = min(self.slots, max(1, depth),
+                        max(1, self._slots_affordable(shard_devs, key)))
+            bucket = self._new_sharded_bucket(key, width)
+            self._charge(bucket, shard_devs,
+                         bucket.slots * self.bucket_slot_bytes(key))
             return bucket
         ndev = len(self.devices)
         from repro.plan import _shard_threshold
         cap = _shard_threshold(self.shard_above)
-        if ndev == 1 and any(r.coo.nnz >= cap
-                             for r in (self.queues.get(key) or ())):
-            # an over-capacity request on a single device: nothing to pin,
-            # nothing to cache — slot width matches demand, transfers
-            # repeat per tick.  Decided per bucket CREATION from the live
-            # queue (not a sticky per-key flag), so a later wave of
-            # under-threshold traffic on the same shape key gets an
-            # ordinary resident bucket after an evict.
-            bucket = self._new_bucket(key, min(self.slots, max(1, depth)))
-            bucket.resident = False
-            return bucket
+        if ndev == 1:
+            over_cap = any(r.coo.nnz >= cap
+                           for r in (self.queues.get(key) or ()))
+            afford = self._slots_affordable(self.devices, key)
+            if over_cap or afford < 1:
+                # an over-capacity request on a single device — the nnz
+                # threshold says so, OR the byte budget cannot hold even
+                # one slot of this bucket's operand stacks resident (a
+                # wide-tile BCSR bucket can exceed it at an nnz slot
+                # counting would happily admit): nothing to pin, nothing
+                # to cache — slot width matches demand, transfers repeat
+                # per tick.  Decided per bucket CREATION from the live
+                # queue (not a sticky per-key flag), so a later wave of
+                # under-threshold traffic on the same shape key gets an
+                # ordinary resident bucket after an evict.
+                bucket = self._new_bucket(key,
+                                          min(self.slots, max(1, depth)))
+                bucket.resident = False
+                if not over_cap:
+                    # byte-induced streaming: the re-upload cadence follows
+                    # the operand fraction the remaining budget cannot hold
+                    left = max(0, self.device_budget
+                               - self._budget_used[self.devices[0].id])
+                    frac = 1.0 - left / max(1, self.bucket_slot_bytes(key))
+                    bucket.stream_chunks = max(
+                        bucket.stream_chunks,
+                        int(np.ceil(self.check_every * max(0.0, frac))))
+                return bucket
         if ndev > 1 and depth > self.slots:
             # capacity matched to demand: enough devices that the whole
             # queue admits in one generation, never more than the mesh
             ndev_s = min(ndev, -(-depth // self.slots))
             picked = self._pick_devices(ndev_s)
-            width = self._slot_width(picked)
+            width = self._slot_width(picked, key)
             bucket = self._new_bucket(key, width * ndev_s)
             bucket.slot_mesh = self._sub_mesh_of(picked)
-            self._charge(bucket, picked, width)
+            self._charge(bucket, picked,
+                         width * self.bucket_slot_bytes(key))
             return bucket
         # full provisioned width (NOT depth-matched): continuous admission
         # means later traffic lands in this bucket, and a width frozen at
         # a shallow creation-time queue would serialize it
         picked = self._pick_devices(1)
-        bucket = self._new_bucket(key, self._slot_width(picked))
-        self._charge(bucket, picked, bucket.slots)
+        bucket = self._new_bucket(key, self._slot_width(picked, key))
+        self._charge(bucket, picked,
+                     bucket.slots * self.bucket_slot_bytes(key))
         # pinned placement: this bucket's operands, state and compiled
         # step live on one mesh device so independent buckets advance
         # concurrently (jit follows its committed inputs)
@@ -534,6 +701,8 @@ class SolverEngine:
                             s: int | None = None) -> _ShardedBucket:
         s = self.slots if s is None else s
         m, n = key.m_pad, key.n_pad
+        a_sh, ai_sh, at_sh, ati_sh = _sharded_slot_shapes(key)
+        lead = (key.ndev, s) if key.strategy == "rowpart" else (s,)
         zeros_x = jnp.zeros((s, n), jnp.float32)
         state = PDState(xbar=zeros_x, xstar=zeros_x,
                         yhat=jnp.zeros((s, m), jnp.float32),
@@ -541,10 +710,10 @@ class SolverEngine:
                         k=jnp.zeros((s,), jnp.int32))
         return _ShardedBucket(
             key=key,
-            a_vals=np.zeros((s, m, key.width), np.float32),
-            a_cols=np.zeros((s, m, key.width), np.int32),
-            at_vals=np.zeros((key.ndev, s, n, key.width_t), np.float32),
-            at_rows=np.zeros((key.ndev, s, n, key.width_t), np.int32),
+            a_vals=np.zeros((s, *a_sh), np.float32),
+            a_idx=np.zeros((s, *ai_sh), np.int32),
+            at_vals=np.zeros((*lead, *at_sh), np.float32),
+            at_idx=np.zeros((*lead, *ati_sh), np.int32),
             b=np.zeros((s, m), np.float32),
             lg=np.ones((s,), np.float32),
             gamma0=np.ones((s,), np.float32),
@@ -601,15 +770,42 @@ class SolverEngine:
         """Splice one request's converted operands into slot ``slot`` of
         the bucket's numpy masters."""
         if isinstance(key, ShardedBucketKey):
-            from repro.sparse.partition import rowshard_transpose_ell
+            from repro.sparse.partition import (
+                rowshard_transpose_bcsr, rowshard_transpose_ell,
+            )
 
             c = pad_coo(req.coo, key.m_pad, key.n_pad)
-            e = coo_to_ell(c, k=key.width)
-            bucket.a_vals[slot] = np.asarray(e.vals)
-            bucket.a_cols[slot] = np.asarray(e.cols)
-            tv, tr = rowshard_transpose_ell(c, key.ndev, k=key.width_t)
-            bucket.at_vals[:, slot] = np.asarray(tv)
-            bucket.at_rows[:, slot] = np.asarray(tr)
+            if key.fmt == "ell":
+                e = coo_to_ell(c, k=key.width)
+                fa, fi = e.vals, e.cols
+                if key.strategy == "rowpart":
+                    tv, ti = rowshard_transpose_ell(c, key.ndev,
+                                                    k=key.width_t)
+                else:
+                    et = coo_to_ell(transpose_coo(c), k=key.width_t)
+                    tv, ti = et.vals, et.cols
+            else:
+                bm = 8
+                f = coo_to_bcsr(c, bm=bm, bn=min(128, key.n_pad),
+                                kb=key.width)
+                fa, fi = f.vals, f.bcols
+                if key.strategy == "rowpart":
+                    tv, ti = rowshard_transpose_bcsr(
+                        c, key.ndev, bm=bm,
+                        bn=min(128, key.m_pad // key.ndev), kb=key.width_t)
+                else:
+                    ft = coo_to_bcsr(transpose_coo(c), bm=bm,
+                                     bn=min(128, key.m_pad),
+                                     kb=key.width_t)
+                    tv, ti = ft.vals, ft.bcols
+            bucket.a_vals[slot] = np.asarray(fa)
+            bucket.a_idx[slot] = np.asarray(fi)
+            if key.strategy == "rowpart":
+                bucket.at_vals[:, slot] = np.asarray(tv)
+                bucket.at_idx[:, slot] = np.asarray(ti)
+            else:
+                bucket.at_vals[slot] = np.asarray(tv)
+                bucket.at_idx[slot] = np.asarray(ti)
             self.stats["sharded_admitted"] += 1
         else:
             (av, ai), (atv, ati) = self._convert(key, req.coo)
@@ -699,26 +895,31 @@ class SolverEngine:
         return bucket.dev
 
     def _sharded_device_operands(self, bucket: _ShardedBucket) -> tuple:
-        """Mesh-resident (vals, cols, b, lg, gamma0, reg, tol, maxit):
-        A/b rows split over the mesh axis, per-slot scalars replicated —
-        one sharded transfer per array, only after admissions dirtied the
-        masters, so operands stay device-resident across ticks."""
+        """Mesh-resident (a_vals, a_idx, at_vals, at_idx, b, lg, gamma0,
+        reg, tol, maxit): operand stacks split per the bucket body's
+        layout (``core.distributed.sharded_bucket_specs`` — the same
+        specs the shard_map traces against), per-slot scalars
+        replicated — one sharded transfer per array, only after
+        admissions dirtied the masters, so operands stay device-resident
+        across ticks."""
         if bucket.dirty or bucket.dev is None:
             from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.core.distributed import sharded_bucket_specs
             mesh = self._sub_mesh(bucket.key.ndev)
-            row3 = NamedSharding(mesh, P(None, "p", None))
-            row2 = NamedSharding(mesh, P(None, "p"))
-            blocks = NamedSharding(mesh, P("p", None, None, None))
-            rep = NamedSharding(mesh, P())
+            a_specs, at_specs = sharded_bucket_specs(
+                "p", bucket.key.fmt, bucket.key.strategy)
+            ns = lambda spec: NamedSharding(mesh, spec)
+            rep = ns(P())
             # numpy masters -> sharded buffers directly: materializing on
             # the default device first would need the whole over-capacity
             # stack to fit one device
             bucket.dev = (
-                jax.device_put(bucket.a_vals, row3),
-                jax.device_put(bucket.a_cols, row3),
-                jax.device_put(bucket.at_vals, blocks),
-                jax.device_put(bucket.at_rows, blocks),
-                jax.device_put(bucket.b, row2),
+                jax.device_put(bucket.a_vals, ns(a_specs[0])),
+                jax.device_put(bucket.a_idx, ns(a_specs[1])),
+                jax.device_put(bucket.at_vals, ns(at_specs[0])),
+                jax.device_put(bucket.at_idx, ns(at_specs[1])),
+                jax.device_put(bucket.b, ns(P(None, "p"))),
                 jax.device_put(bucket.lg, rep),
                 jax.device_put(bucket.gamma0, rep),
                 jax.device_put(bucket.reg, rep),
@@ -730,15 +931,19 @@ class SolverEngine:
     def _sharded_fns(self, key: ShardedBucketKey):
         """(splice_fn, advance_fn) shard_map bodies for mesh-wide buckets
         (core.distributed.make_sharded_bucket_fns), cached per
-        (ndev, n_pad, prox) — jit retraces per operand shape underneath."""
-        cache_key = (key.ndev, key.n_pad, key.prox)
+        (ndev, n_pad, prox, fmt, strategy) — jit retraces per operand
+        shape underneath; fmt/strategy change the spec ranks so they pin
+        distinct bodies."""
+        cache_key = (key.ndev, key.n_pad, key.prox, key.fmt, key.strategy)
         fns = self._sharded_fn_cache.get(cache_key)
         if fns is None:
             from repro.core.distributed import make_sharded_bucket_fns
             fns = make_sharded_bucket_fns(
                 self._sub_mesh(key.ndev), key.n_pad,
                 partial(batched_prox, key.prox),
-                algorithm=self.algorithm, check_every=self.check_every)
+                algorithm=self.algorithm, check_every=self.check_every,
+                fmt=key.fmt, strategy=key.strategy, backend=self.backend,
+                interpret=self.interpret)
             self._sharded_fn_cache[cache_key] = fns
         return fns
 

@@ -16,7 +16,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.sparse.formats import COO, ELL, coo_to_ell, transpose_coo
+from repro.sparse.formats import (
+    COO, ELL, coo_bcsr_width, coo_to_bcsr, coo_to_ell, transpose_coo,
+)
 
 
 def _ceil_to(x: int, mult: int) -> int:
@@ -108,6 +110,56 @@ def rowshard_transpose_ell(a: COO, parts: int, k: int | None = None,
     vals, rows, _, _ = block_partitioned_ell(at, 1, parts, pad_to=pad_to,
                                              k=k)
     return vals[0], rows[0]          # (parts, n, k) each
+
+
+def _row_shard(a: COO, parts: int, d: int) -> COO:
+    """Transpose of row shard ``d``: ``A[d*mb:(d+1)*mb, :]^T`` as an
+    (n, mb) COO with column indices LOCAL to the shard."""
+    mb = _ceil_to(a.m, parts) // parts
+    rows = np.asarray(a.rows)
+    sel = (rows // mb) == d
+    return COO(rows=np.asarray(a.cols)[sel],
+               cols=rows[sel] - d * mb,
+               vals=np.asarray(a.vals)[sel], m=a.n, n=mb)
+
+
+def rowshard_transpose_bcsr_width(a: COO, parts: int, bm: int = 8,
+                                  bn: int = 128) -> int:
+    """Max nonzero-tile count per block-row over every shard's transpose —
+    the BCSR ``kb`` that ``rowshard_transpose_bcsr`` needs; callers take
+    bucket maxima (the tiled analogue of ``rowshard_transpose_width``,
+    and like it a single vectorized pass: this sits on the engine's
+    per-request admission path)."""
+    rows = np.asarray(a.rows)
+    if rows.size == 0:
+        return 1
+    cols = np.asarray(a.cols)
+    mb = _ceil_to(a.m, parts) // parts
+    shard = rows // mb
+    local = rows - shard * mb          # shard-local row = transpose column
+    nbr = max(1, -(-a.n // bm))        # transpose block-rows
+    nbc = max(1, -(-mb // bn))         # transpose block-cols (shard-local)
+    key = ((shard.astype(np.int64) * nbr + cols // bm) * nbc + local // bn)
+    uniq = np.unique(key)
+    counts = np.bincount(uniq // nbc)  # nonzero tiles per (shard, brow)
+    return max(1, int(counts.max()))
+
+
+def rowshard_transpose_bcsr(a: COO, parts: int, bm: int = 8, bn: int = 128,
+                            kb: int | None = None):
+    """Per-row-shard transpose TILE blocks — the dual-copy trade of
+    ``rowshard_transpose_ell`` in the MXU-path format: returns
+    (vals, bcols) of shape (parts, nbt, kb, bm, bn) / (parts, nbt, kb)
+    where block d is the tiled BCSR of ``A[d*mb:(d+1)*mb, :]^T`` with
+    block-column indices LOCAL to the shard (into [0, mb/bn)), so a
+    row-sharded backward pass is a per-shard tile contraction
+    (gather + dot_general, kernel-friendly) psum'd over shards."""
+    if kb is None:
+        kb = rowshard_transpose_bcsr_width(a, parts, bm=bm, bn=bn)
+    shards = [coo_to_bcsr(_row_shard(a, parts, d), bm=bm, bn=bn, kb=kb)
+              for d in range(parts)]
+    return (jnp.stack([s.vals for s in shards]),
+            jnp.stack([s.bcols for s in shards]))
 
 
 # ---------------------------------------------------------------------------

@@ -30,3 +30,19 @@ def test_readme_mentions_tier1_command():
     text = README.read_text()
     assert "python -m pytest -x -q" in text
     assert "pip install -e ." in text
+
+
+def test_serving_module_doctests():
+    """The bucket-lifecycle doctests (admit -> place -> advance ->
+    freeze) in the serving engine and the distributed drivers execute —
+    the CI docs job also collects them via --doctest-modules over
+    serve/ and core/distributed.py."""
+    import doctest
+
+    import repro.core.distributed
+    import repro.serve.solver_engine
+
+    for mod in (repro.serve.solver_engine, repro.core.distributed):
+        res = doctest.testmod(mod, verbose=False)
+        assert res.attempted > 0, f"{mod.__name__} lost its doctests"
+        assert res.failed == 0, (mod.__name__, res)

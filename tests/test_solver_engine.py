@@ -277,6 +277,55 @@ def test_engine_streams_oversized_requests_on_one_device():
         np.testing.assert_allclose(r.x, np.asarray(s.xbar), atol=1e-5)
 
 
+def test_byte_budget_streams_what_slot_count_would_admit():
+    """Byte-based ``device_budget`` admission: a BCSR bucket whose TILE
+    bytes exceed the device's budget is served streamed even though its
+    nnz is far below the shard threshold and slot-count accounting would
+    happily admit it resident — while the SAME budget holds the ELL twin
+    (an order of magnitude fewer bytes for the same nonzeros) resident.
+    Results must match the standalone solve either way."""
+    reqs = _mk_requests(2, [(96, 24)])
+    probe = SolverEngine(slots=2, fmt="bcsr", check_every=16)
+    bcsr_slot = probe.bucket_slot_bytes(probe.bucket_key(reqs[0]))
+    ell_probe = SolverEngine(slots=2, fmt="ell", check_every=16)
+    ell_slot = ell_probe.bucket_slot_bytes(ell_probe.bucket_key(reqs[0]))
+    assert ell_slot < bcsr_slot  # the gap slot counting cannot see
+    budget = bcsr_slot - 1       # holds >= 1 ELL slot, < 1 BCSR slot
+    assert budget >= ell_slot
+
+    eng = SolverEngine(slots=2, fmt="bcsr", check_every=16,
+                       device_budget=budget)
+    keys = [eng.submit(r) for r in reqs]
+    done = eng.run()
+    assert not eng.buckets[keys[0]].resident     # streamed, not admitted
+    for r in done:
+        d = jnp.asarray(coo_to_dense(r.coo))
+        s = solve_tol(dense_ops(d), get_prox(r.prox, reg=r.reg), r.b, r.lg,
+                      r.gamma0, max_iterations=r.max_iterations, tol=r.tol,
+                      check_every=16)
+        assert r.iterations == int(s.k)
+        np.testing.assert_allclose(r.x, np.asarray(s.xbar), atol=1e-5)
+
+    eng2 = SolverEngine(slots=2, fmt="ell", check_every=16,
+                        device_budget=budget)
+    keys2 = [eng2.submit(r) for r in _mk_requests(2, [(96, 24)])]
+    eng2.run()
+    assert eng2.buckets[keys2[0]].resident       # same bytes admit ELL
+
+
+def test_plan_records_bucket_body_and_operand_bytes():
+    """Every plan over a concrete matrix records which serving bucket
+    body its placement maps to and the resident operand-byte cost (the
+    engine's byte-budget admission unit) as reasons."""
+    from repro.api import Problem
+
+    coo, b, _ = _mk_problem(0, 64, 16)
+    pl = Problem(coo, b, prox="l1", reg=0.1).plan(tol=1e-2)
+    assert "bucket_body" in pl.reasons, pl.reasons
+    assert "operand_bytes" in pl.reasons, pl.reasons
+    assert "bytes" in pl.reasons["operand_bytes"]
+
+
 def test_engine_rejects_unservable_prox():
     r = _mk_requests(1, [(64, 16)])[0]
     r.prox = "group_l1"
