@@ -1,0 +1,243 @@
+"""Measured autotune tables: op-count analyzer + sweep harness.
+
+The roofline selector's analytic model is an arithmetic-intensity argument
+tuned for TPU ceilings; on the machine actually running the kernels
+(interpret-mode Pallas on CPU most dramatically) it can be off by orders
+of magnitude — ``spmv_formats.json`` showed >100x for bcsr/pallas.  The
+fix (the dace ``FlopCount`` roofline lesson) is measured tables, not a
+better formula.  This harness sweeps
+
+  spmv cells        (format, backend) x tile shapes (bm, bn) x sizes —
+                    per-apply forward/backward seconds for the operators
+                    the registry builds, with the analytic model's op
+                    counts (flops, HBM bytes, modeled seconds) and the
+                    achieved utilization alongside, so the table IS the
+                    analyzer output;
+  check_block cells fused one-kernel check blocks
+                    (repro.kernels.fused_check_block) x slot widths x
+                    check_every — per-block and per-iteration seconds for
+                    the serving engine's fused tick body.
+
+and writes ``experiments/bench/autotune.json``.  ``operators/select.py``
+consults the spmv cells (explicit ``table=`` or env
+``REPRO_AUTOTUNE_TABLE``) before falling back to the analytic roofline;
+each cell records (m, n, row_nnz, seed) so tests can reconstruct the
+exact matrix and verify predicted-vs-measured is within tolerance.
+
+  PYTHONPATH=src python benchmarks/autotune.py            # full sweep
+  PYTHONPATH=src python benchmarks/autotune.py --quick    # one tiny cell
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DEFAULT = os.path.join(REPO, "experiments", "bench", "autotune.json")
+
+
+def _stack_ells(coos, n, pad_to=8):
+    import numpy as np
+
+    from repro.sparse import coo_to_ell, stack_ells
+    from repro.sparse.formats import ELL
+
+    ells = [coo_to_ell(c, pad_to=pad_to) for c in coos]
+    width = max(e.vals.shape[1] for e in ells)
+    padded = [ELL(vals=np.pad(np.asarray(e.vals),
+                              ((0, 0), (0, width - e.vals.shape[1]))),
+                  cols=np.pad(np.asarray(e.cols),
+                              ((0, 0), (0, width - e.cols.shape[1]))),
+                  n=e.n) for e in ells]
+    return stack_ells(padded, n=n)
+
+
+def _stack_bcsrs(coos, m, n, bm, bn):
+    import numpy as np
+
+    from repro.sparse import coo_to_bcsr, stack_bcsrs
+    from repro.sparse.formats import BCSR
+
+    bs = [coo_to_bcsr(c, bm=bm, bn=bn) for c in coos]
+    kb = max(x.vals.shape[1] for x in bs)
+    padded = [BCSR(vals=np.pad(np.asarray(x.vals),
+                               ((0, 0), (0, kb - x.vals.shape[1]),
+                                (0, 0), (0, 0))),
+                   bcols=np.pad(np.asarray(x.bcols),
+                                ((0, 0), (0, kb - x.bcols.shape[1]))),
+                   m=x.m, n=x.n) for x in bs]
+    return stack_bcsrs(padded, m=m, n=n)
+
+
+def _timed(fn, *args, reps=3):
+    import jax
+
+    jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    del out
+    return (time.perf_counter() - t0) / reps
+
+
+def spmv_cell(fmt: str, backend: str, m: int, n: int, row_nnz: int,
+              seed: int, bm: int | None = None, bn: int | None = None,
+              reps: int = 3) -> dict:
+    """One measured (format, backend[, tile]) spmv cell with the analytic
+    op counts alongside: the utilization analyzer's row."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.operators import from_coo
+    from repro.operators.select import (
+        PEAK_FLOPS_MXU_F32, PEAK_FLOPS_VPU, estimate_formats,
+    )
+    from repro.sparse import random_coo
+
+    coo = random_coo(m, n, row_nnz, seed=seed)
+    if fmt == "bcsr":
+        est = estimate_formats(coo, bm_bn_candidates=((bm, bn),))["bcsr"]
+        op = from_coo(coo, fmt, backend, bm=bm, bn=bn)
+        peak = PEAK_FLOPS_MXU_F32
+    else:
+        est = estimate_formats(coo)[fmt]
+        op = from_coo(coo, fmt, backend)
+        peak = PEAK_FLOPS_VPU
+    x = jnp.ones((n,), jnp.float32)
+    y = jnp.ones((m,), jnp.float32)
+    fwd_s = _timed(jax.jit(op.matvec), x, reps=reps)
+    bwd_s = _timed(jax.jit(op.rmatvec), y, reps=reps)
+    flops = 2.0 * est["work"]
+    cell = dict(kind="spmv", format=fmt, backend=backend,
+                m=m, n=n, row_nnz=row_nnz, seed=seed,
+                work=est["work"], flops=flops, bytes=est["bytes"],
+                analytic_s=est["s"], measured_s=fwd_s, bwd_s=bwd_s,
+                error_ratio=est["s"] / fwd_s if fwd_s > 0 else None,
+                utilization=flops / (fwd_s * peak) if fwd_s > 0 else None)
+    if fmt == "bcsr":
+        cell["bm"], cell["bn"] = bm, bn
+    return cell
+
+
+def check_block_cell(fmt: str, prox: str, slots: int, check_every: int,
+                     m: int, n: int, row_nnz: int, seed: int,
+                     reps: int = 3) -> dict:
+    """One measured fused-check-block cell: seconds per one-kernel block
+    (and per iteration) for a ``slots``-wide stacked bucket."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.prox import get_prox
+    from repro.core.solver import SolverOps, batched_init
+    from repro.kernels.fused_check_block import fused_check_block
+    from repro.sparse import random_coo, transpose_coo
+    from repro.sparse.linalg import stacked_bcsr_matvec, stacked_ell_matvec
+
+    coos = [random_coo(m, n, row_nnz, seed=seed + i) for i in range(slots)]
+    coos_t = [transpose_coo(c) for c in coos]
+    if fmt == "ell":
+        a, at = _stack_ells(coos, n), _stack_ells(coos_t, m)
+        mv = stacked_ell_matvec
+    else:
+        bm, bn = 8, min(128, n)
+        a = _stack_bcsrs(coos, m, n, bm, bn)
+        at = _stack_bcsrs(coos_t, n, m, bm, min(128, m))
+        mv = stacked_bcsr_matvec
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.standard_normal((slots, m)), jnp.float32)
+    lg = jnp.asarray([float(np.sum(np.square(np.asarray(c.vals))))
+                      for c in coos], jnp.float32)
+    g0 = jnp.full((slots,), 100.0, jnp.float32)
+    reg = jnp.full((slots,), 0.1, jnp.float32)
+    ops = SolverOps(matvec=lambda v: mv(a, v), rmatvec=lambda u: mv(at, u))
+    state = batched_init(ops, get_prox(prox, reg=0.1) if prox in
+                         ("l1", "sq_l2") else get_prox(prox), b, lg, g0)
+    active = jnp.ones((slots,), bool)
+    maxit = jnp.full((slots,), 10_000, jnp.int32)
+
+    def block(st):
+        return fused_check_block(a, at, b, lg, g0, reg, st, active, maxit,
+                                 prox=prox, steps=check_every)
+
+    per_block = _timed(block, state, reps=reps)
+    # 2 passes (fwd + bwd) per iteration + the feasibility pass, per slot
+    flops = slots * 2.0 * (check_every * 2.0 + 1.0) * m * row_nnz
+    return dict(kind="check_block", format=fmt, backend="pallas", prox=prox,
+                slots=slots, check_every=check_every,
+                m=m, n=n, row_nnz=row_nnz, seed=seed, flops=flops,
+                measured_s=per_block,
+                per_iter_s=per_block / check_every,
+                per_slot_iter_s=per_block / (check_every * slots))
+
+
+def sweep(quick: bool = False, reps: int = 3) -> dict:
+    """The full (or --quick) sweep; returns the table dict."""
+    import jax
+
+    from repro.kernels import default_interpret
+
+    cells = []
+    if quick:
+        # CI smoke: one tiny spmv cell (on a tile shape the selector's
+        # default candidate set contains, so the round-trip test can drive
+        # select_format end to end) + one fused check block
+        cells.append(spmv_cell("bcsr", "pallas", 256, 128, 4, seed=0,
+                               bm=8, bn=128, reps=reps))
+        cells.append(check_block_cell("bcsr", "l1", 2, 8, 256, 64, 4,
+                                      seed=0, reps=reps))
+    else:
+        sizes = [(512, 128, 8, 0), (1024, 128, 8, 1)]
+        for m, n, k, seed in sizes:
+            for backend in ("jnp", "pallas"):
+                cells.append(spmv_cell("ell", backend, m, n, k, seed,
+                                       reps=reps))
+                for bm, bn in ((8, 128), (16, 128)):
+                    cells.append(spmv_cell("bcsr", backend, m, n, k, seed,
+                                           bm=bm, bn=bn, reps=reps))
+        m, n, k = 512, 128, 8
+        for fmt in ("ell", "bcsr"):
+            for slots in (1, 4, 8):
+                for check_every in (8, 16, 32):
+                    cells.append(check_block_cell(fmt, "l1", slots,
+                                                  check_every, m, n, k,
+                                                  seed=2, reps=reps))
+    return dict(meta=dict(platform=jax.default_backend(),
+                          interpret=bool(default_interpret(None)),
+                          reps=reps, quick=bool(quick)),
+                cells=cells)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="one tiny (format, prox) cell — the CI smoke")
+    ap.add_argument("--out", default=OUT_DEFAULT)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+    table = sweep(quick=args.quick, reps=args.reps)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(table, f, indent=1, default=float)
+    for c in table["cells"]:
+        tag = f"{c['format']}/{c['backend']}"
+        if c["kind"] == "spmv":
+            tile = (f";bm={c['bm']};bn={c['bn']}" if "bm" in c else "")
+            print(f"autotune/spmv/{tag},{c['measured_s']*1e6:.1f},"
+                  f"analytic_us={c['analytic_s']*1e6:.3f};"
+                  f"error_ratio={c['error_ratio']:.2e}{tile}")
+        else:
+            print(f"autotune/check_block/{tag},{c['measured_s']*1e6:.1f},"
+                  f"slots={c['slots']};check_every={c['check_every']};"
+                  f"per_slot_iter_us={c['per_slot_iter_s']*1e6:.1f}")
+    print(f"[autotune] {len(table['cells'])} cells -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    raise SystemExit(main())

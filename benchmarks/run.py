@@ -28,6 +28,10 @@
   api_overhead  the declarative facade (repro.api Problem -> plan ->
            Result) vs the raw kernel layer on identical work; asserts the
            planner + Result assembly cost <5%
+  autotune measured autotune tables (benchmarks/autotune.py sweep): spmv
+           cells per (format, backend, tile) + fused check-block cells per
+           (slot width, check_every) -> autotune.json, consulted by the
+           format selector via REPRO_AUTOTUNE_TABLE
 
 Usage: ``python benchmarks/run.py [mode ...] [--format ell|bcsr|both]``
 (default: all modes, both formats).
@@ -172,10 +176,15 @@ def spmv_formats():
             op = from_coo(coo, fmt, backend, bm=8, bn=128)
             fwd = _time(jax.jit(op.matvec), x)
             bwd = _time(jax.jit(op.rmatvec), y)
+            # analytic-vs-measured error per format: the miscalibration the
+            # autotune measured tables (benchmarks/autotune.py) correct
+            err = est[fmt]["s"] / fwd if fmt in est and fwd > 0 else None
             rec["measured"][f"{fmt}/{backend}"] = {
-                "fwd_s": fwd, "bwd_s": bwd, "stats": op.stats}
+                "fwd_s": fwd, "bwd_s": bwd, "stats": op.stats,
+                "error_ratio": err}
             emit(f"spmv_formats/{ds}/{fmt}/{backend}/fwd", fwd * 1e6,
-                 f"bwd_us={bwd*1e6:.1f};nnz={coo.nnz}")
+                 f"bwd_us={bwd*1e6:.1f};nnz={coo.nnz}"
+                 + (f";error_ratio={err:.2e}" if err else ""))
         results[ds] = rec
     with open(os.path.join(OUT_DIR, "spmv_formats.json"), "w") as f:
         json.dump(results, f, indent=1, default=float)
@@ -299,7 +308,7 @@ def network_per_strategy():
     return out
 
 
-def solver_serving():
+def solver_serving(check_every=None, fused=None):
     """Throughput of the batched solver serving engine vs sequential solves
     over one ragged request stream (3 shape families x 2 regularizers).
 
@@ -314,9 +323,12 @@ def solver_serving():
       sequential_jit  — steelman: one jit-cached solve per shape family
                         (zero per-request compile; only reachable when the
                         operator pytrees are hand-threaded through jit).
-    The engine is measured warm (bucket step functions compiled by a first
-    stream — the serving steady state).  Emits
-    experiments/bench/solver_serving.json.
+    The engine is measured warm (bucket step executables AOT-compiled by a
+    first stream — the serving steady state); the measured window's
+    per-phase wall time (admit / splice / dispatch / harvest / compile)
+    lands in ``tick_breakdown`` — ``compile_s`` ~ 0 there is the proof
+    that admission re-uses the AOT bucket executables instead of paying
+    per-bucket jit.  Emits experiments/bench/solver_serving.json.
     """
     import time as _time
 
@@ -325,25 +337,30 @@ def solver_serving():
     from repro.core.prox import get_prox
     from repro.core.solver import solve_tol
     from repro.launch.solver_serve import make_problems, solve_sequentially
+    from repro.plan import decide_check_every
     from repro.serve import create_engine
 
-    num, slots, tol, check_every = 24, 8, 1e-2, 16
+    num, slots, tol = 24, 8, 1e-2
+    check_every, ce_reason = decide_check_every(check_every)
 
     def requests(seed):
         return [p.to_request(uid=i, tol=tol, max_iterations=4000)
                 for i, p in enumerate(make_problems(num, seed=seed))]
 
     eng = create_engine("solver", slots=slots, fmt="ell", backend="jnp",
-                        check_every=check_every)
+                        check_every=check_every, fused=fused)
     for r in requests(seed=10):                        # warm: compile buckets
         eng.submit(r)
     eng.run()
+    warm_phase = dict(eng.phase_s)
     eng.stats = {"steps": 0, "iterations": 0, "admitted": 0}
+    eng.phase_s = {k: 0.0 for k in eng.phase_s}
     t0 = _time.perf_counter()
     for r in requests(seed=11):
         eng.submit(r)
     done = eng.run()
     dt_eng = _time.perf_counter() - t0
+    tick = dict(eng.phase_s)
     assert len(done) == num
 
     t0 = _time.perf_counter()
@@ -379,18 +396,24 @@ def solver_serving():
 
     rec = dict(
         requests=num, slots=slots, tol=tol, check_every=check_every,
+        check_every_reason=ce_reason, fused=eng.fused,
         buckets=len(eng.buckets),
         engine_s=dt_eng, sequential_s=dt_seq, sequential_jit_s=dt_jit,
         rps_engine=num / dt_eng, rps_sequential=num / dt_seq,
         rps_sequential_jit=num / dt_jit,
         speedup_vs_sequential=dt_seq / dt_eng,
         speedup_vs_sequential_jit=dt_jit / dt_eng,
-        iterations=eng.stats["iterations"])
+        iterations=eng.stats["iterations"], steps=eng.stats["steps"],
+        tick_breakdown=tick, tick_breakdown_warm=warm_phase)
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, "solver_serving.json"), "w") as f:
         json.dump(rec, f, indent=1, default=float)
     emit("solver_serving/engine", dt_eng / num * 1e6,
          f"rps={rec['rps_engine']:.1f};slots={slots}")
+    emit("solver_serving/tick_breakdown",
+         sum(tick.values()) / max(1, eng.stats["steps"]) * 1e6,
+         ";".join(f"{k}={v*1e3:.1f}ms" for k, v in sorted(tick.items()))
+         + f";steps={eng.stats['steps']}")
     emit("solver_serving/sequential", dt_seq / num * 1e6,
          f"rps={rec['rps_sequential']:.1f};"
          f"speedup={rec['speedup_vs_sequential']:.1f}x")
@@ -586,10 +609,36 @@ def api_overhead():
     return rec
 
 
+def autotune_tables():
+    """Measured autotune tables (delegates to benchmarks/autotune.py):
+    spmv cells x (format, backend, tile) + fused check-block cells x
+    (slot width, check_every) -> experiments/bench/autotune.json, the
+    table ``operators/select.py`` consults via REPRO_AUTOTUNE_TABLE."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import autotune as _autotune
+
+    table = _autotune.sweep()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "autotune.json"), "w") as f:
+        json.dump(table, f, indent=1, default=float)
+    for c in table["cells"]:
+        tag = f"{c['format']}/{c['backend']}"
+        if c["kind"] == "spmv":
+            tile = (f";bm={c['bm']};bn={c['bn']}" if "bm" in c else "")
+            emit(f"autotune/spmv/{tag}", c["measured_s"] * 1e6,
+                 f"error_ratio={c['error_ratio']:.2e}{tile}")
+        else:
+            emit(f"autotune/check_block/{tag}", c["measured_s"] * 1e6,
+                 f"slots={c['slots']};check_every={c['check_every']};"
+                 f"per_slot_iter_us={c['per_slot_iter_s']*1e6:.1f}")
+    return table
+
+
 MODES = {
     "table1": table1_datasets,
     "spmv_formats": spmv_formats,
     "solver_serving": solver_serving,
+    "autotune": autotune_tables,
     "sharded_serving": sharded_serving,
     "api_overhead": api_overhead,
     "table2_4": table2_4_stage_timings,
@@ -611,6 +660,14 @@ def main(argv=None) -> None:
     ap.add_argument("--format", default="both",
                     choices=("ell", "bcsr", "both"),
                     help="sharded_serving format axis (bucket-body kernel)")
+    ap.add_argument("--check-every", type=int, default=None,
+                    help="solver_serving feasibility-check cadence "
+                         "(default: the planner's "
+                         "repro.plan.decide_check_every)")
+    ap.add_argument("--fused", action="store_true", default=None,
+                    help="solver_serving: force one-kernel fused check "
+                         "blocks (default: auto — fused iff "
+                         "backend=pallas)")
     args = ap.parse_args(argv)
     names = list(args.modes) or list(MODES)
     unknown = [n for n in names if n not in MODES]
@@ -623,6 +680,9 @@ def main(argv=None) -> None:
     for name in names:
         if name == "sharded_serving":
             results[name] = sharded_serving(formats=formats)
+        elif name == "solver_serving":
+            results[name] = solver_serving(check_every=args.check_every,
+                                           fused=args.fused)
         else:
             results[name] = MODES[name]()
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:

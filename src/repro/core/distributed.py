@@ -247,7 +247,7 @@ def make_solve_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
 def make_solve_tol_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
                       tol: float, max_iterations: int = 10_000,
                       algorithm: str = "a2", c: float = 3.0,
-                      check_every: int = 8):
+                      check_every: int | None = None):
     """jit(shard_map(solve_tol)): early exit on *global* relative feasibility
     ``||A xbar - b|| / max(1, ||b||) < tol`` checked every ``check_every``
     iterations — the distributed counterpart of ``core.solver.solve_tol``.
@@ -261,6 +261,8 @@ def make_solve_tol_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
     ``min(check_every, max_iterations - k)`` so the final partial block
     never oversteps the budget.
     """
+    from repro.core.solver import DEFAULT_CHECK_EVERY
+    check_every = DEFAULT_CHECK_EVERY if check_every is None else check_every
     init_fn, step_fn = _algo_fns(algorithm)
     nloc = _local_n(problem)
     y_axes = tuple(ax for ax in (problem.y_spec or ()) if ax is not None)
@@ -333,7 +335,8 @@ def sharded_bucket_specs(axis: str, fmt: str = "ell",
 
 def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
                             algorithm: str = "a2", c: float = 3.0,
-                            check_every: int = 8, axis: str | None = None,
+                            check_every: int | None = None,
+                            axis: str | None = None,
                             fmt: str = "ell", strategy: str = "rowpart",
                             backend: str = "jnp",
                             interpret: bool | None = None):
@@ -398,8 +401,10 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
     """
     from repro.core.solver import batched_init, batched_step, mask_state
     from repro.operators import make_operator
+    from repro.core.solver import DEFAULT_CHECK_EVERY
     from repro.sparse.formats import StackedBCSR, StackedELL
 
+    check_every = DEFAULT_CHECK_EVERY if check_every is None else check_every
     ax = axis if axis is not None else mesh.axis_names[-1]
     psize = int(mesh.devices.shape[mesh.axis_names.index(ax)])
 

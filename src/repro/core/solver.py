@@ -60,6 +60,15 @@ from repro.core.prox import ProxOp
 from repro.deprecation import warn_once
 
 
+# One default for the feasibility-check cadence, everywhere.  Every driver
+# (solve_tol, batched_solve_tol, the serving engine, the distributed bodies,
+# the benchmark CLIs) resolves check_every=None to this value — historically
+# the solver used 8 while the engine/benchmarks used 16, so "the default"
+# depended on the entry point.  The planner records the resolution in plan
+# reasons (repro.plan.decide_check_every).
+DEFAULT_CHECK_EVERY = 16
+
+
 # --------------------------------------------------------------------------
 # Parameter schedules
 # --------------------------------------------------------------------------
@@ -292,14 +301,17 @@ def solve(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
 
 def solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0: float = 1.0,
               max_iterations: int = 10_000, tol: float = 1e-6,
-              algorithm: str = "a2", c: float = 3.0, check_every: int = 8):
+              algorithm: str = "a2", c: float = 3.0,
+              check_every: int | None = None):
     """Early-stopping solve (paper step 8/10 stopping_criterion):
     relative feasibility ||A xbar - b|| / max(1, ||b||) < tol.
 
     ``max_iterations`` is a hard cap: the inner block is clamped to
     ``min(check_every, max_iterations - k)`` so the final partial block
     never oversteps the budget (feasibility is still only *checked* on the
-    ``check_every`` grid and once at the cap)."""
+    ``check_every`` grid and once at the cap).  ``check_every=None``
+    resolves to ``DEFAULT_CHECK_EVERY``."""
+    check_every = DEFAULT_CHECK_EVERY if check_every is None else check_every
     init = (a2_init if algorithm == "a2" else a1_init)(ops, prox, b, lg, gamma0, c)
     step = a2_step if algorithm == "a2" else a1_step
     bnorm = jnp.maximum(jnp.linalg.norm(b), 1.0)
@@ -451,7 +463,7 @@ def batched_solve(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
 def batched_solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
                       max_iterations=10_000, tol=1e-6,
                       algorithm: str = "a2", c: float = 3.0,
-                      check_every: int = 8,
+                      check_every: int | None = None,
                       active: jax.Array | None = None) -> PDState:
     """Batched early-exit solve: per-slot ``solve_tol`` semantics.
 
@@ -468,6 +480,7 @@ def batched_solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
     repro.serve.solver_engine — because it also needs mid-stream admission;
     this driver is the one-shot batch API.)
     """
+    check_every = DEFAULT_CHECK_EVERY if check_every is None else check_every
     bsz = b.shape[0]
     tol = jnp.broadcast_to(jnp.asarray(tol, b.dtype), (bsz,))
     maxit = jnp.broadcast_to(jnp.asarray(max_iterations, jnp.int32), (bsz,))
@@ -486,6 +499,41 @@ def batched_solve_tol(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
                                       c, mask=act & (s.k < maxit)),
             state)
         feas = batched_feasibility(ops, b, state)
+        return state, act & (feas >= tol) & (state.k < maxit)
+
+    state, _ = jax.lax.while_loop(cond, body, (state, act))
+    return state
+
+
+def batched_solve_tol_fused(ops: SolverOps, prox: ProxOp, b, lg, gamma0,
+                            block_fn, max_iterations=10_000, tol=1e-6,
+                            algorithm: str = "a2", c: float = 3.0,
+                            active: jax.Array | None = None) -> PDState:
+    """``batched_solve_tol`` with the check block delegated to ``block_fn``.
+
+    ``block_fn(state, mask) -> (state, feas)`` owns the entire inner block —
+    ``check_every`` masked steps plus the feasibility recheck — so a fused
+    one-kernel implementation (``repro.kernels.fused_check_block``, with the
+    per-slot ``max_iterations`` freeze baked into the kernel) slots in
+    without this driver knowing the format.  ``ops`` is only used for init
+    and the pre-loop feasibility check; the state/feas contract of
+    ``block_fn`` must match ``check_every`` applications of
+    ``batched_step`` + ``batched_feasibility`` (tests enforce parity with
+    ``batched_solve_tol`` at 1e-5).
+    """
+    bsz = b.shape[0]
+    tol = jnp.broadcast_to(jnp.asarray(tol, b.dtype), (bsz,))
+    maxit = jnp.broadcast_to(jnp.asarray(max_iterations, jnp.int32), (bsz,))
+    state = batched_init(ops, prox, b, lg, gamma0, algorithm, c)
+    act = jnp.ones((bsz,), bool) if active is None else active
+    act = act & (batched_feasibility(ops, b, state) >= tol) & (state.k < maxit)
+
+    def cond(carry):
+        return jnp.any(carry[1])
+
+    def body(carry):
+        state, act = carry
+        state, feas = block_fn(state, act)
         return state, act & (feas >= tol) & (state.k < maxit)
 
     state, _ = jax.lax.while_loop(cond, body, (state, act))

@@ -9,6 +9,9 @@
 # REPRO_PALLAS_INTERPRET > jax.default_backend() != "tpu") — so the
 # "pallas" backend compiles through Mosaic on a real TPU instead of
 # silently running under the interpreter.
+from repro.kernels.fused_check_block import (
+    FUSED_CHECK_PROXES, fused_check_block,
+)
 from repro.kernels.interpret import default_interpret
 from repro.kernels.ops import (
     banded_spmv_t, batched_bcsr_spmv, batched_ell_spmv,
@@ -16,6 +19,7 @@ from repro.kernels.ops import (
     kernel_ops, prox_update,
 )
 
-__all__ = ["banded_spmv_t", "batched_bcsr_spmv", "batched_ell_spmv",
-           "batched_fused_dual_update", "bcsr_spmv", "default_interpret",
-           "ell_spmv", "fused_dual_update", "kernel_ops", "prox_update"]
+__all__ = ["FUSED_CHECK_PROXES", "banded_spmv_t", "batched_bcsr_spmv",
+           "batched_ell_spmv", "batched_fused_dual_update", "bcsr_spmv",
+           "default_interpret", "ell_spmv", "fused_check_block",
+           "fused_dual_update", "kernel_ops", "prox_update"]

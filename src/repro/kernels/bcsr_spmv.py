@@ -59,3 +59,41 @@ def bcsr_spmv_pallas(vals: jax.Array, bcols: jax.Array, xt: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nbr, bm), xt.dtype),
         interpret=default_interpret(interpret),
     )(vals, bcols, xt)
+
+
+def _batched_kernel(vals_ref, bcols_ref, x_ref, out_ref):
+    vals = vals_ref[0]                         # (TB, kb, bm, bn)
+    bcols = bcols_ref[0]                       # (TB, kb) int32
+    xt = x_ref[0]                              # (nbc, bn) resident, this slot
+    g = jnp.take(xt, bcols, axis=0)            # (TB, kb, bn) VMEM gather
+    acc = jax.lax.dot_general(                 # (TB, kb, bm) on the MXU
+        vals.astype(jnp.float32), g.astype(jnp.float32),
+        dimension_numbers=(((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)
+    out_ref[0] = jnp.sum(acc, axis=1).astype(out_ref.dtype)
+
+
+def batched_bcsr_spmv_pallas(vals: jax.Array, bcols: jax.Array,
+                             xt: jax.Array, *, block_brows: int = 8,
+                             interpret: bool | None = None):
+    """Stacked BCSR y_b = A_b @ x_b in ONE launch: the grid gains the slot
+    dimension (like ``batched_ell_spmv``) instead of vmapping the
+    single-slot ``pallas_call`` — one kernel, B * (nbr / block_brows)
+    programs, each slot's x tile table VMEM-resident for its row sweep."""
+    bsz, nbr, kb, bm, bn = vals.shape
+    assert nbr % block_brows == 0, (nbr, block_brows)
+    nbc = xt.shape[1]
+    assert xt.shape == (bsz, nbc, bn), (xt.shape, bn)
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=(bsz, nbr // block_brows),
+        in_specs=[
+            pl.BlockSpec((1, block_brows, kb, bm, bn),
+                         lambda b, i: (b, i, 0, 0, 0)),
+            pl.BlockSpec((1, block_brows, kb), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, nbc, bn), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_brows, bm), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nbr, bm), xt.dtype),
+        interpret=default_interpret(interpret),
+    )(vals, bcols, xt)

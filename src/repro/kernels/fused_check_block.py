@@ -1,0 +1,261 @@
+"""The whole A2 check block as ONE batch-grid Pallas kernel.
+
+The serving engine's inner loop used to lower each of the ``check_every``
+iterations to separate spmv / fused-dual / prox / mask kernels with an HBM
+round-trip between every pair — per-tick overhead, not math, dominated
+(exactly the decomposition Dünner et al. prescribe measuring first).  Here
+the entire check block runs inside a single ``pallas_call`` per (format,
+prox) pair: grid ``(B,)`` — one program per slot, like ``batched_ell_spmv``
+gains the slot dimension — with that slot's operands (both orientations,
+b, per-slot scalars) VMEM-resident across all inner iterations.  Each
+program runs ``steps`` masked A2 iterations (eq. 15 dual update, backward
+pass, closed-form prox, heavy-ball averaging, per-slot freeze at
+``max_iterations``) inside a ``jax.lax.fori_loop`` and emits only the final
+state plus the per-slot relative-feasibility residual — the one number the
+engine's harvest needs per block.
+
+The iteration body mirrors ``core.solver.batched_step`` term for term
+(including the eq-13 ``k == 0`` effective-gamma case) and the prox closed
+forms mirror ``core.prox``; the equality tests in
+tests/test_fused_check_block.py enforce both pairings at 1e-5.
+
+Supported prox families are the closed forms that inline into the kernel
+(``FUSED_CHECK_PROXES``); the engine falls back to the unfused step loop
+for the rest.  interpret=None resolves through
+``repro.kernels.default_interpret`` (interpreter off-TPU, Mosaic on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.solver import PDState
+from repro.kernels.interpret import default_interpret
+from repro.sparse.formats import StackedBCSR, StackedELL
+
+#: prox families with an inlined closed form (xc = 0, per-slot scalar reg).
+FUSED_CHECK_PROXES = ("l1", "sq_l2", "zero", "nonneg")
+
+
+def _prox_body(name: str):
+    """x* = prox_{f/gamma}(-zhat/gamma) — core.prox closed forms at xc=0."""
+    if name == "l1":
+        def body(zhat, gamma, reg):
+            v = -zhat / gamma
+            thr = reg / gamma
+            return jnp.sign(v) * jnp.maximum(jnp.abs(v) - thr, 0.0)
+    elif name == "sq_l2":
+        def body(zhat, gamma, reg):
+            return (-zhat / gamma) / (1.0 + reg / gamma)
+    elif name == "zero":
+        def body(zhat, gamma, reg):
+            return -zhat / gamma
+    elif name == "nonneg":
+        def body(zhat, gamma, reg):
+            return jnp.maximum(-zhat / gamma, 0.0)
+    else:
+        raise KeyError(f"prox family {name!r} has no fused closed form; "
+                       f"supported: {FUSED_CHECK_PROXES}")
+    return body
+
+
+def _make_kernel(steps: int, prox_name: str, c: float, fmt: str,
+                 geom: tuple):
+    """Kernel factory: the (format, prox) pair is baked in statically."""
+    prox_fn = _prox_body(prox_name)
+    c2p = c + 2.0
+
+    def run_block(fwd, bwd, bvec, fscal_ref, iscal_ref, state_in, refs_out):
+        lg = fscal_ref[0, 0]
+        g0 = fscal_ref[0, 1]
+        reg = fscal_ref[0, 2]
+        gamma0_in = fscal_ref[0, 3]
+        k0 = iscal_ref[0, 0]
+        maxit = iscal_ref[0, 1]
+        active = iscal_ref[0, 2] > 0
+        xbar0, xstar0, yhat0 = state_in
+        beta0 = lg * c * c * (c + 3.0) / (g0 * c2p * c2p * 2.0)
+
+        def body(_, carry):
+            xbar, xstar, yhat, gamma, k = carry
+            kf = k.astype(jnp.float32)
+            tk = c / (kf + c2p)
+            gk1 = g0 * c2p / (kf + 1.0 + c2p)
+            bk = (lg * c * c * (kf + c + 3.0)
+                  / (g0 * c2p * (kf + c2p) * (kf + 2.0)))
+            gk_eff = jnp.where(k == 0, lg / beta0, gamma)      # eq (13)
+            c0 = 1.0 - tk
+            c1 = (1.0 - tk) * gk_eff / lg
+            c2 = tk / bk
+            c3 = c1 + c2
+            # eq (15): ONE forward application on the combined vector
+            yhat_new = c0 * yhat + fwd(c1 * xstar + c2 * xbar) - c3 * bvec
+            zhat = bwd(yhat_new)
+            xstar_new = prox_fn(zhat, gk1, reg)
+            xbar_new = (1.0 - tk) * xbar + tk * xstar_new
+            # per-slot freeze: occupancy mask AND the max_iterations cap
+            live = active & (k < maxit)
+            return (jnp.where(live, xbar_new, xbar),
+                    jnp.where(live, xstar_new, xstar),
+                    jnp.where(live, yhat_new, yhat),
+                    jnp.where(live, gk1, gamma),
+                    jnp.where(live, k + 1, k))
+
+        xbar, xstar, yhat, gamma, k = jax.lax.fori_loop(
+            0, steps, body, (xbar0, xstar0, yhat0, gamma0_in, k0))
+        r = fwd(xbar) - bvec
+        feas = (jnp.sqrt(jnp.sum(r * r))
+                / jnp.maximum(jnp.sqrt(jnp.sum(bvec * bvec)), 1.0))
+        (xbar_ref, xstar_ref, yhat_ref, gamma_ref, k_ref, feas_ref) = refs_out
+        xbar_ref[0, :] = xbar
+        xstar_ref[0, :] = xstar
+        yhat_ref[0, :] = yhat
+        gamma_ref[0, 0] = gamma
+        k_ref[0, 0] = k
+        feas_ref[0, 0] = feas
+
+    if fmt == "ell":
+        def kernel(vals_ref, cols_ref, tvals_ref, tcols_ref, b_ref,
+                   fscal_ref, iscal_ref, xbar_ref, xstar_ref, yhat_ref,
+                   oxbar_ref, oxstar_ref, oyhat_ref, gamma_ref, k_ref,
+                   feas_ref):
+            vals = vals_ref[0].astype(jnp.float32)        # (m, k) resident
+            cols = cols_ref[0]
+            tvals = tvals_ref[0].astype(jnp.float32)      # (n, kt) resident
+            tcols = tcols_ref[0]
+            bvec = b_ref[0].astype(jnp.float32)
+
+            def fwd(x):
+                return jnp.sum(vals * jnp.take(x, cols, axis=0), axis=1)
+
+            def bwd(y):
+                return jnp.sum(tvals * jnp.take(y, tcols, axis=0), axis=1)
+
+            run_block(fwd, bwd, bvec, fscal_ref, iscal_ref,
+                      (xbar_ref[0], xstar_ref[0], yhat_ref[0]),
+                      (oxbar_ref, oxstar_ref, oyhat_ref, gamma_ref, k_ref,
+                       feas_ref))
+    else:
+        nbc, bn, nbc_t, bn_t = geom
+
+        def kernel(vals_ref, bcols_ref, tvals_ref, tbcols_ref, b_ref,
+                   fscal_ref, iscal_ref, xbar_ref, xstar_ref, yhat_ref,
+                   oxbar_ref, oxstar_ref, oyhat_ref, gamma_ref, k_ref,
+                   feas_ref):
+            vals = vals_ref[0].astype(jnp.float32)    # (nbr, kb, bm, bn)
+            bcols = bcols_ref[0]
+            tvals = tvals_ref[0].astype(jnp.float32)  # (nbt, kbt, bm, bn_t)
+            tbcols = tbcols_ref[0]
+            bvec = b_ref[0].astype(jnp.float32)
+            dn = (((3,), (2,)), ((0, 1), (0, 1)))
+
+            def fwd(x):                               # (n,) -> (m,), MXU
+                g = jnp.take(x.reshape(nbc, bn), bcols, axis=0)
+                acc = jax.lax.dot_general(
+                    vals, g, dimension_numbers=dn,
+                    preferred_element_type=jnp.float32)
+                return jnp.sum(acc, axis=1).reshape(-1)
+
+            def bwd(y):                               # (m,) -> (n,), MXU
+                g = jnp.take(y.reshape(nbc_t, bn_t), tbcols, axis=0)
+                acc = jax.lax.dot_general(
+                    tvals, g, dimension_numbers=dn,
+                    preferred_element_type=jnp.float32)
+                return jnp.sum(acc, axis=1).reshape(-1)
+
+            run_block(fwd, bwd, bvec, fscal_ref, iscal_ref,
+                      (xbar_ref[0], xstar_ref[0], yhat_ref[0]),
+                      (oxbar_ref, oxstar_ref, oyhat_ref, gamma_ref, k_ref,
+                       feas_ref))
+
+    return kernel
+
+
+def _slot_spec(shape):
+    """Per-slot BlockSpec: leading (1,) slot block, whole operand resident."""
+    nd = len(shape)
+    return pl.BlockSpec((1, *shape),
+                        lambda b, _nd=nd: (b, *([0] * _nd)))
+
+
+def fused_check_block_pallas(a_vals, a_idx, at_vals, at_idx, b, fscal, iscal,
+                             xbar, xstar, yhat, *, fmt: str, prox: str,
+                             steps: int, c: float = 3.0,
+                             interpret: bool | None = None):
+    """One launch: B slots x ``steps`` fused A2 iterations + residuals.
+
+    fscal (B, 4) f32: [lg, gamma0, reg, gamma_in] per slot.
+    iscal (B, 3) i32: [k_in, max_iterations, active] per slot.
+    Returns (xbar, xstar, yhat, gamma (B,), k (B,) i32, feas (B,)).
+    """
+    bsz, m = b.shape
+    n = xbar.shape[1]
+    if fmt == "bcsr":
+        bn, bn_t = a_vals.shape[4], at_vals.shape[4]
+        assert n % bn == 0 and m % bn_t == 0, (n, bn, m, bn_t)
+        geom = (n // bn, bn, m // bn_t, bn_t)
+    else:
+        geom = None
+    kernel = _make_kernel(steps, prox, c, fmt, geom)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[_slot_spec(a_vals.shape[1:]), _slot_spec(a_idx.shape[1:]),
+                  _slot_spec(at_vals.shape[1:]), _slot_spec(at_idx.shape[1:]),
+                  _slot_spec((m,)), _slot_spec((4,)), _slot_spec((3,)),
+                  _slot_spec((n,)), _slot_spec((n,)), _slot_spec((m,))],
+        out_specs=(_slot_spec((n,)), _slot_spec((n,)), _slot_spec((m,)),
+                   _slot_spec((1,)), _slot_spec((1,)), _slot_spec((1,))),
+        out_shape=(jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, m), jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((bsz, 1), jnp.float32)),
+        interpret=default_interpret(interpret),
+    )(a_vals, a_idx, at_vals, at_idx, b, fscal, iscal, xbar, xstar, yhat)
+    xbar_o, xstar_o, yhat_o, gamma_o, k_o, feas_o = out
+    return (xbar_o, xstar_o, yhat_o, gamma_o[:, 0], k_o[:, 0], feas_o[:, 0])
+
+
+@partial(jax.jit, static_argnames=("prox", "steps", "c", "interpret"))
+def fused_check_block(a, at, b, lg, gamma0, reg, state: PDState, active,
+                      maxit, *, prox: str, steps: int, c: float = 3.0,
+                      interpret: bool | None = None):
+    """Engine-facing wrapper: (stacked A, stacked A^T, operands, PDState)
+    -> (PDState, per-slot relative feasibility) after ``steps`` fused
+    masked A2 iterations — the drop-in fused body for one check block.
+
+    ``a``/``at`` are a ``StackedELL`` or ``StackedBCSR`` pair (the same
+    device-resident stacks the engine's buckets cache); ``active`` is the
+    per-slot occupancy mask, ``maxit`` the per-slot iteration cap.  The
+    state/feasibility contract matches ``check_every`` applications of
+    ``core.solver.batched_step`` followed by ``batched_feasibility``.
+    """
+    bsz = b.shape[0]
+    f32 = jnp.float32
+    fscal = jnp.stack([
+        jnp.broadcast_to(jnp.asarray(lg, f32), (bsz,)),
+        jnp.broadcast_to(jnp.asarray(gamma0, f32), (bsz,)),
+        jnp.broadcast_to(jnp.asarray(reg, f32), (bsz,)),
+        state.gamma.astype(f32)], axis=1)
+    iscal = jnp.stack([
+        state.k.astype(jnp.int32),
+        jnp.broadcast_to(jnp.asarray(maxit, jnp.int32), (bsz,)),
+        active.astype(jnp.int32)], axis=1)
+    if isinstance(a, StackedELL):
+        fmt, a_idx, at_idx = "ell", a.cols, at.cols
+    elif isinstance(a, StackedBCSR):
+        fmt, a_idx, at_idx = "bcsr", a.bcols, at.bcols
+    else:
+        raise TypeError(f"fused_check_block needs StackedELL or StackedBCSR "
+                        f"operands, got {type(a).__name__}")
+    xbar, xstar, yhat, gamma, k, feas = fused_check_block_pallas(
+        a.vals, a_idx, at.vals, at_idx, b.astype(f32), fscal, iscal,
+        state.xbar.astype(f32), state.xstar.astype(f32),
+        state.yhat.astype(f32), fmt=fmt, prox=prox, steps=steps, c=c,
+        interpret=interpret)
+    return PDState(xbar=xbar, xstar=xstar, yhat=yhat, gamma=gamma, k=k), feas

@@ -18,7 +18,7 @@ from repro.core.prox import ProxOp
 from repro.kernels.banded_spmv_t import banded_spmv_t_pallas
 from repro.kernels.interpret import default_interpret
 from repro.kernels.batched_ell_spmv import batched_ell_spmv_pallas
-from repro.kernels.bcsr_spmv import bcsr_spmv_pallas
+from repro.kernels.bcsr_spmv import batched_bcsr_spmv_pallas, bcsr_spmv_pallas
 from repro.kernels.ell_spmv import ell_spmv_pallas
 from repro.kernels.fused_dual_update import (
     batched_fused_dual_update_pallas, fused_dual_update_pallas,
@@ -155,13 +155,22 @@ def batched_fused_dual_update(a: StackedELL, xstar, xbar, yhat, b, coefs,
 @partial(jax.jit, static_argnames=("block_brows", "interpret"))
 def batched_bcsr_spmv(a: StackedBCSR, x: jax.Array, *, block_brows: int = 8,
                       interpret: bool | None = None) -> jax.Array:
-    """y_b = A_b @ x_b over stacked BCSR — vmap-over-pallas_call fallback
-    (the batching rule adds the leading grid dimension for us)."""
-    def one(vals, bcols, xb):
-        return bcsr_spmv(BCSR(vals=vals, bcols=bcols, m=a.m, n=a.n), xb,
-                         block_brows=block_brows, interpret=interpret)
-
-    return jax.vmap(one)(a.vals, a.bcols, x)
+    """y_b = A_b @ x_b over stacked BCSR: (B, n) -> (B, m), one batch-grid
+    launch — the grid carries the slot dimension natively (no more
+    vmap-over-``pallas_call``)."""
+    nbr = a.nbr
+    block_brows = max(1, min(block_brows, nbr))
+    pad_br = (-nbr) % block_brows
+    vals = jnp.pad(a.vals, ((0, 0), (0, pad_br), (0, 0), (0, 0), (0, 0))) \
+        if pad_br else a.vals
+    bcols = jnp.pad(a.bcols, ((0, 0), (0, pad_br), (0, 0))) \
+        if pad_br else a.bcols
+    pad_x = a.nbc * a.bn - x.shape[1]
+    xt = (jnp.pad(x, ((0, 0), (0, pad_x))) if pad_x else x) \
+        .reshape(x.shape[0], a.nbc, a.bn)
+    y = batched_bcsr_spmv_pallas(vals, bcols, xt, block_brows=block_brows,
+                                 interpret=_interp(interpret))
+    return y.reshape(x.shape[0], -1)[:, :a.m]
 
 
 def kernel_ops(a: ELL, at: BandedELL, prox: ProxOp, reg: float,

@@ -54,7 +54,8 @@ def make_problems(num: int, seed: int = 0, gamma0: float = 1000.0,
 
 
 def solve_sequentially(probs, tol: float = 1e-2,
-                       check_every: int = 16, max_iterations: int = 4000):
+                       check_every: int | None = None,
+                       max_iterations: int = 4000):
     """The baseline the engine replaces: one single-problem facade plan per
     request (same format/backend/stopping rule the engine applies per
     slot)."""
@@ -70,7 +71,12 @@ def main(argv=None):
     ap.add_argument("--fmt", default="ell", choices=("ell", "bcsr"))
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
     ap.add_argument("--tol", type=float, default=1e-2)
-    ap.add_argument("--check-every", type=int, default=16)
+    ap.add_argument("--check-every", type=int, default=None,
+                    help="feasibility-check cadence (default: the "
+                         "planner's repro.plan.decide_check_every)")
+    ap.add_argument("--fused", action="store_true", default=None,
+                    help="force one-kernel fused check blocks (default: "
+                         "auto — fused whenever backend=pallas)")
     ap.add_argument("--compare-sequential", action="store_true")
     ap.add_argument("--devices", type=int, default=None,
                     help="serve on a mesh of N devices (forces host "
@@ -103,7 +109,7 @@ def main(argv=None):
                         backend=args.backend, check_every=args.check_every,
                         devices=args.devices, shard_above=args.shard_above,
                         sharded_strategy=args.sharded_strategy,
-                        device_budget=args.device_budget)
+                        device_budget=args.device_budget, fused=args.fused)
     reqs = [p.to_request(uid=i, tol=args.tol, max_iterations=4000)
             for i, p in enumerate(probs)]
     for r in reqs:

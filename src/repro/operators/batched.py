@@ -11,10 +11,10 @@ path is reachable from every call site (``make_operator("stacked_ell",
 
 Backend notes:
   jnp    — vmapped reference matvecs (repro.sparse.linalg.stacked_*).
-  pallas — stacked-ELL runs real batch-grid kernels (the grid gains a batch
-           dimension: kernels/batched_ell_spmv.py and the batched fused
-           dual update); stacked-BCSR uses the vmap-over-pallas_call
-           fallback (JAX's batching rule adds the grid dimension).
+  pallas — stacked-ELL and stacked-BCSR both run real batch-grid kernels
+           (the grid gains the slot dimension: kernels/batched_ell_spmv.py,
+           kernels/bcsr_spmv.py's batched_bcsr_spmv_pallas, and the batched
+           fused dual update).
 
 All builders take BOTH orientations (A, A^T) pre-stacked — the batched path
 keeps the repo's memory-for-gather trade: the backward pass is a gather

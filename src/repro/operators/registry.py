@@ -49,18 +49,22 @@ def make_operator(fmt: str, backend: str, *args, **kwargs) -> LinearOperator:
 
 
 def from_coo(coo, fmt: str = "auto", backend: str = "jnp", *,
-             prox=None, reg: float = 0.0, **opts) -> LinearOperator:
+             prox=None, reg: float = 0.0, measured_table=None,
+             **opts) -> LinearOperator:
     """COO -> LinearOperator, converting to ``fmt`` on the host.
 
     fmt="auto" picks the format and block sizes from matrix statistics via
-    the roofline selector (repro.operators.select). ``opts`` are forwarded
-    to the converter/builder (band_size, bm, bn, pad_to, block_rows, ...).
+    the roofline selector (repro.operators.select); ``measured_table``
+    (autotune cells, see ``select.load_measured_table``) makes that pick
+    use measured timings instead of the analytic model.  ``opts`` are
+    forwarded to the converter/builder (band_size, bm, bn, pad_to,
+    block_rows, ...).
     """
     from repro.operators import builders
 
     if fmt == "auto":
         from repro.operators.select import select_format
-        plan = select_format(coo, backend=backend)
+        plan = select_format(coo, backend=backend, table=measured_table)
         fmt = plan.format
         opts = {**plan.params, **opts}
     return builders.build_from_coo(coo, fmt, backend, prox=prox, reg=reg,

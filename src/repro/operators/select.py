@@ -16,14 +16,31 @@ candidate format and picks the cheapest:
 The estimates are arithmetic-intensity arguments, not measurements — the
 same modeling the dry-run roofline uses for collectives — and are recorded
 in the returned plan so benchmarks can compare prediction vs measurement.
+Because the analytic model can be orders of magnitude off for kernels the
+machine actually runs (interpret-mode Pallas on CPU most of all), a
+MEASURED table from the sweep harness (``benchmarks/autotune.py`` ->
+``experiments/bench/autotune.json``) is consulted first when provided:
+pass ``table=`` explicitly or point env ``REPRO_AUTOTUNE_TABLE`` at the
+json; with neither, behavior is purely analytic as before.  A measured
+cell's per-apply seconds are scaled linearly in stored work (padded
+entries) to the matrix at hand — nearest-cell-in-work interpolation, the
+dace ``FlopCount`` roofline's measured-table fix rather than a better
+formula.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
+import os
 
 import numpy as np
 
 from repro.roofline import hw
+
+#: env var naming an autotune.json whose measured cells override the
+#: analytic roofline in ``select_format`` / ``estimate_formats``.
+AUTOTUNE_TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
 
 # VPU fp32 peak (v5e: 4 MXU-adjacent vector units, 8x128 lanes, ~940 MHz,
 # 2 flops/lane/cycle) — the gather-path ceiling. The MXU peak is hw's bf16
@@ -79,6 +96,51 @@ def bcsr_bytes(nbr: int, kb: int, bm: int, bn: int) -> int:
     return int(nbr) * int(kb) * (int(bm) * int(bn) * _VAL + _IDX)
 
 
+def load_measured_table(path: str | None = None):
+    """The ``cells`` list of an autotune table, or None.
+
+    Resolution: explicit ``path`` > env ``REPRO_AUTOTUNE_TABLE`` > None.
+    Unreadable / malformed / empty tables resolve to None (the selector
+    then falls back to the analytic roofline), so a stale env var can
+    never break a solve."""
+    if path is None:
+        path = os.environ.get(AUTOTUNE_TABLE_ENV)
+    if not path:
+        return None
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    cells = data.get("cells") if isinstance(data, dict) else data
+    return list(cells) if cells else None
+
+
+def _measured_s(cells, fmt: str, backend: str, params: dict,
+                work: float) -> float | None:
+    """Measured per-apply seconds for (fmt, backend, params) scaled to
+    ``work`` stored entries, from the nearest cell in log-work; None when
+    no cell matches."""
+    if not cells or work <= 0:
+        return None
+    best = None
+    for cell in cells:
+        if cell.get("kind", "spmv") != "spmv":
+            continue
+        if cell.get("format") != fmt or cell.get("backend") != backend:
+            continue
+        if fmt == "bcsr" and (cell.get("bm") != params.get("bm")
+                              or cell.get("bn") != params.get("bn")):
+            continue
+        cw, cs = float(cell.get("work", 0)), float(cell.get("measured_s", 0))
+        if cw <= 0 or cs <= 0:
+            continue
+        dist = abs(math.log(work / cw))
+        if best is None or dist < best[0]:
+            best = (dist, cs * work / cw)
+    return None if best is None else best[1]
+
+
 def _bcsr_block_count(coo, bm: int, bn: int) -> int:
     nbc = max(1, -(-coo.n // bn))
     bi = np.asarray(coo.rows) // bm
@@ -86,9 +148,30 @@ def _bcsr_block_count(coo, bm: int, bn: int) -> int:
     return int(np.unique(bi.astype(np.int64) * nbc + bj).size)
 
 
+def _apply_measured(entry: dict, cells, fmt: str, backend: str,
+                    work: float) -> dict:
+    """Override an analytic entry's ``s`` with the measured-table estimate
+    when one matches; the analytic figure survives as ``analytic_s`` and
+    ``source`` records which model priced the entry."""
+    meas = _measured_s(cells, fmt, backend, entry["params"], work)
+    entry["work"] = work
+    if meas is None:
+        entry["source"] = "analytic"
+    else:
+        entry["analytic_s"] = entry["s"]
+        entry["s"] = meas
+        entry["source"] = "measured"
+    return entry
+
+
 def estimate_formats(coo, bm_bn_candidates=((8, 128), (16, 128), (32, 128),
-                                            (8, 256))) -> dict:
-    """Modeled per-apply seconds for each candidate (format, params)."""
+                                            (8, 256)), table=None,
+                     backend: str = "pallas") -> dict:
+    """Modeled per-apply seconds for each candidate (format, params).
+
+    With ``table`` (an autotune ``cells`` list), matching measured cells
+    override the analytic roofline — each entry says which in ``source``.
+    """
     st = matrix_stats(coo)
     m, n, nnz = st["m"], st["n"], st["nnz"]
     vec_bytes = (m + n) * _VAL
@@ -97,44 +180,57 @@ def estimate_formats(coo, bm_bn_candidates=((8, 128), (16, 128), (32, 128),
     # ELL: m * k_max stored entries (vals + idx), 2 flops each, VPU.
     k = max(1, st["row_nnz_max"])
     ell_bytes_ = ell_bytes(m, k) + vec_bytes
-    out["ell"] = dict(
+    out["ell"] = _apply_measured(dict(
         s=_roofline_s(2.0 * m * k, ell_bytes_, PEAK_FLOPS_VPU),
         bytes=ell_bytes_, pad_ratio=m * k / max(1, nnz),
-        params=dict())
+        params=dict()), table, "ell", backend, float(m) * k)
 
     # BandedELL (backward pass layout): same stored volume keyed by columns,
     # k_max over columns; viable at any m (y staged per band), mandatory
     # once y exceeds VMEM.
     kc = max(1, st["col_nnz_max"])
     band_bytes = ell_bytes(n, kc) + vec_bytes
-    out["banded_ell"] = dict(
+    out["banded_ell"] = _apply_measured(dict(
         s=_roofline_s(2.0 * n * kc, band_bytes, PEAK_FLOPS_VPU),
         bytes=band_bytes, pad_ratio=n * kc / max(1, nnz),
-        params=dict(band_size=max(8, min(4096, VMEM_BYTES // (8 * _VAL)))))
+        params=dict(band_size=max(8, min(4096, VMEM_BYTES // (8 * _VAL))))),
+        table, "banded_ell", backend, float(n) * kc)
 
     # BCSR: dense tiles on the MXU; zero-fill costs bytes AND flops but at
-    # the ~50x higher MXU ceiling.
+    # the ~50x higher MXU ceiling.  Tile candidates priced by the measured
+    # table compete only with each other: an analytic candidate is
+    # optimistic by orders of magnitude next to a measured one, so mixing
+    # sources in the min() would always bury the measurements.
     best = None
     for bm, bn in bm_bn_candidates:
         nblocks = _bcsr_block_count(coo, bm, bn)
         tile_entries = nblocks * bm * bn
         bytes_ = bcsr_bytes(nblocks, 1, bm, bn) + vec_bytes
-        s = _roofline_s(2.0 * tile_entries, bytes_, PEAK_FLOPS_MXU_F32)
-        cand = dict(s=s, bytes=bytes_,
-                    occupancy=nnz / max(1, tile_entries),
-                    params=dict(bm=bm, bn=bn))
-        if best is None or s < best["s"]:
+        cand = _apply_measured(dict(
+            s=_roofline_s(2.0 * tile_entries, bytes_, PEAK_FLOPS_MXU_F32),
+            bytes=bytes_, occupancy=nnz / max(1, tile_entries),
+            params=dict(bm=bm, bn=bn)),
+            table, "bcsr", backend, float(tile_entries))
+        rank = (cand["source"] != "measured", cand["s"])
+        if best is None or rank < (best["source"] != "measured", best["s"]):
             best = cand
     out["bcsr"] = best
     return out
 
 
 def select_format(coo, backend: str = "pallas",
-                  y_vmem_budget: int = VMEM_BYTES) -> FormatPlan:
+                  y_vmem_budget: int = VMEM_BYTES,
+                  table=None) -> FormatPlan:
     """Pick the cheapest modeled format; force the banded backward layout
     when y cannot be VMEM-resident (the flat gather is then impossible on
-    a real TPU regardless of modeled time)."""
-    est = estimate_formats(coo)
+    a real TPU regardless of modeled time).
+
+    ``table``: autotune ``cells`` (see ``load_measured_table``) whose
+    measured timings trump the analytic model; None consults env
+    ``REPRO_AUTOTUNE_TABLE`` (and stays fully analytic when unset)."""
+    if table is None:
+        table = load_measured_table()
+    est = estimate_formats(coo, table=table, backend=backend)
     y_bytes = coo.m * _VAL
     if y_bytes > y_vmem_budget:
         choice = "banded_ell"

@@ -40,8 +40,8 @@ from typing import Any, Optional
 import numpy as np
 
 __all__ = ["ExecutionPlan", "Result", "SolveSpec", "bucket_operand_bytes",
-           "decide_bucket_body", "decide_placement", "plan",
-           "sharded_bucket_bytes", "sharding_ndev"]
+           "decide_bucket_body", "decide_check_every", "decide_placement",
+           "plan", "sharded_bucket_bytes", "sharding_ndev"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +60,7 @@ class SolveSpec:
     tol: Optional[float] = None
     iterations: int = 300
     max_iterations: int = 10_000
-    check_every: int = 8
+    check_every: Optional[int] = None    # None -> planner default
     format: str = "auto"                 # "dense"|"coo"|"ell"|"bcsr"|"auto"
     backend: str = "auto"                # "jnp"|"pallas"|"auto"
     strategy: Optional[str] = None       # distributed strategy name
@@ -173,6 +173,7 @@ class ExecutionPlan:
     reasons: dict
     estimates: Optional[dict] = None
     placement: str = "single"
+    check_every: int = 16
     _op: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     def __repr__(self):
@@ -191,7 +192,8 @@ class ExecutionPlan:
                 ("algorithm", self.algorithm),
                 ("format", self.format), ("backend", self.backend),
                 ("strategy", self.strategy), ("lg", f"{self.lg:.6g}"),
-                ("gamma0", f"{self.gamma0:.6g}")]
+                ("gamma0", f"{self.gamma0:.6g}"),
+                ("check_every", self.check_every)]
         lines = []
         for key, choice in rows:
             why = self.reasons.get(key, "")
@@ -294,7 +296,7 @@ class ExecutionPlan:
                     ops, prob.prox, prob.b, self.lg, self.gamma0,
                     max_iterations=spec.max_iterations, tol=spec.tol,
                     algorithm=self.algorithm, c=spec.c,
-                    check_every=spec.check_every)
+                    check_every=self.check_every)
             state = jax.block_until_ready(state)
         solve_s = time.perf_counter() - t1
         x = state.xbar
@@ -328,7 +330,7 @@ class ExecutionPlan:
                                      tol=spec.tol,
                                      max_iterations=spec.max_iterations,
                                      algorithm=self.algorithm, c=spec.c,
-                                     check_every=spec.check_every)
+                                     check_every=self.check_every)
         build_s = time.perf_counter() - t0
         t1 = time.perf_counter()
         state = jax.block_until_ready(fn(dp.operands, bp))
@@ -472,6 +474,28 @@ def decide_bucket_body(fmt: str, m_pad: int, n_pad: int, width: int,
         f"operand-bytes model over {ndev} devices: dualpart "
         f"{by['dualpart']}B/device vs rowpart {by['rowpart']}B/device "
         f"per slot -> {strategy}")
+
+
+def decide_check_every(override: Optional[int] = None) -> tuple[int, str]:
+    """The feasibility-check cadence decision: (check_every, reason).
+
+    One rule for every entry point — ``plan()`` records it in the plan's
+    reasons, and the serving engine / benchmark / launch CLIs resolve their
+    ``check_every=None`` defaults through it, so the historical 8-vs-16
+    split between ``core.solver`` and the engine cannot reappear.  The
+    default is ``core.solver.DEFAULT_CHECK_EVERY``: large enough that the
+    O(nnz) feasibility spmv is amortized to a few percent of block cost,
+    small enough that a converged slot wastes at most one block.
+    """
+    if override is not None:
+        if override < 1:
+            raise ValueError(f"check_every must be >= 1, got {override}")
+        return int(override), "user override"
+    from repro.core.solver import DEFAULT_CHECK_EVERY
+
+    return DEFAULT_CHECK_EVERY, (
+        f"planner default ({DEFAULT_CHECK_EVERY}): feasibility spmv "
+        f"amortized over the block, at most one wasted block per slot")
 
 
 def sharding_ndev(nnz: int, n_devices: int,
@@ -690,6 +714,9 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
                             f"{np.dtype(problem.dtype).name} "
                             f"(repro.api.Problem; dtype= overrides)")
 
+    # check cadence --------------------------------------------------------
+    check_every, reasons["check_every"] = decide_check_every(spec.check_every)
+
     # lg -------------------------------------------------------------------
     lg, reasons["lg"] = _choose_lg(problem, spec)
 
@@ -703,7 +730,8 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
                          algorithm=algorithm, format=fmt, backend=backend,
                          strategy=strategy, mesh=spec.mesh, lg=lg,
                          gamma0=gamma0, params=params, reasons=reasons,
-                         estimates=estimates, placement=placement)
+                         estimates=estimates, placement=placement,
+                         check_every=check_every)
 
 
 def _choose_format(problem, spec: SolveSpec):

@@ -99,6 +99,7 @@ end to end:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from functools import partial
 from typing import Any
@@ -110,6 +111,9 @@ import numpy as np
 from repro.core.prox import ProxOp, get_prox
 from repro.core.solver import (
     PDState, batched_feasibility, batched_init, batched_step, mask_state,
+)
+from repro.kernels.fused_check_block import (
+    FUSED_CHECK_PROXES, fused_check_block,
 )
 from repro.sparse.formats import (
     COO, coo_bcsr_width, coo_to_bcsr, coo_to_ell, pad_coo, transpose_coo,
@@ -396,18 +400,26 @@ class SolverEngine:
 
     def __init__(self, slots: int = 8, fmt: str = "ell",
                  backend: str = "jnp", algorithm: str = "a2",
-                 check_every: int = 16, min_rows: int = 64,
+                 check_every: int | None = None, min_rows: int = 64,
                  min_cols: int = 16, interpret: bool | None = None,
                  devices: Any = None, shard_above: int | None = None,
                  device_budget: int | None = None,
-                 sharded_strategy: str | None = None):
+                 sharded_strategy: str | None = None,
+                 fused: bool | None = None):
         if fmt not in ("ell", "bcsr"):
             raise ValueError(f"fmt must be ell|bcsr, got {fmt!r}")
+        from repro.plan import decide_check_every
+
         self.slots = slots
         self.fmt = fmt
         self.backend = backend
         self.algorithm = algorithm
-        self.check_every = check_every
+        self.check_every, _ = decide_check_every(check_every)
+        # fused=None: one-kernel check blocks whenever the backend is
+        # already the kernel path ("pallas"); True/False force it on/off
+        # (fused applies only to plain resident buckets with a supported
+        # prox family — everything else keeps the unfused step loop)
+        self.fused = fused
         self.min_rows = min_rows
         self.min_cols = min_cols
         self.interpret = interpret
@@ -434,6 +446,13 @@ class SolverEngine:
         self.completed: list[SolveRequest] = []
         self.stats = {"steps": 0, "iterations": 0, "admitted": 0,
                       "sharded_admitted": 0}
+        # per-phase wall time of the serve loop (seconds, cumulative);
+        # compile_s is the one-time AOT lowering cost and is EXCLUDED from
+        # the phase that triggered it, so a steady-state tick's admit /
+        # splice / dispatch / harvest attribution is compile-free.  Kept
+        # separate from ``stats`` (benchmarks reset that dict wholesale).
+        self.phase_s = {"admit_s": 0.0, "splice_s": 0.0, "dispatch_s": 0.0,
+                        "harvest_s": 0.0, "compile_s": 0.0}
         self._auto_uid = 0
         self._rr = 0                      # round-robin bucket device cursor
         # per-instance jit closures: the compile cache lives on the engine
@@ -443,6 +462,13 @@ class SolverEngine:
                                     static_argnames=("key",))
         self._advance = jax.jit(self._advance_impl,
                                 static_argnames=("key", "steps"))
+        # BucketKey-keyed AOT executables for the plain resident bodies:
+        # splice + advance are .lower().compile()'d once per (kind, key,
+        # slot width) at first use, so later admissions / re-splices into
+        # the same bucket shape call a finished executable and never pay
+        # jit tracing on the tick path (the lowering cost lands in
+        # phase_s["compile_s"], not the tick's phase)
+        self._aot_cache: dict = {}
         # (ndev, n_pad, prox) -> (splice_fn, advance_fn) row-shard bodies
         self._sharded_fn_cache: dict = {}
         # key -> (splice_fn, advance_fn) slot-axis shard_map bodies
@@ -1029,6 +1055,50 @@ class SolverEngine:
         still = active & (feas >= tol) & (state.k < maxit)
         return state, feas, still
 
+    def _advance_fused_impl(self, key, a, at, b, lg, gamma0, reg, state,
+                            active, tol, maxit):
+        """One-kernel check block: the whole ``check_every`` inner loop
+        (forward spmv, fused dual update, prox, per-slot freeze) runs inside
+        a single batch-grid Pallas launch with the bucket's operands
+        VMEM-resident across inner iterations, emitting only the final
+        state + per-slot feasibility (repro.kernels.fused_check_block).
+        Same verdict contract as ``_advance_impl``."""
+        state, feas = fused_check_block(
+            a, at, b, lg, gamma0, reg, state, active, maxit,
+            prox=key.prox, steps=self.check_every, interpret=self.interpret)
+        still = active & (feas >= tol) & (state.k < maxit)
+        return state, feas, still
+
+    def _use_fused(self, key, bucket) -> bool:
+        """Fused one-kernel check blocks serve plain resident buckets whose
+        prox family has an inlined closed form; sharded / slot-sharded /
+        streamed buckets keep the unfused step loop."""
+        if not (isinstance(key, BucketKey) and bucket.resident
+                and not bucket.slot_sharded):
+            return False
+        if key.prox not in FUSED_CHECK_PROXES:
+            return False
+        return self.backend == "pallas" if self.fused is None else self.fused
+
+    def _aot_exe(self, kind: str, key, bucket, args):
+        """The AOT-compiled executable for one plain-resident bucket body
+        (kind: "splice" | "advance" | "advance_fused"), compiled once per
+        (kind, key, slot width, device) and cached on the engine.  The
+        tick path then calls a finished executable — re-splicing or
+        re-admitting into a warm bucket never traces."""
+        dev_id = None if bucket.device is None else bucket.device.id
+        ck = (kind, key, int(bucket.active.shape[0]), dev_id)
+        exe = self._aot_cache.get(ck)
+        if exe is None:
+            impl = {"splice": self._splice_init_impl,
+                    "advance": self._advance_impl,
+                    "advance_fused": self._advance_fused_impl}[kind]
+            t0 = time.perf_counter()
+            exe = jax.jit(lambda *a: impl(key, *a)).lower(*args).compile()
+            self.phase_s["compile_s"] += time.perf_counter() - t0
+            self._aot_cache[ck] = exe
+        return exe
+
     # -- the serve loop ----------------------------------------------------
 
     def _harvest(self, bucket: _Bucket, feas, still) -> None:
@@ -1084,9 +1154,11 @@ class SolverEngine:
             return splice_fn(a, at, b, lg, gamma0, reg, bucket.state,
                              jnp.asarray(new),
                              self._active_mask(key, bucket), tol, maxit)
-        return self._splice_init(
-            key, a, at, b, lg, gamma0, reg, bucket.state,
-            jnp.asarray(new), self._active_mask(key, bucket), tol, maxit)
+        call = (a, at, b, lg, gamma0, reg, bucket.state,
+                jnp.asarray(new), self._active_mask(key, bucket), tol, maxit)
+        if bucket.resident:
+            return self._aot_exe("splice", key, bucket, call)(*call)
+        return self._splice_init(key, *call)
 
     def _dispatch_advance(self, key, bucket):
         """Launch one check_every block for the bucket; async — the result
@@ -1122,9 +1194,10 @@ class SolverEngine:
             _, advance_fn = self._slotshard_fns(key, bucket.slot_mesh, args)
             return advance_fn(a, at, b, lg, gamma0, reg, bucket.state,
                               self._active_mask(key, bucket), tol, maxit)
-        return self._advance(
-            key, a, at, b, lg, gamma0, reg, bucket.state,
-            self._active_mask(key, bucket), tol, maxit)
+        call = (a, at, b, lg, gamma0, reg, bucket.state,
+                self._active_mask(key, bucket), tol, maxit)
+        kind = "advance_fused" if self._use_fused(key, bucket) else "advance"
+        return self._aot_exe(kind, key, bucket, call)(*call)
 
     def step(self) -> bool:
         """One engine tick: admit -> splice inits -> advance -> harvest.
@@ -1138,31 +1211,46 @@ class SolverEngine:
         in turn."""
         alive = False
         ticking = []
+        ph = self.phase_s
+
+        def charge(phase, t0, c0):
+            # wall time minus any AOT lowering that happened inside the
+            # phase (already booked under compile_s)
+            ph[phase] += (time.perf_counter() - t0) - (ph["compile_s"] - c0)
+
         # every bucket's key stays in self.queues (entries are never
         # deleted), so iterating the queues covers all buckets
         for key in list(self.queues):
+            t0, c0 = time.perf_counter(), ph["compile_s"]
             bucket = self.buckets.get(key)
             if bucket is None:
                 if not self.queues.get(key):
                     continue
                 bucket = self.buckets[key] = self._make_bucket(key)
             new = self._admit(key, bucket)
+            charge("admit_s", t0, c0)
             if new.any():
+                t0, c0 = time.perf_counter(), ph["compile_s"]
                 bucket.state, feas, still = self._dispatch_splice(
                     key, bucket, new)
                 self._harvest(bucket, feas, still)
+                charge("splice_s", t0, c0)
             if not bucket.active.any():
                 continue
             alive = True
+            t0, c0 = time.perf_counter(), ph["compile_s"]
             bucket.state, feas, still = self._dispatch_advance(key, bucket)
+            charge("dispatch_s", t0, c0)
             ticking.append((bucket, feas, still))
             self.stats["steps"] += 1
             self.stats["iterations"] += self.check_every * int(
                 bucket.active.sum())
+        t0, c0 = time.perf_counter(), ph["compile_s"]
         for bucket, feas, still in ticking:
             self._harvest(bucket, feas, still)
             if not getattr(bucket, "resident", True):
                 bucket.dev = None      # streamed: re-upload next tick
+        charge("harvest_s", t0, c0)
         pending = any(self.queues.values())
         return alive or pending
 

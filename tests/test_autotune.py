@@ -1,0 +1,133 @@
+"""Measured autotune tables round-trip through the format selector.
+
+Reads the table named by env ``REPRO_AUTOTUNE_TABLE`` (the CI smoke points
+this at a fresh ``benchmarks/autotune.py --quick`` run) or, unset, the
+committed ``experiments/bench/autotune.json``.  Each spmv cell records the
+exact matrix recipe (m, n, row_nnz, seed), so the tests rebuild the
+operand and assert ``operators/select.py`` (1) prefers the measured cell
+over the analytic roofline, (2) reproduces the cell's seconds at the
+cell's own work, and (3) predicts a *different*-size matrix's measured
+seconds within 2x via the linear-in-work scaling — prediction quality
+against real measurements, no timing in the test itself.
+"""
+import json
+import os
+
+import pytest
+
+from repro.operators.select import (
+    estimate_formats, load_measured_table, select_format,
+)
+from repro.sparse import random_coo
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_DEFAULT = os.path.join(_REPO, "experiments", "bench", "autotune.json")
+
+
+def _table_path():
+    return os.environ.get("REPRO_AUTOTUNE_TABLE") or _DEFAULT
+
+
+@pytest.fixture(scope="module")
+def cells():
+    path = _table_path()
+    if not os.path.exists(path):
+        pytest.skip(f"no autotune table at {path} "
+                    "(run benchmarks/autotune.py)")
+    got = load_measured_table(path)
+    assert got, f"table at {path} loaded empty"
+    return got
+
+
+def _spmv_cells(cells, fmt=None):
+    out = [c for c in cells if c.get("kind") == "spmv"]
+    if fmt:
+        out = [c for c in out if c["format"] == fmt]
+    return out
+
+
+def _estimate_cell(cell, table):
+    coo = random_coo(cell["m"], cell["n"], cell["row_nnz"],
+                     seed=cell["seed"])
+    if cell["format"] == "bcsr":
+        est = estimate_formats(
+            coo, bm_bn_candidates=((cell["bm"], cell["bn"]),),
+            table=table, backend=cell["backend"])
+    else:
+        est = estimate_formats(coo, table=table, backend=cell["backend"])
+    return est[cell["format"]]
+
+
+def test_measured_cells_override_analytic(cells):
+    """Every spmv cell's own matrix prices as source=measured, within 2x
+    of the cell's recorded seconds (exact up to nearest-cell ties)."""
+    spmv = _spmv_cells(cells)
+    assert spmv, "table has no spmv cells"
+    for cell in spmv:
+        entry = _estimate_cell(cell, cells)
+        assert entry["source"] == "measured", cell
+        assert "analytic_s" in entry
+        ratio = entry["s"] / cell["measured_s"]
+        assert 0.5 <= ratio <= 2.0, (cell, entry["s"])
+
+
+def test_without_table_stays_analytic(cells):
+    cell = _spmv_cells(cells)[0]
+    entry = _estimate_cell(cell, None)
+    assert entry["source"] == "analytic"
+    assert "analytic_s" not in entry
+
+
+def test_cross_size_prediction_within_2x(cells):
+    """Predicting a matrix NOT in the table (its cell withheld) from the
+    remaining cells lands within 2x of that cell's measurement — the
+    linear-in-work interpolation acceptance bound."""
+    by_size = {}
+    for c in _spmv_cells(cells, "ell"):
+        by_size.setdefault((c["m"], c["n"], c["backend"]), c)
+    sizes = sorted(by_size)
+    if len({(m, n) for m, n, _ in sizes}) < 2:
+        pytest.skip("table has one spmv size only (quick table)")
+    target = by_size[sizes[-1]]
+    held_out = [c for c in cells
+                if not (c.get("kind") == "spmv" and c["format"] == "ell"
+                        and c["m"] == target["m"])]
+    entry = _estimate_cell(target, held_out)
+    assert entry["source"] == "measured"
+    ratio = entry["s"] / target["measured_s"]
+    assert 0.5 <= ratio <= 2.0, (entry["s"], target["measured_s"])
+
+
+def test_select_format_consults_env_table(cells, monkeypatch):
+    """select_format with the env var set routes through the measured
+    table (every candidate the table covers reports source=measured)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", _table_path())
+    cell = _spmv_cells(cells)[0]
+    coo = random_coo(cell["m"], cell["n"], cell["row_nnz"],
+                     seed=cell["seed"])
+    plan = select_format(coo, backend=cell["backend"])
+    sources = {f: e["source"] for f, e in plan.estimates.items()}
+    assert sources[cell["format"]] == "measured", sources
+
+
+def test_malformed_table_falls_back_to_analytic(tmp_path, monkeypatch):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(bad))
+    assert load_measured_table() is None
+    coo = random_coo(64, 32, 4, seed=0)
+    est = estimate_formats(coo, table=load_measured_table())
+    assert all(e["source"] == "analytic" for e in est.values())
+
+
+def test_check_block_cells_have_sweep_axes(cells):
+    """The fused check-block sweep covers slot-width and check_every axes
+    (the data the planner's cadence/bucket decisions cite)."""
+    cb = [c for c in cells if c.get("kind") == "check_block"]
+    if not cb:
+        pytest.skip("table has no check_block cells")
+    for c in cb:
+        assert c["slots"] >= 1 and c["check_every"] >= 1
+        assert c["measured_s"] > 0
+        assert c["per_slot_iter_s"] == pytest.approx(
+            c["measured_s"] / (c["slots"] * c["check_every"]))

@@ -1,0 +1,234 @@
+"""Fused one-kernel check blocks == the unfused batched_step oracle.
+
+The fused kernel (repro.kernels.fused_check_block) runs the entire
+check_every inner loop — spmv forward, fused dual update, prox, per-slot
+active-mask freeze — inside one batch-grid Pallas program per slot and
+emits only the per-slot feasibility residual.  Every test here drives it
+against N explicit ``batched_step`` calls + ``batched_feasibility`` (the
+path the serving engine used before fusion) at 1e-5, over both stacked
+formats, both regularizer families, ragged active masks, and mid-block
+``max_iterations`` freezes.  Also: the batch-grid stacked-BCSR spmv vs
+the per-slot kernel it replaced (vmap fallback), and the fused
+``batched_solve_tol_fused`` driver vs ``batched_solve_tol``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import get_prox
+from repro.core.solver import (
+    SolverOps, batched_feasibility, batched_init, batched_solve_tol,
+    batched_solve_tol_fused, batched_step,
+)
+from repro.kernels import FUSED_CHECK_PROXES, batched_bcsr_spmv
+from repro.kernels.bcsr_spmv import bcsr_spmv_pallas
+from repro.kernels.fused_check_block import fused_check_block
+from repro.sparse import (
+    coo_to_bcsr, coo_to_ell, random_coo, stack_bcsrs, stack_ells,
+    stacked_bcsr_matvec, stacked_ell_matvec, transpose_coo,
+)
+from repro.sparse.formats import BCSR, ELL
+
+
+def _pad_ells(ells):
+    """Stack ragged-width ELLs: pad vals/cols to the common max width
+    (zero val at col 0 contributes nothing)."""
+    w = max(e.vals.shape[1] for e in ells)
+    return [ELL(vals=np.pad(np.asarray(e.vals),
+                            ((0, 0), (0, w - e.vals.shape[1]))),
+                cols=np.pad(np.asarray(e.cols),
+                            ((0, 0), (0, w - e.cols.shape[1]))),
+                n=e.n) for e in ells]
+
+
+def _pad_bcsrs(bs):
+    """Stack ragged-kb BCSRs: pad with zero blocks pointing at block
+    column 0."""
+    kb = max(x.vals.shape[1] for x in bs)
+    return [BCSR(vals=np.pad(np.asarray(x.vals),
+                             ((0, 0), (0, kb - x.vals.shape[1]),
+                              (0, 0), (0, 0))),
+                 bcols=np.pad(np.asarray(x.bcols),
+                              ((0, 0), (0, kb - x.bcols.shape[1]))),
+                 m=x.m, n=x.n) for x in bs]
+
+
+def _stacked(fmt, B, m, n, k, seed0=0, bm=8, bn=16):
+    coos = [random_coo(m, n, k, seed=seed0 + i) for i in range(B)]
+    if fmt == "ell":
+        a = stack_ells(_pad_ells([coo_to_ell(c, pad_to=8) for c in coos]),
+                       n=n)
+        at = stack_ells(_pad_ells([coo_to_ell(transpose_coo(c), pad_to=8)
+                                   for c in coos]), n=m)
+        mv = stacked_ell_matvec
+    else:
+        a = stack_bcsrs(_pad_bcsrs([coo_to_bcsr(c, bm=bm, bn=bn)
+                                    for c in coos]), m=m, n=n)
+        at = stack_bcsrs(_pad_bcsrs([coo_to_bcsr(transpose_coo(c),
+                                                 bm=bm, bn=bn)
+                                     for c in coos]), m=n, n=m)
+        mv = stacked_bcsr_matvec
+    ops = SolverOps(matvec=lambda x: mv(a, x), rmatvec=lambda y: mv(at, y))
+    return a, at, ops
+
+
+def _oracle_block(ops, prox, b, lg, g0, state, active, maxit, steps):
+    for _ in range(steps):
+        state = batched_step(ops, prox, b, lg, g0, state,
+                             mask=active & (state.k < maxit))
+    return state, batched_feasibility(ops, b, state)
+
+
+def _assert_state_close(f, o, msg=""):
+    for name in ("xbar", "xstar", "yhat", "gamma"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(f, name)), np.asarray(getattr(o, name)),
+            rtol=1e-5, atol=1e-5, err_msg=f"{msg}:{name}")
+    np.testing.assert_array_equal(np.asarray(f.k), np.asarray(o.k))
+
+
+@pytest.mark.parametrize("fmt", ["ell", "bcsr"])
+@pytest.mark.parametrize("prox_name", ["l1", "sq_l2"])
+def test_fused_block_matches_step_oracle(fmt, prox_name):
+    """(format) x (prox): one fused block == steps explicit batched_steps,
+    from a mid-run state (k > 0) with a ragged active mask."""
+    B, m, n, k, reg, steps = 3, 64, 32, 4, 0.05, 5
+    a, at, ops = _stacked(fmt, B, m, n, k)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((B, m)), jnp.float32)
+    lg = jnp.full((B,), 50.0, jnp.float32)
+    g0 = jnp.full((B,), 10.0, jnp.float32)
+    prox = get_prox(prox_name, reg=reg)
+    active = jnp.array([True, True, False])
+    maxit = jnp.full((B,), 100, jnp.int32)
+    # warm the state past k=0 so the eq-13 first-iteration gamma and the
+    # steady-state schedule are both exercised inside the fused loop
+    st = batched_init(ops, prox, b, lg, g0)
+    for _ in range(4):
+        st = batched_step(ops, prox, b, lg, g0, st,
+                          mask=active & (st.k < maxit))
+    o, feas_o = _oracle_block(ops, prox, b, lg, g0, st, active, maxit,
+                              steps)
+    f, feas_f = fused_check_block(a, at, b, lg, g0, reg, st, active, maxit,
+                                  prox=prox_name, steps=steps,
+                                  interpret=True)
+    _assert_state_close(f, o, f"{fmt}/{prox_name}")
+    np.testing.assert_allclose(np.asarray(feas_f), np.asarray(feas_o),
+                               rtol=1e-5, atol=1e-5)
+    # the always-inactive slot must never have moved
+    assert int(f.k[2]) == 0
+
+
+@pytest.mark.parametrize("prox_name", FUSED_CHECK_PROXES)
+def test_fused_block_all_proxes_from_init(prox_name):
+    """Every fused prox family, from the k=0 init state (gk_eff = lg/beta0
+    branch) on the BCSR path."""
+    B, m, n, k, steps = 3, 64, 32, 4, 6
+    a, at, ops = _stacked("bcsr", B, m, n, k, seed0=10)
+    rng = np.random.default_rng(1)
+    b = jnp.asarray(rng.standard_normal((B, m)), jnp.float32)
+    lg = jnp.full((B,), 50.0, jnp.float32)
+    g0 = jnp.full((B,), 10.0, jnp.float32)
+    reg = 0.05
+    prox = (get_prox(prox_name, reg=reg)
+            if prox_name in ("l1", "sq_l2") else get_prox(prox_name))
+    active = jnp.array([True, False, True])
+    maxit = jnp.full((B,), 100, jnp.int32)
+    st = batched_init(ops, prox, b, lg, g0)
+    o, feas_o = _oracle_block(ops, prox, b, lg, g0, st, active, maxit,
+                              steps)
+    f, feas_f = fused_check_block(a, at, b, lg, g0, reg, st, active, maxit,
+                                  prox=prox_name, steps=steps,
+                                  interpret=True)
+    _assert_state_close(f, o, prox_name)
+    np.testing.assert_allclose(np.asarray(feas_f), np.asarray(feas_o),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_block_mid_block_maxit_freeze():
+    """A slot whose max_iterations falls mid-block freezes at exactly that
+    iteration inside the fused loop — not at the block boundary."""
+    B, m, n, k, steps = 3, 64, 32, 4, 5
+    a, at, ops = _stacked("ell", B, m, n, k)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((B, m)), jnp.float32)
+    lg = jnp.full((B,), 50.0, jnp.float32)
+    g0 = jnp.full((B,), 10.0, jnp.float32)
+    prox = get_prox("l1", reg=0.05)
+    active = jnp.array([True, True, False])
+    maxit = jnp.array([100, 7, 100], jnp.int32)     # slot 1 caps mid-block
+    st = batched_init(ops, prox, b, lg, g0)
+    for _ in range(4):                              # slot 1 enters at k=4
+        st = batched_step(ops, prox, b, lg, g0, st,
+                          mask=active & (st.k < maxit))
+    o, _ = _oracle_block(ops, prox, b, lg, g0, st, active, maxit, steps)
+    f, _ = fused_check_block(a, at, b, lg, g0, 0.05, st, active, maxit,
+                             prox="l1", steps=steps, interpret=True)
+    _assert_state_close(f, o, "maxit-freeze")
+    assert int(f.k[1]) == 7                         # 3 of 5 steps taken
+
+
+@pytest.mark.parametrize("m,n,k,bm,bn,brows",
+                         [(64, 32, 4, 8, 16, 4), (300, 70, 5, 8, 16, 8),
+                          (128, 128, 8, 16, 64, 3)])
+def test_batched_bcsr_spmv_batch_grid(m, n, k, bm, bn, brows):
+    """The batch-grid stacked-BCSR kernel == the reference stacked matvec
+    AND the per-slot kernel it replaced (vmap-over-pallas_call fallback),
+    including a block_brows that does not divide nbr (padding path)."""
+    bs = [coo_to_bcsr(random_coo(m, n, k, seed=20 + i), bm=bm, bn=bn)
+          for i in range(3)]
+    a = stack_bcsrs(_pad_bcsrs(bs), m=m, n=n)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((3, n)), jnp.float32)
+    y = batched_bcsr_spmv(a, x, block_brows=brows, interpret=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(stacked_bcsr_matvec(a, x)),
+                               rtol=1e-5, atol=1e-5)
+    pad_r = (-a.nbr) % brows
+
+    def one_slot(v, bc, xs):
+        v = jnp.pad(v, ((0, pad_r), (0, 0), (0, 0), (0, 0)))
+        bc = jnp.pad(bc, ((0, pad_r), (0, 0)))
+        xp = jnp.pad(xs, (0, a.nbc * a.bn - xs.shape[0]))
+        y1 = bcsr_spmv_pallas(v, bc, xp.reshape(a.nbc, a.bn),
+                              block_brows=brows, interpret=True)
+        return y1.reshape(-1)[:a.m]
+
+    y_vmap = jax.vmap(one_slot)(a.vals, a.bcols, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_vmap),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched_solve_tol_fused_matches_unfused():
+    """The fused-body driver (block_fn owns the whole inner block) lands
+    on the same iterates/iteration counts as batched_solve_tol."""
+    B, m, n, k, tol, ce = 3, 64, 32, 4, 1e-2, 8
+    a, at, ops = _stacked("ell", B, m, n, k, seed0=30)
+    rng = np.random.default_rng(3)
+    b = jnp.asarray(rng.standard_normal((B, m)), jnp.float32)
+    lg = jnp.asarray([float(np.sum(np.square(
+        np.asarray(random_coo(m, n, k, seed=30 + i).vals))))
+        for i in range(B)], jnp.float32)
+    g0 = jnp.full((B,), 100.0, jnp.float32)
+    reg = 0.1
+    prox = get_prox("l1", reg=reg)
+    ref = batched_solve_tol(ops, prox, b, lg, g0, max_iterations=500,
+                            tol=tol, check_every=ce)
+    active = jnp.ones((B,), bool)
+    maxit = jnp.full((B,), 500, jnp.int32)
+
+    def block_fn(state, mask):
+        return fused_check_block(a, at, b, lg, g0, reg, state, mask, maxit,
+                                 prox="l1", steps=ce, interpret=True)
+
+    fused = batched_solve_tol_fused(ops, prox, b, lg, g0, block_fn,
+                                    max_iterations=500, tol=tol)
+    np.testing.assert_array_equal(np.asarray(fused.k), np.asarray(ref.k))
+    np.testing.assert_allclose(np.asarray(fused.xbar),
+                               np.asarray(ref.xbar), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(batched_feasibility(ops, b, fused)),
+        np.asarray(batched_feasibility(ops, b, ref)),
+        rtol=1e-5, atol=1e-5)
