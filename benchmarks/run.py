@@ -25,6 +25,14 @@
            sharded buckets, swept over the ``--format`` axis (ell gather
            bodies vs tiled-BCSR MXU bodies) with the chosen bucket body
            and modeled operand bytes recorded per point
+  open_loop_serving  tail latency of the OPEN-LOOP service layer
+           (serve/frontend.py): seeded Poisson arrivals drive the engine
+           at >= 3 offered loads (under / near / over the engine's
+           closed-loop capacity); per load p50/p99 arrive-to-done latency
+           and goodput-under-SLO land in open_loop_serving.json.  The
+           closed-loop solver_serving rps says what the engine can do;
+           this says what callers experience when work arrives on its own
+           clock (``--quick`` shrinks the sweep for CI smoke)
   api_overhead  the declarative facade (repro.api Problem -> plan ->
            Result) vs the raw kernel layer on identical work; asserts the
            planner + Result assembly cost <5%
@@ -33,8 +41,11 @@
            (slot width, check_every) -> autotune.json, consulted by the
            format selector via REPRO_AUTOTUNE_TABLE
 
-Usage: ``python benchmarks/run.py [mode ...] [--format ell|bcsr|both]``
-(default: all modes, both formats).
+Usage: ``python benchmarks/run.py [mode ...] [--format ell|bcsr|both]
+[--seed N] [--quick] [--arrival-rate R ...] [--slo S] [--deadline D]``
+(default: all modes, both formats).  ``--seed`` threads one base seed
+through every request mix and arrival stream, so serving runs are
+bit-reproducible run-to-run.
 Prints ``name,us_per_call,derived`` CSV; details land in
 experiments/bench/*.json (schema documented in benchmarks/README.md).
 """
@@ -308,7 +319,7 @@ def network_per_strategy():
     return out
 
 
-def solver_serving(check_every=None, fused=None):
+def solver_serving(check_every=None, fused=None, seed=0):
     """Throughput of the batched solver serving engine vs sequential solves
     over one ragged request stream (3 shape families x 2 regularizers).
 
@@ -343,20 +354,24 @@ def solver_serving(check_every=None, fused=None):
     num, slots, tol = 24, 8, 1e-2
     check_every, ce_reason = decide_check_every(check_every)
 
+    # base seed offsets keep the warm and measured mixes distinct while
+    # the whole run stays bit-reproducible per --seed
+    warm_seed, measure_seed = seed + 10, seed + 11
+
     def requests(seed):
         return [p.to_request(uid=i, tol=tol, max_iterations=4000)
                 for i, p in enumerate(make_problems(num, seed=seed))]
 
     eng = create_engine("solver", slots=slots, fmt="ell", backend="jnp",
                         check_every=check_every, fused=fused)
-    for r in requests(seed=10):                        # warm: compile buckets
+    for r in requests(seed=warm_seed):                 # warm: compile buckets
         eng.submit(r)
     eng.run()
     warm_phase = dict(eng.phase_s)
     eng.stats = {"steps": 0, "iterations": 0, "admitted": 0}
     eng.phase_s = {k: 0.0 for k in eng.phase_s}
     t0 = _time.perf_counter()
-    for r in requests(seed=11):
+    for r in requests(seed=measure_seed):
         eng.submit(r)
     done = eng.run()
     dt_eng = _time.perf_counter() - t0
@@ -364,7 +379,7 @@ def solver_serving(check_every=None, fused=None):
     assert len(done) == num
 
     t0 = _time.perf_counter()
-    solve_sequentially(make_problems(num, seed=11), tol=tol,
+    solve_sequentially(make_problems(num, seed=measure_seed), tol=tol,
                        check_every=check_every)
     dt_seq = _time.perf_counter() - t0
 
@@ -389,13 +404,14 @@ def solver_serving(check_every=None, fused=None):
                 e.vals, e.cols, et.vals, et.cols, e.n, et.n, r.b, r.lg,
                 r.gamma0, r.reg))
 
-    run_jit_seq(requests(seed=10))                             # warm
+    run_jit_seq(requests(seed=warm_seed))                      # warm
     t0 = _time.perf_counter()
-    run_jit_seq(requests(seed=11))
+    run_jit_seq(requests(seed=measure_seed))
     dt_jit = _time.perf_counter() - t0
 
     rec = dict(
-        requests=num, slots=slots, tol=tol, check_every=check_every,
+        requests=num, slots=slots, tol=tol, seed=seed,
+        check_every=check_every,
         check_every_reason=ce_reason, fused=eng.fused,
         buckets=len(eng.buckets),
         engine_s=dt_eng, sequential_s=dt_seq, sequential_jit_s=dt_jit,
@@ -434,7 +450,7 @@ NUM, SLOTS, TOL, CHECK = %NUM%, %SLOTS%, 1e-2, 16
 SHARD_ABOVE = %SHARD_ABOVE%
 
 def requests():
-    probs = make_problems(NUM, seed=21, big_every=NUM,
+    probs = make_problems(NUM, seed=%SEED%, big_every=NUM,
                           big_shape=(8192, 512),
                           shapes=[(96, 24), (64, 16), (120, 30)])
     return [p.to_request(uid=i, tol=TOL, max_iterations=4000)
@@ -467,7 +483,7 @@ print(json.dumps({"dt": dt, "rps": NUM / dt,
 """
 
 
-def sharded_serving(formats=("ell", "bcsr")):
+def sharded_serving(formats=("ell", "bcsr"), seed=0):
     """Serving-engine throughput vs device count on one mixed workload:
     ragged small requests (replicated buckets — pinned round-robin or
     slot-axis sharded by queue depth) plus ONE oversized request above
@@ -491,7 +507,7 @@ def sharded_serving(formats=("ell", "bcsr")):
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     out = {"requests": num, "slots": slots, "big_shape": [8192, 512],
-           "shard_above": shard_above, "formats": {}}
+           "shard_above": shard_above, "seed": seed, "formats": {}}
     for fmt in formats:
         devs = (1, 2, 4, 8) if fmt == "ell" else (1, 8)
         by_dev = {}
@@ -500,6 +516,7 @@ def sharded_serving(formats=("ell", "bcsr")):
                     .replace("%DEV%", str(dev)).replace("%NUM%", str(num))
                     .replace("%SLOTS%", str(slots))
                     .replace("%SHARD_ABOVE%", str(shard_above))
+                    .replace("%SEED%", str(seed + 21))
                     .replace("%FMT%", fmt))
             p = subprocess.run([sys.executable, "-c", code], env=env,
                                capture_output=True, text=True, timeout=900)
@@ -527,6 +544,69 @@ def sharded_serving(formats=("ell", "bcsr")):
     with open(os.path.join(OUT_DIR, "sharded_serving.json"), "w") as f:
         json.dump(out, f, indent=1, default=float)
     return out
+
+
+def open_loop_serving(seed=0, quick=False, arrival_rates=None, slo=None,
+                      deadline=None):
+    """Tail latency of the open-loop service layer: a seeded Poisson
+    stream drives the engine through ``serve/frontend.py`` at >= 3
+    offered loads — under, near, and over the engine's closed-loop
+    capacity (solver_serving measured ~220 rps on this container) — on a
+    WallClock (real compute, idle gaps skipped, never slept).  Arrival
+    TIMES are fixed per (seed, rate), independent of machine speed, so
+    the offered schedule is bit-reproducible; per load the report records
+    p50/p99 arrive-to-done latency, goodput-under-SLO (completions within
+    ``slo`` seconds of arrival per second of serving time), queue wait,
+    and the front-end's phase mirror of the engine's tick breakdown.
+    ``--deadline`` adds a relative deadline to every request, so the
+    over-saturated points also exercise expiry (reclaimed slots) instead
+    of unbounded queueing.  Emits experiments/bench/open_loop_serving.json
+    (schema in benchmarks/README.md); ``--quick`` shrinks the stream for
+    the CI smoke."""
+    from repro.launch.solver_serve import make_problems
+    from repro.serve import (OpenLoopFrontend, WallClock, create_engine,
+                             poisson_arrivals)
+
+    num = 8 if quick else 24
+    slots, tol = 8, 1e-2
+    slo = 0.25 if slo is None else slo
+    # fixed offered loads (NOT calibrated per machine — calibration would
+    # change arrival times run-to-run): under / near / over capacity
+    rates = tuple(arrival_rates) if arrival_rates else (60.0, 240.0, 960.0)
+
+    def requests(seed):
+        return [p.to_request(uid=i, tol=tol, max_iterations=4000)
+                for i, p in enumerate(make_problems(num, seed=seed))]
+
+    eng = create_engine("solver", slots=slots, fmt="ell", backend="jnp")
+    for r in requests(seed + 10):          # warm: AOT-compile the buckets
+        eng.submit(r)
+    eng.run()
+
+    loads = []
+    for i, rate in enumerate(rates):
+        arr = poisson_arrivals(requests(seed + 11), rate=rate,
+                               seed=seed + i, deadline=deadline)
+        fe = OpenLoopFrontend(eng, arr, clock=WallClock())
+        rep = fe.run(slo=slo)
+        rep["offered_rate"] = rate
+        loads.append(rep)
+        p50 = rep["p50_latency_s"]
+        p99 = rep["p99_latency_s"]
+        n_rej = rep["rejected_backpressure"] + rep["rejected_admission"]
+        emit(f"open_loop_serving/rate{rate:g}",
+             (p50 or 0.0) * 1e6,
+             f"p99_ms={(p99 or 0) * 1e3:.1f};"
+             f"goodput_rps={rep['goodput_rps']:.1f};"
+             f"completed={rep['completed']};expired={rep['expired']};"
+             f"rejected={n_rej}")
+    rec = dict(requests=num, slots=slots, tol=tol, seed=seed,
+               slo_s=slo, deadline_s=deadline, quick=bool(quick),
+               arrival="poisson", rates=list(rates), loads=loads)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "open_loop_serving.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
 
 
 def api_overhead():
@@ -638,6 +718,7 @@ MODES = {
     "table1": table1_datasets,
     "spmv_formats": spmv_formats,
     "solver_serving": solver_serving,
+    "open_loop_serving": open_loop_serving,
     "autotune": autotune_tables,
     "sharded_serving": sharded_serving,
     "api_overhead": api_overhead,
@@ -668,6 +749,24 @@ def main(argv=None) -> None:
                     help="solver_serving: force one-kernel fused check "
                          "blocks (default: auto — fused iff "
                          "backend=pallas)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed threaded through every serving "
+                         "request mix and arrival stream (bit-"
+                         "reproducible runs)")
+    ap.add_argument("--quick", action="store_true",
+                    help="open_loop_serving: shrink the stream for a "
+                         "fast CI smoke")
+    ap.add_argument("--arrival-rate", type=float, action="append",
+                    default=None, metavar="RPS",
+                    help="open_loop_serving offered load in req/s "
+                         "(repeatable; default 60/240/960)")
+    ap.add_argument("--slo", type=float, default=None, metavar="S",
+                    help="open_loop_serving latency SLO in seconds for "
+                         "the goodput metric (default 0.25)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="open_loop_serving per-request relative "
+                         "deadline in seconds (default: none — requests "
+                         "never expire)")
     args = ap.parse_args(argv)
     names = list(args.modes) or list(MODES)
     unknown = [n for n in names if n not in MODES]
@@ -679,10 +778,17 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for name in names:
         if name == "sharded_serving":
-            results[name] = sharded_serving(formats=formats)
+            results[name] = sharded_serving(formats=formats,
+                                            seed=args.seed)
         elif name == "solver_serving":
             results[name] = solver_serving(check_every=args.check_every,
-                                           fused=args.fused)
+                                           fused=args.fused,
+                                           seed=args.seed)
+        elif name == "open_loop_serving":
+            results[name] = open_loop_serving(
+                seed=args.seed, quick=args.quick,
+                arrival_rates=args.arrival_rate, slo=args.slo,
+                deadline=args.deadline)
         else:
             results[name] = MODES[name]()
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:

@@ -16,7 +16,15 @@ threshold (here shrunk with ``--shard-above``) is partitioned mesh-wide.
 The flag must be processed before jax initialises, hence the argv peek
 ahead of the repro imports.
 
+``--arrival-rate R`` replays the same fleet OPEN-LOOP: seeded Poisson
+arrivals at R req/s through ``repro.serve.OpenLoopFrontend`` (bounded
+wait queue, priority-aware admission, planner-reasoned backpressure),
+with ``--deadline`` bounding each tenant's patience and ``--slo`` setting
+the goodput threshold of the final latency report.
+
     PYTHONPATH=src python examples/solver_service.py [--devices 4]
+    PYTHONPATH=src python examples/solver_service.py \
+        --arrival-rate 50 --deadline 2.0 --slo 0.5
 """
 import argparse
 
@@ -27,6 +35,15 @@ def _parse_args():
     ap.add_argument("--shard-above", type=int, default=None)
     ap.add_argument("--fmt", default="ell", choices=("ell", "bcsr"),
                     help="bucket storage/kernel format (bcsr = MXU path)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    metavar="RPS",
+                    help="also run the fleet open-loop at this offered "
+                         "Poisson rate (req/s)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="open-loop relative deadline per request "
+                         "(seconds after arrival)")
+    ap.add_argument("--slo", type=float, default=None, metavar="S",
+                    help="open-loop latency SLO for the goodput report")
     return ap.parse_known_args()[0]
 
 
@@ -90,6 +107,24 @@ def main():
               f"{eng.bucket_slot_bytes(key)}B/slot) "
               f"on {len(eng.devices)} device(s)")
     eng.run()
+
+    # open-loop replay: the same tenants arriving on their own clock
+    if ARGS.arrival_rate is not None:
+        from repro.serve import OpenLoopFrontend, WallClock, poisson_arrivals
+
+        reqs = [p.to_request(uid=i, tol=1e-2, max_iterations=4000)
+                for i, p in enumerate(make_problems())]
+        fe = OpenLoopFrontend(
+            eng, poisson_arrivals(reqs, rate=ARGS.arrival_rate, seed=0,
+                                  deadline=ARGS.deadline),
+            clock=WallClock())
+        rep = fe.run(slo=ARGS.slo)
+        p50, p99 = rep["p50_latency_s"], rep["p99_latency_s"]
+        print(f"\nopen-loop @{ARGS.arrival_rate:g} req/s: "
+              f"{rep['completed']}/{rep['offered']} completed, "
+              f"{rep['expired']} expired, p50={(p50 or 0)*1e3:.1f}ms "
+              f"p99={(p99 or 0)*1e3:.1f}ms "
+              f"goodput={rep['goodput_rps']:.1f} req/s")
 
     # the engine's contract: same iterates as a standalone single plan
     r0 = results[0]

@@ -15,9 +15,18 @@ mesh-wide sharded buckets.  Device count locks at jax initialisation, so
 the flag must be handled before anything imports jax — which is why this
 module's repro imports live inside the functions.
 
+With ``--arrival-rate`` the stream runs OPEN-LOOP instead of being
+submitted all at once: seeded Poisson arrivals drive the engine through
+``repro.serve.OpenLoopFrontend`` (bounded wait queue, priority admission,
+planner-reasoned backpressure), ``--deadline`` gives every request a
+relative latency bound past which its slot is reclaimed, and ``--slo``
+sets the goodput threshold of the final report.
+
   PYTHONPATH=src python -m repro.launch.solver_serve --requests 16 \
       --slots 8 --fmt ell --backend jnp --tol 1e-2 --compare-sequential \
       --devices 4 --shard-above 2000
+  PYTHONPATH=src python -m repro.launch.solver_serve --requests 32 \
+      --arrival-rate 100 --deadline 2.0 --slo 0.25 --seed 7
 """
 from __future__ import annotations
 
@@ -64,6 +73,43 @@ def solve_sequentially(probs, tol: float = 1e-2,
             for p in probs]
 
 
+def _serve_open_loop(eng, reqs, args):
+    """Open-loop mode: drain a seeded Poisson arrival stream through the
+    front-end on a WallClock (real latencies, idle gaps skipped) and
+    print the per-request timeline plus the p50/p99 + goodput report."""
+    from repro.serve import OpenLoopFrontend, WallClock, poisson_arrivals
+
+    arrivals = poisson_arrivals(reqs, rate=args.arrival_rate,
+                                seed=args.seed, deadline=args.deadline)
+    fe = OpenLoopFrontend(eng, arrivals, clock=WallClock(),
+                          queue_limit=args.queue_limit,
+                          admission=("strict" if args.strict_admission
+                                     else "auto"))
+    rep = fe.run(slo=args.slo)
+    for r in sorted(fe.completed, key=lambda r: r.uid):
+        tl = r.timeline
+        print(f"[solver-serve] req {r.uid}: k={r.iterations} "
+              f"queue={tl['queue_s']*1e3:.1f}ms "
+              f"latency={tl['latency_s']*1e3:.1f}ms ({tl['admission']})")
+    for r in sorted(fe.expired, key=lambda r: r.uid):
+        print(f"[solver-serve] req {r.uid}: EXPIRED after "
+              f"{r.timeline['latency_s']*1e3:.1f}ms")
+    for r in sorted(fe.rejected, key=lambda r: r.uid):
+        print(f"[solver-serve] req {r.uid}: REJECTED ({r.reject_reason})")
+    p50 = rep["p50_latency_s"]
+    p99 = rep["p99_latency_s"]
+    print(f"[solver-serve] open-loop @{args.arrival_rate:g} req/s: "
+          f"{rep['completed']}/{rep['offered']} completed, "
+          f"{rep['expired']} expired, "
+          f"{rep['rejected_backpressure'] + rep['rejected_admission']} "
+          f"rejected in {rep['elapsed_s']:.2f}s; "
+          f"p50={(p50 or 0)*1e3:.1f}ms p99={(p99 or 0)*1e3:.1f}ms "
+          f"goodput={rep['goodput_rps']:.1f} req/s"
+          + (f" (SLO {args.slo:g}s: {rep['met_slo']} met)"
+             if args.slo is not None else ""))
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -97,6 +143,28 @@ def main(argv=None):
                     help="resident operand-byte capacity per device "
                          "(bytes; buckets admit against it via the "
                          "planner's cost model)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    metavar="RPS",
+                    help="serve OPEN-LOOP: seeded Poisson arrivals at "
+                         "this offered rate instead of submitting the "
+                         "whole stream up front")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="open-loop relative deadline per request "
+                         "(seconds after arrival; overdue requests are "
+                         "expired and their slots reclaimed)")
+    ap.add_argument("--slo", type=float, default=None, metavar="S",
+                    help="open-loop latency SLO in seconds for the "
+                         "goodput summary (default: no SLO — every "
+                         "completion counts)")
+    ap.add_argument("--queue-limit", type=int, default=64,
+                    help="open-loop wait-queue capacity; arrivals "
+                         "beyond it are rejected (backpressure)")
+    ap.add_argument("--strict-admission", action="store_true",
+                    help="open-loop: reject work the planner would only "
+                         "serve streamed instead of admitting it")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed for the request mix and the arrival "
+                         "stream (bit-reproducible runs)")
     args = ap.parse_args(argv)
 
     from repro.launch.devices import force_host_devices
@@ -104,7 +172,8 @@ def main(argv=None):
 
     from repro.serve import create_engine
 
-    probs = make_problems(args.requests, big_every=args.big_every)
+    probs = make_problems(args.requests, seed=args.seed,
+                          big_every=args.big_every)
     eng = create_engine("solver", slots=args.slots, fmt=args.fmt,
                         backend=args.backend, check_every=args.check_every,
                         devices=args.devices, shard_above=args.shard_above,
@@ -112,6 +181,8 @@ def main(argv=None):
                         device_budget=args.device_budget, fused=args.fused)
     reqs = [p.to_request(uid=i, tol=args.tol, max_iterations=4000)
             for i, p in enumerate(probs)]
+    if args.arrival_rate is not None:
+        return _serve_open_loop(eng, reqs, args)
     for r in reqs:
         eng.submit(r)
     t0 = time.time()

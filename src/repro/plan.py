@@ -40,8 +40,9 @@ from typing import Any, Optional
 import numpy as np
 
 __all__ = ["ExecutionPlan", "Result", "SolveSpec", "bucket_operand_bytes",
-           "decide_bucket_body", "decide_check_every", "decide_placement",
-           "plan", "sharded_bucket_bytes", "sharding_ndev"]
+           "decide_admission", "decide_bucket_body", "decide_check_every",
+           "decide_placement", "plan", "sharded_bucket_bytes",
+           "sharding_ndev"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -629,6 +630,74 @@ def decide_placement(m: int, n: int, nnz: Optional[int], n_devices: int,
         f"round-robin over {n_devices} devices")
 
 
+def decide_admission(m: int, n: int, nnz: Optional[int], n_devices: int,
+                     slot_bytes: Optional[int] = None,
+                     budget_left: Optional[int] = None,
+                     shard_above: Optional[int] = None,
+                     allow_streaming: bool = True) -> tuple[str, str]:
+    """The serving-admission decision: (admission, reason) with admission
+    in {"resident", "streamed", "rejected"}.
+
+    Where ``decide_placement`` answers *where* a problem lands on the
+    mesh, this answers *whether taking it is a good idea* — the verdict
+    the open-loop front-end enforces before a request ever reaches the
+    engine, and the reason every rejection carries.  Historically the
+    engine silently spilled over-budget work to streamed (per-tick
+    re-uploaded) operands; this rule makes that an explicit, reasoned
+    decision with a refusal path:
+
+    resident   operands stay device-resident across ticks (fits one
+               device, or shards over a mesh whose floor-1 fairness
+               always finds it a slot).
+    streamed   the work can only be served out-of-core — over the
+               per-device stored-entry capacity on a single device, or a
+               byte budget (``slot_bytes`` vs ``budget_left``, the
+               engine's live numbers) too saturated to hold one slot —
+               and ``allow_streaming`` permits paying per-tick re-upload
+               traffic for it.
+    rejected   the same conditions with ``allow_streaming=False``: the
+               caller would rather shed load (backpressure) than degrade
+               every tenant with streamed-operand ticks.
+
+    Shared between ``plan()`` (recorded as the ``admission`` reason, with
+    budget numbers unknown) and ``SolverEngine.admission_for`` (which
+    supplies its live ``slot_bytes``/``budget_left``), so the front-end
+    enforces exactly the rule the plan explains.
+    """
+    size = int(nnz) if nnz is not None else int(m) * int(n)
+    limit = _shard_threshold(shard_above)
+    if n_devices > 1 and size >= limit:
+        return "resident", (
+            f"{size} stored entries >= per-device threshold {limit}: "
+            f"mesh-wide sharded bucket, shards stay device-resident "
+            f"(floor-1 slot fairness always admits)")
+    if n_devices <= 1 and size >= limit:
+        if allow_streaming:
+            return "streamed", (
+                f"{size} stored entries exceed the single device's "
+                f"{limit} capacity: operands re-upload per check block")
+        return "rejected", (
+            f"{size} stored entries exceed the single device's {limit} "
+            f"capacity and streaming is disallowed: admitting it would "
+            f"pay per-tick operand re-uploads")
+    if slot_bytes is not None and budget_left is not None \
+            and slot_bytes > budget_left:
+        if allow_streaming:
+            return "streamed", (
+                f"byte budget saturated: one slot costs {slot_bytes} "
+                f"resident operand bytes but only {max(0, budget_left)} "
+                f"remain — served with per-tick re-uploads")
+        return "rejected", (
+            f"byte budget saturated: one slot costs {slot_bytes} resident "
+            f"operand bytes but only {max(0, budget_left)} remain, and "
+            f"streaming is disallowed")
+    return "resident", (
+        f"{size} stored entries fit one device's {limit} capacity"
+        + ("" if slot_bytes is None else
+           f"; {slot_bytes} slot bytes within the remaining "
+           f"{budget_left} byte budget"))
+
+
 def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
     """Resolve caller intent into an ExecutionPlan (no device work yet
     beyond Lg estimation when values are unavailable)."""
@@ -720,11 +789,18 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
     # lg -------------------------------------------------------------------
     lg, reasons["lg"] = _choose_lg(problem, spec)
 
-    # serving cost model: bucket body + operand bytes ------------------------
+    # serving cost model: bucket body + operand bytes + admission ------------
     if problem.coo is not None:
         import jax
         reasons.update(_cost_reasons(problem, fmt, placement,
                                      len(jax.devices()), spec.shard_above))
+        adm, why_a = decide_admission(problem.m, problem.n, problem.nnz,
+                                      len(jax.devices()),
+                                      shard_above=spec.shard_above)
+        reasons["admission"] = (
+            f"{adm}: {why_a} (byte-budget admission is re-checked at "
+            f"serve time against the engine's live device_budget — "
+            f"SolverEngine.admission_for)")
 
     return ExecutionPlan(problem=problem, spec=spec, execution=execution,
                          algorithm=algorithm, format=fmt, backend=backend,

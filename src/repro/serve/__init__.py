@@ -7,14 +7,20 @@
 # per-slot early exit).  ``Engine`` was the token engine's old name and is
 # kept as a deprecated alias.
 from repro.serve.engine import Request, TokenEngine
+from repro.serve.frontend import (
+    Arrival, OpenLoopFrontend, VirtualClock, WallClock, poisson_arrivals,
+    trace_arrivals,
+)
 from repro.serve.solver_engine import (
     BATCHED_PROX_FAMILIES, BucketKey, ShardedBucketKey, SolveRequest,
     SolverEngine, batched_prox,
 )
 
-__all__ = ["BATCHED_PROX_FAMILIES", "BucketKey", "Request",
-           "ShardedBucketKey", "SolveRequest", "SolverEngine", "TokenEngine",
-           "batched_prox", "create_engine"]
+__all__ = ["Arrival", "BATCHED_PROX_FAMILIES", "BucketKey",
+           "OpenLoopFrontend", "Request", "ShardedBucketKey", "SolveRequest",
+           "SolverEngine", "TokenEngine", "VirtualClock", "WallClock",
+           "batched_prox", "create_engine", "poisson_arrivals",
+           "trace_arrivals"]
 
 _ENGINES = {"solver": SolverEngine, "token": TokenEngine}
 

@@ -1,0 +1,436 @@
+"""Open-loop serving front-end: arrivals on their own clock.
+
+The engine next door (``serve/solver_engine.py``) is tick-driven and has
+only ever been benchmarked closed-loop — submit a batch, step until
+drained — which is the one workload a production deployment never sees.
+Real traffic is OPEN-LOOP: requests arrive on their own schedule whether
+or not the system is keeping up, each one has a deadline its caller cares
+about, and when the system saturates the only honest answers are
+backpressure and rejection, not an unbounded queue.  This module is that
+service layer:
+
+  1. **Arrival process**: a seeded Poisson stream (``poisson_arrivals``,
+     exponential interarrivals at a given offered rate — bit-reproducible
+     per seed) or a recorded trace (``trace_arrivals``).  Arrivals are
+     data, not threads: each is (absolute time, request).
+  2. **Injectable clock**: the front-end never sleeps and never reads the
+     wall unless asked.  ``VirtualClock`` advances only when the loop
+     advances it — the whole layer becomes a deterministic discrete-event
+     simulation (every test in ``tests/test_open_loop.py`` runs on it) —
+     while ``WallClock`` reads ``time.perf_counter`` for real
+     measurements (``benchmarks/run.py open_loop_serving``).  Idle gaps
+     are *skipped*, never slept through, on both clocks.
+  3. **Bounded priority wait queue**: due arrivals land in a wait queue
+     of capacity ``queue_limit``; an arrival that finds it full is
+     REJECTED on the spot (backpressure — the caller finds out now, not
+     after timing out).  Admission out of the queue is priority-first
+     (FIFO within a priority class), so a high-priority arrival overtakes
+     earlier low-priority traffic.
+  4. **Planner-reasoned admission**: before a request reaches the engine
+     the planner's admission rule (``repro.plan.decide_admission``, via
+     ``SolverEngine.admission_for`` which supplies the live byte-budget
+     numbers) decides resident / streamed / rejected.  Under the default
+     ``admission="auto"`` over-budget work is still served streamed —
+     but now as an explicit, reasoned decision stamped on the request;
+     under ``admission="strict"`` it is rejected with that reason
+     instead (shed load rather than degrade every tenant with per-tick
+     operand re-uploads).
+  5. **Deadline expiry**: at every tick boundary the front-end expires
+     overdue requests — waiting ones are dropped before touching a
+     device, in-flight ones get their slot reclaimed that same tick
+     (``SolverEngine.expire_overdue``), so a burst of doomed work frees
+     capacity for requests that can still make their deadlines.
+  6. **Per-request latency accounting**: every completed request carries
+     a ``timeline`` — arrive/admit/done stamps on the serving clock
+     (queue wait and service time fall out), plus an admit / compute /
+     harvest attribution layered on the engine's per-phase ``phase_s``
+     tick breakdown.  ``report()`` aggregates p50/p99 latency and
+     goodput-under-SLO (completed within ``slo`` seconds of arrival, per
+     second of serving time) — the numbers
+     ``experiments/bench/open_loop_serving.json`` records per offered
+     load.
+
+The whole layer is synchronous and single-threaded: ``step()`` is one
+tick (arrivals -> expiry -> admission -> engine tick -> harvest) and
+``run()`` loops it until the arrival stream, wait queue and engine are
+all drained.  Determinism is the point — with a ``VirtualClock`` and a
+seeded arrival stream, two runs are bit-identical.
+
+>>> import numpy as np
+>>> from repro.serve.frontend import (OpenLoopFrontend, VirtualClock,
+...                                   poisson_arrivals)
+>>> from repro.serve.solver_engine import SolveRequest, SolverEngine
+>>> from repro.sparse.formats import COO
+>>> def req(uid):
+...     eye = COO(rows=np.arange(8, dtype=np.int32),
+...               cols=np.arange(8, dtype=np.int32),
+...               vals=np.ones(8, np.float32), m=8, n=8)
+...     return SolveRequest(uid=uid, coo=eye, b=np.ones(8, np.float32),
+...                         prox="zero", gamma0=10.0, tol=1e-3)
+>>> fe = OpenLoopFrontend(SolverEngine(slots=2, check_every=8),
+...                       poisson_arrivals([req(0), req(1)], rate=2.0,
+...                                        seed=7),
+...                       clock=VirtualClock())
+>>> rep = fe.run()
+>>> (rep["completed"], rep["rejected_backpressure"],
+...  rep["p50_latency_s"] <= rep["p99_latency_s"])
+(2, 0, True)
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.serve.solver_engine import SolveRequest, SolverEngine
+
+__all__ = ["Arrival", "OpenLoopFrontend", "VirtualClock", "WallClock",
+           "poisson_arrivals", "trace_arrivals"]
+
+
+class VirtualClock:
+    """Deterministic discrete-event clock: ``now()`` moves only when the
+    serve loop calls ``advance``/``skip_to``.  No wall reads, no sleeps —
+    a front-end on this clock is a pure simulation, which is what makes
+    deadline/priority/backpressure behavior unit-testable."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self._t += float(dt)
+
+    def skip_to(self, t: float) -> None:
+        self._t = max(self._t, float(t))
+
+
+class WallClock:
+    """Real serving time (``time.perf_counter``), zeroed at construction.
+    ``advance`` is a no-op — real time advances itself while the engine
+    computes — and ``skip_to`` jumps over idle gaps by offsetting the
+    origin instead of sleeping, so an idle open-loop system costs no wall
+    time to simulate and latency stamps still measure arrival-to-done."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self._skip = 0.0
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0 + self._skip
+
+    def advance(self, dt: float) -> None:
+        pass
+
+    def skip_to(self, t: float) -> None:
+        gap = t - self.now()
+        if gap > 0:
+            self._skip += gap
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One open-loop arrival: ``request`` becomes visible at absolute
+    serving-clock time ``t``."""
+
+    t: float
+    request: SolveRequest
+
+
+def poisson_arrivals(requests, rate: float, seed: int = 0,
+                     t0: float = 0.0,
+                     deadline: Optional[float] = None) -> list[Arrival]:
+    """Open-loop Poisson arrival process: exponential interarrivals at
+    ``rate`` requests/second from a seeded generator, so the stream is
+    bit-reproducible per (requests, rate, seed).  With ``deadline`` set,
+    each request's absolute deadline is its arrival time + ``deadline``
+    seconds (a relative latency bound, the usual SLO shape)."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0 req/s, got {rate}")
+    rng = np.random.default_rng(seed)
+    t = float(t0)
+    out = []
+    for req in requests:
+        t += float(rng.exponential(1.0 / rate))
+        if deadline is not None:
+            req.deadline = t + float(deadline)
+        out.append(Arrival(t=t, request=req))
+    return out
+
+
+def trace_arrivals(times, requests,
+                   deadline: Optional[float] = None) -> list[Arrival]:
+    """A recorded trace: pair absolute arrival ``times`` with requests
+    (sorted by time — a trace replays in order regardless of how it was
+    logged).  Same relative-``deadline`` convention as
+    ``poisson_arrivals``."""
+    times = [float(t) for t in times]
+    if len(times) != len(requests):
+        raise ValueError(f"{len(times)} arrival times for "
+                         f"{len(requests)} requests")
+    out = sorted((t, i) for i, t in enumerate(times))
+    arrivals = []
+    for t, i in out:
+        req = requests[i]
+        if deadline is not None:
+            req.deadline = t + float(deadline)
+        arrivals.append(Arrival(t=t, request=req))
+    return arrivals
+
+
+class OpenLoopFrontend:
+    """Drives a ``SolverEngine`` from an arrival process against an
+    injectable clock — one tick per ``step()``:
+
+        arrivals due -> [bounded wait queue | backpressure-reject]
+        -> expire overdue (waiting dropped, in-flight slots reclaimed)
+        -> admit by priority (planner admission: resident/streamed/reject)
+        -> engine tick (check_every masked steps per bucket)
+        -> harvest (latency stamps from the clock)
+
+    engine:       the solver engine to serve (any configuration — mesh,
+                  budget and format knobs all compose underneath).
+    arrivals:     list of ``Arrival``s (``poisson_arrivals`` /
+                  ``trace_arrivals``), in nondecreasing time order.
+    clock:        ``VirtualClock`` (default — deterministic simulation)
+                  or ``WallClock`` (real measurements); anything with
+                  now/advance/skip_to.
+    queue_limit:  wait-queue capacity; arrivals beyond it are rejected
+                  (``rejected=True``, backpressure) the tick they land.
+    tick_s:       virtual seconds one engine tick costs (VirtualClock
+                  only — a WallClock's ticks cost what they cost).  One
+                  tick is one ``check_every`` block per active bucket,
+                  so this is the simulation's unit of service time.
+    admission:    "auto" (planner verdict; streamed work admitted with
+                  its reason stamped) or "strict" (would-stream work is
+                  rejected — shed load instead of degrading the node).
+    inflight_limit: requests submitted-but-unfinished the front-end will
+                  tolerate before letting the wait queue absorb the rest
+                  (default: the engine's aggregate slot capacity,
+                  slots x devices).  Admission order is decided by the
+                  wait queue's priority heap, so capping in-flight depth
+                  is what makes priority meaningful under overload.
+    """
+
+    def __init__(self, engine: SolverEngine, arrivals, clock=None,
+                 queue_limit: int = 64, tick_s: float = 1.0,
+                 admission: str = "auto",
+                 inflight_limit: Optional[int] = None):
+        if admission not in ("auto", "strict"):
+            raise ValueError(f"admission must be auto|strict, "
+                             f"got {admission!r}")
+        self.engine = engine
+        self.arrivals = sorted(arrivals, key=lambda a: a.t)
+        self.clock = clock if clock is not None else VirtualClock()
+        self.queue_limit = queue_limit
+        self.tick_s = float(tick_s)
+        self.admission = admission
+        self.inflight_limit = (engine.slots * len(engine.devices)
+                               if inflight_limit is None
+                               else int(inflight_limit))
+        if self.inflight_limit < 1:
+            raise ValueError("inflight_limit must be >= 1 — an open loop "
+                             "that can never admit anything only spins")
+        self._next = 0                      # arrival stream cursor
+        self._seq = 0                       # FIFO tie-break within priority
+        self._wait: list = []               # heap of (-priority, seq, req)
+        self._inflight: dict[int, SolveRequest] = {}
+        self.completed: list[SolveRequest] = []
+        self.expired: list[SolveRequest] = []
+        self.rejected: list[SolveRequest] = []
+        self.ticks = 0
+        # front-end mirror of the engine's per-phase accounting, plus the
+        # wait-queue time requests spent before admission
+        self.phase_s = {"queue_s": 0.0, "admit_s": 0.0, "compute_s": 0.0,
+                        "harvest_s": 0.0}
+
+    # -- queue plumbing ----------------------------------------------------
+
+    def _push_wait(self, req: SolveRequest) -> None:
+        heapq.heappush(self._wait, (-req.priority, self._seq, req))
+        self._seq += 1
+
+    def _reject(self, req: SolveRequest, reason: str, now: float) -> None:
+        req.rejected = True
+        req.reject_reason = reason
+        req.timeline = dict(req.timeline or {})
+        req.timeline["t_reject"] = now
+        self.rejected.append(req)
+
+    def _expire(self, req: SolveRequest, now: float) -> None:
+        req.timeline = dict(req.timeline or {})
+        req.timeline["t_expire"] = now
+        tl = req.timeline
+        if "t_admit" not in tl:
+            tl["queue_s"] = now - tl["t_arrive"]
+        tl["latency_s"] = now - tl["t_arrive"]
+        self.expired.append(req)
+
+    # -- the serve loop ----------------------------------------------------
+
+    def _pull_arrivals(self, now: float) -> None:
+        while self._next < len(self.arrivals) \
+                and self.arrivals[self._next].t <= now:
+            arr = self.arrivals[self._next]
+            self._next += 1
+            req = arr.request
+            req.timeline = dict(req.timeline or {})
+            req.timeline["t_arrive"] = arr.t
+            if len(self._wait) >= self.queue_limit:
+                self._reject(req, f"backpressure: wait queue at its "
+                                  f"{self.queue_limit}-request limit", now)
+            else:
+                self._push_wait(req)
+
+    def _expire_overdue(self, now: float) -> None:
+        if self._wait:
+            live = []
+            for item in self._wait:
+                req = item[2]
+                if req.deadline is not None and req.deadline < now:
+                    req.expired = True
+                    self._expire(req, now)
+                else:
+                    live.append(item)
+            if len(live) != len(self._wait):
+                heapq.heapify(live)
+                self._wait = live
+        for req in self.engine.expire_overdue(now):
+            self._inflight.pop(req.uid, None)
+            self._expire(req, now)
+
+    def _admit_from_queue(self, now: float) -> list[SolveRequest]:
+        admitted = []
+        while self._wait and len(self._inflight) < self.inflight_limit:
+            req = self._wait[0][2]
+            decision, reason = self.engine.admission_for(
+                req, allow_streaming=self.admission != "strict")
+            heapq.heappop(self._wait)
+            if decision == "rejected":
+                self._reject(req, reason, now)
+                continue
+            tl = req.timeline
+            tl["t_admit"] = now
+            tl["queue_s"] = now - tl["t_arrive"]
+            tl["admission"] = decision
+            tl["admission_reason"] = reason
+            for k in ("admit_s", "compute_s", "harvest_s"):
+                tl[k] = 0.0
+            self.engine.submit(req)
+            self._inflight[req.uid] = req
+            admitted.append(req)
+        return admitted
+
+    def _attribute_phases(self, deltas: dict, admitted, harvested) -> None:
+        """Layer the engine's per-phase tick breakdown onto requests: the
+        tick's admit+splice cost to this tick's admissions, dispatch (and
+        harvest, when nobody finished) spread over every in-flight
+        request, harvest to the requests it synced out.  Sums over all
+        requests preserve the engine's totals, so per-request accounts
+        and the aggregate ``phase_s`` stay consistent."""
+        admit = deltas["admit_s"] + deltas["splice_s"] + deltas["compile_s"]
+        compute = deltas["dispatch_s"]
+        harvest = deltas["harvest_s"]
+        if not harvested:
+            # nobody finished: the harvest phase was pure verdict-polling
+            # for in-flight work — book it as compute in both views
+            compute += harvest
+            harvest = 0.0
+        self.phase_s["admit_s"] += admit
+        self.phase_s["compute_s"] += compute
+        self.phase_s["harvest_s"] += harvest
+        if admitted:
+            for req in admitted:
+                req.timeline["admit_s"] += admit / len(admitted)
+        inflight = list(self._inflight.values()) + list(harvested)
+        if inflight:
+            for req in inflight:
+                req.timeline["compute_s"] += compute / len(inflight)
+        if harvested:
+            for req in harvested:
+                req.timeline["harvest_s"] += harvest / len(harvested)
+
+    def step(self) -> bool:
+        """One front-end tick; returns False when the arrival stream, the
+        wait queue, and the engine are all drained."""
+        now = self.clock.now()
+        self._pull_arrivals(now)
+        self._expire_overdue(now)
+        admitted = self._admit_from_queue(now)
+        if self._inflight:
+            ph0 = dict(self.engine.phase_s)
+            self.engine.step()
+            self.clock.advance(self.tick_s)
+            self.ticks += 1
+            deltas = {k: self.engine.phase_s[k] - ph0[k] for k in ph0}
+            harvested, self.engine.completed = self.engine.completed, []
+            t_done = self.clock.now()
+            for req in harvested:
+                self._inflight.pop(req.uid, None)
+                tl = req.timeline
+                tl["t_done"] = t_done
+                tl["service_s"] = t_done - tl["t_admit"]
+                tl["latency_s"] = t_done - tl["t_arrive"]
+                self.phase_s["queue_s"] += tl["queue_s"]
+                self.completed.append(req)
+            self._attribute_phases(deltas, admitted, harvested)
+            return True
+        if self._wait:
+            # defensive: nothing running but the queue holds work — advance
+            # so expiry/admission make progress instead of spinning
+            self.clock.advance(self.tick_s)
+            return True
+        if self._next < len(self.arrivals):
+            self.clock.skip_to(self.arrivals[self._next].t)  # idle: jump
+            return True
+        return False
+
+    def run(self, slo: Optional[float] = None) -> dict:
+        """Drain the arrival stream; returns ``report(slo)``."""
+        while self.step():
+            pass
+        return self.report(slo)
+
+    # -- reporting ---------------------------------------------------------
+
+    def report(self, slo: Optional[float] = None) -> dict:
+        """Latency/goodput summary over everything served so far.
+
+        p50/p99 are over COMPLETED requests' arrive-to-done latency.
+        ``goodput_rps`` counts only requests completed within ``slo``
+        seconds of arrival (all completions when slo is None), per second
+        of serving time — the metric that punishes both rejection and
+        lateness, which raw rps cannot see.
+        """
+        lat = sorted(r.timeline["latency_s"] for r in self.completed)
+        elapsed = max(self.clock.now(), 1e-12)
+        met = len(lat) if slo is None else \
+            sum(1 for v in lat if v <= slo)
+        n_bp = sum(1 for r in self.rejected
+                   if r.reject_reason.startswith("backpressure"))
+        return {
+            "offered": len(self.arrivals),
+            "completed": len(self.completed),
+            "expired": len(self.expired),
+            "rejected_backpressure": n_bp,
+            "rejected_admission": len(self.rejected) - n_bp,
+            "elapsed_s": elapsed,
+            "ticks": self.ticks,
+            "p50_latency_s": float(np.percentile(lat, 50)) if lat else None,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else None,
+            "mean_queue_s": (float(np.mean([r.timeline["queue_s"]
+                                            for r in self.completed]))
+                             if self.completed else None),
+            "slo_s": slo,
+            "met_slo": met,
+            "goodput_rps": met / elapsed,
+            "offered_rps": len(self.arrivals) / elapsed,
+            "phase_s": dict(self.phase_s),
+        }

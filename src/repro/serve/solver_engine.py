@@ -74,7 +74,12 @@ Throughput, not latency: a single request finishes no faster than a
 standalone ``solve_tol`` (slightly slower — it rides along until its
 check boundary), but requests/sec scales with slot count and, on a mesh,
 with bucket concurrency and aggregate capacity (``benchmarks/run.py
-solver_serving`` and ``sharded_serving`` measure the ratios).
+solver_serving`` and ``sharded_serving`` measure the ratios).  The
+latency side — open-loop arrivals on their own clock, per-request
+deadlines/priorities, bounded-queue backpressure and byte-budget
+admission control — lives one layer up in ``repro.serve.frontend``; this
+engine stays tick-driven underneath it and contributes ``expire_overdue``
+(slot reclamation) and priority-aware queue pops.
 
 The bucket lifecycle — **admit** (operand slices spliced into the numpy
 masters of the key's bucket) → **place** (pinned / slot-sharded /
@@ -148,6 +153,20 @@ class SolveRequest:
     ``lg`` (= sum_i ||A_i||^2, the paper's init step 1) is computed at
     construction when None.  Results land in x / iterations / feasibility /
     done.
+
+    Open-loop serving fields: ``priority`` orders admission out of wait
+    queues (higher first; FIFO within a priority class — both the
+    engine's per-bucket queues and the front-end's bounded wait queue
+    honor it), and ``deadline`` is an ABSOLUTE time on the serving clock
+    (``repro.serve.frontend``'s injected clock; seconds) past which the
+    request is expired — dropped from queues, or its slot reclaimed
+    mid-flight — instead of completed (``expired`` flips, ``done`` stays
+    False).  ``rejected``/``reject_reason`` record an admission-control
+    verdict (bounded-queue backpressure or a byte-budget rejection from
+    ``repro.plan.decide_admission``); ``timeline`` is the front-end's
+    per-request latency account (arrive/admit/done stamps plus the
+    queue/admit/compute/harvest breakdown layered on the engine's
+    ``phase_s``).
     """
 
     uid: int
@@ -159,11 +178,17 @@ class SolveRequest:
     gamma0: float = 100.0
     tol: float = 1e-3
     max_iterations: int = 10_000
+    priority: int = 0                    # higher admits first
+    deadline: float | None = None        # absolute serving-clock seconds
     # filled by the engine on completion
     x: np.ndarray | None = None          # (n,) final xbar
     iterations: int = 0
     feasibility: float = float("inf")
     done: bool = False
+    expired: bool = False                # deadline passed before completion
+    rejected: bool = False               # admission control turned it away
+    reject_reason: str = ""
+    timeline: dict | None = None         # frontend latency stamps
 
     def __post_init__(self):
         if self.lg is None:    # host-side: no device dispatch per request
@@ -487,6 +512,45 @@ class SolverEngine:
             req.coo.m, req.coo.n, req.coo.nnz, len(self.devices),
             self.shard_above)
         return placement
+
+    def admission_for(self, req: SolveRequest, allow_streaming: bool = True
+                      ) -> tuple[str, str]:
+        """The planner's admission verdict for one request against THIS
+        engine's live byte budget: ("resident" | "streamed" | "rejected",
+        reason) from ``repro.plan.decide_admission`` — the same rule
+        ``plan()`` records as the ``admission`` reason, evaluated here
+        with the budget numbers only the engine knows.  With
+        ``allow_streaming=False`` work that could only be served streamed
+        (over-capacity on one device, or a saturated byte budget) is
+        rejected instead of silently spilling to per-tick re-uploads —
+        the open-loop front-end's backpressure contract."""
+        from repro.plan import decide_admission
+
+        slot_bytes = budget_left = None
+        if self.device_budget is not None and len(self.devices) == 1:
+            placement = self.placement_for(req)
+            key = (self.sharded_bucket_key(req)
+                   if self.mesh is not None and placement == "sharded"
+                   else self.bucket_key(req))
+            bucket = self.buckets.get(key)
+            if bucket is not None:
+                # an existing bucket's slots are already charged: resident
+                # iff the bucket is (a streamed bucket stays streamed)
+                if getattr(bucket, "resident", True):
+                    return "resident", ("existing resident bucket; slot "
+                                        "bytes already charged at creation")
+                if not allow_streaming:
+                    return "rejected", ("existing bucket for this key is "
+                                        "streamed (over the byte budget) "
+                                        "and streaming is disallowed")
+                return "streamed", "existing streamed bucket for this key"
+            slot_bytes = self.bucket_slot_bytes(key)
+            budget_left = self.device_budget - min(
+                self._budget_used.values())
+        return decide_admission(
+            req.coo.m, req.coo.n, req.coo.nnz, len(self.devices),
+            slot_bytes=slot_bytes, budget_left=budget_left,
+            shard_above=self.shard_above, allow_streaming=allow_streaming)
 
     def _ndev_for(self, nnz: int) -> int:
         """Capacity-sized sub-mesh: the fewest devices whose combined
@@ -850,6 +914,21 @@ class SolverEngine:
                     bucket.stream_chunks, 1,
                     int(np.ceil(self.check_every * frac)))
 
+    @staticmethod
+    def _pop_queued(queue: deque) -> SolveRequest:
+        """Next request out of one bucket queue: highest ``priority``
+        first, FIFO within a priority class (a plain popleft when nobody
+        set priorities — the pre-open-loop behavior)."""
+        best = 0
+        for i in range(1, len(queue)):
+            if queue[i].priority > queue[best].priority:
+                best = i
+        if best == 0:
+            return queue.popleft()
+        req = queue[best]
+        del queue[best]
+        return req
+
     def _admit(self, key, bucket) -> np.ndarray:
         queue = self.queues.get(key)
         new = np.zeros((bucket.slots,), bool)
@@ -860,7 +939,7 @@ class SolverEngine:
                 break
             if bucket.active[slot]:
                 continue
-            req = queue.popleft()
+            req = self._pop_queued(queue)
             self._write_slot(key, bucket, slot, req)
             bucket.b[slot, :req.coo.m] = np.asarray(req.b, np.float32)
             bucket.b[slot, req.coo.m:] = 0.0
@@ -1261,6 +1340,42 @@ class SolverEngine:
             pass
         done, self.completed = self.completed, []
         return done
+
+    def expire_overdue(self, now: float) -> list[SolveRequest]:
+        """Expire every queued or in-flight request whose ``deadline`` has
+        passed (deadline < now on the caller's serving clock): queued ones
+        are dropped before ever touching a device, in-flight ones have
+        their slot reclaimed THIS tick — the occupancy mask is cleared, so
+        the very next admission splices a fresh request into the freed
+        slot (masked steps already freeze inactive slots; no device work
+        is spent finishing a result nobody will wait for).  Expired
+        requests come back with ``expired=True`` and ``done=False`` (no
+        iterate is harvested — reading a mid-flight iterate would sync on
+        the in-progress tick).  Called by the open-loop front-end at every
+        tick boundary; harmless on requests without deadlines."""
+        out: list[SolveRequest] = []
+        for queue in self.queues.values():
+            if not queue:
+                continue
+            live = [r for r in queue
+                    if r.deadline is None or r.deadline >= now]
+            if len(live) != len(queue):
+                out.extend(r for r in queue
+                           if r.deadline is not None and r.deadline < now)
+                queue.clear()
+                queue.extend(live)
+        for bucket in self.buckets.values():
+            for slot, req in list(bucket.requests.items()):
+                if req.deadline is not None and req.deadline < now:
+                    bucket.requests.pop(slot)
+                    bucket.active[slot] = False
+                    bucket.active_dev = None
+                    out.append(req)
+        for req in out:
+            req.expired = True
+        if out:
+            self.stats["expired"] = self.stats.get("expired", 0) + len(out)
+        return out
 
     def evict_idle_buckets(self) -> int:
         """Free operand masters + device caches of buckets with no active

@@ -1,0 +1,93 @@
+"""Committed bench artifacts keep their documented schema: the JSON files
+under experiments/bench/ are read by benchmarks/README.md consumers (and
+by later PRs building on their numbers), so key drift or nonsense values
+(negative phase times, p50 > p99) should fail in CI, not in a reader's
+notebook.  Each test skips if its artifact has not been generated —
+running the bench is not a test prerequisite — but the repo commits all
+three, so in CI they all run."""
+import json
+import os
+
+import pytest
+
+BENCH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "bench")
+
+PHASES = ("admit_s", "splice_s", "dispatch_s", "harvest_s", "compile_s")
+
+
+def _load(name):
+    path = os.path.join(BENCH, name)
+    if not os.path.exists(path):
+        pytest.skip(f"{name} not generated (run benchmarks/run.py)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _check_phase_s(phase, wall, what):
+    """phase_s contract: every entry non-negative, total within the wall
+    time it decomposes (phases are disjoint slices of the tick loop)."""
+    for k, v in phase.items():
+        assert v >= 0.0, f"{what}: negative phase {k}={v}"
+    assert sum(phase.values()) <= wall * 1.01 + 1e-6, \
+        f"{what}: phases sum to {sum(phase.values()):.4f}s " \
+        f"> wall {wall:.4f}s"
+
+
+def test_solver_serving_schema():
+    rec = _load("solver_serving.json")
+    for key in ("requests", "slots", "tol", "seed", "check_every",
+                "buckets", "engine_s", "sequential_s", "sequential_jit_s",
+                "rps_engine", "rps_sequential", "rps_sequential_jit",
+                "speedup_vs_sequential", "speedup_vs_sequential_jit",
+                "iterations", "steps", "tick_breakdown",
+                "tick_breakdown_warm"):
+        assert key in rec, key
+    assert set(rec["tick_breakdown"]) == set(PHASES)
+    _check_phase_s(rec["tick_breakdown"], rec["engine_s"],
+                   "solver_serving measured window")
+    assert rec["rps_engine"] > 0 and rec["engine_s"] > 0
+
+
+def test_sharded_serving_schema():
+    rec = _load("sharded_serving.json")
+    for key in ("requests", "slots", "big_shape", "shard_above",
+                "formats", "by_devices", "speedup_8v1"):
+        assert key in rec, key
+    for fmt, frec in rec["formats"].items():
+        assert "by_devices" in frec and "speedup_8v1" in frec, fmt
+        for dev, point in frec["by_devices"].items():
+            for key in ("dt", "rps", "devices", "buckets",
+                        "sharded_admitted"):
+                assert key in point, (fmt, dev, key)
+            assert point["rps"] > 0 and point["dt"] > 0
+
+
+def test_open_loop_serving_schema():
+    rec = _load("open_loop_serving.json")
+    for key in ("requests", "slots", "tol", "seed", "slo_s", "arrival",
+                "rates", "loads"):
+        assert key in rec, key
+    assert len(rec["loads"]) >= 3, "need >= 3 offered-load points"
+    for load in rec["loads"]:
+        for key in ("offered", "completed", "expired",
+                    "rejected_backpressure", "rejected_admission",
+                    "elapsed_s", "ticks", "p50_latency_s",
+                    "p99_latency_s", "slo_s", "met_slo", "goodput_rps",
+                    "offered_rate", "phase_s"):
+            assert key in load, (load.get("offered_rate"), key)
+        served = (load["completed"] + load["expired"]
+                  + load["rejected_backpressure"]
+                  + load["rejected_admission"])
+        assert served == load["offered"], "requests lost by the loop"
+        # percentiles monotone whenever anything completed
+        if load["completed"]:
+            assert load["p50_latency_s"] <= load["p99_latency_s"]
+            assert load["p50_latency_s"] >= 0.0
+        assert 0 <= load["met_slo"] <= load["completed"]
+        assert load["goodput_rps"] >= 0.0
+        # the front-end books engine tick time into admit/compute/harvest
+        # (queue_s is wait time, not wall work — it may overlap ticks)
+        work = {k: v for k, v in load["phase_s"].items() if k != "queue_s"}
+        _check_phase_s(work, load["elapsed_s"],
+                       f"open_loop rate={load['offered_rate']}")

@@ -1,0 +1,274 @@
+"""Open-loop serving as a deterministic discrete-event simulation: every
+test drives ``OpenLoopFrontend`` on a ``VirtualClock`` — no wall-clock
+sleeps anywhere — so deadline expiry, priority ordering, backpressure and
+byte-budget rejection are exact, repeatable assertions rather than timing
+races."""
+import numpy as np
+import pytest
+
+from repro.configs.base import PaperProblemConfig
+from repro.serve import (
+    OpenLoopFrontend, SolveRequest, SolverEngine, VirtualClock, WallClock,
+    poisson_arrivals, trace_arrivals,
+)
+from repro.sparse import make_lasso
+
+
+def _req(uid, m=16, n=8, priority=0, deadline=None, max_iterations=4000):
+    cfg = PaperProblemConfig(name="t", m=m, n=n, nnz=m * 4, reg=0.1)
+    coo, b, _ = make_lasso(cfg, seed=500 + uid)
+    return SolveRequest(uid=uid, coo=coo, b=b, gamma0=1000.0, tol=3e-2,
+                        max_iterations=max_iterations, priority=priority,
+                        deadline=deadline)
+
+
+def _engine(**kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("check_every", 8)
+    kw.setdefault("min_rows", 16)
+    kw.setdefault("min_cols", 8)
+    return SolverEngine(**kw)
+
+
+# -- clocks ------------------------------------------------------------------
+
+def test_virtual_clock_is_inert_until_advanced():
+    clk = VirtualClock(t0=1.0)
+    assert clk.now() == 1.0
+    clk.advance(0.25)
+    clk.skip_to(0.5)            # never backwards
+    assert clk.now() == 1.25
+    clk.skip_to(3.0)
+    assert clk.now() == 3.0
+    with pytest.raises(ValueError, match="backwards"):
+        clk.advance(-1.0)
+
+
+def test_wall_clock_skips_idle_gaps_without_sleeping():
+    import time
+    clk = WallClock()
+    t0 = time.perf_counter()
+    clk.skip_to(clk.now() + 3600.0)     # an hour of idle, instantly
+    assert time.perf_counter() - t0 < 1.0
+    assert clk.now() >= 3600.0
+
+
+# -- arrival processes -------------------------------------------------------
+
+def test_poisson_arrivals_are_seed_deterministic():
+    def stream(seed):
+        return [a.t for a in poisson_arrivals(
+            [_req(i) for i in range(6)], rate=3.0, seed=seed)]
+    assert stream(7) == stream(7)           # bit-identical per seed
+    assert stream(7) != stream(8)
+    ts = stream(7)
+    assert all(b > a for a, b in zip(ts, ts[1:]))
+
+
+def test_poisson_arrivals_stamp_relative_deadlines():
+    arr = poisson_arrivals([_req(0), _req(1)], rate=2.0, seed=0,
+                           deadline=0.5)
+    for a in arr:
+        assert a.request.deadline == pytest.approx(a.t + 0.5)
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals([_req(0)], rate=0.0)
+
+
+def test_trace_arrivals_sort_and_validate():
+    r = [_req(i) for i in range(3)]
+    arr = trace_arrivals([2.0, 0.5, 1.0], r)
+    assert [a.t for a in arr] == [0.5, 1.0, 2.0]
+    assert [a.request.uid for a in arr] == [1, 2, 0]
+    with pytest.raises(ValueError, match="arrival times"):
+        trace_arrivals([0.0], r)
+
+
+# -- deadline expiry ---------------------------------------------------------
+
+def test_deadline_expiry_reclaims_inflight_slot_that_tick():
+    """A 1-slot engine: request 0's deadline passes while it is mid-
+    flight; the very tick the clock crosses the deadline its slot is
+    reclaimed and request 1 (waiting in the queue) is admitted into that
+    same slot — no idle tick in between."""
+    eng = _engine(slots=1)
+    r0 = _req(0, deadline=0.05, max_iterations=100_000)
+    r0.tol = 1e-12                       # never converges on its own
+    r1 = _req(1)
+    fe = OpenLoopFrontend(eng, trace_arrivals([0.0, 0.0], [r0, r1]),
+                          clock=VirtualClock(), tick_s=0.02)
+    # tick at t=0 admits r0 (1 slot -> r1 waits); t crosses 0.05 after
+    # 3 ticks, so the t=0.06 tick must expire r0 AND admit r1
+    for _ in range(3):
+        fe.step()
+    assert not r0.expired and fe._inflight == {0: r0}
+    fe.step()                            # now=0.06 > deadline
+    assert r0.expired and not r0.done
+    assert r0.timeline["t_expire"] == pytest.approx(0.06)
+    assert fe._inflight.get(1) is r1     # freed slot reused that tick
+    assert r1.timeline["t_admit"] == pytest.approx(0.06)
+    rep = fe.run()
+    assert rep["expired"] == 1 and rep["completed"] == 1
+    assert r1.done and r1.x is not None
+    assert eng.stats["expired"] == 1
+
+
+def test_deadline_expiry_drops_queued_before_any_device_work():
+    """A queued request whose deadline passes while waiting is expired
+    from the wait queue — it never reaches the engine at all."""
+    eng = _engine(slots=1)
+    r0 = _req(0, max_iterations=100_000)
+    r0.tol = 1e-12
+    doomed = _req(1, deadline=0.01)
+    fe = OpenLoopFrontend(eng, trace_arrivals([0.0, 0.0], [r0, doomed]),
+                          clock=VirtualClock(), tick_s=0.02,
+                          inflight_limit=1)
+    fe.step()                            # r0 in flight, doomed waiting
+    fe.step()                            # t=0.02 > 0.01: doomed expires
+    assert doomed.expired and "t_admit" not in doomed.timeline
+    assert doomed.timeline["queue_s"] == pytest.approx(0.02)
+    assert eng.stats.get("admitted", 0) == 1
+
+
+# -- priority ----------------------------------------------------------------
+
+def test_priority_overtakes_fifo_in_wait_queue():
+    """Three low-priority arrivals then one high-priority, all at t=0
+    with a 1-deep admission pipe: the high-priority request is served
+    first, the rest keep FIFO order."""
+    eng = _engine(slots=1)
+    lo = [_req(10 + i) for i in range(3)]
+    hi = _req(99, priority=5)
+    fe = OpenLoopFrontend(eng, trace_arrivals([0.0] * 4, lo + [hi]),
+                          clock=VirtualClock(), tick_s=0.01,
+                          inflight_limit=1)
+    fe.run()
+    assert [r.uid for r in fe.completed] == [99, 10, 11, 12]
+
+
+def test_priority_pop_inside_engine_queue():
+    """The engine's own bucket queues honor priority too (submit straight
+    to the engine, no front-end): the high-priority request takes the
+    first freed slot even though it was submitted last."""
+    eng = _engine(slots=1)
+    for r in [_req(0), _req(1), _req(2, priority=9)]:
+        eng.submit(r)
+    done = eng.run()
+    assert [r.uid for r in done] == [2, 0, 1]
+
+
+# -- backpressure + admission ------------------------------------------------
+
+def test_backpressure_rejects_on_full_wait_queue():
+    eng = _engine(slots=1)
+    reqs = [_req(i, max_iterations=100_000) for i in range(4)]
+    for r in reqs:
+        r.tol = 1e-12
+    fe = OpenLoopFrontend(eng, trace_arrivals([0.0] * 4, reqs),
+                          clock=VirtualClock(), tick_s=0.01,
+                          queue_limit=2, inflight_limit=1)
+    fe.step()
+    # all 4 land before admission drains the queue: 2 absorbed by the
+    # queue (one of them admitted this same tick), 2 rejected on arrival
+    rejected = [r for r in reqs if r.rejected]
+    assert [r.uid for r in rejected] == [2, 3]
+    assert all(r.reject_reason.startswith("backpressure")
+               for r in rejected)
+    rep = fe.report()
+    assert rep["rejected_backpressure"] == 2
+
+
+def test_saturated_byte_budget_rejects_with_plan_reason():
+    """admission='strict' on a byte-budgeted engine: work the planner
+    would only serve streamed is REJECTED, and the reject reason is the
+    planner's own admission sentence (decide_admission), not a silent
+    fallback.  The same request under admission='auto' is served
+    streamed, with the decision stamped on its timeline."""
+    from repro.plan import decide_admission
+
+    budget = 1                           # nothing fits resident
+    big = _req(7, m=64, n=64)
+    eng = _engine(slots=2, device_budget=budget)
+    fe = OpenLoopFrontend(eng, trace_arrivals([0.0], [big]),
+                          clock=VirtualClock(), admission="strict")
+    rep = fe.run()
+    assert big.rejected and not big.done
+    assert rep["rejected_admission"] == 1 and rep["completed"] == 0
+    assert "byte budget saturated" in big.reject_reason
+    # the engine's verdict IS the planner rule, with live byte numbers
+    slot = eng.bucket_slot_bytes(eng.bucket_key(big))
+    want, why = decide_admission(64, 64, big.coo.nnz, 1, slot_bytes=slot,
+                                 budget_left=budget,
+                                 allow_streaming=False)
+    assert (want, why) == ("rejected", big.reject_reason)
+
+    big2 = _req(8, m=64, n=64)
+    eng2 = _engine(slots=2, device_budget=budget)
+    fe2 = OpenLoopFrontend(eng2, trace_arrivals([0.0], [big2]),
+                          clock=VirtualClock())
+    rep2 = fe2.run()
+    assert rep2["completed"] == 1 and big2.done
+    assert big2.timeline["admission"] == "streamed"
+    assert "budget" in big2.timeline["admission_reason"]
+
+
+def test_plan_records_admission_reason():
+    from repro.api import Problem
+
+    cfg = PaperProblemConfig(name="t", m=64, n=16, nnz=256, reg=0.1)
+    coo, b, _ = make_lasso(cfg, seed=0)
+    pl = Problem(coo, b, prox="l1", reg=0.1).plan(tol=1e-2)
+    assert "admission" in pl.reasons
+    assert pl.reasons["admission"].startswith(
+        ("resident", "streamed", "rejected"))
+
+
+# -- latency accounting ------------------------------------------------------
+
+def test_latency_timeline_and_phase_attribution():
+    """Completed requests carry arrive/admit/done stamps on the serving
+    clock plus a queue/admit/compute/harvest split; the per-request
+    attribution sums back to the front-end's aggregate phase_s, which
+    mirrors the engine's own tick breakdown."""
+    eng = _engine()
+    arr = poisson_arrivals([_req(i) for i in range(5)], rate=4.0, seed=1)
+    fe = OpenLoopFrontend(eng, arr, clock=VirtualClock(), tick_s=0.01)
+    rep = fe.run(slo=60.0)
+    assert rep["completed"] == 5
+    for r in fe.completed:
+        tl = r.timeline
+        assert tl["t_arrive"] <= tl["t_admit"] <= tl["t_done"]
+        assert tl["latency_s"] == pytest.approx(
+            tl["t_done"] - tl["t_arrive"])
+        assert tl["queue_s"] == pytest.approx(tl["t_admit"] - tl["t_arrive"])
+        assert tl["service_s"] == pytest.approx(tl["t_done"] - tl["t_admit"])
+        for k in ("admit_s", "compute_s", "harvest_s"):
+            assert tl[k] >= 0.0
+    for k in ("admit_s", "compute_s", "harvest_s"):
+        total = sum(r.timeline[k] for r in fe.completed)
+        # aggregate also carries ticks that admitted nothing, so the
+        # per-request attribution can only be <= it — never more
+        assert total <= fe.phase_s[k] + 1e-9, k
+        assert total >= 0.0
+    # front-end mirror never loses engine time: splice+admit+compile land
+    # in admit_s, dispatch in compute_s, harvest in compute_s/harvest_s
+    eng_total = sum(eng.phase_s.values())
+    fe_total = sum(fe.phase_s[k] for k in
+                   ("admit_s", "compute_s", "harvest_s"))
+    assert fe_total == pytest.approx(eng_total, rel=1e-6)
+    assert rep["p50_latency_s"] <= rep["p99_latency_s"]
+    assert rep["goodput_rps"] > 0 and rep["met_slo"] == 5
+
+
+def test_open_loop_run_is_deterministic_on_virtual_clock():
+    """Two identical simulations are bit-identical: same arrival times,
+    same completion order, same latency stamps."""
+    def run():
+        eng = _engine()
+        arr = poisson_arrivals([_req(i) for i in range(6)], rate=5.0,
+                               seed=42, deadline=30.0)
+        fe = OpenLoopFrontend(eng, arr, clock=VirtualClock(), tick_s=0.01)
+        fe.run()
+        return ([r.uid for r in fe.completed],
+                [r.timeline["latency_s"] for r in fe.completed],
+                [r.uid for r in fe.expired])
+    assert run() == run()
