@@ -25,6 +25,13 @@
            sharded buckets, swept over the ``--format`` axis (ell gather
            bodies vs tiled-BCSR MXU bodies) with the chosen bucket body
            and modeled operand bytes recorded per point
+  rcd_serving  coordinate-descent face-off through the serving engine:
+           rps + iterations-to-tol of primal RCD vs dual SDCA vs the A2
+           baseline at >= 3 n/d aspect ratios (logistic fleets in csc
+           buckets; a consistent lasso-constraint A2 arm on the same
+           matrices), with the planner's recorded ``solver_family``
+           reason per point (``--solver-family`` overrides the rule,
+           ``--quick`` shrinks the sweep)
   open_loop_serving  tail latency of the OPEN-LOOP service layer
            (serve/frontend.py): seeded Poisson arrivals drive the engine
            at >= 3 offered loads (under / near / over the engine's
@@ -42,7 +49,8 @@
            format selector via REPRO_AUTOTUNE_TABLE
 
 Usage: ``python benchmarks/run.py [mode ...] [--format ell|bcsr|both]
-[--seed N] [--quick] [--arrival-rate R ...] [--slo S] [--deadline D]``
+[--seed N] [--quick] [--solver-family F] [--arrival-rate R ...]
+[--slo S] [--deadline D]``
 (default: all modes, both formats).  ``--seed`` threads one base seed
 through every request mix and arrival stream, so serving runs are
 bit-reproducible run-to-run.
@@ -609,6 +617,109 @@ def open_loop_serving(seed=0, quick=False, arrival_rates=None, slo=None,
     return rec
 
 
+def rcd_serving(seed=0, quick=False, solver_family="auto"):
+    """Coordinate-descent serving face-off: rps + iterations-to-tol of
+    primal RCD vs dual SDCA vs the A2 smoothing baseline across n/d
+    aspect ratios, all through the SAME serving engine (csc buckets for
+    the coordinate families, ell buckets for A2).
+
+    Per shape the logistic fleet runs four arms: the face-off-decided
+    family ("auto" — what ``Problem(A, b, loss=...)`` routes to;
+    ``--solver-family`` overrides it), both forced coordinate sides, and
+    an A2 arm on a CONSISTENT lasso constraint (b = A x0) over the same
+    matrices — the engine's native workload at the same operand shapes.
+    Each point records the planner's ``solver_family`` decision + reason
+    (``repro.plan.decide_solver_family``); the expectation is primal on
+    tall matrices (few coords), dual on wide ones (few samples).  Engines
+    are measured warm (one throwaway stream AOT-compiles the buckets).
+    Emits experiments/bench/rcd_serving.json; ``--quick`` shrinks shapes
+    and fleet for the CI smoke."""
+    from repro.api import Problem
+    from repro.plan import decide_solver_family
+    from repro.serve import SolverEngine
+    from repro.sparse.random import random_coo
+
+    num = 4 if quick else 12
+    slots, tol, maxit = 4, 1e-4, 500 if quick else 4000
+    shapes = ([(64, 16), (32, 32), (16, 64)] if quick
+              else [(256, 32), (96, 96), (32, 256)])
+
+    def fleets(m, n, seed0):
+        """(logistic problems, a2-consistent-lasso problems) per shape."""
+        loss_p, a2_p = [], []
+        for i in range(num):
+            coo = random_coo(m, n, row_nnz=min(8, n), seed=seed0 + i)
+            rs = np.random.default_rng(seed0 * 7919 + i)
+            labels = np.where(rs.random(m) < 0.5, -1.0, 1.0).astype(
+                np.float32)
+            loss_p.append(Problem(coo, labels, reg=0.3, loss="logistic"))
+            x0 = rs.standard_normal(n).astype(np.float64)
+            b0 = np.zeros(m, np.float64)
+            np.add.at(b0, np.asarray(coo.rows),
+                      np.asarray(coo.vals, np.float64)
+                      * x0[np.asarray(coo.cols)])
+            a2_p.append(Problem(coo, b0.astype(np.float32), prox="l1",
+                                reg=0.05))
+        return loss_p, a2_p
+
+    def run_arm(probs, family, arm_tol):
+        reqs = [p.to_request(uid=i, tol=arm_tol, max_iterations=maxit,
+                             solver_family=family, seed=seed + i)
+                if p.loss else
+                p.to_request(uid=i, tol=arm_tol, max_iterations=maxit)
+                for i, p in enumerate(probs)]
+        eng = SolverEngine(slots=slots, backend="jnp")
+        for r in reqs:                      # warm: AOT-compile the buckets
+            eng.submit(r)
+        eng.run()
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        iters = [r.iterations for r in done]
+        return dict(rps=len(done) / dt, wall_s=dt, tol=arm_tol,
+                    mean_iterations=float(np.mean(iters)),
+                    max_iterations_seen=int(np.max(iters)),
+                    converged=int(sum(r.feasibility < arm_tol
+                                      for r in done)),
+                    family=sorted({r.family for r in done}),
+                    buckets=len(eng.buckets))
+
+    out = {"requests": num, "slots": slots, "tol": tol,
+           "max_iterations": maxit, "seed": seed, "quick": bool(quick),
+           "solver_family_flag": solver_family, "loss": "logistic",
+           "points": []}
+    for si, (m, n) in enumerate(shapes):
+        loss_p, a2_p = fleets(m, n, seed0=seed + 100 * (si + 1))
+        fam, why = decide_solver_family("logistic", loss_p[0].stats,
+                                        solver_family)
+        rec = {"m": m, "n": n, "aspect_m_over_n": m / n,
+               "solver_family": fam, "reason": why, "arms": {}}
+        # the a2 reference arm runs at its native serving operating point
+        # (solver_serving's tol: A2 feasibility decays O(1/k)); the
+        # within-rcd iterations-to-tol comparison shares the tight tol
+        for arm, probs, override, arm_tol in [
+                ("auto", loss_p, solver_family, tol),
+                ("rcd_primal", loss_p, "rcd_primal", tol),
+                ("rcd_dual", loss_p, "rcd_dual", tol),
+                ("a2", a2_p, "auto", 1e-2)]:
+            r = run_arm(probs, override, arm_tol)
+            rec["arms"][arm] = r
+            emit(f"rcd_serving/{m}x{n}/{arm}", r["wall_s"] / num * 1e6,
+                 f"rps={r['rps']:.1f};iters={r['mean_iterations']:.0f};"
+                 f"converged={r['converged']}/{num};"
+                 f"family={'+'.join(r['family'])}")
+        emit(f"rcd_serving/{m}x{n}/face_off", 0.0,
+             f"picked={fam};auto_iters="
+             f"{rec['arms']['auto']['mean_iterations']:.0f}")
+        out["points"].append(rec)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "rcd_serving.json"), "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    return out
+
+
 def api_overhead():
     """Facade overhead vs the raw kernel layer it compiles to.
 
@@ -718,6 +829,7 @@ MODES = {
     "table1": table1_datasets,
     "spmv_formats": spmv_formats,
     "solver_serving": solver_serving,
+    "rcd_serving": rcd_serving,
     "open_loop_serving": open_loop_serving,
     "autotune": autotune_tables,
     "sharded_serving": sharded_serving,
@@ -753,9 +865,14 @@ def main(argv=None) -> None:
                     help="base seed threaded through every serving "
                          "request mix and arrival stream (bit-"
                          "reproducible runs)")
+    ap.add_argument("--solver-family", default="auto",
+                    choices=("auto", "rcd_primal", "rcd_dual"),
+                    help="rcd_serving: override the face-off rule for "
+                         "the 'auto' arm (default: let "
+                         "repro.plan.decide_solver_family pick)")
     ap.add_argument("--quick", action="store_true",
-                    help="open_loop_serving: shrink the stream for a "
-                         "fast CI smoke")
+                    help="rcd_serving/open_loop_serving: shrink the "
+                         "sweep for a fast CI smoke")
     ap.add_argument("--arrival-rate", type=float, action="append",
                     default=None, metavar="RPS",
                     help="open_loop_serving offered load in req/s "
@@ -784,6 +901,9 @@ def main(argv=None) -> None:
             results[name] = solver_serving(check_every=args.check_every,
                                            fused=args.fused,
                                            seed=args.seed)
+        elif name == "rcd_serving":
+            results[name] = rcd_serving(seed=args.seed, quick=args.quick,
+                                        solver_family=args.solver_family)
         elif name == "open_loop_serving":
             results[name] = open_loop_serving(
                 seed=args.seed, quick=args.quick,

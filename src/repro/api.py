@@ -89,6 +89,13 @@ class Problem:
     b      right-hand side, length m.
     prox   a prox-family name from ``repro.core.prox`` (f is built with
            ``reg``/``prox_kwargs``) or a ready ``ProxOp``.
+    loss   an ERM loss name ("lasso" | "svm" | "logistic") instead of the
+           constraint form: the planner's face-off rule
+           (``repro.plan.decide_solver_family``) routes the solve to a
+           coordinate-descent family (primal RCD / dual SDCA) over the
+           column-major CSC view, and the loss's own composite term
+           (l1 for lasso, reg/2 ||.||^2 otherwise) replaces ``prox``.
+           ``b`` holds targets (lasso) or +-1 labels (svm/logistic).
     lg     optional Lipschitz constant ``Lg``; when None the planner
            computes ``sum_i ||A_i||^2`` (paper init) or power-iterates.
     gamma0 optional smoothing schedule start; planner default otherwise.
@@ -99,7 +106,8 @@ class Problem:
     """
 
     def __init__(self, A: Any, b: Any, prox: Any = "l1",
-                 reg: Optional[float] = None, *, lg: Optional[float] = None,
+                 reg: Optional[float] = None, *, loss: str = "",
+                 lg: Optional[float] = None,
                  gamma0: Optional[float] = None,
                  prox_kwargs: Optional[dict] = None, dtype: Any = None):
         import jax.numpy as jnp
@@ -156,6 +164,25 @@ class Problem:
             raise ValueError(f"b has shape {self.b.shape}, expected "
                              f"({self.m},)")
 
+        self._stats = None                   # lazy shared MatrixStats
+        self.loss = str(loss or "")
+        if self.loss:
+            from repro.solvers.rcd import LOSSES
+            if self.loss not in LOSSES:
+                raise ValueError(f"unknown loss {self.loss!r} "
+                                 f"(choose from {LOSSES})")
+            if self.operator is not None:
+                raise ValueError(
+                    "loss families need a concrete matrix (the CSC "
+                    "coordinate view), not a matrix-free operator")
+            # the loss carries its own composite term; the prox records it
+            derived = "l1" if self.loss == "lasso" else "sq_l2"
+            if not isinstance(prox, str) or prox not in ("l1", derived):
+                raise ValueError(
+                    f"loss={self.loss!r} carries its own composite term "
+                    f"({derived!r}); don't pass a prox")
+            prox = derived
+
         if isinstance(prox, ProxOp):
             # reg=None means the instance's weight is un-introspectable: the
             # planner must not hand it to fused prox kernels (which take a
@@ -211,11 +238,23 @@ class Problem:
             return float("nan")
         return nnz / max(1, self.m * self.n)
 
+    @property
+    def stats(self):
+        """ONE cached ``MatrixStats`` pass (``operators.select``), shared
+        by the roofline format selector, the Frobenius Lg estimate, the
+        serving cost model, and the solver-family face-off rule (None for
+        matrix-free problems)."""
+        if self._stats is None and self.coo is not None:
+            from repro.operators import MatrixStats
+            self._stats = MatrixStats.from_coo(self.coo)
+        return self._stats
+
     def __repr__(self):
         kind = ("operator" if self.operator is not None else
                 "coo" if self._coo is not None else "dense")
+        extra = f", loss={self.loss!r}" if self.loss else ""
         return (f"Problem({self.m}x{self.n} {kind}, nnz={self.nnz}, "
-                f"prox={self.prox_name!r}, reg={self.reg})")
+                f"prox={self.prox_name!r}, reg={self.reg}{extra})")
 
     # -- the facade --------------------------------------------------------
 
@@ -231,23 +270,37 @@ class Problem:
 
     def to_request(self, uid: int = 0, tol: float = 1e-3,
                    max_iterations: int = 10_000,
-                   gamma0: Optional[float] = None):
+                   gamma0: Optional[float] = None,
+                   solver_family: str = "auto",
+                   seed: Optional[int] = None):
         """Adapt to the serving engine's request type (SolveRequest): the
         engine continuous-batches Problems whose prox is a servable named
-        family over a concrete sparse matrix."""
+        family over a concrete sparse matrix.  Loss problems resolve their
+        coordinate family through the planner's face-off rule
+        (``solver_family`` overrides it) and are stamped with the loss and
+        coordinate-hash ``seed`` the engine replays."""
         from repro.serve.solver_engine import (
             BATCHED_PROX_FAMILIES, SolveRequest,
         )
 
         if self.coo is None:
             raise ValueError("engine admission needs a concrete matrix")
+        g0 = gamma0 if gamma0 is not None else \
+            (self.gamma0 if self.gamma0 is not None else 100.0)
+        if self.loss:
+            from repro.plan import decide_solver_family
+            family, _ = decide_solver_family(self.loss, self.stats,
+                                             solver_family)
+            return SolveRequest(uid=uid, coo=self.coo, b=self.b,
+                                prox=self.prox_name, reg=self.reg,
+                                lg=self.lg, gamma0=float(g0), tol=tol,
+                                max_iterations=max_iterations,
+                                family=family, loss=self.loss, seed=seed)
         if not self._prox_is_named or \
                 self.prox_name not in BATCHED_PROX_FAMILIES:
             raise ValueError(
                 f"prox {self.prox_name!r} is not a servable family "
                 f"(supported: {BATCHED_PROX_FAMILIES})")
-        g0 = gamma0 if gamma0 is not None else \
-            (self.gamma0 if self.gamma0 is not None else 100.0)
         return SolveRequest(uid=uid, coo=self.coo, b=self.b,
                             prox=self.prox_name, reg=self.reg, lg=self.lg,
                             gamma0=float(g0), tol=tol,
@@ -314,12 +367,17 @@ def solve_many(problems: list[Problem], spec: SolveSpec | None = None,
     spec = resolve_spec(spec, overrides)
     from repro.serve.solver_engine import BATCHED_PROX_FAMILIES
 
+    def _servable(p) -> bool:
+        if p.coo is None:
+            return False
+        if getattr(p, "loss", ""):       # rcd requests bucket by family/loss
+            return True
+        return p._prox_is_named and p.prox_name in BATCHED_PROX_FAMILIES
+
     servable = (spec.batch != "never" and spec.tol is not None
                 and spec.strategy is None and spec.mesh is None
                 and len(problems) > 1
-                and all(p.coo is not None and p._prox_is_named
-                        and p.prox_name in BATCHED_PROX_FAMILIES
-                        for p in problems))
+                and all(_servable(p) for p in problems))
     if not servable:
         return [_plan(p, spec).solve() for p in problems]
 
@@ -333,7 +391,8 @@ def solve_many(problems: list[Problem], spec: SolveSpec | None = None,
                        shard_above=spec.shard_above)
     requests = [p.to_request(uid=i, tol=spec.tol,
                              max_iterations=spec.max_iterations,
-                             gamma0=spec.gamma0)
+                             gamma0=spec.gamma0,
+                             solver_family=spec.solver_family)
                 for i, p in enumerate(problems)]
     t0 = time.perf_counter()
     for r in requests:
@@ -357,10 +416,17 @@ def solve_many(problems: list[Problem], spec: SolveSpec | None = None,
         req = done[i]
         import jax.numpy as jnp
         x = jnp.asarray(req.x)
+        if p.loss:      # ERM objective, not the composite term alone
+            from repro.solvers import reference_objective
+            objective = reference_objective(p.dense_array(),
+                                            np.asarray(p.b), p.reg,
+                                            p.loss, np.asarray(x))
+        else:
+            objective = float(p.prox.value(x))
         results.append(Result(
             x=x, plan=shared, iterations=req.iterations,
             feasibility=float(req.feasibility),
-            objective=float(p.prox.value(x)),
+            objective=objective,
             timings=dict(total_s=wall, per_request_s=wall / len(problems)),
             state=None))
     return results

@@ -18,8 +18,9 @@ from repro.kernels.ops import (
     batched_fused_dual_update, bcsr_spmv, ell_spmv, fused_dual_update,
     kernel_ops, prox_update,
 )
+from repro.kernels.rcd_update import rcd_update
 
 __all__ = ["FUSED_CHECK_PROXES", "banded_spmv_t", "batched_bcsr_spmv",
            "batched_ell_spmv", "batched_fused_dual_update", "bcsr_spmv",
            "default_interpret", "ell_spmv", "fused_check_block",
-           "fused_dual_update", "kernel_ops", "prox_update"]
+           "fused_dual_update", "kernel_ops", "prox_update", "rcd_update"]

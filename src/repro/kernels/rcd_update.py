@@ -1,0 +1,99 @@
+"""Batched per-coordinate gather-update kernel for the RCD solver family.
+
+One ``pallas_call`` applies ONE coordinate update to every slot in a
+serving bucket — grid ``(B,)``, one program per slot.  Each program holds
+its slot's full operand row-block VMEM-resident (the stored column of
+CSC(A) for primal RCD / the stored row of CSC(A^T) for dual SDCA is sliced
+out with ``dynamic_index_in_dim``), gathers the cached vector at the stored
+indices, runs the 1-D loss update, and writes the functionally-updated
+iterate and cache back.  The loss math is SHARED with the jnp reference
+path — the kernel loads refs and calls the same ``primal_coord_body`` /
+``dual_coord_body`` from ``repro.solvers.rcd``, so jnp/pallas parity is
+structural rather than re-derived.
+
+The solver's epoch loop (``batched_rcd_step(kernel="pallas")``) places this
+call inside a ``fori_loop`` body: one trace, ``updates`` sequential kernel
+launches per epoch.  That is the intended shape — a coordinate update is a
+sparse O(nnz_col) gather-update, far too small to tile further, and the
+batch grid is what amortizes dispatch across slots (the same multi-tenant
+argument as ``batched_ell_spmv``).
+
+interpret=None resolves via ``repro.kernels.default_interpret`` (interpret
+off-TPU; env REPRO_PALLAS_INTERPRET overrides).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import default_interpret
+
+
+def _kernel(vals_ref, rows_ref, xbar_ref, aux_ref, b_ref, j_ref, reg_ref,
+            xbar_out_ref, aux_out_ref, *, family: str, loss: str):
+    from repro.solvers.rcd import dual_coord_body, primal_coord_body
+
+    v = vals_ref[0]                            # (dim_pad, k) slot operand
+    r = rows_ref[0]
+    xbar = xbar_ref[0]                         # (n,)
+    aux = aux_ref[0]                           # (m,)
+    b = b_ref[0]                               # (m,)
+    j = j_ref[0, 0]                            # picked coordinate (scalar)
+    reg = reg_ref[0, 0]
+    cv = jax.lax.dynamic_index_in_dim(v, j, axis=0, keepdims=False)
+    cr = jax.lax.dynamic_index_in_dim(r, j, axis=0, keepdims=False)
+    if family == "rcd_primal":
+        new_xbar, new_aux = primal_coord_body(cv, cr, xbar, aux, b, j, reg,
+                                              loss)
+    else:
+        new_xbar, new_aux = dual_coord_body(cv, cr, xbar, aux, b, j, reg,
+                                            loss)
+    xbar_out_ref[0, :] = new_xbar.astype(xbar_out_ref.dtype)
+    aux_out_ref[0, :] = new_aux.astype(aux_out_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("family", "loss", "interpret"))
+def rcd_update(vals: jax.Array, rows: jax.Array, xbar: jax.Array,
+               aux: jax.Array, b: jax.Array, j: jax.Array, reg: jax.Array,
+               *, family: str, loss: str,
+               interpret: bool | None = None):
+    """One batched coordinate update: (new xbar, new aux), both (B, ·).
+
+    vals/rows — (B, dim_pad, k) stored values / gather indices of the
+        coordinate-major operand (CSC(A) for rcd_primal, CSC(A^T) for
+        rcd_dual).
+    xbar/aux  — (B, n) iterate and (B, m) cache (z or beta).
+    b         — (B, m) targets/labels.
+    j         — (B,) int32 picked coordinate per slot (already hashed).
+    reg       — (B,) float32 per-slot regularization.
+    """
+    bsz, dim_pad, k = vals.shape
+    n = xbar.shape[1]
+    m = aux.shape[1]
+    j2 = j.astype(jnp.int32).reshape(bsz, 1)
+    reg2 = reg.astype(jnp.float32).reshape(bsz, 1)
+    return pl.pallas_call(
+        partial(_kernel, family=family, loss=loss),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, dim_pad, k), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, dim_pad, k), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, n), lambda s: (s, 0)),
+            pl.BlockSpec((1, m), lambda s: (s, 0)),
+            pl.BlockSpec((1, m), lambda s: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda s: (s, 0)),
+            pl.BlockSpec((1, m), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, n), xbar.dtype),
+            jax.ShapeDtypeStruct((bsz, m), aux.dtype),
+        ],
+        interpret=default_interpret(interpret),
+    )(vals, rows, xbar, aux, b, j2, reg2)

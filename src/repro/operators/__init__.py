@@ -15,12 +15,12 @@ from repro.operators import dist as _dist                  # noqa: F401
 from repro.operators.batched import stack_coos
 from repro.operators.dist import local_operator
 from repro.operators.select import (
-    FormatPlan, estimate_formats, matrix_stats, select_format,
+    FormatPlan, MatrixStats, estimate_formats, matrix_stats, select_format,
 )
 
 __all__ = [
-    "LinearOperator", "FormatPlan", "available", "estimate_formats",
-    "from_coo", "get_builder", "local_operator", "make_operator",
-    "make_solver_ops", "matrix_stats", "register", "select_format",
-    "stack_coos",
+    "LinearOperator", "FormatPlan", "MatrixStats", "available",
+    "estimate_formats", "from_coo", "get_builder", "local_operator",
+    "make_operator", "make_solver_ops", "matrix_stats", "register",
+    "select_format", "stack_coos",
 ]

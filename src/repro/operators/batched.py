@@ -29,10 +29,13 @@ import jax.numpy as jnp
 from repro.operators.base import LinearOperator
 from repro.operators.registry import register
 from repro.sparse.formats import (
-    COO, StackedBCSR, StackedELL, coo_bcsr_width, coo_to_bcsr, coo_to_ell,
-    pad_coo, stack_bcsrs, stack_ells, transpose_coo,
+    COO, StackedBCSR, StackedCSC, StackedELL, coo_bcsr_width, coo_to_bcsr,
+    coo_to_csc, coo_to_ell, pad_coo, stack_bcsrs, stack_cscs, stack_ells,
+    transpose_coo,
 )
-from repro.sparse.linalg import stacked_bcsr_matvec, stacked_ell_matvec
+from repro.sparse.linalg import (
+    stacked_bcsr_matvec, stacked_csc_gather_matvec, stacked_ell_matvec,
+)
 
 
 @register("stacked_dense", "jnp")
@@ -81,6 +84,40 @@ def stacked_ell_pallas_operator(a: StackedELL, at: StackedELL, prox=None,
                                            interpret=interpret),
         fused_dual=fused,
         shape=(a.m, at.m), format="stacked_ell", backend="pallas",
+        stats=dict(batch=a.batch, k=a.k, k_t=at.k))
+
+
+@register("stacked_csc", "jnp")
+def stacked_csc_operator(a: StackedCSC, at: StackedCSC) -> LinearOperator:
+    """(stacked CSC of A, stacked CSC of A^T) — the batched column-major
+    pair the RCD serving buckets hold; matvec/rmatvec are the flat-gather
+    reductions the residual refresh uses."""
+    return LinearOperator(
+        matvec=partial(stacked_csc_gather_matvec, at),
+        rmatvec=partial(stacked_csc_gather_matvec, a),
+        shape=(a.m, a.n), format="stacked_csc", backend="jnp",
+        stats=dict(batch=a.batch, k=a.k, k_t=at.k))
+
+
+@register("stacked_csc", "pallas")
+def stacked_csc_pallas_operator(a: StackedCSC, at: StackedCSC, prox=None,
+                                reg=0.0, *, block_rows: int = 512,
+                                interpret: bool | None = None
+                                ) -> LinearOperator:
+    """Stacked CSC through the batch-grid ELL kernel on the transpose view
+    (a stacked CSC of A^T IS a stacked ELL of A); per-coordinate updates go
+    through repro.kernels.rcd_update from the solver side."""
+    from repro.kernels.ops import batched_ell_spmv
+
+    def view(c: StackedCSC) -> StackedELL:
+        return StackedELL(vals=c.vals, cols=c.rows, n=c.m)
+
+    return LinearOperator(
+        matvec=lambda x: batched_ell_spmv(view(at), x, block_rows=block_rows,
+                                          interpret=interpret),
+        rmatvec=lambda y: batched_ell_spmv(view(a), y, block_rows=block_rows,
+                                           interpret=interpret),
+        shape=(a.m, a.n), format="stacked_csc", backend="pallas",
         stats=dict(batch=a.batch, k=a.k, k_t=at.k))
 
 
@@ -145,4 +182,15 @@ def stack_coos(coos: list[COO], fmt: str, m_pad: int, n_pad: int, *,
         bwd = [coo_to_bcsr(transpose_coo(c), bm=bm, bn=bn, kb=kb_t, pad_to=1)
                for c in padded]
         return stack_bcsrs(fwd), stack_bcsrs(bwd)
-    raise KeyError(f"unknown stacked format {fmt!r} (ell | bcsr)")
+    if fmt == "csc":
+        # column widths: max per-column nnz (and per-row for the transpose)
+        k = k or max(1, *(int(jnp.max(jnp.bincount(
+            c.cols, length=n_pad))) for c in padded))
+        k_t = k_t or max(1, *(int(jnp.max(jnp.bincount(
+            c.rows, length=m_pad))) for c in padded))
+        a = stack_cscs([coo_to_csc(c, k=k, pad_to=pad_to) for c in padded],
+                       m=m_pad)
+        at = stack_cscs([coo_to_csc(transpose_coo(c), k=k_t, pad_to=pad_to)
+                         for c in padded], m=n_pad)
+        return a, at
+    raise KeyError(f"unknown stacked format {fmt!r} (ell | bcsr | csc)")

@@ -22,12 +22,17 @@ import jax.numpy as jnp
 from repro.operators.base import LinearOperator
 from repro.operators.registry import get_builder, register
 from repro.sparse.formats import (
-    BCSR, COO, ELL, BandedELL, coo_to_banded, coo_to_bcsr, coo_to_ell,
-    transpose_coo,
+    BCSR, COO, CSC, ELL, BandedELL, coo_to_banded, coo_to_bcsr, coo_to_csc,
+    coo_to_ell, transpose_coo,
 )
 from repro.sparse.linalg import (
-    bcsr_matvec, coo_matvec, coo_rmatvec, ell_matvec,
+    bcsr_matvec, coo_matvec, coo_rmatvec, csc_gather_matvec, ell_matvec,
 )
+
+
+def _csc_ell_view(c: CSC) -> ELL:
+    """A CSC of A is bit-for-bit an ELL of A^T, so the ELL kernels apply."""
+    return ELL(vals=c.vals, cols=c.rows, n=c.m)
 
 
 def _ell_nnz_stats(a: ELL) -> dict:
@@ -66,6 +71,38 @@ def bcsr_operator(a: BCSR, at: BCSR) -> LinearOperator:
         shape=(a.m, a.n), format="bcsr", backend="jnp",
         stats=dict(blocks=a.nnz_blocks, bm=a.bm, bn=a.bn,
                    blocks_t=at.nnz_blocks))
+
+
+@register("csc", "jnp")
+def csc_operator(a: CSC, at: CSC) -> LinearOperator:
+    """(CSC of A, CSC of A^T) — the column-major pair for coordinate descent.
+
+    The RCD bodies (repro.solvers.rcd) slice single columns out of these
+    arrays; the whole-matrix matvec/rmatvec here are the gather reductions
+    the stopping residuals and oracles use."""
+    return LinearOperator(
+        matvec=partial(csc_gather_matvec, at),
+        rmatvec=partial(csc_gather_matvec, a),
+        shape=(a.m, a.n), format="csc", backend="jnp",
+        stats=dict(k=a.k, k_t=at.k))
+
+
+@register("csc", "pallas")
+def csc_pallas_operator(a: CSC, at: CSC, prox=None, reg: float = 0.0, *,
+                        block_rows: int = 512,
+                        interpret: bool | None = None) -> LinearOperator:
+    """CSC served by the ELL kernels through the transpose view (a CSC of
+    A^T IS an ELL of A); the per-coordinate gather-update kernel lives in
+    repro.kernels.rcd_update and is invoked by the solver, not here."""
+    from repro.kernels.ops import ell_spmv
+
+    return LinearOperator(
+        matvec=lambda x: ell_spmv(_csc_ell_view(at), x,
+                                  block_rows=block_rows, interpret=interpret),
+        rmatvec=lambda y: ell_spmv(_csc_ell_view(a), y,
+                                   block_rows=block_rows, interpret=interpret),
+        shape=(a.m, a.n), format="csc", backend="pallas",
+        stats=dict(k=a.k, k_t=at.k))
 
 
 def _fused_l1_prox(prox, reg, interpret):
@@ -148,6 +185,12 @@ def build_from_coo(coo: COO, fmt: str, backend: str, *, prox=None,
             at = coo_to_banded(coo, band_size=band_size, pad_to=pad_to or 8)
             return builder(a, at, prox, reg, **opts)
         at = coo_to_ell(transpose_coo(coo), pad_to=pad_to or 8)
+        return builder(a, at)
+    if fmt == "csc":
+        a = coo_to_csc(coo, pad_to=pad_to or 1)
+        at = coo_to_csc(transpose_coo(coo), pad_to=pad_to or 1)
+        if backend == "pallas":
+            return builder(a, at, prox, reg, **opts)
         return builder(a, at)
     if fmt == "bcsr":
         a = coo_to_bcsr(coo, bm=bm, bn=bn, pad_to=pad_to or 1)

@@ -60,19 +60,55 @@ class FormatPlan:
     estimates: dict                # per-candidate modeled seconds + notes
 
 
+@dataclasses.dataclass(frozen=True)
+class MatrixStats:
+    """ONE statistics pass over a COO matrix, shared by every consumer.
+
+    The paper computes these with MapReduce counters during the read
+    stage; this record is the single-pass analogue.  Computed once at
+    ``Problem`` ingest (``Problem.stats``) and handed to the roofline
+    format selector (row/col padded widths), the planner's Frobenius
+    ``Lg`` estimate (``frob_sq`` — paper init steps 1-2), the serving
+    cost model, and the coordinate-descent face-off rule
+    (``repro.plan.decide_solver_family`` — n-vs-d plus the nnz moments,
+    Csiba & Richtárik).  Before this record each consumer re-ran its own
+    bincount/`` vals**2`` pass over the same matrix.
+    """
+
+    m: int
+    n: int
+    nnz: int
+    density: float
+    row_nnz_mean: float
+    row_nnz_max: int
+    col_nnz_mean: float
+    col_nnz_max: int
+    frob_sq: float                 # sum_i ||A_i||^2 = ||A||_F^2
+
+    @classmethod
+    def from_coo(cls, coo) -> "MatrixStats":
+        rc = np.bincount(np.asarray(coo.rows), minlength=coo.m)
+        cc = np.bincount(np.asarray(coo.cols), minlength=coo.n)
+        vals = np.asarray(coo.vals)
+        return cls(
+            m=int(coo.m), n=int(coo.n), nnz=int(coo.nnz),
+            density=float(coo.nnz) / float(max(1, coo.m * coo.n)),
+            row_nnz_mean=float(rc.mean()) if rc.size else 0.0,
+            row_nnz_max=int(rc.max(initial=0)),
+            col_nnz_mean=float(cc.mean()) if cc.size else 0.0,
+            col_nnz_max=int(cc.max(initial=0)),
+            frob_sq=float(np.sum(np.square(vals, dtype=np.float64))),
+        )
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 def matrix_stats(coo) -> dict:
-    """Cheap global statistics (the paper computes these with MapReduce
-    counters during the read stage)."""
-    rows = np.asarray(coo.rows)
-    cols = np.asarray(coo.cols)
-    rc = np.bincount(rows, minlength=coo.m)
-    cc = np.bincount(cols, minlength=coo.n)
-    return dict(
-        m=coo.m, n=coo.n, nnz=int(coo.nnz),
-        density=float(coo.nnz) / float(max(1, coo.m * coo.n)),
-        row_nnz_mean=float(rc.mean()), row_nnz_max=int(rc.max(initial=0)),
-        col_nnz_mean=float(cc.mean()), col_nnz_max=int(cc.max(initial=0)),
-    )
+    """Cheap global statistics as a plain dict (legacy shape of
+    ``MatrixStats.from_coo`` — kept because operator ``stats`` metadata
+    and bench json records store dicts)."""
+    return MatrixStats.from_coo(coo).as_dict()
 
 
 def _roofline_s(flops: float, bytes_hbm: float, peak_flops: float) -> float:
@@ -166,13 +202,17 @@ def _apply_measured(entry: dict, cells, fmt: str, backend: str,
 
 def estimate_formats(coo, bm_bn_candidates=((8, 128), (16, 128), (32, 128),
                                             (8, 256)), table=None,
-                     backend: str = "pallas") -> dict:
+                     backend: str = "pallas", stats=None) -> dict:
     """Modeled per-apply seconds for each candidate (format, params).
 
     With ``table`` (an autotune ``cells`` list), matching measured cells
     override the analytic roofline — each entry says which in ``source``.
+    ``stats``: a precomputed ``MatrixStats`` (one ingest-time pass shared
+    with the planner); recomputed here only when absent.
     """
-    st = matrix_stats(coo)
+    st = stats if stats is not None else MatrixStats.from_coo(coo)
+    if not isinstance(st, dict):
+        st = st.as_dict()
     m, n, nnz = st["m"], st["n"], st["nnz"]
     vec_bytes = (m + n) * _VAL
     out = {}
@@ -220,7 +260,7 @@ def estimate_formats(coo, bm_bn_candidates=((8, 128), (16, 128), (32, 128),
 
 def select_format(coo, backend: str = "pallas",
                   y_vmem_budget: int = VMEM_BYTES,
-                  table=None) -> FormatPlan:
+                  table=None, stats=None) -> FormatPlan:
     """Pick the cheapest modeled format; force the banded backward layout
     when y cannot be VMEM-resident (the flat gather is then impossible on
     a real TPU regardless of modeled time).
@@ -230,7 +270,7 @@ def select_format(coo, backend: str = "pallas",
     ``REPRO_AUTOTUNE_TABLE`` (and stays fully analytic when unset)."""
     if table is None:
         table = load_measured_table()
-    est = estimate_formats(coo, table=table, backend=backend)
+    est = estimate_formats(coo, table=table, backend=backend, stats=stats)
     y_bytes = coo.m * _VAL
     if y_bytes > y_vmem_budget:
         choice = "banded_ell"

@@ -41,8 +41,8 @@ import numpy as np
 
 __all__ = ["ExecutionPlan", "Result", "SolveSpec", "bucket_operand_bytes",
            "decide_admission", "decide_bucket_body", "decide_check_every",
-           "decide_placement", "plan", "sharded_bucket_bytes",
-           "sharding_ndev"]
+           "decide_placement", "decide_solver_family", "plan",
+           "sharded_bucket_bytes", "sharding_ndev"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +58,8 @@ class SolveSpec:
     """
 
     algorithm: str = "auto"              # "a1" | "a2" | "auto"
+    solver_family: str = "auto"          # "a1"|"a2"|"rcd_primal"|"rcd_dual"
+    #                                      |"auto" (face-off rule decides)
     tol: Optional[float] = None
     iterations: int = 300
     max_iterations: int = 10_000
@@ -219,6 +221,12 @@ class ExecutionPlan:
         if unknown:
             raise TypeError(f"unknown plan/spec fields: {unknown}")
         spec = dataclasses.replace(self.spec, **sc) if sc else self.spec
+        if "solver_family" in sc:
+            # the family pins algorithm/format/placement together — re-run
+            # the planner at the new spec so they stay consistent (plan()
+            # records the explicit family as a user override)
+            replanned = plan(self.problem, spec)
+            return dataclasses.replace(replanned, **pc) if pc else replanned
         new = dataclasses.replace(self, spec=spec, **pc, _op=None,
                                   reasons={**self.reasons,
                                            **{k: "user override"
@@ -274,6 +282,8 @@ class ExecutionPlan:
             raise RuntimeError(
                 "engine plans describe a shared batched run; execute them "
                 "through repro.api.solve_many")
+        if self.algorithm in ("rcd_primal", "rcd_dual"):
+            return self._solve_rcd()
         import jax
 
         from repro.core import solver as _solver
@@ -308,6 +318,39 @@ class ExecutionPlan:
         return Result(x=x, plan=self, iterations=int(state.k),
                       feasibility=feas, objective=objective,
                       timings=timings, state=state, history=history)
+
+    def _solve_rcd(self) -> Result:
+        """Coordinate-descent execution (``repro.solvers.rcd_solve_tol``
+        over the CSC operand pair).  ``iterations`` counts EPOCHS;
+        ``feasibility`` reports the family's relative fixed-point residual
+        (zero exactly at optimality) rather than ||Ax - b|| — ERM losses
+        have no linear constraint to be feasible against.  ``objective``
+        is the float64 primal objective at the returned iterate."""
+        from repro.solvers import rcd_solve_tol, reference_objective
+
+        prob, spec = self.problem, self.spec
+        t0 = time.perf_counter()
+        coo = prob.coo                       # lazy dense->COO conversion
+        build_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        if spec.tol is None:                 # fixed epoch budget
+            tol, maxit = 0.0, spec.iterations
+        else:
+            tol, maxit = float(spec.tol), spec.max_iterations
+        x, resid, epochs = rcd_solve_tol(
+            coo, prob.b, prob.reg, family=self.algorithm, loss=prob.loss,
+            tol=tol, max_iterations=maxit,
+            check_every=min(self.check_every, max(1, maxit)),
+            kernel="pallas" if self.backend == "pallas" else None,
+            interpret=spec.interpret)
+        solve_s = time.perf_counter() - t1
+        objective = reference_objective(prob.dense_array(),
+                                        np.asarray(prob.b), prob.reg,
+                                        prob.loss, np.asarray(x))
+        timings = dict(build_s=build_s, solve_s=solve_s,
+                       total_s=time.perf_counter() - t0)
+        return Result(x=x, plan=self, iterations=epochs, feasibility=resid,
+                      objective=objective, timings=timings, state=None)
 
     def _solve_distributed(self):
         import jax
@@ -383,6 +426,10 @@ def bucket_operand_bytes(fmt: str, slots: int, m_pad: int, n_pad: int,
 
     ell   slots x (m_pad*width + n_pad*width_t) stored entries, 8 B each
           (fp32 val + int32 index) — the row-ELL + transpose-ELL pair.
+    csc   the same 8 B/entry arithmetic over the column-major pair the
+          coordinate-descent families gather from: CSC(A) is
+          (n_pad, width) at width = padded max COLUMN nnz, CSC(A^T) is
+          (m_pad, width_t) at the padded max row nnz.
     bcsr  slots x dense (8, min(128, dim)) tiles per orientation
           (``operators.select.bcsr_bytes``): tile zero-fill is real
           storage, so a BCSR bucket can cost many times its ELL twin for
@@ -393,6 +440,8 @@ def bucket_operand_bytes(fmt: str, slots: int, m_pad: int, n_pad: int,
     b_bytes = m_pad * _VAL
     if fmt == "ell":
         per_slot = ell_bytes(m_pad, width) + ell_bytes(n_pad, width_t)
+    elif fmt == "csc":
+        per_slot = ell_bytes(n_pad, width) + ell_bytes(m_pad, width_t)
     elif fmt == "bcsr":
         bm, bn, bn_t = 8, min(128, n_pad), min(128, m_pad)
         per_slot = (bcsr_bytes(-(-m_pad // bm), width, bm, bn)
@@ -499,6 +548,84 @@ def decide_check_every(override: Optional[int] = None) -> tuple[int, str]:
         f"amortized over the block, at most one wasted block per slot")
 
 
+def decide_solver_family(loss: str, stats=None,
+                         override: str = "auto") -> tuple[str, str]:
+    """The solver-family face-off: (family, reason).
+
+    a1/a2 serve plain prox + linear-constraint saddle problems (no loss
+    term); the coordinate families serve the ERM losses over the
+    column-major CSC operand view (``repro.solvers.rcd``):
+
+    lasso     -> rcd_primal FORCED: the l1 composite is not strongly
+                 convex, so there is no smooth dual coordinate
+                 subproblem — while the primal coordinate step is an
+                 exact 1-D soft-threshold.
+    svm       -> rcd_dual FORCED: the hinge has no primal coordinate
+                 curvature (nonsmooth), while its dual is a box QP with
+                 a closed-form 1-D update (SDCA).
+    logistic  -> both sides are valid: face off on modeled epoch cost x
+                 degree imbalance from the shared ``MatrixStats``.  An
+                 epoch visits every coordinate once and the widest
+                 coordinate bounds the padded gather width, so the side
+                 with fewer, more balanced coordinates wins — the
+                 size/imbalance shape of Csiba & Richtarik's
+                 importance-sampling analysis, applied as a routing
+                 rule.
+
+    Shared between ``plan()`` (records it as the plan's
+    ``solver_family`` reason) and ``Problem.to_request`` (stamps the
+    family on the engine request), so direct solves and engine admission
+    route by the same rule.  ``override`` must name a registered family
+    compatible with the loss.
+    """
+    from repro.solvers import FAMILY_NAMES
+    from repro.solvers.rcd import LOSSES, check_family_loss
+
+    if override != "auto":
+        if override not in FAMILY_NAMES:
+            raise KeyError(f"unknown solver family {override!r} "
+                           f"(choose from {FAMILY_NAMES} | 'auto')")
+        if override in ("rcd_primal", "rcd_dual"):
+            if not loss:
+                raise ValueError(
+                    f"{override} needs a loss term: construct the Problem "
+                    f"with loss='lasso'|'svm'|'logistic'")
+            check_family_loss(override, loss)
+        elif loss:
+            raise ValueError(
+                f"solver_family {override!r} does not serve loss={loss!r}: "
+                "the a1/a2 smoothing bodies solve min f(x) s.t. Ax = b, "
+                "not ERM losses (pick rcd_primal/rcd_dual or 'auto')")
+        return override, "user override"
+    if not loss:
+        return "a2", ("no loss= term: the primal-dual smoothing family "
+                      "serves prox + linear-constraint problems")
+    if loss == "lasso":
+        return "rcd_primal", (
+            "forced: the l1 composite is not strongly convex (no smooth "
+            "dual coordinate subproblem); primal RCD takes exact 1-D "
+            "soft-threshold steps")
+    if loss == "svm":
+        return "rcd_dual", (
+            "forced: the hinge has no primal coordinate curvature "
+            "(nonsmooth); SDCA's dual box QP has a closed-form 1-D update")
+    if loss != "logistic":
+        raise ValueError(f"unknown loss {loss!r} (choose from {LOSSES})")
+    if stats is None:
+        raise ValueError("the logistic face-off needs MatrixStats — a "
+                         "concrete matrix, not a matrix-free operator")
+    imb_p = stats.col_nnz_max / max(1.0, stats.col_nnz_mean)
+    imb_d = stats.row_nnz_max / max(1.0, stats.row_nnz_mean)
+    score_p = stats.n * (1.0 + imb_p)
+    score_d = stats.m * (1.0 + imb_d)
+    family = "rcd_primal" if score_p <= score_d else "rcd_dual"
+    return family, (
+        f"face-off on epoch cost x imbalance (Csiba & Richtarik): primal "
+        f"{stats.n} coords x (1 + {imb_p:.2g}) = {score_p:.4g} vs dual "
+        f"{stats.m} samples x (1 + {imb_d:.2g}) = {score_d:.4g} "
+        f"-> {family}")
+
+
 def sharding_ndev(nnz: int, n_devices: int,
                   shard_above: Optional[int] = None) -> int:
     """Capacity-sized sub-mesh for one sharded problem: the fewest devices
@@ -538,10 +665,10 @@ def _cost_reasons(problem, fmt: str, placement: str, n_devices: int,
     host passes — the engine still computes exact widths at admission.
     """
     coo = problem.coo
-    fmt_b = fmt if fmt in ("ell", "bcsr") else "ell"
+    fmt_b = fmt if fmt in ("ell", "bcsr", "csc") else "ell"
     exact = coo.nnz <= _EXACT_WIDTHS_NNZ
     est = "" if exact else " (widths estimated from mean degrees)"
-    floor = 8 if fmt_b == "ell" else 1
+    floor = 1 if fmt_b == "bcsr" else 8
     pow2 = lambda v: _next_pow2(max(floor, v))
     mean_w = pow2(-(-coo.nnz // max(1, coo.m)))
     mean_wt = pow2(-(-coo.nnz // max(1, coo.n)))
@@ -568,7 +695,7 @@ def _cost_reasons(problem, fmt: str, placement: str, n_devices: int,
     m_pad = max(64, _next_pow2(coo.m))
     n_pad = max(16, _next_pow2(coo.n))
     if not exact:
-        w, wt = mean_w, mean_wt
+        w, wt = (mean_wt, mean_w) if fmt_b == "csc" else (mean_w, mean_wt)
     elif fmt_b == "bcsr":   # mirror SolverEngine.bucket_key's padded tiling
         from repro.sparse.formats import coo_bcsr_width, pad_coo, transpose_coo
         c = pad_coo(coo, m_pad, n_pad)
@@ -576,12 +703,22 @@ def _cost_reasons(problem, fmt: str, placement: str, n_devices: int,
         wt = pow2(coo_bcsr_width(transpose_coo(c), bm=8,
                                  bn=min(128, m_pad)))
     else:
-        rows = np.asarray(coo.rows)
-        cols = np.asarray(coo.cols)
-        w = pow2(int(np.bincount(rows, minlength=coo.m).max())
-                 if rows.size else 1)
-        wt = pow2(int(np.bincount(cols, minlength=coo.n).max())
-                  if cols.size else 1)
+        # row/col degree maxima from the shared single-pass MatrixStats
+        # (the redundant bincount pass this reason used to re-run)
+        stats = getattr(problem, "stats", None)
+        if stats is not None:
+            rmax, cmax = stats.row_nnz_max, stats.col_nnz_max
+        else:
+            rows = np.asarray(coo.rows)
+            cols = np.asarray(coo.cols)
+            rmax = int(np.bincount(rows, minlength=coo.m).max()) \
+                if rows.size else 1
+            cmax = int(np.bincount(cols, minlength=coo.n).max()) \
+                if cols.size else 1
+        if fmt_b == "csc":      # CSC pair: width = col max, width_t = row max
+            w, wt = pow2(max(1, cmax)), pow2(max(1, rmax))
+        else:
+            w, wt = pow2(max(1, rmax)), pow2(max(1, cmax))
     bytes_ = bucket_operand_bytes(fmt_b, 1, m_pad, n_pad, w, wt)
     return {
         "bucket_body": (f"stacked_{fmt_b} single-device bucket body "
@@ -705,12 +842,21 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
     reasons: dict[str, str] = {}
     estimates = None
 
-    # algorithm ------------------------------------------------------------
-    if spec.algorithm != "auto":
-        algorithm = spec.algorithm
+    # algorithm / solver family --------------------------------------------
+    loss = getattr(problem, "loss", "") or ""
+    fam_override = spec.solver_family
+    if fam_override == "auto" and spec.algorithm != "auto":
+        fam_override = spec.algorithm
+    algorithm, why_f = decide_solver_family(
+        loss, getattr(problem, "stats", None), fam_override)
+    rcd = algorithm in ("rcd_primal", "rcd_dual")
+    reasons["solver_family"] = f"{algorithm}: {why_f}"
+    if rcd:
+        reasons["algorithm"] = (f"solver_family face-off -> {algorithm} "
+                                "(see solver_family)")
+    elif spec.algorithm != "auto" or spec.solver_family != "auto":
         reasons["algorithm"] = "user override"
     else:
-        algorithm = "a2"
         reasons["algorithm"] = ("fused schedule: identical iterates to A1 "
                                 "with 1 fwd + 1 bwd pass, 2 sync points "
                                 "(paper Alg. 2)")
@@ -728,7 +874,41 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
     if distributed and problem.coo is None:
         raise ValueError("distributed strategies need a concrete matrix "
                          "(COO/dense), not a matrix-free operator")
-    if not distributed:
+    if rcd:
+        if distributed:
+            raise ValueError(
+                "coordinate-descent families have no distributed strategy: "
+                "one update scatters into arbitrary rows of its cached "
+                "vector, which has no row-partitioned form")
+        if problem.coo is None:
+            raise ValueError("coordinate-descent families need a concrete "
+                             "matrix (the CSC coordinate view), not a "
+                             "matrix-free operator")
+        if spec.format not in ("auto", "csc"):
+            raise ValueError(
+                f"format {spec.format!r} cannot serve coordinate descent: "
+                "per-coordinate access needs the column-major csc view")
+        strategy, execution, placement = None, "single", "single"
+        reasons["strategy"] = "coordinate families run single-device"
+        reasons["placement"] = (
+            "rcd buckets are single-device: the scattered per-coordinate "
+            "cache update has no row-partitioned form (oversized problems "
+            "fall back to streamed operands at serve time)")
+        fmt = "csc"
+        reasons["format"] = ("coordinate access is column-major: CSC(A) / "
+                             "CSC(A^T) flat-gather pair (forced for rcd)")
+        if spec.backend != "auto":
+            backend, reasons["backend"] = spec.backend, "user override"
+        else:
+            import jax
+            on_tpu = jax.default_backend() == "tpu"
+            backend = "pallas" if on_tpu else "jnp"
+            reasons["backend"] = (
+                "TPU: per-coordinate Pallas gather-update kernel" if on_tpu
+                else f"{jax.default_backend()}: jnp reference ops "
+                     "(Pallas would run in interpret mode)")
+        params, estimates = {}, None
+    elif not distributed:
         # serving placement: does this problem fit one device, and should a
         # too-large one be auto-upgraded to a mesh-wide (sharded) solve?
         import jax
@@ -750,7 +930,9 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
         placement = "sharded"
         reasons["placement"] = ("strategy/mesh given: operands partitioned "
                                 "mesh-wide")
-    if distributed:
+    if rcd:
+        pass                      # execution/format/backend decided above
+    elif distributed:
         strategy = spec.strategy or "dualpart"
         reasons.setdefault("strategy", (
             "user override" if spec.strategy else
@@ -784,7 +966,16 @@ def plan(problem, spec: SolveSpec | None = None, **overrides) -> ExecutionPlan:
                             f"(repro.api.Problem; dtype= overrides)")
 
     # check cadence --------------------------------------------------------
-    check_every, reasons["check_every"] = decide_check_every(spec.check_every)
+    if rcd and spec.check_every is None:
+        from repro.solvers.rcd import DEFAULT_RCD_CHECK_EVERY
+        check_every = DEFAULT_RCD_CHECK_EVERY
+        reasons["check_every"] = (
+            f"rcd default ({DEFAULT_RCD_CHECK_EVERY}): each residual check "
+            "re-runs both matvecs (~one epoch of work), so it amortizes "
+            "over a handful of epochs")
+    else:
+        check_every, reasons["check_every"] = \
+            decide_check_every(spec.check_every)
 
     # lg -------------------------------------------------------------------
     lg, reasons["lg"] = _choose_lg(problem, spec)
@@ -844,7 +1035,8 @@ def _choose_format(problem, spec: SolveSpec):
             params = {}
         else:
             from repro.operators.select import select_format
-            fp = select_format(problem.coo, backend=backend)
+            fp = select_format(problem.coo, backend=backend,
+                               stats=getattr(problem, "stats", None))
             fmt, params, estimates = fp.format, dict(fp.params), fp.estimates
             reasons["format"] = ("roofline selector: cheapest modeled "
                                  "per-apply time over {ell, banded_ell, "
@@ -870,9 +1062,14 @@ def _choose_lg(problem, spec: SolveSpec):
         if problem.coo is None:
             raise ValueError("lg_method='frobenius' needs matrix values; "
                              "use 'power' for matrix-free operators")
-        lg = float(np.sum(np.square(np.asarray(problem.coo.vals))))
+        stats = getattr(problem, "stats", None)
+        if stats is not None:       # the shared single-pass MatrixStats
+            lg = float(stats.frob_sq)
+        else:
+            lg = float(np.sum(np.square(np.asarray(problem.coo.vals))))
         return lg, ("Lg = sum_i ||A_i||^2 (paper init steps 1-2; exact "
-                    "upper bound on ||A||^2)")
+                    "upper bound on ||A||^2; from the shared MatrixStats "
+                    "pass)")
     from repro.core.solver import estimate_lg
 
     op = problem.operator if problem.operator is not None \

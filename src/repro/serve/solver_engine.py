@@ -180,6 +180,15 @@ class SolveRequest:
     max_iterations: int = 10_000
     priority: int = 0                    # higher admits first
     deadline: float | None = None        # absolute serving-clock seconds
+    # solver-family routing (repro.plan.decide_solver_family): "a2"/"a1"
+    # requests run the engine's primal-dual body; "rcd_primal"/"rcd_dual"
+    # route to the coordinate-descent family over csc buckets.  ``loss``
+    # names the rcd objective ("lasso" | "svm" | "logistic"; "" for
+    # constraint problems) and ``seed`` the coordinate stream (uid-derived
+    # when None, so replay after a re-splice is deterministic).
+    family: str = "a2"
+    loss: str = ""
+    seed: int | None = None
     # filled by the engine on completion
     x: np.ndarray | None = None          # (n,) final xbar
     iterations: int = 0
@@ -194,18 +203,36 @@ class SolveRequest:
         if self.lg is None:    # host-side: no device dispatch per request
             vals = np.asarray(self.coo.vals)
             self.lg = float(np.sum(np.square(vals)))
+        if self.seed is None:
+            self.seed = self.uid & 0x7FFFFFFF
+
+    @property
+    def is_rcd(self) -> bool:
+        return self.family in ("rcd_primal", "rcd_dual")
 
 
 @dataclasses.dataclass(frozen=True)
 class BucketKey:
-    """Requests sharing a key share slot buffers and one compiled step."""
+    """Requests sharing a key share slot buffers and one compiled step.
+
+    ``family``/``loss`` extend the key for the coordinate-descent path:
+    rcd requests bucket by (shape, "csc", family, loss) — the compiled
+    epoch body is loss-specific — while primal-dual traffic keeps the
+    default ("a2", "") and the pre-rcd key space unchanged."""
 
     m_pad: int
     n_pad: int
     width: int          # ELL k / BCSR kb of A, padded bucket-wide
-    width_t: int        # same for A^T
+                        # (csc: CSC column width, max col-nnz pow2)
+    width_t: int        # same for A^T (csc: max row-nnz pow2)
     fmt: str
     prox: str
+    family: str = "a2"
+    loss: str = ""
+
+    @property
+    def is_rcd(self) -> bool:
+        return self.family in ("rcd_primal", "rcd_dual")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,7 +269,7 @@ class _Bucket:
 
     key: BucketKey
     a_vals: np.ndarray        # (S, ...) stacked A values
-    a_idx: np.ndarray         # ELL cols / BCSR bcols of A
+    a_idx: np.ndarray         # ELL cols / BCSR bcols / CSC rows of A
     at_vals: np.ndarray       # same for A^T
     at_idx: np.ndarray
     b: np.ndarray             # (S, m_pad)
@@ -251,7 +278,10 @@ class _Bucket:
     reg: np.ndarray           # (S,)
     tol: np.ndarray           # (S,)
     maxit: np.ndarray         # (S,) int32
-    state: PDState            # batched, device
+    dim: np.ndarray           # (S,) int32 true coordinate count (rcd draw
+                              # range; 1 in empty slots so modulo stays live)
+    seed: np.ndarray          # (S,) int32 rcd coordinate-stream seeds
+    state: Any                # batched, device (PDState | RCDState)
     active: np.ndarray        # (S,) bool occupancy mask
     dirty: bool = True
     dev: tuple | None = None
@@ -531,6 +561,7 @@ class SolverEngine:
             placement = self.placement_for(req)
             key = (self.sharded_bucket_key(req)
                    if self.mesh is not None and placement == "sharded"
+                   and not getattr(req, "is_rcd", False)
                    else self.bucket_key(req))
             bucket = self.buckets.get(key)
             if bucket is not None:
@@ -591,10 +622,24 @@ class SolverEngine:
     def bucket_key(self, req: SolveRequest) -> BucketKey:
         """(shape-bucket, format, prox family): dims round up to powers of
         two (floors min_rows/min_cols), ELL/BCSR widths to powers of two,
-        so ragged traffic collapses onto few compiled step functions."""
+        so ragged traffic collapses onto few compiled step functions.
+
+        RCD requests key by (shape, "csc", family, loss) regardless of the
+        engine's fmt knob — coordinate access needs the column-major view,
+        and the epoch body is loss-specific."""
         coo = req.coo
         m_pad = max(self.min_rows, _next_pow2(coo.m))
         n_pad = max(self.min_cols, _next_pow2(coo.n))
+        if getattr(req, "is_rcd", False):
+            rows = np.asarray(coo.rows)
+            cols = np.asarray(coo.cols)
+            w = int(np.bincount(cols, minlength=coo.n).max()) if cols.size else 1
+            wt = int(np.bincount(rows, minlength=coo.m).max()) if rows.size else 1
+            return BucketKey(m_pad=m_pad, n_pad=n_pad,
+                             width=_next_pow2(max(8, w)),
+                             width_t=_next_pow2(max(8, wt)),
+                             fmt="csc", prox=req.prox,
+                             family=req.family, loss=req.loss)
         if self.fmt == "ell":
             rows = np.asarray(coo.rows)
             cols = np.asarray(coo.cols)
@@ -626,6 +671,19 @@ class SolverEngine:
         # auto uids stay clear of every uid seen so far, so mixing explicit
         # SolveRequests and auto-uid'd Problems cannot collide
         self._auto_uid = max(self._auto_uid, req.uid + 1)
+        if getattr(req, "is_rcd", False):
+            # rcd runs its own 1-D loss updates — the prox knob is unused,
+            # so the batched-prox restriction does not apply; family/loss
+            # compatibility is what can actually be mis-stated
+            from repro.solvers.rcd import check_family_loss
+            check_family_loss(req.family, req.loss)
+            # rcd buckets never shard mesh-wide (the epoch body's scattered
+            # coordinate updates have no row-partitioned form); oversized
+            # requests fall through to the plain bucket path, which streams
+            # over-capacity operands exactly like primal-dual traffic
+            key = self.bucket_key(req)
+            self.queues.setdefault(key, deque()).append(req)
+            return key
         if req.prox not in BATCHED_PROX_FAMILIES:
             raise KeyError(f"prox family {req.prox!r} not servable; "
                            f"supported: {BATCHED_PROX_FAMILIES}")
@@ -815,7 +873,12 @@ class SolverEngine:
     def _new_bucket(self, key: BucketKey, s: int | None = None) -> _Bucket:
         s = self.slots if s is None else s
         m, n = key.m_pad, key.n_pad
-        if key.fmt == "ell":
+        if key.fmt == "csc":
+            # column-major pair: CSC(A) one row per COLUMN (n rows), CSC(A^T)
+            # one row per row of A — the coordinate-descent operand view
+            a_shape = (s, n, key.width)
+            at_shape = (s, m, key.width_t)
+        elif key.fmt == "ell":
             a_shape = (s, m, key.width)
             at_shape = (s, n, key.width_t)
         else:
@@ -825,9 +888,14 @@ class SolverEngine:
             at_shape = (s, -(-n // bm), key.width_t, bm, bnt)
         zeros_x = jnp.zeros((s, n), jnp.float32)
         zeros_y = jnp.zeros((s, m), jnp.float32)
-        state = PDState(xbar=zeros_x, xstar=zeros_x, yhat=zeros_y,
-                        gamma=jnp.ones((s,), jnp.float32),
-                        k=jnp.zeros((s,), jnp.int32))
+        if key.is_rcd:
+            from repro.solvers.rcd import RCDState
+            state = RCDState(xbar=zeros_x, aux=zeros_y,
+                             k=jnp.zeros((s,), jnp.int32))
+        else:
+            state = PDState(xbar=zeros_x, xstar=zeros_x, yhat=zeros_y,
+                            gamma=jnp.ones((s,), jnp.float32),
+                            k=jnp.zeros((s,), jnp.int32))
         return _Bucket(
             key=key,
             a_vals=np.zeros(a_shape, np.float32),
@@ -840,12 +908,19 @@ class SolverEngine:
             reg=np.zeros((s,), np.float32),
             tol=np.full((s,), np.inf, np.float32),
             maxit=np.zeros((s,), np.int32),
+            dim=np.ones((s,), np.int32),
+            seed=np.zeros((s,), np.int32),
             state=state, active=np.zeros((s,), bool))
 
     def _convert(self, key: BucketKey, coo: COO):
         """Host-side: pad to bucket dims, build both orientations at the
         bucket's fixed widths (numpy per-slot arrays, ready to splice)."""
         c = pad_coo(coo, key.m_pad, key.n_pad)
+        if key.fmt == "csc":
+            from repro.sparse.formats import coo_to_csc
+            fa = coo_to_csc(c, k=key.width)
+            fat = coo_to_csc(transpose_coo(c), k=key.width_t)
+            return (fa.vals, fa.rows), (fat.vals, fat.rows)
         if key.fmt == "ell":
             fa = coo_to_ell(c, k=key.width)
             fat = coo_to_ell(transpose_coo(c), k=key.width_t)
@@ -948,6 +1023,10 @@ class SolverEngine:
             bucket.reg[slot] = req.reg
             bucket.tol[slot] = req.tol
             bucket.maxit[slot] = req.max_iterations
+            if getattr(key, "is_rcd", False):
+                bucket.dim[slot] = (req.coo.n if key.family == "rcd_primal"
+                                    else req.coo.m)
+                bucket.seed[slot] = req.seed
             bucket.requests[slot] = req
             bucket.active[slot] = True
             bucket.active_dev = None
@@ -957,10 +1036,13 @@ class SolverEngine:
         return new
 
     def _device_operands(self, bucket: _Bucket) -> tuple:
-        """Device-resident (a, at, b, lg, gamma0, reg, tol, maxit); one
-        transfer per array, only after admissions dirtied the masters.
-        With a pinned bucket device the transfers target it, so the jit'd
-        bodies (which follow their committed inputs) run there too."""
+        """Device-resident (a, at, b, lg, gamma0, reg, dim, seed, tol,
+        maxit); one transfer per array, only after admissions dirtied the
+        masters.  With a pinned bucket device the transfers target it, so
+        the jit'd bodies (which follow their committed inputs) run there
+        too.  dim/seed ride along for every bucket (two (S,) int arrays)
+        so the operand tuple has one shape engine-wide; only the rcd
+        bodies read them."""
         if bucket.dirty or bucket.dev is None:
             key = bucket.key
             if bucket.slot_sharded:
@@ -978,7 +1060,13 @@ class SolverEngine:
                 put = jnp.asarray
             else:
                 put = lambda v: jax.device_put(v, bucket.device)
-            if key.fmt == "ell":
+            if key.fmt == "csc":
+                from repro.sparse.formats import StackedCSC
+                a = StackedCSC(vals=put(bucket.a_vals),
+                               rows=put(bucket.a_idx), m=key.m_pad)
+                at = StackedCSC(vals=put(bucket.at_vals),
+                                rows=put(bucket.at_idx), m=key.n_pad)
+            elif key.fmt == "ell":
                 from repro.sparse.formats import StackedELL
                 a = StackedELL(vals=put(bucket.a_vals),
                                cols=put(bucket.a_idx), n=key.n_pad)
@@ -994,7 +1082,8 @@ class SolverEngine:
                                  m=key.n_pad, n=key.m_pad)
             bucket.dev = (a, at, put(bucket.b),
                           put(bucket.lg), put(bucket.gamma0),
-                          put(bucket.reg), put(bucket.tol),
+                          put(bucket.reg), put(bucket.dim),
+                          put(bucket.seed), put(bucket.tol),
                           put(bucket.maxit))
             bucket.dirty = False
         return bucket.dev
@@ -1068,11 +1157,20 @@ class SolverEngine:
             def slot_spec(leaf):
                 return P("p", *([None] * (jnp.ndim(leaf) - 1)))
 
-            a, at, b, lg, gamma0, reg, tol, maxit = example_args
-            tree_specs = jax.tree_util.tree_map(slot_spec,
-                                                (a, at, b, lg, gamma0, reg))
-            state_specs = PDState(xbar=P("p", None), xstar=P("p", None),
-                                  yhat=P("p", None), gamma=P("p"), k=P("p"))
+            a, at, b, lg, gamma0, reg, dim, seed, tol, maxit = example_args
+            tree_specs = jax.tree_util.tree_map(
+                slot_spec, (a, at, b, lg, gamma0, reg, dim, seed))
+            # every state leaf leads with the slot axis, whatever the
+            # family's carry (PDState or RCDState) — derive the specs
+            # instead of naming the fields
+            if getattr(key, "is_rcd", False):
+                from repro.solvers.rcd import RCDState
+                state_specs = RCDState(xbar=P("p", None), aux=P("p", None),
+                                       k=P("p"))
+            else:
+                state_specs = PDState(xbar=P("p", None), xstar=P("p", None),
+                                      yhat=P("p", None), gamma=P("p"),
+                                      k=P("p"))
             out_specs = (state_specs, P("p"), P("p"))
             splice = shard_map(
                 lambda *args: self._splice_init_impl(key, *args),
@@ -1099,11 +1197,23 @@ class SolverEngine:
                                  interpret=self.interpret)
         return make_operator(fmt, self.backend, a, at)
 
-    def _splice_init_impl(self, key, a, at, b, lg, gamma0, reg, state,
-                          new_mask, active, tol, maxit):
+    def _splice_init_impl(self, key, a, at, b, lg, gamma0, reg, dim, seed,
+                          state, new_mask, active, tol, maxit):
         """Init only the freshly admitted slots (others keep their state),
         then re-check every active slot — a request that is already feasible
         at k=0 must finish with 0 iterations, like solve_tol."""
+        if getattr(key, "is_rcd", False):
+            from repro.solvers.rcd import (
+                batched_rcd_init, batched_rcd_progress, rcd_mask_state,
+            )
+            fresh = batched_rcd_init(a, at, b, family=key.family)
+            state = rcd_mask_state(new_mask, fresh, state)
+            # measure only — the zero init is exact (z = A0, w = 0), and a
+            # refresh here would recompute frozen neighbours' caches too
+            _, resid = batched_rcd_progress(a, at, b, reg, state,
+                                            family=key.family, loss=key.loss)
+            still = active & (resid >= tol) & (state.k < maxit)
+            return state, resid, still
         ops = self._operator(key, a, at).solver_ops()
         prox = batched_prox(key.prox, reg)
         fresh = batched_init(ops, prox, b, lg, gamma0, self.algorithm)
@@ -1112,8 +1222,8 @@ class SolverEngine:
         still = active & (feas >= tol) & (state.k < maxit)
         return state, feas, still
 
-    def _advance_impl(self, key, a, at, b, lg, gamma0, reg, state, active,
-                      tol, maxit, steps=None):
+    def _advance_impl(self, key, a, at, b, lg, gamma0, reg, dim, seed,
+                      state, active, tol, maxit, steps=None):
         """``steps`` (default check_every) masked steps + per-slot
         feasibility verdicts.  Each slot additionally freezes at its own
         max_iterations inside the block (solve_tol's clamped inner loop,
@@ -1121,9 +1231,31 @@ class SolverEngine:
         Streamed buckets advance a check block in several chunks (operands
         re-uploaded between chunks); the chunked trajectory is identical —
         only the final chunk's verdicts are harvested."""
+        steps = self.check_every if steps is None else steps
+        if getattr(key, "is_rcd", False):
+            from repro.solvers.rcd import (
+                batched_rcd_progress, batched_rcd_step, rcd_mask_state,
+            )
+            kern = "pallas" if self.backend == "pallas" else None
+
+            def one(_, st):
+                return batched_rcd_step(
+                    a, at, b, reg, dim, seed, st, family=key.family,
+                    loss=key.loss, mask=active & (st.k < maxit),
+                    kernel=kern, interpret=self.interpret)
+
+            state = jax.lax.fori_loop(0, steps, one, state)
+            # the check refreshes the incremental cache (z = Ax / the dual
+            # w) before measuring, so drift can never freeze a wrong slot;
+            # frozen neighbours keep their exact bits via the mask
+            fresh, resid = batched_rcd_progress(a, at, b, reg, state,
+                                                family=key.family,
+                                                loss=key.loss)
+            state = rcd_mask_state(active, fresh, state)
+            still = active & (resid >= tol) & (state.k < maxit)
+            return state, resid, still
         ops = self._operator(key, a, at).solver_ops()
         prox = batched_prox(key.prox, reg)
-        steps = self.check_every if steps is None else steps
 
         def one(_, st):
             return batched_step(ops, prox, b, lg, gamma0, st, self.algorithm,
@@ -1134,8 +1266,8 @@ class SolverEngine:
         still = active & (feas >= tol) & (state.k < maxit)
         return state, feas, still
 
-    def _advance_fused_impl(self, key, a, at, b, lg, gamma0, reg, state,
-                            active, tol, maxit):
+    def _advance_fused_impl(self, key, a, at, b, lg, gamma0, reg, dim, seed,
+                            state, active, tol, maxit):
         """One-kernel check block: the whole ``check_every`` inner loop
         (forward spmv, fused dual update, prox, per-slot freeze) runs inside
         a single batch-grid Pallas launch with the bucket's operands
@@ -1155,6 +1287,8 @@ class SolverEngine:
         if not (isinstance(key, BucketKey) and bucket.resident
                 and not bucket.slot_sharded):
             return False
+        if getattr(key, "is_rcd", False):
+            return False       # rcd epochs are their own body, never fused
         if key.prox not in FUSED_CHECK_PROXES:
             return False
         return self.backend == "pallas" if self.fused is None else self.fused
@@ -1227,13 +1361,13 @@ class SolverEngine:
                              bucket.state, jnp.asarray(new),
                              self._active_mask(key, bucket), tol, maxit)
         args = self._device_operands(bucket)
-        a, at, b, lg, gamma0, reg, tol, maxit = args
+        a, at, b, lg, gamma0, reg, dim, seed, tol, maxit = args
         if bucket.slot_sharded:
             splice_fn, _ = self._slotshard_fns(key, bucket.slot_mesh, args)
-            return splice_fn(a, at, b, lg, gamma0, reg, bucket.state,
-                             jnp.asarray(new),
+            return splice_fn(a, at, b, lg, gamma0, reg, dim, seed,
+                             bucket.state, jnp.asarray(new),
                              self._active_mask(key, bucket), tol, maxit)
-        call = (a, at, b, lg, gamma0, reg, bucket.state,
+        call = (a, at, b, lg, gamma0, reg, dim, seed, bucket.state,
                 jnp.asarray(new), self._active_mask(key, bucket), tol, maxit)
         if bucket.resident:
             return self._aot_exe("splice", key, bucket, call)(*call)
@@ -1258,22 +1392,23 @@ class SolverEngine:
             base, extra = divmod(self.check_every, chunks)
             out = None
             for i in range(chunks):
-                a, at, b, lg, gamma0, reg, tol, maxit = \
+                a, at, b, lg, gamma0, reg, dim, seed, tol, maxit = \
                     self._device_operands(bucket)
                 out = self._advance(
-                    key, a, at, b, lg, gamma0, reg, bucket.state,
+                    key, a, at, b, lg, gamma0, reg, dim, seed, bucket.state,
                     self._active_mask(key, bucket), tol, maxit,
                     steps=base + (1 if i < extra else 0))
                 bucket.state = out[0]
                 bucket.dev = None
             return out
         args = self._device_operands(bucket)
-        a, at, b, lg, gamma0, reg, tol, maxit = args
+        a, at, b, lg, gamma0, reg, dim, seed, tol, maxit = args
         if bucket.slot_sharded:
             _, advance_fn = self._slotshard_fns(key, bucket.slot_mesh, args)
-            return advance_fn(a, at, b, lg, gamma0, reg, bucket.state,
+            return advance_fn(a, at, b, lg, gamma0, reg, dim, seed,
+                              bucket.state,
                               self._active_mask(key, bucket), tol, maxit)
-        call = (a, at, b, lg, gamma0, reg, bucket.state,
+        call = (a, at, b, lg, gamma0, reg, dim, seed, bucket.state,
                 self._active_mask(key, bucket), tol, maxit)
         kind = "advance_fused" if self._use_fused(key, bucket) else "advance"
         return self._aot_exe(kind, key, bucket, call)(*call)

@@ -1,0 +1,23 @@
+# Solver families: the A1/A2 primal-dual smoothing bodies (re-homed from
+# repro.core.solver) and the randomized coordinate-descent pair (primal RCD
+# and dual SDCA over the column-major CSC operand view), all behind one
+# SolverFamily registry the planner's face-off rule selects from.
+# See DESIGN.md "Solver families".
+from repro.solvers.family import (
+    FAMILIES, FAMILY_NAMES, SolverFamily, get_family, register_family,
+)
+from repro.solvers import primal_dual as _primal_dual      # noqa: F401
+from repro.solvers import rcd as _rcd                      # noqa: F401
+from repro.solvers.rcd import (
+    FAMILY_LOSSES, LOSSES, RCDState, batched_rcd_init, batched_rcd_progress,
+    batched_rcd_solve_tol, batched_rcd_step, dense_reference, pick_coordinate,
+    rcd_mask_state, rcd_solve_tol, rcd_updates_per_epoch, reference_objective,
+)
+
+__all__ = [
+    "FAMILIES", "FAMILY_LOSSES", "FAMILY_NAMES", "LOSSES", "RCDState",
+    "SolverFamily", "batched_rcd_init", "batched_rcd_progress",
+    "batched_rcd_solve_tol", "batched_rcd_step", "dense_reference",
+    "get_family", "pick_coordinate", "rcd_mask_state", "rcd_solve_tol",
+    "rcd_updates_per_epoch", "reference_objective", "register_family",
+]

@@ -1,0 +1,58 @@
+"""The SolverFamily protocol: one registry over every iterate-body in the
+repo — the A1/A2 primal-dual smoothing pair (kind="primal_dual") and the
+randomized coordinate-descent pair (kind="rcd").
+
+A family is a named bundle of batched masked callables with a shared
+life-cycle contract the serving engine relies on:
+
+  init(...)        -> state with a (B, n_pad) ``.xbar`` and a (B,) ``.k``
+  step(...)        -> one masked engine iteration (A2 step / RCD epoch)
+  progress(...)    -> (refreshed state, per-slot residual)  [kind="rcd"]
+  mask_state(m, new, old) -> per-slot freeze
+  solve_tol(...)   -> masked early-exit driver
+
+Signatures beyond that contract differ by kind — primal-dual bodies take
+(ops, prox, b, lg, gamma0), coordinate bodies take the column-major operand
+arrays (a, at, b, reg, dim, seed) — so the callables are stored rather than
+abstracted: call sites branch on ``kind`` and get the real function with no
+adapter layer in the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+FAMILY_NAMES = ("a1", "a2", "rcd_primal", "rcd_dual")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverFamily:
+    name: str                       # registry key ("a2", "rcd_primal", ...)
+    kind: str                       # "primal_dual" | "rcd"
+    side: str                       # "saddle" | "primal" | "dual"
+    losses: tuple                   # loss names served ("" = constraint)
+    state_cls: type                 # PDState | RCDState
+    init: Callable[..., Any]
+    step: Callable[..., Any]
+    progress: Callable[..., Any] | None
+    mask_state: Callable[..., Any]
+    solve_tol: Callable[..., Any]
+
+    def serves(self, loss: str) -> bool:
+        return loss in self.losses
+
+
+FAMILIES: dict[str, SolverFamily] = {}
+
+
+def register_family(family: SolverFamily) -> SolverFamily:
+    FAMILIES[family.name] = family
+    return family
+
+
+def get_family(name: str) -> SolverFamily:
+    try:
+        return FAMILIES[name]
+    except KeyError:
+        raise KeyError(f"unknown solver family {name!r}; "
+                       f"have {sorted(FAMILIES)}") from None

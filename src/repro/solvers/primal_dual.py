@@ -1,0 +1,37 @@
+"""The A1/A2 primal-dual smoothing bodies, re-homed as SolverFamily records.
+
+The math stays in ``repro.core.solver`` (the paper-faithful implementation
+every existing call site imports); this module wraps the batched masked
+entry points behind the ``SolverFamily`` protocol so the planner and the
+serving engine can treat "a2" and "rcd_primal" as peers in one registry.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+from repro.core import solver as _core
+from repro.solvers.family import SolverFamily, register_family
+
+
+def _pd_family(algorithm: str) -> SolverFamily:
+    return SolverFamily(
+        name=algorithm,
+        kind="primal_dual",
+        side="saddle",
+        losses=("",),           # constraint problems min f(x) s.t. Ax = b
+        state_cls=_core.PDState,
+        init=partial(_core.batched_init, algorithm=algorithm),
+        step=partial(_core.batched_step, algorithm=algorithm),
+        progress=None,          # feasibility lives on the ops, see below
+        mask_state=_core.mask_state,
+        solve_tol=partial(_core.batched_solve_tol, algorithm=algorithm),
+    )
+
+
+A1 = register_family(_pd_family("a1"))
+A2 = register_family(_pd_family("a2"))
+
+# The residual for this family is constraint feasibility, computed from the
+# operator pair rather than the operand arrays (signature differs from the
+# RCD progress on purpose — the engine branches on ``kind``).
+batched_feasibility = _core.batched_feasibility

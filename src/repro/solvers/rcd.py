@@ -1,0 +1,460 @@
+"""Randomized coordinate-descent solver family (primal RCD / dual SDCA).
+
+Two coordinate bodies over the column-major ``CSC``/``StackedCSC`` operand
+view (repro.sparse.formats):
+
+  rcd_primal — randomized coordinate descent on the primal
+      lasso     min_x 1/2 ||Ax - b||^2 + reg ||x||_1
+      logistic  min_x sum_i log(1 + exp(-b_i a_i^T x)) + reg/2 ||x||^2
+    One update picks column j, gathers its stored rows out of ``CSC(A)``,
+    takes the 1-D prox/Newton step at the per-column curvature
+    ``L_j = curv * ||A_j||^2``, and scatter-adds the change into the
+    residual cache ``z = Ax``.
+
+  rcd_dual — stochastic dual coordinate ascent (SDCA)
+      svm       min_w sum_i max(0, 1 - b_i a_i^T w) + reg/2 ||w||^2
+      logistic  min_w sum_i log(1 + exp(-b_i a_i^T w)) + reg/2 ||w||^2
+    One update picks example i, gathers row a_i out of ``CSC(A^T)``, solves
+    the 1-D dual subproblem exactly (closed form for hinge, a short damped
+    Newton for the entropy term), and maintains
+    ``w = (1/reg) sum_i beta_i b_i a_i`` incrementally.
+
+Batched masked variants (``batched_rcd_init/step/solve_tol``) mirror
+``repro.core.solver``'s A1/A2 batched API so RCD requests bucket, splice,
+and early-exit through the serving engine unchanged: ``RCDState`` keeps the
+primal iterate in ``.xbar`` and the epoch count in ``.k`` (the fields the
+engine harvests), coordinates are drawn from a counter-based hash of
+``(seed, k * updates + t)`` so replay after a splice is deterministic, and
+``rcd_mask_state`` freezes retired slots exactly like ``mask_state``.
+
+One engine "iteration" is one EPOCH: ``updates`` coordinate steps (the
+padded coordinate count, a static loop bound), with the picked index drawn
+modulo the slot's true dimension so padding is never touched.  Residuals
+are fixed-point optimality measures (see ``batched_rcd_progress``), checked
+after a full refresh of the cached quantity (z or w) so float drift from
+thousands of incremental scatter-adds cannot mask convergence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import StackedCSC
+
+LOSSES = ("lasso", "svm", "logistic")
+FAMILY_LOSSES = {"rcd_primal": ("lasso", "logistic"),
+                 "rcd_dual": ("svm", "logistic")}
+DEFAULT_RCD_CHECK_EVERY = 4    # epochs between residual checks (~1 matvec each)
+_HASH_MULT = np.uint32(2654435761)    # Knuth multiplicative hash
+_NEWTON_STEPS = 8
+_EPS = 1e-6
+
+
+class RCDState(NamedTuple):
+    """Coordinate-descent carry, engine-compatible by field name.
+
+    xbar — the primal iterate: x (rcd_primal) or w (rcd_dual), (B, n_pad).
+    aux  — the cached pairing: z = Ax (rcd_primal) or the dual variables
+           beta (rcd_dual), (B, m_pad).
+    k    — completed epochs per slot, (B,) int32 (the engine's iteration
+           count; also the replay offset for the coordinate hash).
+    """
+    xbar: jax.Array
+    aux: jax.Array
+    k: jax.Array
+
+
+def check_family_loss(family: str, loss: str) -> None:
+    losses = FAMILY_LOSSES.get(family)
+    if losses is None:
+        raise ValueError(f"unknown RCD family {family!r}; "
+                         f"have {sorted(FAMILY_LOSSES)}")
+    if loss not in losses:
+        raise ValueError(f"loss {loss!r} is not served by {family}: "
+                         f"{'lasso has no strongly-convex dual' if loss == 'lasso' else 'the hinge is nonsmooth in the primal' if loss == 'svm' else f'choose from {losses}'}")
+
+
+def pick_coordinate(seed: jax.Array, t: jax.Array, dim: jax.Array) -> jax.Array:
+    """Counter-based coordinate draw: j = hash(seed + t) mod dim, (B,) int32.
+
+    Stateless (no PRNG key threading through the engine's frozen-slot
+    masters) and replayable — a respliced slot with the same (seed, k)
+    visits the same coordinates.  ``dim`` is the slot's TRUE dimension, so
+    bucket padding is never selected; inactive slots carry dim=1.
+    """
+    h = (seed.astype(jnp.uint32) + t.astype(jnp.uint32)) * _HASH_MULT
+    return (h % dim.astype(jnp.uint32)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Single-coordinate update bodies (shared by the jnp path and the Pallas
+# kernel — repro.kernels.rcd_update loads refs and calls these on values)
+# --------------------------------------------------------------------------
+
+def primal_coord_body(col_v, col_r, x, z, b, j, reg, loss: str):
+    """One primal RCD update at column j; returns (new x, new z).
+
+    col_v/col_r: (k,) stored values / row indices of column j (CSC(A) row j).
+    """
+    zj = jnp.take(z, col_r)
+    bj = jnp.take(b, col_r)
+    if loss == "lasso":
+        lprime = zj - bj
+        curv = 1.0
+    else:                                   # logistic
+        lprime = -bj * jax.nn.sigmoid(-bj * zj)
+        curv = 0.25
+    g = jnp.sum(col_v * lprime)
+    sq = jnp.sum(col_v * col_v)
+    el = curv * sq
+    xj = jnp.take(x, j)
+    if loss == "lasso":
+        safe = jnp.maximum(el, _EPS)
+        u = xj - g / safe
+        newx = jnp.sign(u) * jnp.maximum(jnp.abs(u) - reg / safe, 0.0)
+        delta = jnp.where(el > 0.0, newx - xj, 0.0)
+    else:                                   # logistic + l2: exact majorizer
+        newx = (el * xj - g) / (el + reg)
+        delta = newx - xj
+    x = x.at[j].set(xj + delta)
+    z = z.at[col_r].add(col_v * delta)      # padding rows: val=0, add 0 to z[0]
+    return x, z
+
+
+def dual_coord_body(row_v, row_c, w, beta, b, i, reg, loss: str):
+    """One SDCA update at example i; returns (new w, new beta).
+
+    row_v/row_c: (k,) stored values / column indices of row i (CSC(A^T) row i).
+    """
+    bi = jnp.take(b, i)
+    margin = bi * jnp.sum(row_v * jnp.take(w, row_c))
+    sq = jnp.sum(row_v * row_v)
+    bet = jnp.take(beta, i)
+    if loss == "svm":
+        step = reg * (1.0 - margin) / jnp.maximum(sq, _EPS)
+        delta = jnp.where(sq > 0.0,
+                          jnp.clip(bet + step, 0.0, 1.0) - bet, 0.0)
+    else:                                   # logistic: damped Newton on
+        p0 = jnp.clip(jax.nn.sigmoid(-margin), _EPS, 1.0 - _EPS)
+
+        def newton(_, p):                   # f(p) = log((1-p)/p) - margin
+            f = (jnp.log1p(-p) - jnp.log(p)
+                 - (margin + (p - bet) * sq / reg))
+            fp = -1.0 / (p * (1.0 - p)) - sq / reg
+            return jnp.clip(p - f / fp, _EPS, 1.0 - _EPS)
+
+        p = jax.lax.fori_loop(0, _NEWTON_STEPS, newton, p0)
+        delta = jnp.where(sq > 0.0, p - bet, 0.0)
+    beta = beta.at[i].set(bet + delta)
+    w = w.at[row_c].add((delta * bi / reg) * row_v)
+    return w, beta
+
+
+def _batched_coord_update(vals, rows, xbar, aux, b, j, reg, family: str,
+                          loss: str):
+    """vmap of the per-slot body over the bucket: one coordinate update in
+    every slot (frozen slots are restored by ``rcd_mask_state`` afterwards).
+    """
+    def one(v, r, xb, ax, bb, jj, rg):
+        cv = jax.lax.dynamic_index_in_dim(v, jj, axis=0, keepdims=False)
+        cr = jax.lax.dynamic_index_in_dim(r, jj, axis=0, keepdims=False)
+        if family == "rcd_primal":
+            return primal_coord_body(cv, cr, xb, ax, bb, jj, rg, loss)
+        w, beta = dual_coord_body(cv, cr, xb, ax, bb, jj, rg, loss)
+        return w, beta
+
+    return jax.vmap(one)(vals, rows, xbar, aux, b, j, reg)
+
+
+# --------------------------------------------------------------------------
+# Batched masked API (engine-shaped, mirrors core.solver.batched_*)
+# --------------------------------------------------------------------------
+
+def rcd_mask_state(mask: jax.Array, new: RCDState, old: RCDState) -> RCDState:
+    """Per-slot freeze: keep ``new`` where mask is True, ``old`` elsewhere."""
+    m2 = mask[:, None]
+    return RCDState(xbar=jnp.where(m2, new.xbar, old.xbar),
+                    aux=jnp.where(m2, new.aux, old.aux),
+                    k=jnp.where(mask, new.k, old.k))
+
+
+def batched_rcd_init(a: StackedCSC, at: StackedCSC, b, *,
+                     family: str = "rcd_primal") -> RCDState:
+    """Zero start: x=0, z=A0=0 (primal) / beta=0, w=0 (dual) — exact, so a
+    spliced-in slot needs no refresh before its first epoch."""
+    bsz = a.batch
+    return RCDState(xbar=jnp.zeros((bsz, a.n), jnp.float32),
+                    aux=jnp.zeros((bsz, a.m), jnp.float32),
+                    k=jnp.zeros((bsz,), jnp.int32))
+
+
+def rcd_updates_per_epoch(a: StackedCSC, family: str) -> int:
+    """Static epoch length: the PADDED coordinate count (n_pad primal /
+    m_pad dual) so the fori_loop bound is bucket-constant; draws land in
+    the true range via ``dim``."""
+    return int(a.n) if family == "rcd_primal" else int(a.m)
+
+
+def batched_rcd_step(a: StackedCSC, at: StackedCSC, b, reg, dim, seed,
+                     state: RCDState, *, family: str, loss: str,
+                     mask: jax.Array | None = None,
+                     kernel: str | None = None,
+                     interpret: bool | None = None) -> RCDState:
+    """One EPOCH per slot: ``updates`` hashed coordinate steps, then k += 1.
+
+    a/at — StackedCSC of A and A^T (both orientations, gather-only).
+    b    — (B, m_pad) targets/labels; reg, dim, seed — (B,) per-slot masters.
+    mask — slots to advance; frozen slots are restored bit-for-bit.
+    kernel — "pallas" routes each coordinate update through the
+             repro.kernels.rcd_update gather-update kernel.
+    """
+    vals, rows = ((a.vals, a.rows) if family == "rcd_primal"
+                  else (at.vals, at.rows))
+    updates = rcd_updates_per_epoch(a, family)
+    reg = jnp.broadcast_to(jnp.asarray(reg, jnp.float32), state.k.shape)
+    if kernel == "pallas":
+        from repro.kernels.rcd_update import rcd_update as _kernel_update
+
+        def update(xbar, aux, j):
+            return _kernel_update(vals, rows, xbar, aux, b, j, reg,
+                                  family=family, loss=loss,
+                                  interpret=interpret)
+    else:
+        def update(xbar, aux, j):
+            return _batched_coord_update(vals, rows, xbar, aux, b, j, reg,
+                                         family, loss)
+
+    def body(t, carry):
+        xbar, aux = carry
+        j = pick_coordinate(seed, state.k * updates + t, dim)
+        return update(xbar, aux, j)
+
+    xbar, aux = jax.lax.fori_loop(0, updates, body, (state.xbar, state.aux))
+    new = RCDState(xbar=xbar, aux=aux, k=state.k + 1)
+    if mask is not None:
+        new = rcd_mask_state(mask, new, state)
+    return new
+
+
+def batched_rcd_progress(a: StackedCSC, at: StackedCSC, b, reg,
+                         state: RCDState, *, family: str, loss: str):
+    """Refresh the cached quantity and measure optimality -> (state, resid).
+
+    The refresh recomputes z = Ax (primal) / w = (1/reg) A^T(beta * b)
+    (dual) from scratch, killing incremental-update drift.  Residuals are
+    relative fixed-point gaps — zero exactly at optimality:
+
+      lasso      x = soft(x - A^T(Ax - b), reg)
+      logistic-P x = (x - A^T l'(Ax)) / (1 + reg)      (grad + reg x = 0)
+      svm        beta = clip(beta + (1 - margin), 0, 1)
+      logistic-D beta = sigmoid(-margin)
+
+    Dual residuals are masked to rows with ||a_i|| > 0 so bucket padding
+    (all-zero rows) cannot hold a slot open.
+    """
+    from repro.sparse.linalg import stacked_csc_gather_matvec
+
+    reg = jnp.asarray(reg, jnp.float32)
+    if reg.ndim == 1:
+        reg2 = reg[:, None]
+    else:
+        reg2 = reg
+    if family == "rcd_primal":
+        x = state.xbar
+        z = stacked_csc_gather_matvec(at, x)              # A x
+        if loss == "lasso":
+            grad = stacked_csc_gather_matvec(a, z - b)    # A^T (Ax - b)
+            u = x - grad
+            target = jnp.sign(u) * jnp.maximum(jnp.abs(u) - reg2, 0.0)
+        else:
+            lp = -b * jax.nn.sigmoid(-b * z)
+            grad = stacked_csc_gather_matvec(a, lp)
+            target = (x - grad) / (1.0 + reg2)
+        num = jnp.linalg.norm(x - target, axis=-1)
+        den = jnp.maximum(1.0, jnp.linalg.norm(target, axis=-1))
+        return RCDState(xbar=x, aux=z, k=state.k), num / den
+    beta = state.aux
+    w = stacked_csc_gather_matvec(a, beta * b) / reg2     # (1/reg) A^T(b.beta)
+    margin = b * stacked_csc_gather_matvec(at, w)         # b * (A w)
+    rowsq = jnp.sum(at.vals * at.vals, axis=2)            # (B, m_pad)
+    live = rowsq > 0.0
+    if loss == "svm":
+        target = jnp.clip(beta + (1.0 - margin), 0.0, 1.0)
+    else:
+        target = jax.nn.sigmoid(-margin)
+    gap = jnp.where(live, beta - target, 0.0)
+    num = jnp.linalg.norm(gap, axis=-1)
+    den = jnp.maximum(1.0, jnp.linalg.norm(jnp.where(live, target, 0.0),
+                                           axis=-1))
+    return RCDState(xbar=w, aux=beta, k=state.k), num / den
+
+
+def batched_rcd_solve_tol(a: StackedCSC, at: StackedCSC, b, reg, dim, seed, *,
+                          family: str, loss: str, tol: float = 1e-6,
+                          max_iterations: int = 1000,
+                          check_every: int | None = None,
+                          active: jax.Array | None = None,
+                          kernel: str | None = None,
+                          interpret: bool | None = None):
+    """Masked early-exit driver (the RCD twin of ``batched_solve_tol``):
+    blocks of ``check_every`` epochs between residual checks; converged /
+    exhausted / inactive slots freeze while the rest continue.
+
+    Returns (state, resid) — state.k holds per-slot epochs consumed.
+    """
+    check_family_loss(family, loss)
+    ce = DEFAULT_RCD_CHECK_EVERY if check_every is None else check_every
+    maxit = jnp.asarray(max_iterations, jnp.int32)
+    state = batched_rcd_init(a, at, b, family=family)
+    _, resid = batched_rcd_progress(a, at, b, reg, state, family=family,
+                                    loss=loss)
+    act = (jnp.ones(state.k.shape, bool) if active is None
+           else jnp.asarray(active, bool))
+    still = act & (resid >= tol) & (maxit > 0)
+
+    def cond(carry):
+        _, _, still = carry
+        return jnp.any(still)
+
+    def body(carry):
+        state, resid, still = carry
+
+        def inner(_, s):
+            return batched_rcd_step(a, at, b, reg, dim, seed, s,
+                                    family=family, loss=loss,
+                                    mask=still & (s.k < maxit),
+                                    kernel=kernel, interpret=interpret)
+
+        state = jax.lax.fori_loop(0, ce, inner, state)
+        fresh, resid2 = batched_rcd_progress(a, at, b, reg, state,
+                                             family=family, loss=loss)
+        state = rcd_mask_state(still, fresh, state)
+        resid = jnp.where(still, resid2, resid)
+        still = still & (resid >= tol) & (state.k < maxit)
+        return state, resid, still
+
+    state, resid, _ = jax.lax.while_loop(cond, body, (state, resid, still))
+    return state, resid
+
+
+# --------------------------------------------------------------------------
+# Single-problem front door (B=1 over the batched bodies)
+# --------------------------------------------------------------------------
+
+def rcd_solve_tol(coo, b, reg, *, family: str, loss: str, seed: int = 0,
+                  tol: float = 1e-6, max_iterations: int = 1000,
+                  check_every: int | None = None, kernel: str | None = None,
+                  interpret: bool | None = None):
+    """Solve one problem given its COO: returns (solution, resid, epochs).
+
+    ``solution`` is the primal vector (x or w) of length coo.n.
+    """
+    from repro.sparse.formats import coo_to_csc, stack_cscs, transpose_coo
+
+    a = stack_cscs([coo_to_csc(coo)])
+    at = stack_cscs([coo_to_csc(transpose_coo(coo))])
+    bb = jnp.asarray(b, jnp.float32)[None, :]
+    dim = jnp.asarray([coo.n if family == "rcd_primal" else coo.m], jnp.int32)
+    seeds = jnp.asarray([seed], jnp.int32)
+    regs = jnp.asarray([reg], jnp.float32)
+    state, resid = batched_rcd_solve_tol(
+        a, at, bb, regs, dim, seeds, family=family, loss=loss, tol=tol,
+        max_iterations=max_iterations, check_every=check_every,
+        kernel=kernel, interpret=interpret)
+    return state.xbar[0], float(resid[0]), int(state.k[0])
+
+
+# --------------------------------------------------------------------------
+# Dense float64 reference (the oracle the RCD bodies are tested against —
+# deliberately dependency-free: proximal/projected gradient, no sklearn)
+# --------------------------------------------------------------------------
+
+def dense_reference(A, b, reg, loss: str, max_iterations: int = 20_000,
+                    tol: float = 1e-10) -> np.ndarray:
+    """Primal minimizer by FISTA (lasso/logistic) or projected dual ascent
+    (svm), all in numpy float64.  Small problems only — tests and docs."""
+    A = np.asarray(A, np.float64)
+    b = np.asarray(b, np.float64)
+    m, n = A.shape
+    lip_a = float(np.linalg.norm(A, 2)) ** 2 or 1.0
+    if loss == "svm":                       # box QP on the dual
+        beta = np.zeros(m)
+        step = reg / (lip_a * max(1.0, float(np.max(b * b))) or 1.0)
+        for _ in range(max_iterations):
+            w = A.T @ (beta * b) / reg
+            grad = 1.0 - b * (A @ w)
+            nxt = np.clip(beta + step * grad, 0.0, 1.0)
+            if np.linalg.norm(nxt - beta) <= tol * max(1.0, np.linalg.norm(beta)):
+                beta = nxt
+                break
+            beta = nxt
+        return A.T @ (beta * b) / reg
+
+    def grad_smooth(x):
+        if loss == "lasso":
+            return A.T @ (A @ x - b)
+        z = A @ x
+        s = 1.0 / (1.0 + np.exp(b * z))     # sigmoid(-b z)
+        return A.T @ (-b * s) + reg * x
+
+    lip = lip_a if loss == "lasso" else 0.25 * lip_a + reg
+    x = np.zeros(n)
+    y, t = x.copy(), 1.0
+    for _ in range(max_iterations):
+        g = grad_smooth(y)
+        u = y - g / lip
+        if loss == "lasso":
+            nxt = np.sign(u) * np.maximum(np.abs(u) - reg / lip, 0.0)
+        else:
+            nxt = u
+        t2 = 0.5 * (1.0 + np.sqrt(1.0 + 4.0 * t * t))
+        y = nxt + ((t - 1.0) / t2) * (nxt - x)
+        if np.linalg.norm(nxt - x) <= tol * max(1.0, np.linalg.norm(x)):
+            x = nxt
+            break
+        x, t = nxt, t2
+    return x
+
+
+# --------------------------------------------------------------------------
+# Family registration
+# --------------------------------------------------------------------------
+
+from functools import partial  # noqa: E402
+
+from repro.solvers.family import SolverFamily, register_family  # noqa: E402
+
+
+def _rcd_family(name: str, side: str) -> SolverFamily:
+    # ``family=`` is bound here; ``loss=`` stays free (it is per-request)
+    return SolverFamily(
+        name=name, kind="rcd", side=side, losses=FAMILY_LOSSES[name],
+        state_cls=RCDState,
+        init=partial(batched_rcd_init, family=name),
+        step=partial(batched_rcd_step, family=name),
+        progress=partial(batched_rcd_progress, family=name),
+        mask_state=rcd_mask_state,
+        solve_tol=partial(batched_rcd_solve_tol, family=name))
+
+
+RCD_PRIMAL = register_family(_rcd_family("rcd_primal", "primal"))
+RCD_DUAL = register_family(_rcd_family("rcd_dual", "dual"))
+
+
+def reference_objective(A, b, reg, loss: str, x) -> float:
+    """The primal objective value at x (float64; shared by tests/bench)."""
+    A = np.asarray(A, np.float64)
+    b = np.asarray(b, np.float64)
+    x = np.asarray(x, np.float64)
+    z = A @ x
+    if loss == "lasso":
+        return float(0.5 * np.sum((z - b) ** 2) + reg * np.sum(np.abs(x)))
+    if loss == "svm":
+        return float(np.sum(np.maximum(0.0, 1.0 - b * z))
+                     + 0.5 * reg * np.sum(x * x))
+    return float(np.sum(np.log1p(np.exp(-np.abs(b * z)))
+                        + np.maximum(-b * z, 0.0))
+                 + 0.5 * reg * np.sum(x * x))

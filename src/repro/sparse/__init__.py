@@ -1,14 +1,16 @@
 from repro.sparse.formats import (
-    BCSR, COO, ELL, BandedELL, StackedBCSR, StackedELL, banded_spec,
-    banded_to_dense, bcsr_spec, bcsr_to_coo, bcsr_to_dense, coo_to_banded,
-    coo_to_bcsr, coo_bcsr_width, coo_to_dense, coo_to_ell, dense_to_coo,
-    ell_spec, ell_to_coo, ell_to_dense, pad_coo, stack_bcsrs, stack_ells,
+    BCSR, COO, CSC, ELL, BandedELL, StackedBCSR, StackedCSC, StackedELL,
+    banded_spec, banded_to_dense, bcsr_spec, bcsr_to_coo, bcsr_to_dense,
+    coo_to_banded, coo_to_bcsr, coo_bcsr_width, coo_to_csc, coo_to_dense,
+    coo_to_ell, csc_to_dense, dense_to_coo, ell_spec, ell_to_coo,
+    ell_to_dense, pad_coo, stack_bcsrs, stack_cscs, stack_ells,
     transpose_coo,
 )
 from repro.sparse.linalg import (
     banded_rmatvec, bcsr_matvec, bcsr_rmatvec, col_norms_sq, coo_matvec,
-    coo_rmatvec, ell_col_norms_sq, ell_matvec, ell_rmatvec,
-    stacked_bcsr_matvec, stacked_ell_matvec,
+    coo_rmatvec, csc_gather_matvec, ell_col_norms_sq, ell_matvec,
+    ell_rmatvec, stacked_bcsr_matvec, stacked_csc_gather_matvec,
+    stacked_ell_matvec,
 )
 from repro.sparse.partition import (
     block_ell_spec, block_partitioned_ell, col_partitioned_ell, pad_vector,

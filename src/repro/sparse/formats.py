@@ -208,6 +208,71 @@ class StackedBCSR:
         return -(-self.n // self.bn)
 
 
+@partial(jax.tree_util.register_dataclass, data_fields=["vals", "rows"],
+         meta_fields=["m"])
+@dataclasses.dataclass
+class CSC:
+    """Column-major padded sparse: one fixed-width row per COLUMN.
+
+    vals/rows: (n, k) — entry ``(j, s)`` is the s-th stored nonzero of
+    column j, ``rows[j, s]`` its row index (padding: row=0, val=0).
+    Structurally this is ``ELL(A^T)``; it exists as its own type because
+    the coordinate-descent solver family (repro.solvers.rcd) indexes
+    OPERAND COLUMNS — one dynamic-slice gather per picked coordinate —
+    which the row-major ELL layout cannot serve contiguously.
+    """
+
+    vals: jax.Array
+    rows: jax.Array
+    m: int               # logical row count of A
+
+    @property
+    def n(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.vals.shape[1]
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["vals", "rows"],
+         meta_fields=["m"])
+@dataclasses.dataclass
+class StackedCSC:
+    """B independent CSC matrices of identical padded shape.
+
+    vals/rows: (B, n, k); all matrices share the logical row count ``m``
+    (padding entries have row=0, val=0 and contribute nothing).
+    """
+
+    vals: jax.Array
+    rows: jax.Array
+    m: int
+
+    @property
+    def batch(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def k(self) -> int:
+        return self.vals.shape[2]
+
+
+def stack_cscs(cscs: list[CSC], m: int | None = None) -> StackedCSC:
+    """Stack same-shape CSC matrices along a new leading batch axis."""
+    shapes = {tuple(c.vals.shape) for c in cscs}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack ragged CSC shapes {sorted(shapes)}; "
+                         "pad to a common (n, k) first")
+    m = m if m is not None else max(c.m for c in cscs)
+    return StackedCSC(vals=jnp.stack([c.vals for c in cscs]),
+                      rows=jnp.stack([c.rows for c in cscs]), m=m)
+
+
 def stack_ells(ells: list[ELL], n: int | None = None) -> StackedELL:
     """Stack same-shape ELL matrices along a new leading batch axis."""
     shapes = {tuple(e.vals.shape) for e in ells}
@@ -282,6 +347,22 @@ def coo_to_ell(a: COO, k: int | None = None, pad_to: int = 1) -> ELL:
     ev[rows, slot] = vals
     ec[rows, slot] = cols
     return ELL(vals=jnp.asarray(ev), cols=jnp.asarray(ec), n=a.n)
+
+
+def coo_to_csc(a: COO, k: int | None = None, pad_to: int = 1) -> CSC:
+    """Pad each COLUMN to the max column-nnz (or given k).  Implemented as
+    ``coo_to_ell`` on the transpose, rewrapped — a CSC of A and an ELL of
+    A^T are the same arrays under different index names."""
+    e = coo_to_ell(transpose_coo(a), k=k, pad_to=pad_to)
+    return CSC(vals=e.vals, rows=e.cols, m=a.m)
+
+
+def csc_to_dense(a: CSC) -> np.ndarray:
+    out = np.zeros((a.m, a.n), dtype=np.asarray(a.vals).dtype)
+    cols = np.repeat(np.arange(a.n), a.k)
+    np.add.at(out, (np.asarray(a.rows).reshape(-1), cols),
+              np.asarray(a.vals).reshape(-1))
+    return out
 
 
 def transpose_coo(a: COO) -> COO:

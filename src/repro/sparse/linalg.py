@@ -9,7 +9,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.sparse.formats import BCSR, COO, ELL, BandedELL, StackedBCSR, StackedELL
+from repro.sparse.formats import (
+    BCSR, COO, CSC, ELL, BandedELL, StackedBCSR, StackedCSC, StackedELL,
+)
 
 
 def ell_matvec(a: ELL, x: jax.Array) -> jax.Array:
@@ -80,6 +82,29 @@ def stacked_bcsr_matvec(a: StackedBCSR, x: jax.Array) -> jax.Array:
         return bcsr_matvec(BCSR(vals=vals, bcols=bcols, m=a.m, n=a.n), xb)
 
     return jax.vmap(one)(a.vals, a.bcols, x)
+
+
+def csc_gather_matvec(c: CSC, v: jax.Array) -> jax.Array:
+    """z = A^T v from the CSC of A — the flat-gather column matvec.
+
+    Row j of the CSC holds column j of A, so gathering ``v`` at the stored
+    row indices and reducing along the width computes ``(A^T v)_j``:
+    identical arithmetic to ``ell_matvec`` on the transpose view.  The
+    same function applied to ``CSC(A^T)`` computes ``A x`` — the
+    ("csc", backend) operators pair both orientations exactly like the
+    ELL operators do."""
+    gathered = jnp.take(v, c.rows, axis=0)            # (n, k)
+    return jnp.sum(c.vals * gathered, axis=1)
+
+
+def stacked_csc_gather_matvec(c: StackedCSC, v: jax.Array) -> jax.Array:
+    """Per-slot ``csc_gather_matvec``: (B, m) -> (B, n), slot offsets baked
+    into the indices so XLA sees one flat gather (same trick as
+    ``stacked_ell_matvec``)."""
+    bsz, mlen = v.shape
+    off = (jnp.arange(bsz, dtype=c.rows.dtype) * mlen)[:, None, None]
+    gathered = jnp.take(v.reshape(-1), c.rows + off, axis=0)   # (B, n, k)
+    return jnp.sum(c.vals * gathered, axis=2)
 
 
 def coo_matvec(a: COO, x: jax.Array) -> jax.Array:

@@ -63,6 +63,38 @@ def test_sharded_serving_schema():
             assert point["rps"] > 0 and point["dt"] > 0
 
 
+def test_rcd_serving_schema():
+    rec = _load("rcd_serving.json")
+    for key in ("requests", "slots", "tol", "max_iterations", "seed",
+                "loss", "solver_family_flag", "points"):
+        assert key in rec, key
+    assert len(rec["points"]) >= 3, "need >= 3 n/d aspect-ratio points"
+    aspects = set()
+    for point in rec["points"]:
+        for key in ("m", "n", "aspect_m_over_n", "solver_family",
+                    "reason", "arms"):
+            assert key in point, (point.get("m"), key)
+        assert point["solver_family"] in ("rcd_primal", "rcd_dual")
+        assert point["reason"], "face-off decision must carry a reason"
+        aspects.add(round(point["aspect_m_over_n"], 6))
+        for arm in ("auto", "rcd_primal", "rcd_dual", "a2"):
+            assert arm in point["arms"], (point["m"], arm)
+            r = point["arms"][arm]
+            for key in ("rps", "wall_s", "tol", "mean_iterations",
+                        "max_iterations_seen", "converged", "family",
+                        "buckets"):
+                assert key in r, (point["m"], arm, key)
+            assert r["rps"] > 0 and r["wall_s"] > 0
+            assert 0 <= r["converged"] <= rec["requests"]
+            assert r["mean_iterations"] <= rec["max_iterations"]
+        # the forced arms really ran the family they claim
+        assert point["arms"]["rcd_primal"]["family"] == ["rcd_primal"]
+        assert point["arms"]["rcd_dual"]["family"] == ["rcd_dual"]
+        assert point["arms"]["a2"]["family"] == ["a2"]
+        assert point["arms"]["auto"]["family"] == [point["solver_family"]]
+    assert len(aspects) >= 3, "aspect ratios must differ"
+
+
 def test_open_loop_serving_schema():
     rec = _load("open_loop_serving.json")
     for key in ("requests", "slots", "tol", "seed", "slo_s", "arrival",

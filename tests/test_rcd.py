@@ -1,0 +1,312 @@
+"""Coordinate-descent solver family: oracle equality against a dense
+float64 reference (proximal/projected gradient — deliberately no sklearn),
+batched-vs-sequential exactness, the CSC operand view, the Pallas
+gather-update kernel, the planner's face-off rule, and engine admission
+through the same splice/freeze path as A2 requests."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import Problem, solve_many
+from repro.plan import SolveSpec, decide_solver_family
+from repro.sparse.formats import (
+    CSC, coo_to_csc, coo_to_dense, stack_cscs, transpose_coo,
+)
+from repro.sparse.linalg import csc_gather_matvec, stacked_csc_gather_matvec
+from repro.sparse.random import random_coo
+from repro.solvers import (
+    FAMILY_LOSSES, RCDState, batched_rcd_init, batched_rcd_progress,
+    batched_rcd_solve_tol, batched_rcd_step, dense_reference, rcd_mask_state,
+    rcd_solve_tol, reference_objective,
+)
+
+
+def _labels(m, seed):
+    rs = np.random.default_rng(seed)
+    return np.where(rs.random(m) < 0.5, -1.0, 1.0).astype(np.float32)
+
+
+def _targets(m, seed):
+    return np.random.default_rng(seed).standard_normal(m).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# CSC operand view
+# ---------------------------------------------------------------------------
+
+def test_csc_gather_matvec_matches_dense():
+    coo = random_coo(13, 9, row_nnz=3, seed=1)
+    A = np.asarray(coo_to_dense(coo), np.float64)
+    x = np.random.default_rng(2).standard_normal(13).astype(np.float32)
+    c = coo_to_csc(coo)                    # CSC(A): rmatvec via column major
+    assert isinstance(c, CSC) and c.n == 9 and c.m == 13
+    got = np.asarray(csc_gather_matvec(c, jnp.asarray(x)))
+    np.testing.assert_allclose(got, A.T @ x.astype(np.float64),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stacked_csc_gather_matvec_matches_per_slot():
+    coos = [random_coo(12, 8, row_nnz=3, seed=s) for s in (3, 4, 5)]
+    k = max(int(np.bincount(np.asarray(c.cols), minlength=8).max())
+            for c in coos)
+    st = stack_cscs([coo_to_csc(c, k=k) for c in coos])
+    xs = np.random.default_rng(6).standard_normal((3, 12)).astype(np.float32)
+    got = np.asarray(stacked_csc_gather_matvec(st, jnp.asarray(xs)))
+    for i, c in enumerate(coos):
+        ref = np.asarray(coo_to_dense(c), np.float64).T @ xs[i]
+        np.testing.assert_allclose(got[i], ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: oracle equality vs the dense float64 reference
+# ---------------------------------------------------------------------------
+
+CASES = [("rcd_primal", "lasso", 24, 16, 0.1),
+         ("rcd_primal", "logistic", 24, 16, 0.3),
+         ("rcd_dual", "svm", 20, 12, 0.5),
+         ("rcd_dual", "logistic", 12, 24, 0.3)]
+
+
+@pytest.mark.parametrize("family,loss,m,n,reg", CASES)
+def test_rcd_matches_dense_reference(family, loss, m, n, reg):
+    coo = random_coo(m, n, row_nnz=4, seed=hash((family, loss)) % 977)
+    b = _targets(m, 7) if loss == "lasso" else _labels(m, 7)
+    x, resid, epochs = rcd_solve_tol(coo, b, reg, family=family, loss=loss,
+                                     tol=1e-7, max_iterations=20_000)
+    A = np.asarray(coo_to_dense(coo), np.float64)
+    ref = dense_reference(A, b, reg, loss)
+    np.testing.assert_allclose(np.asarray(x, np.float64), ref, atol=1e-4)
+    assert abs(reference_objective(A, b, reg, loss, np.asarray(x))
+               - reference_objective(A, b, reg, loss, ref)) < 1e-5
+
+
+def test_family_loss_compatibility():
+    assert FAMILY_LOSSES == {"rcd_primal": ("lasso", "logistic"),
+                             "rcd_dual": ("svm", "logistic")}
+    with pytest.raises(ValueError, match="strongly-convex dual"):
+        rcd_solve_tol(random_coo(8, 4, row_nnz=2, seed=0),
+                      _targets(8, 0), 0.1, family="rcd_dual", loss="lasso")
+    with pytest.raises(ValueError, match="nonsmooth"):
+        rcd_solve_tol(random_coo(8, 4, row_nnz=2, seed=0),
+                      _labels(8, 0), 0.1, family="rcd_primal", loss="svm")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: batched masked variants == sequential per-slot
+# ---------------------------------------------------------------------------
+
+def test_batched_rcd_matches_sequential_slots():
+    coos = [random_coo(16, 12, row_nnz=3, seed=s) for s in (11, 12, 13)]
+    bs = np.stack([_labels(16, 20 + s) for s in range(3)])
+    k = max(int(np.bincount(np.asarray(c.cols), minlength=12).max())
+            for c in coos)
+    kt = max(int(np.bincount(np.asarray(c.rows), minlength=16).max())
+             for c in coos)
+    a = stack_cscs([coo_to_csc(c, k=k) for c in coos])
+    at = stack_cscs([coo_to_csc(transpose_coo(c), k=kt) for c in coos])
+    regs = jnp.asarray([0.2, 0.3, 0.4], jnp.float32)
+    dim = jnp.asarray([12, 12, 12], jnp.int32)
+    seeds = jnp.asarray([5, 6, 7], jnp.int32)
+    state, resid = batched_rcd_solve_tol(
+        a, at, jnp.asarray(bs), regs, dim, seeds, family="rcd_primal",
+        loss="logistic", tol=1e-6, max_iterations=2000, check_every=4)
+    for i, c in enumerate(coos):
+        x1, r1, k1 = rcd_solve_tol(c, bs[i], float(regs[i]),
+                                   family="rcd_primal", loss="logistic",
+                                   seed=int(seeds[i]), tol=1e-6,
+                                   max_iterations=2000, check_every=4)
+        # identical coordinate sequence (same dims/seed); widths may pad
+        # differently, so allow summation-tree rounding
+        assert int(state.k[i]) == k1
+        np.testing.assert_allclose(np.asarray(state.xbar[i]),
+                                   np.asarray(x1), atol=1e-6)
+
+
+def test_rcd_mask_state_freezes_bitwise():
+    coo = random_coo(16, 12, row_nnz=3, seed=31)
+    a = stack_cscs([coo_to_csc(coo)] * 2)
+    at = stack_cscs([coo_to_csc(transpose_coo(coo))] * 2)
+    b = jnp.asarray(np.stack([_labels(16, 1)] * 2))
+    reg = jnp.asarray([0.3, 0.3], jnp.float32)
+    dim = jnp.asarray([12, 12], jnp.int32)
+    seed = jnp.asarray([9, 9], jnp.int32)
+    s0 = batched_rcd_init(a, at, b, family="rcd_primal")
+    s1 = batched_rcd_step(a, at, b, reg, dim, seed, s0,
+                          family="rcd_primal", loss="logistic",
+                          mask=jnp.asarray([True, False]))
+    assert int(s1.k[0]) == 1 and int(s1.k[1]) == 0
+    np.testing.assert_array_equal(np.asarray(s1.xbar[1]),
+                                  np.asarray(s0.xbar[1]))
+    assert np.any(np.asarray(s1.xbar[0]) != np.asarray(s0.xbar[0]))
+    froz = rcd_mask_state(jnp.asarray([False, False]), s1, s0)
+    assert froz.k.tolist() == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel parity (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,loss", [("rcd_primal", "lasso"),
+                                         ("rcd_dual", "logistic")])
+def test_pallas_kernel_parity(family, loss):
+    coos = [random_coo(16, 12, row_nnz=3, seed=s) for s in (41, 42)]
+    bs = np.stack([_targets(16, 1) if loss == "lasso" else _labels(16, 1),
+                   _targets(16, 2) if loss == "lasso" else _labels(16, 2)])
+    k = max(int(np.bincount(np.asarray(c.cols), minlength=12).max())
+            for c in coos)
+    kt = max(int(np.bincount(np.asarray(c.rows), minlength=16).max())
+             for c in coos)
+    a = stack_cscs([coo_to_csc(c, k=k) for c in coos])
+    at = stack_cscs([coo_to_csc(transpose_coo(c), k=kt) for c in coos])
+    b = jnp.asarray(bs)
+    reg = jnp.asarray([0.2, 0.4], jnp.float32)
+    dim = jnp.asarray([12, 12] if family == "rcd_primal" else [16, 16],
+                      jnp.int32)
+    seed = jnp.asarray([3, 4], jnp.int32)
+    s0 = batched_rcd_init(a, at, b, family=family)
+    ref = batched_rcd_step(a, at, b, reg, dim, seed, s0, family=family,
+                           loss=loss)
+    got = batched_rcd_step(a, at, b, reg, dim, seed, s0, family=family,
+                           loss=loss, kernel="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(got.xbar), np.asarray(ref.xbar))
+    np.testing.assert_array_equal(np.asarray(got.aux), np.asarray(ref.aux))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: face-off rule + solver_family override round-trip
+# ---------------------------------------------------------------------------
+
+def test_face_off_picks_expected_side():
+    tall = Problem(random_coo(96, 8, row_nnz=3, seed=51), _labels(96, 5),
+                   reg=0.3, loss="logistic")          # n >> d: few coords
+    wide = Problem(random_coo(8, 96, row_nnz=4, seed=52), _labels(8, 5),
+                   reg=0.3, loss="logistic")          # d >> n: few samples
+    fam_t, why_t = decide_solver_family("logistic", tall.stats)
+    fam_w, why_w = decide_solver_family("logistic", wide.stats)
+    assert fam_t == "rcd_primal" and "face-off" in why_t
+    assert fam_w == "rcd_dual" and "face-off" in why_w
+    assert tall.plan(tol=1e-3).algorithm == "rcd_primal"
+    assert wide.plan(tol=1e-3).algorithm == "rcd_dual"
+
+
+def test_face_off_forced_sides_and_errors():
+    assert decide_solver_family("lasso")[0] == "rcd_primal"
+    assert decide_solver_family("svm")[0] == "rcd_dual"
+    assert decide_solver_family("")[0] == "a2"
+    with pytest.raises(ValueError):
+        decide_solver_family("lasso", override="rcd_dual")
+    with pytest.raises(ValueError):
+        decide_solver_family("svm", override="rcd_primal")
+    with pytest.raises(ValueError):
+        decide_solver_family("logistic", override="a2")
+    with pytest.raises(ValueError):
+        decide_solver_family("", override="rcd_primal")
+    with pytest.raises(KeyError):
+        decide_solver_family("logistic", override="nope")
+
+
+def test_solver_family_override_round_trips():
+    coo = random_coo(24, 16, row_nnz=4, seed=61)
+    p = Problem(coo, _labels(24, 6), reg=0.3, loss="logistic")
+    pl = p.plan(tol=1e-5, max_iterations=10_000)
+    assert pl.algorithm == "rcd_primal" and pl.format == "csc"
+    assert "rcd_primal" in repr(pl)
+    pl2 = pl.override(solver_family="rcd_dual")
+    assert pl2.algorithm == "rcd_dual" and pl2.format == "csc"
+    assert pl2.reasons["solver_family"].endswith("user override")
+    ref = dense_reference(np.asarray(coo_to_dense(coo)),
+                          np.asarray(p.b), 0.3, "logistic")
+    for q in (pl, pl2):
+        r = q.solve()
+        np.testing.assert_allclose(np.asarray(r.x, np.float64), ref,
+                                   atol=1e-4)
+        assert r.state is None and r.iterations > 0
+
+
+def test_problem_loss_routes_automatically():
+    coo = random_coo(24, 12, row_nnz=3, seed=71)
+    res = Problem(coo, _targets(24, 8), reg=0.1, loss="lasso").solve(
+        tol=1e-6, max_iterations=10_000)
+    ref = dense_reference(np.asarray(coo_to_dense(coo)),
+                          np.asarray(_targets(24, 8)), 0.1, "lasso")
+    np.testing.assert_allclose(np.asarray(res.x, np.float64), ref,
+                               atol=1e-4)
+    assert res.plan.algorithm == "rcd_primal"
+    assert res.plan.reasons["solver_family"].startswith("rcd_primal")
+
+
+def test_problem_loss_validation():
+    coo = random_coo(8, 4, row_nnz=2, seed=0)
+    with pytest.raises(ValueError, match="unknown loss"):
+        Problem(coo, _targets(8, 0), loss="huber")
+    with pytest.raises(ValueError, match="composite"):
+        Problem(coo, _labels(8, 0), prox="zero", loss="svm")
+    # the shared stats pass is cached: same object both times
+    p = Problem(coo, _targets(8, 0), reg=0.1, loss="lasso")
+    assert p.stats is p.stats and p.stats.nnz == coo.nnz
+
+
+# ---------------------------------------------------------------------------
+# Tentpole acceptance: RCD requests bucket, splice, and freeze through
+# SolverEngine.submit exactly like A2 requests
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_rcd_requests():
+    from repro.serve.solver_engine import SolverEngine
+
+    # dims == the engine's bucket padding (m_pad>=64, n_pad>=16) and the
+    # same check cadence -> identical coordinate sequences engine-vs-direct
+    eng = SolverEngine(slots=4, check_every=4)
+    cases = []
+    for i, loss in enumerate(["lasso", "svm", "logistic"]):
+        coo = random_coo(64, 16, row_nnz=4, seed=81 + i)
+        b = _targets(64, i) if loss == "lasso" else _labels(64, i)
+        p = Problem(coo, b, reg=0.2, loss=loss)
+        eng.submit(p.to_request(uid=i, tol=1e-5, max_iterations=3000,
+                                seed=123 + i))
+        cases.append(p)
+    done = {r.uid: r for r in eng.run()}
+    assert len(done) == 3
+    fams = {k.family for k in eng.buckets}
+    assert fams == {"rcd_primal", "rcd_dual"}          # bucketed by family
+    assert all(k.fmt == "csc" for k in eng.buckets)
+    for i, p in enumerate(cases):
+        d = done[i]
+        x1, r1, k1 = rcd_solve_tol(p.coo, np.asarray(p.b), p.reg,
+                                   family=d.family, loss=d.loss,
+                                   seed=123 + i, tol=1e-5,
+                                   max_iterations=3000, check_every=4)
+        assert d.iterations == k1                      # same epoch count
+        np.testing.assert_allclose(np.asarray(d.x), np.asarray(x1),
+                                   atol=1e-5)
+        assert d.feasibility < 1e-5 or d.iterations == 3000
+
+
+def test_engine_mixes_rcd_and_a2_fleet():
+    probs = []
+    for i in range(2):
+        probs.append(Problem(random_coo(24, 16, row_nnz=4, seed=91 + i),
+                             _labels(24, i), reg=0.3, loss="logistic"))
+    for i in range(2):
+        probs.append(Problem(random_coo(16, 48, row_nnz=4, seed=95 + i),
+                             _targets(16, i), prox="l1", reg=0.01))
+    res = solve_many(probs, SolveSpec(tol=1e-3, max_iterations=20_000,
+                                      slots=4))
+    assert len(res) == 4
+    for r in res:
+        assert r.feasibility < 1e-3
+    assert res[0].plan.execution == "engine"
+
+
+def test_rcd_state_engine_contract():
+    """The engine harvests .xbar/.k by name — RCDState must carry them."""
+    assert set(RCDState._fields) >= {"xbar", "k"}
+    coo = random_coo(16, 12, row_nnz=3, seed=99)
+    a = stack_cscs([coo_to_csc(coo)])
+    at = stack_cscs([coo_to_csc(transpose_coo(coo))])
+    b = jnp.asarray(_labels(16, 9))[None, :]
+    s = batched_rcd_init(a, at, b, family="rcd_dual")
+    s2, resid = batched_rcd_progress(a, at, b, jnp.asarray([0.3]), s,
+                                     family="rcd_dual", loss="svm")
+    assert s2.xbar.shape == (1, 12) and resid.shape == (1,)
