@@ -347,7 +347,11 @@ def solver_serving(check_every=None, fused=None, seed=0):
     per-phase wall time (admit / splice / dispatch / harvest / compile)
     lands in ``tick_breakdown`` — ``compile_s`` ~ 0 there is the proof
     that admission re-uses the AOT bucket executables instead of paying
-    per-bucket jit.  Emits experiments/bench/solver_serving.json.
+    per-bucket jit.  The engine runs with ``sanitize=True``, so
+    ``tick_breakdown`` also carries the strict counters ``retraces`` and
+    ``disallowed_transfers`` — both must be 0 in the measured window
+    (every tick executed under ``transfer_guard("disallow")`` without a
+    single recompile).  Emits experiments/bench/solver_serving.json.
     """
     import time as _time
 
@@ -370,20 +374,24 @@ def solver_serving(check_every=None, fused=None, seed=0):
         return [p.to_request(uid=i, tol=tol, max_iterations=4000)
                 for i, p in enumerate(make_problems(num, seed=seed))]
 
+    # sanitize=True: tick phases run under transfer_guard("disallow") and
+    # the engine counts retraces + implicit transfers — the measured
+    # (warm) window must report 0/0, turning the AOT claim into data
     eng = create_engine("solver", slots=slots, fmt="ell", backend="jnp",
-                        check_every=check_every, fused=fused)
+                        check_every=check_every, fused=fused, sanitize=True)
     for r in requests(seed=warm_seed):                 # warm: compile buckets
         eng.submit(r)
     eng.run()
-    warm_phase = dict(eng.phase_s)
+    warm_phase = dict(eng.phase_s, **eng.tick_counters)
     eng.stats = {"steps": 0, "iterations": 0, "admitted": 0}
     eng.phase_s = {k: 0.0 for k in eng.phase_s}
+    eng.tick_counters = {k: 0 for k in eng.tick_counters}
     t0 = _time.perf_counter()
     for r in requests(seed=measure_seed):
         eng.submit(r)
     done = eng.run()
     dt_eng = _time.perf_counter() - t0
-    tick = dict(eng.phase_s)
+    tick = dict(eng.phase_s, **eng.tick_counters)
     assert len(done) == num
 
     t0 = _time.perf_counter()
@@ -435,9 +443,13 @@ def solver_serving(check_every=None, fused=None, seed=0):
     emit("solver_serving/engine", dt_eng / num * 1e6,
          f"rps={rec['rps_engine']:.1f};slots={slots}")
     emit("solver_serving/tick_breakdown",
-         sum(tick.values()) / max(1, eng.stats["steps"]) * 1e6,
-         ";".join(f"{k}={v*1e3:.1f}ms" for k, v in sorted(tick.items()))
-         + f";steps={eng.stats['steps']}")
+         sum(v for k, v in tick.items() if k.endswith("_s"))
+         / max(1, eng.stats["steps"]) * 1e6,
+         ";".join(f"{k}={v*1e3:.1f}ms" for k, v in sorted(tick.items())
+                  if k.endswith("_s"))
+         + f";retraces={tick['retraces']}"
+           f";disallowed_transfers={tick['disallowed_transfers']}"
+           f";steps={eng.stats['steps']}")
     emit("solver_serving/sequential", dt_seq / num * 1e6,
          f"rps={rec['rps_sequential']:.1f};"
          f"speedup={rec['speedup_vs_sequential']:.1f}x")

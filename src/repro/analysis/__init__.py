@@ -1,0 +1,36 @@
+"""Static analysis + strict-mode runtime sanitizers for this repo.
+
+The paper's claim is a *system* claim, and this repo's own history shows
+that what silently rots is never the math — it is the invariants nobody
+re-checks: Pallas kernels hardcoding ``interpret=True`` (PR 4), the
+"``compile_s == 0`` on warm ticks" AOT claim (PR 6), the "no wall clock
+inside ``serve/``" determinism convention (PR 7).  Every one of those is
+statically checkable or runtime-assertable, so this package turns them
+into enforced rules:
+
+``repro.analysis.rules``
+    The project-specific AST rule set (R1-R6), each with an id, a
+    rationale, and an inline-suppression escape hatch that *requires a
+    written reason* (``# repro: allow[Rn] -- why``).
+``repro.analysis.lint``
+    The linter CLI over those rules::
+
+        python -m repro.analysis.lint src/            # text, exit 1 on hit
+        python -m repro.analysis.lint --json src/     # machine-readable
+
+``repro.analysis.strict``
+    The runtime half: ``strict_mode()`` (transfer_guard +
+    rank-promotion=raise + retrace watcher + optional NaN/leak checks),
+    ``CompileWatcher`` (the ``jax.log_compiles``-based retrace detector),
+    and the process-wide strict flag the pytest ``--strict-sanitize``
+    option flips (the serving engine reads it to guard its tick phases
+    under ``jax.transfer_guard("disallow")``).
+
+DESIGN.md section "Static analysis & strict mode" carries the rule table
+and the sanitizer matrix.
+"""
+from repro.analysis.rules import RULES, Violation  # noqa: F401
+from repro.analysis.strict import (  # noqa: F401
+    CompileWatcher, intended_transfers, set_strict, strict_enabled,
+    strict_mode,
+)

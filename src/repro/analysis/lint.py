@@ -1,0 +1,85 @@
+"""AST invariant linter CLI: ``python -m repro.analysis.lint src/``.
+
+Walks the given files/directories, runs the R1-R6 rule set
+(``repro.analysis.rules``) over every ``*.py`` file, and reports
+violations as ``file:line:col: Rn message`` lines (or, with ``--json``, a
+machine-readable array carrying each rule's rationale).  Exit status 1 on
+any violation — including R0, the meta-rule that an inline suppression
+(``# repro: allow[Rn] -- why``) must carry a reason.
+
+Deliberately dependency-free (stdlib ``ast`` only): the lint CI job runs
+before anything heavyweight imports.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.rules import RULES, RULES_BY_ID, check_source
+
+#: directories never worth descending into
+_SKIP_DIRS = {"__pycache__", ".git", ".hypothesis", "build", "dist",
+              ".pytest_cache"}
+
+
+def iter_files(paths: list[str]):
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                yield path
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    yield os.path.join(root, name)
+
+
+def lint_paths(paths: list[str], rules=RULES):
+    """All violations over every python file under ``paths``."""
+    out = []
+    for path in iter_files(paths):
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        out.extend(check_source(source, path, rules))
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="project AST invariant linter (rules R1-R6; see "
+                    "DESIGN.md 'Static analysis & strict mode')")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--json", action="store_true",
+                    help="emit violations as a JSON array on stdout")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    args = ap.parse_args(argv)
+    rules = RULES
+    if args.rules:
+        wanted = [s.strip() for s in args.rules.split(",") if s.strip()]
+        unknown = [w for w in wanted if w not in RULES_BY_ID]
+        if unknown:
+            ap.error(f"unknown rule ids {unknown}; known: "
+                     f"{', '.join(RULES_BY_ID)}")
+        rules = tuple(RULES_BY_ID[w] for w in wanted)
+    violations = lint_paths(args.paths, rules)
+    if args.json:
+        json.dump([v.to_json() for v in violations], sys.stdout, indent=1)
+        sys.stdout.write("\n")
+    else:
+        for v in violations:
+            print(v)
+        if violations:
+            print(f"{len(violations)} violation(s); rules: "
+                  f"{', '.join(sorted({v.rule for v in violations}))} — "
+                  f"suppress a justified exception with "
+                  f"'# repro: allow[Rn] -- why'", file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,443 @@
+"""Project-specific AST invariant rules (R1-R6).
+
+Each rule is a past bug or a load-bearing convention promoted into a
+statically checked invariant:
+
+R1  no literal ``interpret=True/False`` at a kernel call site — the PR-4
+    bug: kernels hardcoding ``interpret=True`` ran the "pallas" backend
+    under the interpreter on real hardware.  The flag must flow through
+    (``interpret=interpret``) so ``kernels.default_interpret`` stays the
+    one resolution point (``kernels/interpret.py`` is the only file that
+    may spell the literal).
+R2  no hand-assembled solver ops outside ``core/``/``operators/`` — the
+    PR-1/PR-3 facade contract: consumers route through the registry
+    (``repro.operators.make_operator``) or ``repro.api.Problem``; direct
+    ``SolverOps(...)`` construction and the legacy ``dense_ops`` /
+    ``ell_ops`` / ``solve_distributed`` / ``serve.Engine`` signatures are
+    the hand-wiring the facade exists to retire.  (This rule replaces the
+    PR-3 grep-style test ``test_no_legacy_imports_outside_kernel_layer``.)
+R3  no unseeded randomness — module-level ``np.random.*`` calls share
+    hidden global state and break the bit-reproducibility contract every
+    serving bench relies on (PR 7 threaded seeds through all of them);
+    ``default_rng()``/``RandomState()`` without a seed and ``PRNGKey``
+    derived from wall-clock/entropy calls are the same bug.
+R4  no float64 construction outside the oracle whitelist — the PR-4
+    dtype canonicalization fix: operands are float32 (jax x64 is off);
+    a stray float64 array silently downcasts somewhere downstream and
+    changes tolerance semantics.  The float64 *reference oracles*
+    (``solvers/rcd.py``, ``core/reference.py``) are whitelisted; any
+    other intentional use carries an inline allow with its reason.
+R5  no wall-clock reads inside ``serve/`` except the ``Clock`` protocol
+    implementations (``serve/clock.py``) — the open-loop layer is a
+    deterministic discrete-event simulation (PR 7); one stray
+    ``time.time()`` makes deadlines/latency stamps unreproducible.
+R6  every ``decide_*`` planner branch returns a reason string — the
+    planner's explainability contract (PR 3): each ``return`` in a
+    ``decide_*`` function must be a tuple whose last element is a
+    string-valued reason, so no decision path can go dark.
+
+Suppression syntax (same line or the line above the violation)::
+
+    # repro: allow[R4] -- float64 residual oracle, never an operand
+
+A suppression without the ``-- reason`` tail is itself a violation (R0):
+the escape hatch must leave an audit trail.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Callable, Iterable, Iterator
+
+__all__ = ["RULES", "RULES_BY_ID", "Rule", "Violation", "check_source"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def to_json(self) -> dict:
+        rationale = (RULES_BY_ID[self.rule].rationale
+                     if self.rule in RULES_BY_ID else SUPPRESSION_RATIONALE)
+        return {"rule": self.rule, "file": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "rationale": rationale}
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    rationale: str
+    check: Callable[[ast.Module, str], Iterator[tuple[int, int, str]]]
+
+
+def _pkg_rel(path: str) -> str:
+    """Path relative to the ``repro`` package root when under it (rule
+    whitelists are package-relative: "kernels/interpret.py"), else the
+    given path unchanged (posix separators either way)."""
+    p = path.replace("\\", "/")
+    marker = "repro/"
+    i = p.rfind("/" + marker)
+    if i >= 0:
+        return p[i + 1 + len(marker):]
+    if p.startswith(marker):
+        return p[len(marker):]
+    return p
+
+
+def _dotted(node: ast.AST) -> str:
+    """'np.random.rand' for nested Attribute/Name chains ('' otherwise)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# R1: literal interpret= at kernel call sites
+# ---------------------------------------------------------------------------
+
+R1_ALLOWED_FILES = ("kernels/interpret.py",)
+
+
+def _check_r1(tree: ast.Module, path: str):
+    if _pkg_rel(path) in R1_ALLOWED_FILES:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg == "interpret" and isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, bool):
+                callee = _dotted(node.func) or "<call>"
+                yield (kw.value.lineno, kw.value.col_offset,
+                       f"literal interpret={kw.value.value} at {callee}(...) "
+                       f"— pass the flag through and resolve it via "
+                       f"kernels.default_interpret (the PR-4 bug: hardcoded "
+                       f"interpret silently runs interpreted on real "
+                       f"hardware)")
+
+
+# ---------------------------------------------------------------------------
+# R2: hand-assembled solver ops outside core/ and operators/
+# ---------------------------------------------------------------------------
+
+R2_ALLOWED_PREFIXES = ("core/", "operators/")
+#: shim definition sites: the deprecation layer and the serve alias
+R2_ALLOWED_FILES = ("deprecation.py", "serve/__init__.py")
+R2_LEGACY_NAMES = ("dense_ops", "ell_ops", "solve_distributed")
+
+
+def _r2_scoped(path: str) -> bool:
+    rel = _pkg_rel(path)
+    return not (rel.startswith(R2_ALLOWED_PREFIXES)
+                or rel in R2_ALLOWED_FILES)
+
+
+def _check_r2(tree: ast.Module, path: str):
+    if not _r2_scoped(path):
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            tail = callee.rsplit(".", 1)[-1]
+            if tail == "SolverOps":
+                yield (node.lineno, node.col_offset,
+                       "direct SolverOps(...) construction — build "
+                       "operators through repro.operators.make_operator "
+                       "(the registry) or solve through repro.api.Problem")
+            elif tail in R2_LEGACY_NAMES:
+                yield (node.lineno, node.col_offset,
+                       f"legacy signature {tail}() — route through "
+                       f"repro.api.Problem / make_operator(...).solver_ops()")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            for alias in node.names:
+                if alias.name in R2_LEGACY_NAMES:
+                    yield (node.lineno, node.col_offset,
+                           f"import of legacy signature {alias.name} from "
+                           f"{mod} — route through the repro.api facade")
+                if alias.name == "Engine" and mod.endswith("serve"):
+                    yield (node.lineno, node.col_offset,
+                           "deprecated serve.Engine alias — import "
+                           "TokenEngine or create_engine('tokens')")
+        elif isinstance(node, ast.Attribute):
+            if node.attr == "Engine" and _dotted(node.value) \
+                    .rsplit(".", 1)[-1] == "serve":
+                yield (node.lineno, node.col_offset,
+                       "deprecated serve.Engine alias — use "
+                       "serve.TokenEngine or create_engine('tokens')")
+
+
+# ---------------------------------------------------------------------------
+# R3: unseeded randomness
+# ---------------------------------------------------------------------------
+
+#: np.random attributes that are NOT the hidden-global-state legacy API
+R3_SEEDED_CTORS = ("default_rng", "Generator", "SeedSequence", "PCG64",
+                   "Philox", "SFC64", "MT19937", "RandomState", "BitGenerator")
+R3_ENTROPY_CALLS = ("time.time", "time.time_ns", "time.perf_counter",
+                    "time.monotonic", "os.urandom", "os.getpid",
+                    "secrets.randbits", "secrets.token_bytes", "uuid.uuid4")
+
+
+def _check_r3(tree: ast.Module, path: str):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dotted(node.func)
+        head, _, tail = callee.rpartition(".")
+        if head in ("np.random", "numpy.random"):
+            if tail not in R3_SEEDED_CTORS:
+                yield (node.lineno, node.col_offset,
+                       f"{callee}() uses numpy's hidden global RNG state — "
+                       f"thread an explicit np.random.default_rng(seed) "
+                       f"through (bit-reproducibility contract)")
+            elif tail in ("default_rng", "RandomState") and not node.args \
+                    and not node.keywords:
+                yield (node.lineno, node.col_offset,
+                       f"{callee}() without a seed draws OS entropy — pass "
+                       f"an explicit seed (bit-reproducibility contract)")
+        elif tail in ("PRNGKey", "key") and head.endswith("random"):
+            for sub in node.args:
+                for inner in ast.walk(sub):
+                    if isinstance(inner, ast.Call) \
+                            and _dotted(inner.func) in R3_ENTROPY_CALLS:
+                        yield (inner.lineno, inner.col_offset,
+                               f"PRNGKey seeded from {_dotted(inner.func)}()"
+                               f" — keys must derive from an explicit seed, "
+                               f"not wall clock/entropy")
+
+
+# ---------------------------------------------------------------------------
+# R4: float64 construction outside the oracle whitelist
+# ---------------------------------------------------------------------------
+
+R4_ALLOWED_FILES = ("solvers/rcd.py", "core/reference.py")
+
+
+def _is_float64(node: ast.AST) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "float64":
+        return True
+    return isinstance(node, ast.Constant) and node.value == "float64"
+
+
+def _check_r4(tree: ast.Module, path: str):
+    if _pkg_rel(path) in R4_ALLOWED_FILES:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dotted(node.func)
+        # np.dtype(np.float64) builds a dtype object to *compare* against,
+        # not a float64 array — the canonicalization code does exactly this
+        if callee.rsplit(".", 1)[-1] == "dtype":
+            continue
+        if callee.rsplit(".", 1)[-1] == "float64":
+            yield (node.lineno, node.col_offset,
+                   "float64 scalar/array construction — operands are "
+                   "float32 (jax x64 off); keep float64 inside the "
+                   "whitelisted reference oracles or carry an allow with "
+                   "a reason")
+            continue
+        for arg in [*node.args, *[k.value for k in node.keywords]]:
+            if _is_float64(arg):
+                yield (arg.lineno, arg.col_offset,
+                       f"float64 passed to {callee or '<call>'}(...) — "
+                       f"operands are float32 (jax x64 off, PR-4 downcast "
+                       f"fix); float64 belongs to the reference oracles "
+                       f"({', '.join(R4_ALLOWED_FILES)}) or needs a "
+                       f"reasoned allow")
+
+
+# ---------------------------------------------------------------------------
+# R5: wall-clock reads inside serve/
+# ---------------------------------------------------------------------------
+
+R5_ALLOWED_FILES = ("serve/clock.py",)
+R5_WALL_ATTRS = ("time", "perf_counter", "perf_counter_ns", "monotonic",
+                 "monotonic_ns", "process_time", "time_ns")
+
+
+def _check_r5(tree: ast.Module, path: str):
+    rel = _pkg_rel(path)
+    if not rel.startswith("serve/") or rel in R5_ALLOWED_FILES:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr in R5_WALL_ATTRS \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "time":
+            yield (node.lineno, node.col_offset,
+                   f"time.{node.attr} read inside serve/ — serving time "
+                   f"must flow through the Clock protocol "
+                   f"(repro.serve.clock), or the discrete-event "
+                   f"simulation stops being deterministic")
+        elif isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name in R5_WALL_ATTRS:
+                    yield (node.lineno, node.col_offset,
+                           f"from time import {alias.name} inside serve/ — "
+                           f"route through the Clock protocol "
+                           f"(repro.serve.clock)")
+
+
+# ---------------------------------------------------------------------------
+# R6: decide_* branches must return a reason string
+# ---------------------------------------------------------------------------
+
+def _stringish(node: ast.AST) -> bool:
+    """Statically string-valued: literals, f-strings, concatenations,
+    conditionals of those, str(...) calls, or a variable whose name says
+    it is a reason."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, str)
+    if isinstance(node, ast.JoinedStr):
+        return True
+    if isinstance(node, ast.BinOp) and isinstance(node.op, (ast.Add,
+                                                            ast.Mod)):
+        return _stringish(node.left) or _stringish(node.right)
+    if isinstance(node, ast.IfExp):
+        return _stringish(node.body) and _stringish(node.orelse)
+    if isinstance(node, ast.Call):
+        callee = _dotted(node.func)
+        return callee in ("str", "repr", "format") \
+            or callee.endswith((".join", ".format"))
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        name = node.id if isinstance(node, ast.Name) else node.attr
+        low = name.lower()
+        return any(t in low for t in ("reason", "why", "msg", "explan"))
+    return False
+
+
+def _check_r6(tree: ast.Module, path: str):
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                or not fn.name.startswith("decide_"):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Return) or node.value is None:
+                continue
+            val = node.value
+            if not isinstance(val, ast.Tuple) or len(val.elts) < 2 \
+                    or not _stringish(val.elts[-1]):
+                yield (node.lineno, node.col_offset,
+                       f"return in {fn.name}() without a trailing reason "
+                       f"string — every planner decision branch must "
+                       f"explain itself (plan reasons contract): return "
+                       f"(decision, ..., reason)")
+
+
+# ---------------------------------------------------------------------------
+# the rule set + suppression machinery
+# ---------------------------------------------------------------------------
+
+RULES: tuple[Rule, ...] = (
+    Rule("R1", "no literal interpret= at kernel call sites",
+         "PR-4 bug class: hardcoded interpret=True runs the pallas "
+         "backend interpreted on real hardware; kernels/interpret.py is "
+         "the one resolution point", _check_r1),
+    Rule("R2", "no hand-assembled solver ops outside core/ and operators/",
+         "facade contract (PR 1/3): consumers build operators through the "
+         "registry or repro.api.Problem, never SolverOps(...)/legacy "
+         "signatures", _check_r2),
+    Rule("R3", "no unseeded randomness",
+         "bit-reproducibility contract (PR 7): hidden-global-state "
+         "np.random calls and entropy-derived PRNGKeys make benches and "
+         "simulations unreplayable", _check_r3),
+    Rule("R4", "no float64 construction outside the oracle whitelist",
+         "PR-4 dtype canonicalization: operands are float32 with x64 off; "
+         "stray float64 silently downcasts and changes tolerance "
+         "semantics", _check_r4),
+    Rule("R5", "no wall-clock reads inside serve/ outside the Clock "
+         "protocol",
+         "PR-7 determinism: the open-loop layer is a discrete-event "
+         "simulation; serve/clock.py is the only wall-time boundary",
+         _check_r5),
+    Rule("R6", "every decide_* branch returns a reason string",
+         "planner explainability contract (PR 3): each decision records "
+         "why, so plans stay inspectable and overridable", _check_r6),
+)
+
+RULES_BY_ID = {r.id: r for r in RULES}
+
+SUPPRESSION_RATIONALE = ("the escape hatch must leave an audit trail: "
+                         "allows without a reason rot into unexplained "
+                         "exemptions")
+
+_ALLOW_RE = re.compile(
+    r"#\s*repro:\s*allow\[(?P<ids>[^\]]*)\]\s*(?:--\s*(?P<why>\S.*))?")
+
+
+def _comments(source: str) -> Iterator[tuple[int, int, str]]:
+    """(line, col, text) for real COMMENT tokens only — a docstring that
+    *mentions* the allow grammar is documentation, not a suppression."""
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.start[1], tok.string
+    except (tokenize.TokenError, IndentationError):
+        return
+
+
+def _suppressions(source: str):
+    """(line -> set of rule ids allowed there) plus R0 violations for
+    allows without a reason or with unknown rule ids.  An allow on line L
+    covers violations on L and L+1 (comment-above style)."""
+    allowed: dict[int, set[str]] = {}
+    bad: list[tuple[int, int, str]] = []
+    for i, col0, text in _comments(source):
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        ids = {s.strip() for s in m.group("ids").split(",") if s.strip()}
+        unknown = sorted(ids - set(RULES_BY_ID))
+        if unknown:
+            bad.append((i, col0 + m.start(),
+                        f"allow[] names unknown rule(s) "
+                        f"{', '.join(unknown)} (known: "
+                        f"{', '.join(RULES_BY_ID)})"))
+            ids &= set(RULES_BY_ID)
+        if not m.group("why"):
+            bad.append((i, col0 + m.start(),
+                        "suppression without a reason — write "
+                        "'# repro: allow[Rn] -- why'"))
+            continue
+        for ln in (i, i + 1):
+            allowed.setdefault(ln, set()).update(ids)
+    return allowed, bad
+
+
+def check_source(source: str, path: str,
+                 rules: Iterable[Rule] = RULES) -> list[Violation]:
+    """Run the rule set over one file's source; returns violations with
+    suppressions applied (and R0 violations for malformed suppressions)."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Violation("R0", path, e.lineno or 1, e.offset or 0,
+                          f"file does not parse: {e.msg}")]
+    allowed, bad = _suppressions(source)
+    out = [Violation("R0", path, ln, col, msg) for ln, col, msg in bad]
+    for rule in rules:
+        for line, col, msg in rule.check(tree, path):
+            if rule.id in allowed.get(line, ()):
+                continue
+            out.append(Violation(rule.id, path, line, col, msg))
+    out.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return out

@@ -1,0 +1,225 @@
+"""Strict-mode runtime sanitizers: the dynamic half of ``repro.analysis``.
+
+The AST rules catch what is visible in source; this module catches what
+only shows up at runtime — and turns two of this repo's load-bearing
+*claims* into machine-checked assertions:
+
+* **No implicit transfers on warm engine ticks.**  The serving engine's
+  steady state keeps operands device-resident; a stray ``jnp.asarray``
+  on a numpy master would silently re-upload per tick.  Under strict
+  mode the engine runs its tick phases inside
+  ``jax.transfer_guard("disallow")`` — intentional host->device splices
+  at admission go through explicit ``jax.device_put`` inside
+  ``intended_transfers()`` scopes, and anything else is counted (and
+  recovered from) as a ``disallowed_transfers`` tick counter.
+* **Zero recompiles per warm tick.**  PR 6's whole value is
+  ``compile_s == 0`` on warm ticks via AOT bucket executables; that was
+  a *reported statistic*, never an enforced invariant.
+  ``CompileWatcher`` counts XLA compilations through the
+  ``jax.log_compiles`` logging stream, the engine surfaces the per-tick
+  count as a ``retraces`` counter, and ``expect_no_retraces()`` raises
+  when a supposedly-warm region compiled anything.
+
+``strict_mode()`` bundles the test-suite-wide pieces (rank promotion =
+raise, optional NaN/leak checking, a compile watcher) with the
+process-wide flag (``set_strict``) that the pytest ``--strict-sanitize``
+option flips and ``SolverEngine(sanitize=None)`` resolves against.
+
+jax imports are deliberately lazy: ``repro.analysis.lint`` must stay
+importable (and fast) in a bare CI job.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import os
+from typing import Iterator, Optional
+
+__all__ = ["CompileWatcher", "StrictViolation", "expect_no_retraces",
+           "intended_transfers", "guard_transfers", "set_strict",
+           "strict_enabled", "strict_mode"]
+
+#: process-wide strict default: --strict-sanitize / REPRO_STRICT flip it;
+#: SolverEngine(sanitize=None) resolves here.
+_STRICT = None
+
+
+class StrictViolation(AssertionError):
+    """A strict-mode invariant failed (retraces on a warm region, ...)."""
+
+
+def set_strict(value: Optional[bool]) -> None:
+    """Set (or with None, clear back to the env default) the process-wide
+    strict flag."""
+    global _STRICT
+    _STRICT = value
+
+
+def strict_enabled() -> bool:
+    """Resolution order: set_strict() > REPRO_STRICT env var > off."""
+    if _STRICT is not None:
+        return _STRICT
+    return os.environ.get("REPRO_STRICT", "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
+# ---------------------------------------------------------------------------
+# the retrace detector
+# ---------------------------------------------------------------------------
+
+#: the logger jax.log_compiles routes "Compiling <fn> ..." records through
+_COMPILE_LOGGERS = ("jax._src.interpreters.pxla", "jax._src.dispatch")
+
+
+class _CountingHandler(logging.Handler):
+    def __init__(self, watcher: "CompileWatcher"):
+        super().__init__(level=logging.DEBUG)
+        self.watcher = watcher
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if msg.startswith("Compiling "):
+            self.watcher.count += 1
+            if len(self.watcher.compiled) < 64:
+                self.watcher.compiled.append(msg.split(" with ", 1)[0]
+                                             .removeprefix("Compiling "))
+
+
+class CompileWatcher:
+    """Counts XLA compilations inside a ``with`` region via the
+    ``jax.log_compiles`` logging stream.
+
+    Re-entrant and nestable (each instance attaches its own handler);
+    while active, the jax compile loggers stop propagating so enabling
+    ``log_compiles`` does not spam stderr.  ``count`` is the number of
+    ``Compiling <fn>`` records seen; ``compiled`` names the first few.
+
+    >>> import jax, jax.numpy as jnp
+    >>> f = jax.jit(lambda x: x * 2.0)
+    >>> _ = f(jnp.ones(3))                      # compiled outside
+    >>> with CompileWatcher() as w:
+    ...     _ = f(jnp.ones(3))                  # cache hit: no compile
+    >>> w.count
+    0
+    """
+
+    def __init__(self):
+        self.count = 0
+        self.compiled: list[str] = []
+        self._stack = None
+
+    def __enter__(self) -> "CompileWatcher":
+        import jax
+
+        self._stack = contextlib.ExitStack()
+        self._stack.enter_context(jax.log_compiles(True))
+        self._handler = _CountingHandler(self)
+        for name in _COMPILE_LOGGERS:
+            logger = logging.getLogger(name)
+            prev_prop, prev_level = logger.propagate, logger.level
+            logger.addHandler(self._handler)
+            logger.propagate = False
+            if logger.level > logging.DEBUG:
+                logger.setLevel(logging.DEBUG)
+            self._stack.callback(self._restore, logger, prev_prop,
+                                 prev_level)
+        return self
+
+    def _restore(self, logger, prev_prop, prev_level):
+        logger.removeHandler(self._handler)
+        # an inner watcher must not undo an outer watcher's quieting
+        if not any(isinstance(h, _CountingHandler) for h in logger.handlers):
+            logger.propagate = prev_prop
+        logger.setLevel(prev_level)
+
+    def __exit__(self, *exc) -> None:
+        self._stack.close()
+        self._stack = None
+
+
+@contextlib.contextmanager
+def expect_no_retraces(what: str = "warm region") -> Iterator[CompileWatcher]:
+    """Assert ZERO XLA compilations inside the region — the enforcement
+    form of the AOT warm-tick claim.  Raises StrictViolation naming the
+    recompiled computations."""
+    with CompileWatcher() as w:
+        yield w
+    if w.count:
+        raise StrictViolation(
+            f"{what}: {w.count} recompile(s) where zero were promised "
+            f"(first: {', '.join(w.compiled[:8])}) — a warm tick must hit "
+            f"the AOT/jit caches")
+
+
+# ---------------------------------------------------------------------------
+# transfer scoping
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def intended_transfers() -> Iterator[None]:
+    """Scoped allow for *sanctioned* host<->device movement (admission
+    splices, streamed-operand re-uploads, harvest reads).  Inside the
+    engine these sites also use explicit device_put/device_get, so the
+    scope is belt-and-braces documentation that the transfer is the
+    point, not an accident."""
+    import jax
+
+    with jax.transfer_guard("allow"):
+        yield
+
+
+def guard_transfers():
+    """The enforcement guard for engine tick phases:
+    ``jax.transfer_guard("disallow")`` — explicit device_put/device_get
+    still pass; implicit transfers raise (and the engine counts the
+    recovery as a ``disallowed_transfers`` tick counter)."""
+    import jax
+
+    return jax.transfer_guard("disallow")
+
+
+def is_transfer_error(exc: BaseException) -> bool:
+    """Whether an exception is the transfer guard firing (jaxlib raises a
+    plain XlaRuntimeError; match on the guard's message shape)."""
+    return "Disallowed" in str(exc) and "transfer" in str(exc)
+
+
+# ---------------------------------------------------------------------------
+# the bundled strict mode
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def strict_mode(*, rank_promotion: str = "raise", nan_checks: bool = False,
+                leak_checks: bool = False,
+                engine_sanitize: bool = True) -> Iterator[CompileWatcher]:
+    """Run a region under the full sanitizer matrix:
+
+    * ``jax_numpy_rank_promotion = rank_promotion`` ("raise": silent
+      broadcasts across ranks become errors),
+    * the process-wide strict flag set, so every ``SolverEngine``
+      constructed inside guards its tick phases under
+      ``transfer_guard("disallow")`` and counts retraces/transfers
+      (``engine_sanitize=False`` leaves engines alone),
+    * a ``CompileWatcher`` (yielded, for callers that want to assert on
+      compile counts),
+    * optionally ``jax.debug_nans`` / ``jax.checking_leaks`` — off by
+      default: NaN checking syncs every primitive (slow) and flags
+      legitimately-masked lanes, so it is a per-test opt-in.
+
+    This is the context-manager form of the pytest ``--strict-sanitize``
+    flag (tests/conftest.py applies the same matrix suite-wide).
+    """
+    import jax
+
+    prev = _STRICT
+    with contextlib.ExitStack() as es:
+        es.enter_context(jax.numpy_rank_promotion(rank_promotion))
+        if nan_checks:
+            es.enter_context(jax.debug_nans(True))
+        if leak_checks:
+            es.enter_context(jax.checking_leaks())
+        if engine_sanitize:
+            set_strict(True)
+            es.callback(set_strict, prev)
+        watcher = es.enter_context(CompileWatcher())
+        yield watcher

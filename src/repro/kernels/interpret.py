@@ -14,6 +14,11 @@ The env var accepts 1/0/true/false/yes/no/on/off (case-insensitive;
 "auto"/"" fall through to the backend rule) so a deployment can force
 either mode without touching call sites.  The planner records the resolved
 value in every pallas plan's reasons (repro.plan).
+
+"One resolution point" is enforced, not aspirational: lint rule R1
+(``repro.analysis.rules``, CI ``lint`` job) flags any literal
+``interpret=True/False`` at a call site outside THIS file — the flag must
+flow through as ``interpret=interpret`` so it resolves here.
 """
 from __future__ import annotations
 

@@ -97,6 +97,9 @@ class MatrixStats:
             row_nnz_max=int(rc.max(initial=0)),
             col_nnz_mean=float(cc.mean()) if cc.size else 0.0,
             col_nnz_max=int(cc.max(initial=0)),
+            # float64 avoids catastrophic cancellation on large-nnz sums
+            # and is reduced to a python float immediately
+            # repro: allow[R4] -- host-side planner stat, not an operand
             frob_sq=float(np.sum(np.square(vals, dtype=np.float64))),
         )
 

@@ -19,7 +19,9 @@ them.  This module is that planner for the repo:
 Every decision lands in an inspectable ``ExecutionPlan`` with a one-line
 reason per choice; ``plan.override(...)`` swaps any decision and re-solves,
 which is how the equivalence tests pin every emittable plan to the same
-iterates.
+iterates.  The reason contract is enforced by lint rule R6
+(``repro.analysis.rules``): every ``return`` in a ``decide_*`` function
+must be a tuple ending in a reason string, so no decision path goes dark.
 
 >>> import numpy as np
 >>> from repro.api import Problem

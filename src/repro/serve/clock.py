@@ -1,0 +1,84 @@
+"""The serving Clock protocol — the ONE wall-time boundary in ``serve/``.
+
+The open-loop layer (PR 7) is a deterministic discrete-event simulation:
+arrivals, deadlines and latency stamps all read an injectable clock, and
+on a ``VirtualClock`` two runs are bit-identical.  That property held by
+convention only — any ``time.time()`` added anywhere in ``serve/`` would
+silently break it.  The convention is now enforced: lint rule R5
+(``repro.analysis.rules``) forbids wall-clock reads inside ``serve/``
+outside THIS file, so every consumer — the front-end's serving clock AND
+the engine's per-phase tick accounting — must route through a Clock.
+
+Protocol (duck-typed; anything with these three methods serves):
+
+    now() -> float        current time in seconds
+    advance(dt) -> None   move a virtual clock forward (no-op on walls)
+    skip_to(t) -> None    jump over idle gaps without sleeping
+
+``VirtualClock`` advances only when told (simulation), ``WallClock``
+reads ``time.perf_counter`` zeroed at construction (real measurements).
+"""
+from __future__ import annotations
+
+import time
+
+__all__ = ["Clock", "VirtualClock", "WallClock"]
+
+
+class Clock:
+    """Protocol base (also a usable zero clock for code that only needs
+    ``now()`` deltas disabled — e.g. an engine whose phase accounting
+    should cost nothing)."""
+
+    def now(self) -> float:
+        return 0.0
+
+    def advance(self, dt: float) -> None:
+        pass
+
+    def skip_to(self, t: float) -> None:
+        pass
+
+
+class VirtualClock(Clock):
+    """Deterministic discrete-event clock: ``now()`` moves only when the
+    serve loop calls ``advance``/``skip_to``.  No wall reads, no sleeps —
+    a front-end on this clock is a pure simulation, which is what makes
+    deadline/priority/backpressure behavior unit-testable."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self._t += float(dt)
+
+    def skip_to(self, t: float) -> None:
+        self._t = max(self._t, float(t))
+
+
+class WallClock(Clock):
+    """Real serving time (``time.perf_counter``), zeroed at construction.
+    ``advance`` is a no-op — real time advances itself while the engine
+    computes — and ``skip_to`` jumps over idle gaps by offsetting the
+    origin instead of sleeping, so an idle open-loop system costs no wall
+    time to simulate and latency stamps still measure arrival-to-done."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self._skip = 0.0
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0 + self._skip
+
+    def advance(self, dt: float) -> None:
+        pass
+
+    def skip_to(self, t: float) -> None:
+        gap = t - self.now()
+        if gap > 0:
+            self._skip += gap

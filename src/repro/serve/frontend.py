@@ -80,59 +80,15 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import time
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import numpy as np
 
+from repro.serve.clock import Clock, VirtualClock, WallClock
 from repro.serve.solver_engine import SolveRequest, SolverEngine
 
-__all__ = ["Arrival", "OpenLoopFrontend", "VirtualClock", "WallClock",
-           "poisson_arrivals", "trace_arrivals"]
-
-
-class VirtualClock:
-    """Deterministic discrete-event clock: ``now()`` moves only when the
-    serve loop calls ``advance``/``skip_to``.  No wall reads, no sleeps —
-    a front-end on this clock is a pure simulation, which is what makes
-    deadline/priority/backpressure behavior unit-testable."""
-
-    def __init__(self, t0: float = 0.0):
-        self._t = float(t0)
-
-    def now(self) -> float:
-        return self._t
-
-    def advance(self, dt: float) -> None:
-        if dt < 0:
-            raise ValueError(f"clock cannot run backwards (dt={dt})")
-        self._t += float(dt)
-
-    def skip_to(self, t: float) -> None:
-        self._t = max(self._t, float(t))
-
-
-class WallClock:
-    """Real serving time (``time.perf_counter``), zeroed at construction.
-    ``advance`` is a no-op — real time advances itself while the engine
-    computes — and ``skip_to`` jumps over idle gaps by offsetting the
-    origin instead of sleeping, so an idle open-loop system costs no wall
-    time to simulate and latency stamps still measure arrival-to-done."""
-
-    def __init__(self):
-        self._t0 = time.perf_counter()
-        self._skip = 0.0
-
-    def now(self) -> float:
-        return time.perf_counter() - self._t0 + self._skip
-
-    def advance(self, dt: float) -> None:
-        pass
-
-    def skip_to(self, t: float) -> None:
-        gap = t - self.now()
-        if gap > 0:
-            self._skip += gap
+__all__ = ["Arrival", "Clock", "OpenLoopFrontend", "VirtualClock",
+           "WallClock", "poisson_arrivals", "trace_arrivals"]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -104,7 +104,6 @@ end to end:
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from functools import partial
 from typing import Any
@@ -113,7 +112,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.strict import (
+    CompileWatcher, guard_transfers, intended_transfers, is_transfer_error,
+    strict_enabled,
+)
 from repro.core.prox import ProxOp, get_prox
+from repro.serve.clock import WallClock
 from repro.core.solver import (
     PDState, batched_feasibility, batched_init, batched_step, mask_state,
 )
@@ -451,6 +455,24 @@ class SolverEngine:
              The fmt/backend knobs above select the kernel inside the
              body (ELL gathers vs BCSR/Pallas MXU tiles), so the MXU path
              and the mesh compose.
+    sanitize: strict-mode tick guarding (``repro.analysis.strict``) —
+             None resolves the process-wide strict flag (the pytest
+             ``--strict-sanitize`` option / REPRO_STRICT env var), True/
+             False force it.  When on, every tick phase that should be
+             transfer-free runs under ``jax.transfer_guard("disallow")``:
+             sanctioned host->device movement (admission splices,
+             streamed re-uploads) goes through explicit ``device_put``
+             inside ``intended_transfers()`` scopes, and a stray implicit
+             transfer is counted in ``tick_counters`` (the phase then
+             re-runs with transfers allowed, so serving stays correct —
+             but the counter going nonzero is the regression signal).
+             ``tick_counters`` also carries ``retraces``, the
+             log_compiles-counted XLA compilations per tick window
+             (sanitize on or off) — a warm engine must report 0/0, the
+             enforcement form of PR 6's ``compile_s == 0`` claim.
+    clock:   time source for the per-phase ``phase_s`` accounting
+             (``repro.serve.clock`` protocol; default ``WallClock``).
+             serve/ code never reads the wall directly — lint rule R5.
     """
 
     def __init__(self, slots: int = 8, fmt: str = "ell",
@@ -460,7 +482,8 @@ class SolverEngine:
                  devices: Any = None, shard_above: int | None = None,
                  device_budget: int | None = None,
                  sharded_strategy: str | None = None,
-                 fused: bool | None = None):
+                 fused: bool | None = None, sanitize: bool | None = None,
+                 clock=None):
         if fmt not in ("ell", "bcsr"):
             raise ValueError(f"fmt must be ell|bcsr, got {fmt!r}")
         from repro.plan import decide_check_every
@@ -508,6 +531,13 @@ class SolverEngine:
         # separate from ``stats`` (benchmarks reset that dict wholesale).
         self.phase_s = {"admit_s": 0.0, "splice_s": 0.0, "dispatch_s": 0.0,
                         "harvest_s": 0.0, "compile_s": 0.0}
+        # strict-mode tick counters, phase_s-style cumulative (benchmarks
+        # reset them per measured window): XLA compilations observed
+        # during ticks and implicit transfers the strict guard caught.
+        # A warm engine must report 0/0 (see the `sanitize` knob above).
+        self.tick_counters = {"retraces": 0, "disallowed_transfers": 0}
+        self.sanitize = sanitize
+        self.clock = clock if clock is not None else WallClock()
         self._auto_uid = 0
         self._rr = 0                      # round-robin bucket device cursor
         # per-instance jit closures: the compile cache lives on the engine
@@ -1048,18 +1078,25 @@ class SolverEngine:
             if bucket.slot_sharded:
                 from jax.sharding import NamedSharding, PartitionSpec as P
 
-                def put(v):
+                def _target(v):
                     # numpy master -> sharded buffers directly (jnp.asarray
                     # first would materialize the FULL array on the default
                     # device, the exact thing sharded placement avoids)
-                    sh = NamedSharding(
+                    return NamedSharding(
                         bucket.slot_mesh,
                         P("p", *([None] * (np.ndim(v) - 1))))
-                    return jax.device_put(v, sh)
             elif bucket.device is None:
-                put = jnp.asarray
+                _target = lambda v: None       # default device, explicitly
             else:
-                put = lambda v: jax.device_put(v, bucket.device)
+                _target = lambda v: bucket.device
+
+            def put(v):
+                # explicit device_put inside an intended_transfers scope:
+                # this is THE sanctioned host->device edge of admission, and
+                # it stays legal under the strict tick guard ("disallow"
+                # only blocks implicit transfers)
+                with intended_transfers():
+                    return jax.device_put(v, _target(v))
             if key.fmt == "csc":
                 from repro.sparse.formats import StackedCSC
                 a = StackedCSC(vals=put(bucket.a_vals),
@@ -1108,17 +1145,18 @@ class SolverEngine:
             # numpy masters -> sharded buffers directly: materializing on
             # the default device first would need the whole over-capacity
             # stack to fit one device
-            bucket.dev = (
-                jax.device_put(bucket.a_vals, ns(a_specs[0])),
-                jax.device_put(bucket.a_idx, ns(a_specs[1])),
-                jax.device_put(bucket.at_vals, ns(at_specs[0])),
-                jax.device_put(bucket.at_idx, ns(at_specs[1])),
-                jax.device_put(bucket.b, ns(P(None, "p"))),
-                jax.device_put(bucket.lg, rep),
-                jax.device_put(bucket.gamma0, rep),
-                jax.device_put(bucket.reg, rep),
-                jax.device_put(bucket.tol, rep),
-                jax.device_put(bucket.maxit, rep))
+            with intended_transfers():
+                bucket.dev = (
+                    jax.device_put(bucket.a_vals, ns(a_specs[0])),
+                    jax.device_put(bucket.a_idx, ns(a_specs[1])),
+                    jax.device_put(bucket.at_vals, ns(at_specs[0])),
+                    jax.device_put(bucket.at_idx, ns(at_specs[1])),
+                    jax.device_put(bucket.b, ns(P(None, "p"))),
+                    jax.device_put(bucket.lg, rep),
+                    jax.device_put(bucket.gamma0, rep),
+                    jax.device_put(bucket.reg, rep),
+                    jax.device_put(bucket.tol, rep),
+                    jax.device_put(bucket.maxit, rep))
             bucket.dirty = False
         return bucket.dev
 
@@ -1306,22 +1344,25 @@ class SolverEngine:
             impl = {"splice": self._splice_init_impl,
                     "advance": self._advance_impl,
                     "advance_fused": self._advance_fused_impl}[kind]
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
             exe = jax.jit(lambda *a: impl(key, *a)).lower(*args).compile()
-            self.phase_s["compile_s"] += time.perf_counter() - t0
+            self.phase_s["compile_s"] += self.clock.now() - t0
             self._aot_cache[ck] = exe
         return exe
 
     # -- the serve loop ----------------------------------------------------
 
     def _harvest(self, bucket: _Bucket, feas, still) -> None:
-        """Retire slots whose verdict flipped: copy out iterates, free."""
-        still_h = np.asarray(still)
+        """Retire slots whose verdict flipped: copy out iterates, free.
+        Device reads are explicit ``jax.device_get`` — the intended
+        device->host edge of a tick, visible to the strict transfer
+        guard as sanctioned."""
+        still_h = np.asarray(jax.device_get(still))
         finished = bucket.active & ~still_h
         if finished.any():
-            feas_h = np.asarray(feas)
-            ks = np.asarray(bucket.state.k)
-            xbar = np.asarray(bucket.state.xbar)
+            feas_h = jax.device_get(feas)
+            ks = jax.device_get(bucket.state.k)
+            xbar = jax.device_get(bucket.state.xbar)
             for slot in np.nonzero(finished)[0]:
                 req = bucket.requests.pop(int(slot))
                 req.x = xbar[slot, :req.coo.n].copy()
@@ -1332,24 +1373,56 @@ class SolverEngine:
             bucket.active = bucket.active & still_h
             bucket.active_dev = None
 
+    def _put_mask(self, key, bucket, mask):
+        """Explicit placed upload of an ``(S,)`` bool slot mask, matching
+        the bucket's placement (mesh-replicated / slot-sharded / pinned /
+        default device).  Every mask that enters a tick body goes through
+        here so the upload is a sanctioned, explicit transfer."""
+        if isinstance(key, ShardedBucketKey):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            tgt = NamedSharding(self._sub_mesh(key.ndev), P())
+        elif bucket.slot_sharded:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            tgt = NamedSharding(bucket.slot_mesh, P("p"))
+        else:
+            tgt = bucket.device        # None -> default device, explicitly
+        with intended_transfers():
+            return jax.device_put(mask, tgt)
+
     def _active_mask(self, key, bucket):
         """Device-resident occupancy mask, re-transferred only when an
         admission or harvest changed it (the mask is an input of every
         tick; a fresh host scatter per tick costs more than the tick)."""
         if bucket.active_dev is None:
-            m = jnp.asarray(bucket.active)
-            if isinstance(key, ShardedBucketKey):
-                from jax.sharding import NamedSharding, PartitionSpec as P
-                m = jax.device_put(
-                    m, NamedSharding(self._sub_mesh(key.ndev), P()))
-            elif bucket.slot_sharded:
-                from jax.sharding import NamedSharding, PartitionSpec as P
-                m = jax.device_put(
-                    m, NamedSharding(bucket.slot_mesh, P("p")))
-            elif bucket.device is not None:
-                m = jax.device_put(m, bucket.device)
-            bucket.active_dev = m
+            bucket.active_dev = self._put_mask(key, bucket, bucket.active)
         return bucket.active_dev
+
+    def _sanitize_now(self) -> bool:
+        """Whether this tick runs under the strict transfer guard: the
+        constructor knob wins; ``sanitize=None`` resolves the process-wide
+        flag dynamically, so ``--strict-sanitize`` / ``set_strict`` affect
+        engines constructed before the flag flipped."""
+        return strict_enabled() if self.sanitize is None else self.sanitize
+
+    def _guarded(self, phase_fn, *args):
+        """Run one tick phase under ``transfer_guard("disallow")`` when
+        sanitizing.  Explicit device_put/device_get inside still pass; a
+        stray implicit transfer raises — we count it as a
+        ``disallowed_transfers`` tick counter and re-run the phase with
+        transfers allowed (correct result, flagged run).  The retry can
+        redo a phase's host work, which is fine: the counter is a red
+        flag for a broken residency invariant, not a perf statistic."""
+        if not self._sanitize_now():
+            return phase_fn(*args)
+        try:
+            with guard_transfers():
+                return phase_fn(*args)
+        except Exception as e:
+            if not is_transfer_error(e):
+                raise
+            self.tick_counters["disallowed_transfers"] += 1
+            with intended_transfers():
+                return phase_fn(*args)
 
     def _dispatch_splice(self, key, bucket, new):
         """Launch the (masked) init of freshly admitted slots; async."""
@@ -1358,17 +1431,18 @@ class SolverEngine:
                 self._sharded_device_operands(bucket)
             splice_fn, _ = self._sharded_fns(key)
             return splice_fn(vals, cols, atv, atr, b, lg, gamma0, reg,
-                             bucket.state, jnp.asarray(new),
+                             bucket.state, self._put_mask(key, bucket, new),
                              self._active_mask(key, bucket), tol, maxit)
         args = self._device_operands(bucket)
         a, at, b, lg, gamma0, reg, dim, seed, tol, maxit = args
         if bucket.slot_sharded:
             splice_fn, _ = self._slotshard_fns(key, bucket.slot_mesh, args)
             return splice_fn(a, at, b, lg, gamma0, reg, dim, seed,
-                             bucket.state, jnp.asarray(new),
+                             bucket.state, self._put_mask(key, bucket, new),
                              self._active_mask(key, bucket), tol, maxit)
         call = (a, at, b, lg, gamma0, reg, dim, seed, bucket.state,
-                jnp.asarray(new), self._active_mask(key, bucket), tol, maxit)
+                self._put_mask(key, bucket, new),
+                self._active_mask(key, bucket), tol, maxit)
         if bucket.resident:
             return self._aot_exe("splice", key, bucket, call)(*call)
         return self._splice_init(key, *call)
@@ -1422,20 +1496,32 @@ class SolverEngine:
         harvested: jax dispatch is async, so with buckets pinned to
         different devices (or sharded mesh-wide) the per-bucket compute
         overlaps — the harvest phase then blocks on each bucket's verdicts
-        in turn."""
+        in turn.
+
+        Every tick runs inside a ``CompileWatcher``: XLA compilations it
+        sees accrue to ``tick_counters["retraces"]`` (cumulative like
+        ``phase_s``; a warm engine must add zero).  Under strict mode
+        (``sanitize``) the splice/advance phases additionally run under
+        ``transfer_guard("disallow")`` via ``_guarded``."""
+        with CompileWatcher() as watcher:
+            alive = self._step_inner()
+        self.tick_counters["retraces"] += watcher.count
+        return alive
+
+    def _step_inner(self) -> bool:
         alive = False
         ticking = []
         ph = self.phase_s
 
         def charge(phase, t0, c0):
-            # wall time minus any AOT lowering that happened inside the
+            # clock time minus any AOT lowering that happened inside the
             # phase (already booked under compile_s)
-            ph[phase] += (time.perf_counter() - t0) - (ph["compile_s"] - c0)
+            ph[phase] += (self.clock.now() - t0) - (ph["compile_s"] - c0)
 
         # every bucket's key stays in self.queues (entries are never
         # deleted), so iterating the queues covers all buckets
         for key in list(self.queues):
-            t0, c0 = time.perf_counter(), ph["compile_s"]
+            t0, c0 = self.clock.now(), ph["compile_s"]
             bucket = self.buckets.get(key)
             if bucket is None:
                 if not self.queues.get(key):
@@ -1444,22 +1530,23 @@ class SolverEngine:
             new = self._admit(key, bucket)
             charge("admit_s", t0, c0)
             if new.any():
-                t0, c0 = time.perf_counter(), ph["compile_s"]
-                bucket.state, feas, still = self._dispatch_splice(
-                    key, bucket, new)
+                t0, c0 = self.clock.now(), ph["compile_s"]
+                bucket.state, feas, still = self._guarded(
+                    self._dispatch_splice, key, bucket, new)
                 self._harvest(bucket, feas, still)
                 charge("splice_s", t0, c0)
             if not bucket.active.any():
                 continue
             alive = True
-            t0, c0 = time.perf_counter(), ph["compile_s"]
-            bucket.state, feas, still = self._dispatch_advance(key, bucket)
+            t0, c0 = self.clock.now(), ph["compile_s"]
+            bucket.state, feas, still = self._guarded(
+                self._dispatch_advance, key, bucket)
             charge("dispatch_s", t0, c0)
             ticking.append((bucket, feas, still))
             self.stats["steps"] += 1
             self.stats["iterations"] += self.check_every * int(
                 bucket.active.sum())
-        t0, c0 = time.perf_counter(), ph["compile_s"]
+        t0, c0 = self.clock.now(), ph["compile_s"]
         for bucket, feas, still in ticking:
             self._harvest(bucket, feas, still)
             if not getattr(bucket, "resident", True):

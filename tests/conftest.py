@@ -1,10 +1,37 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 device by design
 (the 512-device mesh belongs exclusively to launch/dryrun.py); multi-device
-collective tests run in subprocesses (test_multidevice.py)."""
+collective tests run in subprocesses (test_multidevice.py).
+
+``--strict-sanitize`` runs the whole selection under the strict-mode
+sanitizer matrix (repro.analysis.strict): rank promotion raises, and the
+process-wide strict flag flips on, so every SolverEngine tick executes
+under ``jax.transfer_guard("disallow")`` and counts retraces/implicit
+transfers.  The CI ``strict`` job runs the engine/serve subset this way.
+"""
 import numpy as np
 import pytest
 
 import jax
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--strict-sanitize", action="store_true", default=False,
+        help="run tests under repro.analysis.strict: rank promotion "
+             "raises, engine ticks guard transfers and count retraces")
+
+
+@pytest.fixture(autouse=True)
+def _strict_sanitize(request):
+    if not request.config.getoption("--strict-sanitize"):
+        yield
+        return
+    from repro.analysis.strict import set_strict
+
+    set_strict(True)
+    with jax.numpy_rank_promotion("raise"):
+        yield
+    set_strict(None)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,308 @@
+"""repro.analysis: every AST rule fires on a minimal tripping fixture,
+suppressions require reasons, the repo's own src/ tree lints clean, and
+the strict-mode sanitizers (CompileWatcher / transfer guard / engine tick
+counters) enforce the warm-tick claims at runtime."""
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint import lint_paths, main as lint_main
+from repro.analysis.rules import RULES, RULES_BY_ID, check_source
+from repro.analysis.strict import (
+    CompileWatcher, StrictViolation, expect_no_retraces, set_strict,
+    strict_enabled, strict_mode,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _rules_of(source, path="src/repro/somewhere/mod.py"):
+    return {v.rule for v in check_source(textwrap.dedent(source), path)}
+
+
+# ---------------------------------------------------------------------------
+# one tripping fixture per rule
+# ---------------------------------------------------------------------------
+
+def test_r1_literal_interpret_fires():
+    src = "pl.pallas_call(kern, out_shape=o, interpret=True)(x)\n"
+    assert "R1" in _rules_of(src, "src/repro/kernels/spmv.py")
+
+
+def test_r1_interpret_passthrough_and_whitelist_ok():
+    ok = "pl.pallas_call(kern, out_shape=o, interpret=interpret)(x)\n"
+    assert "R1" not in _rules_of(ok, "src/repro/kernels/spmv.py")
+    lit = "pl.pallas_call(kern, out_shape=o, interpret=False)(x)\n"
+    assert "R1" not in _rules_of(lit, "src/repro/kernels/interpret.py")
+
+
+def test_r2_hand_assembled_ops_fires():
+    src = """
+    from repro.core.solver import dense_ops
+    ops = SolverOps(matvec=mv, rmatvec=rmv)
+    legacy = dense_ops(a)
+    """
+    got = _rules_of(src, "src/repro/serve/frontend.py")
+    assert "R2" in got
+
+
+def test_r2_allowed_inside_core_and_operators():
+    src = "ops = SolverOps(matvec=mv, rmatvec=rmv)\n"
+    assert "R2" not in _rules_of(src, "src/repro/core/solver.py")
+    assert "R2" not in _rules_of(src, "src/repro/operators/base.py")
+
+
+def test_r3_unseeded_randomness_fires():
+    assert "R3" in _rules_of("x = np.random.rand(3)\n")
+    assert "R3" in _rules_of("rng = np.random.default_rng()\n")
+    assert "R3" in _rules_of(
+        "key = jax.random.PRNGKey(int(time.time()))\n")
+
+
+def test_r3_seeded_randomness_ok():
+    assert "R3" not in _rules_of("rng = np.random.default_rng(0)\n")
+    assert "R3" not in _rules_of("key = jax.random.PRNGKey(seed)\n")
+
+
+def test_r4_float64_outside_whitelist_fires():
+    assert "R4" in _rules_of("x = np.zeros(4, np.float64)\n")
+    assert "R4" in _rules_of("x = np.asarray(v, dtype='float64')\n")
+
+
+def test_r4_whitelist_and_dtype_compare_ok():
+    src = "x = np.zeros(4, np.float64)\n"
+    assert "R4" not in _rules_of(src, "src/repro/solvers/rcd.py")
+    assert "R4" not in _rules_of(src, "src/repro/core/reference.py")
+    assert "R4" not in _rules_of("ok = a.dtype == np.dtype(np.float64)\n")
+
+
+def test_r5_wall_clock_in_serve_fires():
+    src = "t0 = time.perf_counter()\n"
+    assert "R5" in _rules_of(src, "src/repro/serve/solver_engine.py")
+    imp = "from time import monotonic\n"
+    assert "R5" in _rules_of(imp, "src/repro/serve/frontend.py")
+
+
+def test_r5_clock_py_and_non_serve_ok():
+    src = "t0 = time.perf_counter()\n"
+    assert "R5" not in _rules_of(src, "src/repro/serve/clock.py")
+    assert "R5" not in _rules_of(src, "src/repro/roofline/measure.py")
+
+
+def test_r6_reasonless_decide_fires():
+    src = """
+    def decide_format(coo):
+        if coo.nnz > 10:
+            return ("ell", f"row-regular nnz={coo.nnz}")
+        return ("bcsr",)
+    """
+    assert "R6" in _rules_of(src)
+
+
+def test_r6_reasoned_returns_ok():
+    src = """
+    def decide_format(coo):
+        if coo.nnz > 10:
+            return ("ell", f"row-regular nnz={coo.nnz}")
+        reason = "fallback: " + str(coo.nnz)
+        return ("bcsr", reason)
+    """
+    assert "R6" not in _rules_of(src)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_reasoned_allow_suppresses():
+    src = ("# repro: allow[R4] -- float64 oracle accumulator, host-side\n"
+           "x = np.zeros(4, np.float64)\n")
+    assert check_source(src, "src/repro/api.py") == []
+    inline = ("x = np.zeros(4, np.float64)"
+              "  # repro: allow[R4] -- host-side oracle\n")
+    assert check_source(inline, "src/repro/api.py") == []
+
+
+def test_reasonless_allow_is_r0():
+    src = ("# repro: allow[R4]\n"
+           "x = np.zeros(4, np.float64)\n")
+    got = {v.rule for v in check_source(src, "src/repro/api.py")}
+    assert got == {"R0", "R4"}   # no reason: allow is void AND flagged
+
+
+def test_unknown_rule_id_is_r0():
+    src = "pass  # repro: allow[R99] -- whatever\n"
+    assert {v.rule for v in check_source(src, "x.py")} == {"R0"}
+
+
+def test_docstring_mention_is_not_a_suppression():
+    src = ('"""Write # repro: allow[R4] -- why to suppress."""\n'
+           "x = np.zeros(4, np.float64)\n")
+    got = {v.rule for v in check_source(src, "src/repro/api.py")}
+    assert got == {"R4"}         # the docstring neither allows nor is R0
+
+
+def test_allow_covers_next_line_only():
+    src = ("# repro: allow[R4] -- reasoned\n"
+           "x = np.zeros(4, np.float64)\n"
+           "y = np.zeros(4, np.float64)\n")
+    got = check_source(src, "src/repro/api.py")
+    assert [v.line for v in got] == [3]
+
+
+# ---------------------------------------------------------------------------
+# the linter over the real tree + CLI
+# ---------------------------------------------------------------------------
+
+def test_src_tree_lints_clean():
+    violations = lint_paths([str(REPO / "src")])
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_every_rule_has_rationale_and_json_shape():
+    assert {r.id for r in RULES} == {"R1", "R2", "R3", "R4", "R5", "R6"}
+    for r in RULES:
+        assert r.rationale and r.title
+    v = check_source("x = np.zeros(4, np.float64)\n", "src/repro/api.py")[0]
+    j = v.to_json()
+    assert {"rule", "file", "line", "col", "message",
+            "rationale"} <= set(j)
+    assert j["rationale"] == RULES_BY_ID["R4"].rationale
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("x = np.zeros(4, np.float64)\n")
+    assert lint_main([str(bad)]) == 1
+    assert "R4" in capsys.readouterr().out
+    good = tmp_path / "good.py"
+    good.write_text("x = np.zeros(4, np.float32)\n")
+    assert lint_main([str(good)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# strict-mode runtime sanitizers
+# ---------------------------------------------------------------------------
+
+def test_compile_watcher_counts_fresh_compiles_not_cache_hits():
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda x: x * 2.0 + 1.0)
+    x = jnp.ones(7)
+    f(x)                                   # compile outside the watcher
+    with CompileWatcher() as w:
+        f(x)                               # cache hit
+    assert w.count == 0
+    g = jax.jit(lambda x: x * 3.0 - 2.0)
+    with CompileWatcher() as w:
+        g(x)                               # fresh lowering
+    assert w.count >= 1 and w.compiled
+
+
+def test_expect_no_retraces_raises_on_fresh_compile():
+    import jax
+    import jax.numpy as jnp
+
+    h = jax.jit(lambda x: x - 0.5)
+    with pytest.raises(StrictViolation, match="recompile"):
+        with expect_no_retraces("warm tick"):
+            h(jnp.ones(5))
+
+
+def test_strict_flag_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_STRICT", raising=False)
+    set_strict(None)
+    assert not strict_enabled()
+    monkeypatch.setenv("REPRO_STRICT", "1")
+    assert strict_enabled()
+    set_strict(False)                      # explicit flag beats the env
+    assert not strict_enabled()
+    set_strict(None)
+
+
+def test_strict_mode_sets_engine_flag_and_rank_promotion():
+    import jax.numpy as jnp
+
+    set_strict(None)
+    with strict_mode() as watcher:
+        assert strict_enabled()
+        assert isinstance(watcher, CompileWatcher)
+        with pytest.raises(Exception):     # silent broadcast now raises
+            jnp.ones((3, 3)) + jnp.ones(3)
+    assert not strict_enabled()
+
+
+def _mk_request(i, uid):
+    from repro.configs.base import PaperProblemConfig
+    from repro.serve import SolveRequest
+    from repro.sparse import make_lasso
+
+    coo, b, _ = make_lasso(
+        PaperProblemConfig(name="t", m=64, n=16, nnz=64 * 6, reg=0.1),
+        seed=i)
+    return SolveRequest(uid=uid, coo=coo, b=b, gamma0=1000.0, tol=3e-2,
+                        max_iterations=4000)
+
+
+def test_warm_engine_ticks_are_clean_under_sanitize():
+    """THE tentpole invariant: after a cold stream, a second stream of
+    same-shape requests runs with zero retraces and zero disallowed
+    transfers while every tick phase executes under
+    transfer_guard("disallow")."""
+    from repro.serve import SolverEngine
+
+    eng = SolverEngine(slots=2, fmt="ell", backend="jnp", check_every=16,
+                       sanitize=True)
+    for i in range(3):
+        eng.submit(_mk_request(i, uid=i))
+    eng.run()
+    assert eng.tick_counters["disallowed_transfers"] == 0   # even cold
+    eng.tick_counters = {k: 0 for k in eng.tick_counters}
+    for i in range(3):
+        eng.submit(_mk_request(i, uid=10 + i))
+    done = eng.run()
+    assert len(done) == 3 and all(r.done for r in done)
+    assert eng.tick_counters == {"retraces": 0,
+                                 "disallowed_transfers": 0}
+
+
+def test_guarded_counts_and_recovers_implicit_transfer():
+    """A phase that does an implicit host->device transfer under sanitize
+    is counted as a red flag, then re-run with transfers allowed — the
+    result is still correct."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import SolverEngine
+
+    eng = SolverEngine(sanitize=True)
+    host = np.ones(16, np.float32)
+    out = eng._guarded(lambda: jnp.asarray(host) * 2.0)
+    np.testing.assert_allclose(np.asarray(out), 2.0)
+    assert eng.tick_counters["disallowed_transfers"] == 1
+    # a clean phase — device-resident operand, warm jit — never trips it
+    f = jax.jit(lambda x: x * 2.0)
+    dev = jax.device_put(host)
+    f(dev)                                 # warm the cache outside
+    clean = eng._guarded(lambda: f(dev))
+    np.testing.assert_allclose(np.asarray(clean), 2.0)
+    assert eng.tick_counters["disallowed_transfers"] == 1   # unchanged
+
+
+def test_sanitize_none_resolves_process_flag_dynamically(monkeypatch):
+    from repro.analysis import strict as strict_mod
+    from repro.serve import SolverEngine
+
+    monkeypatch.delenv("REPRO_STRICT", raising=False)
+    prev = strict_mod._STRICT              # may be True under the suite-
+    try:                                   # wide --strict-sanitize fixture
+        set_strict(False)
+        eng = SolverEngine()               # constructed BEFORE the flip
+        assert not eng._sanitize_now()
+        set_strict(True)
+        assert eng._sanitize_now()
+    finally:
+        set_strict(prev)
+    assert not SolverEngine(sanitize=False)._sanitize_now()

@@ -4,12 +4,10 @@ Covers the API-layer contracts from DESIGN.md section 6: every plan the
 planner can emit returns the same iterates (1e-5), plans round-trip
 (repr -> override -> solve) and match the legacy entry points, Lg is never
 hand-passed (Frobenius / power-iteration estimation), the serving engine
-admits Problems, deprecation shims warn exactly once, and no in-repo
-consumer outside the kernel layer imports the legacy signatures.
+admits Problems, and deprecation shims warn exactly once.  (The legacy-
+import sweep moved to AST rule R2 in repro.analysis.)
 """
-import re
 import warnings
-from pathlib import Path
 
 import numpy as np
 import pytest
@@ -23,8 +21,6 @@ from repro.core.prox import get_prox
 from repro.core.solver import estimate_lg, solve_tol
 from repro.operators import make_operator, make_solver_ops
 from repro.sparse import coo_to_bcsr, coo_to_dense, coo_to_ell, random_coo
-
-REPO = Path(__file__).resolve().parent.parent
 
 
 def _lasso(m=64, n=16, k=4, seed=0):
@@ -306,38 +302,9 @@ def test_solve_distributed_warns():
                           "replicated", gamma0=100.0, iterations=2)
 
 
-# ---------------------------------------------------------------------------
-# Grep-style: no in-repo caller outside the kernel layer uses the legacy
-# signatures directly (they go through the facade)
-# ---------------------------------------------------------------------------
-
-_LEGACY = re.compile(
-    r"\b(dense_ops|ell_ops|solve_distributed)\b"
-    r"|serve import Engine\b|serve\.Engine\b")
-
-#: the kernel layer / shim implementations themselves
-_ALLOWED = {
-    "src/repro/core/solver.py",          # defines the shims
-    "src/repro/core/distributed.py",     # defines solve_distributed
-    "src/repro/core/__init__.py",        # re-exports the kernel layer
-    "src/repro/deprecation.py",
-    "src/repro/serve/__init__.py",       # implements the Engine alias
-}
-
-
-def test_no_legacy_imports_outside_kernel_layer():
-    offenders = []
-    for root in ("src/repro", "examples", "benchmarks"):
-        for path in sorted((REPO / root).rglob("*.py")):
-            rel = str(path.relative_to(REPO))
-            if rel in _ALLOWED:
-                continue
-            for i, line in enumerate(path.read_text().splitlines(), 1):
-                if _LEGACY.search(line):
-                    offenders.append(f"{rel}:{i}: {line.strip()}")
-    assert not offenders, (
-        "legacy solver signatures used outside core/ shims — route through "
-        "repro.api instead:\n" + "\n".join(offenders))
+# The PR-3 grep-style legacy-import sweep that used to live here was
+# promoted to AST lint rule R2 (repro.analysis.rules; exercised by
+# tests/test_analysis.py and the CI lint job).
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,8 @@ BENCH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "experiments", "bench")
 
 PHASES = ("admit_s", "splice_s", "dispatch_s", "harvest_s", "compile_s")
+#: strict-mode tick counters (PR 9) riding along in tick_breakdown
+COUNTERS = ("retraces", "disallowed_transfers")
 
 
 def _load(name):
@@ -25,13 +27,14 @@ def _load(name):
 
 
 def _check_phase_s(phase, wall, what):
-    """phase_s contract: every entry non-negative, total within the wall
-    time it decomposes (phases are disjoint slices of the tick loop)."""
+    """phase_s contract: every entry non-negative, the ``*_s`` times sum
+    within the wall time they decompose (phases are disjoint slices of
+    the tick loop; non-``_s`` keys are counters, not seconds)."""
     for k, v in phase.items():
         assert v >= 0.0, f"{what}: negative phase {k}={v}"
-    assert sum(phase.values()) <= wall * 1.01 + 1e-6, \
-        f"{what}: phases sum to {sum(phase.values()):.4f}s " \
-        f"> wall {wall:.4f}s"
+    total = sum(v for k, v in phase.items() if k.endswith("_s"))
+    assert total <= wall * 1.01 + 1e-6, \
+        f"{what}: phases sum to {total:.4f}s > wall {wall:.4f}s"
 
 
 def test_solver_serving_schema():
@@ -43,9 +46,15 @@ def test_solver_serving_schema():
                 "iterations", "steps", "tick_breakdown",
                 "tick_breakdown_warm"):
         assert key in rec, key
-    assert set(rec["tick_breakdown"]) == set(PHASES)
+    assert set(rec["tick_breakdown"]) == set(PHASES) | set(COUNTERS)
+    assert set(rec["tick_breakdown_warm"]) == set(PHASES) | set(COUNTERS)
     _check_phase_s(rec["tick_breakdown"], rec["engine_s"],
                    "solver_serving measured window")
+    # the strict-mode claim as committed data: a warm engine re-admits and
+    # serves a whole stream with zero recompiles and zero implicit
+    # transfers, every tick under transfer_guard("disallow")
+    for counter in COUNTERS:
+        assert rec["tick_breakdown"][counter] == 0, counter
     assert rec["rps_engine"] > 0 and rec["engine_s"] > 0
 
 
