@@ -68,7 +68,10 @@ import time
 import numpy as np
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-OUT_DIR = os.path.join(REPO, "experiments", "bench")
+# REPRO_BENCH_OUT redirects every artifact (CI smokes write to a scratch
+# dir instead of clobbering the committed experiments/bench/*.json)
+OUT_DIR = (os.environ.get("REPRO_BENCH_OUT")
+           or os.path.join(REPO, "experiments", "bench"))
 SCALE = 50  # paper datasets / SCALE (CPU container)
 
 ROWS: list[tuple[str, float, str]] = []
@@ -468,16 +471,17 @@ from repro.serve import ShardedBucketKey, SolverEngine
 
 NUM, SLOTS, TOL, CHECK = %NUM%, %SLOTS%, 1e-2, 16
 SHARD_ABOVE = %SHARD_ABOVE%
+GRID = %GRID%
 
 def requests():
     probs = make_problems(NUM, seed=%SEED%, big_every=NUM,
-                          big_shape=(8192, 512),
+                          big_shape=%BIG%,
                           shapes=[(96, 24), (64, 16), (120, 30)])
     return [p.to_request(uid=i, tol=TOL, max_iterations=4000)
             for i, p in enumerate(probs)]
 
 eng = SolverEngine(slots=SLOTS, fmt="%FMT%", backend="jnp",
-                   check_every=CHECK, shard_above=SHARD_ABOVE)
+                   check_every=CHECK, shard_above=SHARD_ABOVE, grid=GRID)
 for r in requests():            # warm: same stream, compile every bucket
     eng.submit(r)
 eng.run()
@@ -492,18 +496,32 @@ for _ in range(2):              # best-of-2 warm repeats (steady state)
     dt = min(dt, time.perf_counter() - t0)
     assert len(done) == NUM
 sharded = [k for k in eng.buckets if isinstance(k, ShardedBucketKey)]
-print(json.dumps({"dt": dt, "rps": NUM / dt,
-                  "devices": len(eng.devices),
-                  "buckets": len(eng.buckets),
-                  "sharded_admitted": eng.stats["sharded_admitted"] // 2,
-                  "bucket_body": (f"{sharded[0].fmt}/{sharded[0].strategy}"
-                                  if sharded else None),
-                  "bucket_slot_bytes": (eng.bucket_slot_bytes(sharded[0])
-                                        if sharded else None)}))
+rec = {"dt": dt, "rps": NUM / dt,
+       "devices": len(eng.devices),
+       "buckets": len(eng.buckets),
+       "sharded_admitted": eng.stats["sharded_admitted"] // 2,
+       "bucket_body": (f"{sharded[0].fmt}/{sharded[0].strategy}"
+                       if sharded else None),
+       "bucket_slot_bytes": (eng.bucket_slot_bytes(sharded[0])
+                             if sharded else None)}
+if sharded:
+    from repro.plan import sharded_wire_bytes
+    k = sharded[0]
+    wire = sharded_wire_bytes(k.strategy, 1, k.m_pad, k.n_pad, k.ndev,
+                              grid=k.grid)
+    rec["grid_shape"] = list(k.grid) if k.grid else None
+    rec["wire_bytes"] = wire
+    rec["wire_reason"] = (
+        f"{wire['total']} collective wire bytes/device per iteration per "
+        f"slot (fwd {wire['fwd']} + bwd {wire['bwd']}, ring model) for "
+        f"{k.strategy}" + (f" {k.grid[0]}x{k.grid[1]}" if k.grid else "")
+        + f" over {k.ndev} devices")
+print(json.dumps(rec))
 """
 
 
-def sharded_serving(formats=("ell", "bcsr"), seed=0):
+def sharded_serving(formats=("ell", "bcsr"), seed=0, grids=None,
+                    quick=False):
     """Serving-engine throughput vs device count on one mixed workload:
     ragged small requests (replicated buckets — pinned round-robin or
     slot-axis sharded by queue depth) plus ONE oversized request above
@@ -517,33 +535,54 @@ def sharded_serving(formats=("ell", "bcsr"), seed=0):
     gather bodies, the full 1/2/4/8 curve) and "bcsr" (tiled MXU bodies,
     endpoints 1/8) — the per-device bucket-body choice
     (``repro.plan.decide_bucket_body``) and its modeled operand bytes are
-    recorded per point.  One subprocess per point (device count locks at
-    jax init), engine measured warm, best of 2 repeats; emits
-    experiments/bench/sharded_serving.json.  The acceptance gate is
-    ``speedup_8v1 > 1`` with ``sharded_admitted >= 1`` at 8 devices (on
-    the ell curve; the fake-CPU caveat in benchmarks/README.md applies)."""
-    num, slots, shard_above = 25, 4, 20_000
+    recorded per point.  The ``--grid`` axis re-runs the 8-device point
+    per gridpart sub-mesh shape (default 1x8 / 2x4 / 4x2 / 8x1, on the
+    ell body) — each grid point records its ``grid_shape`` and the
+    planner's wire-byte reason (``repro.plan.sharded_wire_bytes``, the
+    same ring model ``roofline.collective_stats`` charges), so the sweep
+    shows where the 2-D layouts beat the 1-D ones on collective bytes.
+    One subprocess per point (device count locks at jax init), engine
+    measured warm, best of 2 repeats; emits
+    experiments/bench/sharded_serving.json.  The acceptance gate is the
+    best ``by_grid`` rps over the 1-device rps ``> 1`` with
+    ``sharded_admitted >= 1`` — NOT the legacy ``speedup_8v1`` mirror:
+    dualpart's shard-resident backward trades its transpose operand for
+    a scatter-add the CPU backend runs serially, so that mirror sits
+    below 1 on fake host devices even though the wire bytes halved
+    (benchmarks/README.md spells out the caveat).  ``--quick`` shrinks
+    the mix for a CI smoke (no speedup gate)."""
+    num, slots, shard_above = (6, 2, 6_000) if quick else (25, 4, 20_000)
+    big_shape = (1024, 128) if quick else (8192, 512)
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = {"requests": num, "slots": slots, "big_shape": [8192, 512],
-           "shard_above": shard_above, "seed": seed, "formats": {}}
+    out = {"requests": num, "slots": slots, "big_shape": list(big_shape),
+           "shard_above": shard_above, "seed": seed, "quick": bool(quick),
+           "formats": {}}
+
+    def run_point(dev, fmt, grid=None):
+        code = (_SHARDED_SERVING_SNIPPET
+                .replace("%DEV%", str(dev)).replace("%NUM%", str(num))
+                .replace("%SLOTS%", str(slots))
+                .replace("%SHARD_ABOVE%", str(shard_above))
+                .replace("%SEED%", str(seed + 21))
+                .replace("%BIG%", repr(tuple(big_shape)))
+                .replace("%GRID%", repr(tuple(grid) if grid else None))
+                .replace("%FMT%", fmt))
+        p = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=900)
+        if p.returncode != 0:
+            raise RuntimeError(p.stderr[-2000:])
+        return json.loads(p.stdout.strip().splitlines()[-1])
+
     for fmt in formats:
-        devs = (1, 2, 4, 8) if fmt == "ell" else (1, 8)
+        if quick:
+            devs = (1, 8)
+        else:
+            devs = (1, 2, 4, 8) if fmt == "ell" else (1, 8)
         by_dev = {}
         for dev in devs:
-            code = (_SHARDED_SERVING_SNIPPET
-                    .replace("%DEV%", str(dev)).replace("%NUM%", str(num))
-                    .replace("%SLOTS%", str(slots))
-                    .replace("%SHARD_ABOVE%", str(shard_above))
-                    .replace("%SEED%", str(seed + 21))
-                    .replace("%FMT%", fmt))
-            p = subprocess.run([sys.executable, "-c", code], env=env,
-                               capture_output=True, text=True, timeout=900)
-            if p.returncode != 0:
-                raise RuntimeError(p.stderr[-2000:])
-            rec = json.loads(p.stdout.strip().splitlines()[-1])
-            by_dev[str(dev)] = rec
+            rec = by_dev[str(dev)] = run_point(dev, fmt)
             emit(f"sharded_serving/{fmt}/dev{dev}", rec["dt"] / num * 1e6,
                  f"rps={rec['rps']:.1f};buckets={rec['buckets']};"
                  f"sharded={rec['sharded_admitted']};"
@@ -556,6 +595,20 @@ def sharded_serving(formats=("ell", "bcsr"), seed=0):
              f"speedup={speedup:.2f}x;"
              f"sharded_at_8={eight['sharded_admitted']};"
              f"slot_bytes={eight['bucket_slot_bytes']}")
+    # the gridpart sub-mesh axis: 8-device points per (rows, cols) shape
+    # on the first requested format's body
+    grid_fmt = formats[0]
+    by_grid = {}
+    for grid in (grids or ((1, 8), (2, 4), (4, 2), (8, 1))):
+        rec = run_point(8, grid_fmt, grid=grid)
+        gname = f"{grid[0]}x{grid[1]}"
+        by_grid[gname] = rec
+        emit(f"sharded_serving/{grid_fmt}/grid{gname}",
+             rec["dt"] / num * 1e6,
+             f"rps={rec['rps']:.1f};body={rec['bucket_body']};"
+             f"wire={rec.get('wire_bytes', {}).get('total')}")
+    out["by_grid"] = by_grid
+    out["grid_format"] = grid_fmt
     if "ell" in out["formats"]:
         # legacy top-level mirror of the ell curve (schema compatibility)
         out["by_devices"] = out["formats"]["ell"]["by_devices"]
@@ -567,7 +620,7 @@ def sharded_serving(formats=("ell", "bcsr"), seed=0):
 
 
 def open_loop_serving(seed=0, quick=False, arrival_rates=None, slo=None,
-                      deadline=None):
+                      deadline=None, assert_no_retraces=False):
     """Tail latency of the open-loop service layer: a seeded Poisson
     stream drives the engine through ``serve/frontend.py`` at >= 3
     offered loads — under, near, and over the engine's closed-loop
@@ -603,25 +656,40 @@ def open_loop_serving(seed=0, quick=False, arrival_rates=None, slo=None,
         eng.submit(r)
     eng.run()
 
+    from contextlib import nullcontext
+    guard = nullcontext()
+    if assert_no_retraces:
+        # warm on the exact load stream too (a different seed can draw a
+        # different max row width and thus a legitimately new bucket), then
+        # demand the measured loads hit only AOT-compiled executables
+        from repro.analysis.strict import expect_no_retraces
+        for r in requests(seed + 11):
+            eng.submit(r)
+        eng.run()
+        guard = expect_no_retraces("open_loop_serving measured loads")
+
     loads = []
-    for i, rate in enumerate(rates):
-        arr = poisson_arrivals(requests(seed + 11), rate=rate,
-                               seed=seed + i, deadline=deadline)
-        fe = OpenLoopFrontend(eng, arr, clock=WallClock())
-        rep = fe.run(slo=slo)
-        rep["offered_rate"] = rate
-        loads.append(rep)
-        p50 = rep["p50_latency_s"]
-        p99 = rep["p99_latency_s"]
-        n_rej = rep["rejected_backpressure"] + rep["rejected_admission"]
-        emit(f"open_loop_serving/rate{rate:g}",
-             (p50 or 0.0) * 1e6,
-             f"p99_ms={(p99 or 0) * 1e3:.1f};"
-             f"goodput_rps={rep['goodput_rps']:.1f};"
-             f"completed={rep['completed']};expired={rep['expired']};"
-             f"rejected={n_rej}")
+    with guard:
+        for i, rate in enumerate(rates):
+            arr = poisson_arrivals(requests(seed + 11), rate=rate,
+                                   seed=seed + i, deadline=deadline)
+            fe = OpenLoopFrontend(eng, arr, clock=WallClock())
+            rep = fe.run(slo=slo)
+            rep["offered_rate"] = rate
+            loads.append(rep)
+            p50 = rep["p50_latency_s"]
+            p99 = rep["p99_latency_s"]
+            n_rej = (rep["rejected_backpressure"]
+                     + rep["rejected_admission"])
+            emit(f"open_loop_serving/rate{rate:g}",
+                 (p50 or 0.0) * 1e6,
+                 f"p99_ms={(p99 or 0) * 1e3:.1f};"
+                 f"goodput_rps={rep['goodput_rps']:.1f};"
+                 f"completed={rep['completed']};expired={rep['expired']};"
+                 f"rejected={n_rej}")
     rec = dict(requests=num, slots=slots, tol=tol, seed=seed,
                slo_s=slo, deadline_s=deadline, quick=bool(quick),
+               no_retraces_asserted=bool(assert_no_retraces),
                arrival="poisson", rates=list(rates), loads=loads)
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, "open_loop_serving.json"), "w") as f:
@@ -883,8 +951,19 @@ def main(argv=None) -> None:
                          "the 'auto' arm (default: let "
                          "repro.plan.decide_solver_family pick)")
     ap.add_argument("--quick", action="store_true",
-                    help="rcd_serving/open_loop_serving: shrink the "
-                         "sweep for a fast CI smoke")
+                    help="rcd_serving/open_loop_serving/sharded_serving: "
+                         "shrink the sweep for a fast CI smoke")
+    ap.add_argument("--grid", action="append", default=None,
+                    metavar="RxC",
+                    help="sharded_serving gridpart sub-mesh shape, e.g. "
+                         "2x4 (repeatable; default 1x8 2x4 4x2 8x1)")
+    ap.add_argument("--assert-no-retraces", action="store_true",
+                    help="open_loop_serving: wrap the measured loads in "
+                         "repro.analysis.strict.expect_no_retraces — a "
+                         "warm engine must serve every offered load "
+                         "without a single XLA recompile (the strict CI "
+                         "job's enforcement form of the compile_s == 0 "
+                         "claim)")
     ap.add_argument("--arrival-rate", type=float, action="append",
                     default=None, metavar="RPS",
                     help="open_loop_serving offered load in req/s "
@@ -905,10 +984,19 @@ def main(argv=None) -> None:
     os.makedirs(OUT_DIR, exist_ok=True)
     results = {}
     print("name,us_per_call,derived")
+    grids = None
+    if args.grid:
+        grids = []
+        for g in args.grid:
+            r, _, c = g.lower().partition("x")
+            if not (r.isdigit() and c.isdigit()):
+                raise SystemExit(f"--grid takes RxC (e.g. 2x4), got {g!r}")
+            grids.append((int(r), int(c)))
     for name in names:
         if name == "sharded_serving":
             results[name] = sharded_serving(formats=formats,
-                                            seed=args.seed)
+                                            seed=args.seed, grids=grids,
+                                            quick=args.quick)
         elif name == "solver_serving":
             results[name] = solver_serving(check_every=args.check_every,
                                            fused=args.fused,
@@ -920,7 +1008,8 @@ def main(argv=None) -> None:
             results[name] = open_loop_serving(
                 seed=args.seed, quick=args.quick,
                 arrival_rates=args.arrival_rate, slo=args.slo,
-                deadline=args.deadline)
+                deadline=args.deadline,
+                assert_no_retraces=args.assert_no_retraces)
         else:
             results[name] = MODES[name]()
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:

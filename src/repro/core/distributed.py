@@ -302,7 +302,7 @@ def make_solve_tol_fn(problem: DistProblem, prox: ProxOp, gamma0: float,
 # ---------------------------------------------------------------------------
 
 
-def sharded_bucket_specs(axis: str, fmt: str = "ell",
+def sharded_bucket_specs(axis, fmt: str = "ell",
                          strategy: str = "rowpart"):
     """(a_specs, at_specs) PartitionSpec pairs for one mesh-wide bucket's
     operand stacks — shared between ``make_sharded_bucket_fns`` (shard_map
@@ -315,12 +315,24 @@ def sharded_bucket_specs(axis: str, fmt: str = "ell",
       strategy="rowpart"   at: per-shard transpose blocks, sharded on the
                   LEADING (ndev,) axis — each shard holds a full-n
                   transpose of its own rows
-      strategy="dualpart"  at: the plain transpose, sharded on ITS row
-                  axis (= columns of A) — the dual-RDD cache: the
-                  transpose is stored once across the mesh
+      strategy="dualpart"  at: a ZERO-WIDTH stand-in laid out like ``a``'s
+                  transpose — the shard-resident-x body needs no transpose
+                  copy at all; the stand-in keeps the operand arity (and
+                  the byte model's at term, which prices it at 0)
+      strategy="gridpart"  ``axis`` is the (row_axis, col_axis) pair; a
+                  and at are (R, C, S, ...) block grids sharded on both
+                  leading dims — device (i, j) holds block (i, j) and its
+                  transpose tile
     """
-    if strategy not in ("rowpart", "dualpart"):
+    if strategy not in ("rowpart", "dualpart", "gridpart"):
         raise KeyError(f"unknown sharded-bucket strategy {strategy!r}")
+    if strategy == "gridpart":
+        ra, ca = axis
+        ell = (P(ra, ca, None, None, None),) * 2
+        bcsr = (P(ra, ca, None, None, None, None, None),
+                P(ra, ca, None, None, None))
+        grid_specs = ell if fmt == "ell" else bcsr
+        return grid_specs, grid_specs
     ell_a = (P(None, axis, None), P(None, axis, None))
     bcsr_a = (P(None, axis, None, None, None), P(None, axis, None))
     a_specs = ell_a if fmt == "ell" else bcsr_a
@@ -331,6 +343,27 @@ def sharded_bucket_specs(axis: str, fmt: str = "ell",
     else:
         at_specs = a_specs
     return a_specs, at_specs
+
+
+def sharded_x_spec(axis, strategy: str = "rowpart") -> P:
+    """The bucket's x-space (xbar/xstar) layout per strategy — shared
+    between ``make_sharded_bucket_fns`` state specs and the engine:
+
+      rowpart   P(): x replicated (the psum(n) backward rebuilds it).
+      dualpart  P(None, axis): x SHARD-RESIDENT — the psum_scatter
+                backward leaves each shard its own n/ndev slice; the
+                all_gather happens only at harvest (device_get).
+      gridpart  P(None, (col_axis, row_axis)): n is split into C column
+                blocks (major) each split into R row tiles (minor), so the
+                row-axis all_gather in the forward reassembles exactly the
+                block's column slice inside each column group.
+    """
+    if strategy == "rowpart":
+        return P()
+    if strategy == "dualpart":
+        return P(None, axis)
+    ra, ca = axis
+    return P(None, (ca, ra))
 
 
 def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
@@ -360,25 +393,36 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
                backward gather-only + psum(n) ~ MR1/MR3 with block2d's
                dual-copy trade; each shard stores a full-n transpose of
                its own rows (ndev copies of the n axis).
-               "dualpart": BOTH orientations resident per shard — the row
-               block AND a 1/ndev slice of the plain transpose (the Spark
-               dual-RDD cache) — collective-free forward, backward via two
-               tiled all_gathers; transpose bytes stored once mesh-wide
-               (the memory/network trade ``repro.plan.sharded_bucket_bytes``
-               prices).
+               "dualpart": row blocks only, x SHARD-RESIDENT — forward
+               all_gather(n) + local gather, backward scatter +
+               psum_scatter(n) straight back to the x shard (half the
+               old two-all_gather wire bytes for m >= n); no transpose
+               operand (a zero-width stand-in rides along for arity).
+               "gridpart": A block-partitioned over a 2-D (row x col)
+               sub-mesh, ``axis`` the (row_axis, col_axis) pair — forward
+               all_gather(row) + gather + psum(col), backward gather from
+               per-block transpose tiles + psum_scatter(row); per-device
+               wire bytes shrink with BOTH mesh axes.
 
     Layout (global shapes; S = slots, sharded axis = ``axis``):
 
       a operands  row-ELL (S, m_pad, k) with GLOBAL columns, or BCSR
                   (S, nbr, kb, bm, bn) tiles with GLOBAL block-columns;
-                  rows/block-rows sharded.
+                  rows/block-rows sharded.  gridpart: (R, C, S, mb, k) /
+                  (R, C, S, nbr_b, kb, bm, bn) block grids with
+                  block-LOCAL indices, sharded on both leading dims.
       at operands rowpart: (ndev, S, n_pad, k_t) ELL / (ndev, S, nbt,
                   kb_t, bm, bn_t) BCSR per-shard transpose blocks, sharded
-                  on the leading axis; dualpart: the plain transpose
-                  (S, n_pad, k_t) / (S, nbt, kb_t, bm, bn_t), sharded on
-                  its own row axis.
-      b, yhat     (S, m_pad)  row-sharded with A
-      xbar/xstar  (S, n_pad)  replicated (harvest reads them host-side)
+                  on the leading axis; dualpart: a zero-width stand-in
+                  shaped like the plain transpose ((S, n_pad, 0) /
+                  (S, nbt, 0, bm, bn_t)); gridpart: per-block transpose
+                  tiles (R, C, S, nb, k_t) / (R, C, S, nbt_b, kb_t, bm,
+                  bn_t), block-LOCAL indices.
+      b, yhat     (S, m_pad)  row-sharded with A (gridpart: replicated
+                  along the column axis)
+      xbar/xstar  (S, n_pad)  ``sharded_x_spec``: replicated (rowpart) or
+                  shard-resident (dualpart/gridpart; harvest's device_get
+                  is the all_gather)
       lg/gamma0/reg/tol/maxit/masks  (S,)  replicated
 
     ``prox_builder`` maps a per-slot reg array (S,) to a ProxOp (the
@@ -405,19 +449,43 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
     from repro.sparse.formats import StackedBCSR, StackedELL
 
     check_every = DEFAULT_CHECK_EVERY if check_every is None else check_every
-    ax = axis if axis is not None else mesh.axis_names[-1]
-    psize = int(mesh.devices.shape[mesh.axis_names.index(ax)])
+    if strategy == "gridpart":
+        axes = tuple(axis) if axis is not None else tuple(mesh.axis_names[-2:])
+        ra, ca = axes
+        csize = int(mesh.devices.shape[mesh.axis_names.index(ca)])
+        ax = axes                           # spec-building handle
+        y_axis = ra                         # feasibility psum axis
+    else:
+        ax = axis if axis is not None else mesh.axis_names[-1]
+        y_axis = ax
 
     def local_ops(a_vals, a_idx, at_vals, at_idx):
+        if strategy == "gridpart":
+            # block grids come in with a local (1, 1) leading pair
+            a_vals, a_idx = a_vals[0, 0], a_idx[0, 0]
+            at_vals, at_idx = at_vals[0, 0], at_idx[0, 0]
+            nb = n_pad // csize
+            if fmt == "ell":
+                a = StackedELL(vals=a_vals, cols=a_idx, n=nb)
+                at = StackedELL(vals=at_vals, cols=at_idx,
+                                n=a_vals.shape[1])
+                op = make_operator("stacked_ell", "gridpart", a, ax, at)
+            else:
+                bm = a_vals.shape[3]
+                mb = a_vals.shape[1] * bm
+                a = StackedBCSR(vals=a_vals, bcols=a_idx, m=mb, n=nb)
+                at = StackedBCSR(vals=at_vals, bcols=at_idx, m=nb, n=mb)
+                op = make_operator("stacked_bcsr", "gridpart", a, ax, at,
+                                   kernel_backend=backend,
+                                   interpret=interpret)
+            return op.solver_ops()
         if fmt == "ell":
             a = StackedELL(vals=a_vals, cols=a_idx, n=n_pad)
             if strategy == "rowpart":
                 op = make_operator("stacked_ell", "rowpart", a, ax,
                                    at_vals[0], at_idx[0])
-            else:
-                at = StackedELL(vals=at_vals, cols=at_idx,
-                                n=a_vals.shape[1] * psize)
-                op = make_operator("stacked_ell", "dualpart", a, ax, at)
+            else:                           # dualpart: at stand-in unused
+                op = make_operator("stacked_ell", "dualpart", a, ax)
         else:
             bm = a_vals.shape[3]
             m_loc = a_vals.shape[1] * bm
@@ -426,14 +494,13 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
                 at = StackedBCSR(vals=at_vals[0], bcols=at_idx[0],
                                  m=n_pad, n=m_loc)
             else:
-                at = StackedBCSR(vals=at_vals, bcols=at_idx,
-                                 m=at_vals.shape[1] * bm, n=m_loc * psize)
+                at = None                   # dualpart: at stand-in unused
             op = make_operator("stacked_bcsr", strategy, a, ax, at,
                                kernel_backend=backend, interpret=interpret)
         return op.solver_ops()
 
     def global_sq(v):                       # (S, m_loc) -> (S,) global
-        return jax.lax.psum(jnp.sum(v * v, axis=-1), ax)
+        return jax.lax.psum(jnp.sum(v * v, axis=-1), y_axis)
 
     def feasibility(ops, b, state):
         r = ops.matvec(state.xbar) - b
@@ -464,9 +531,11 @@ def make_sharded_bucket_fns(mesh: Mesh, n_pad: int, prox_builder: Callable,
         still = active & (feas >= tol) & (state.k < maxit)
         return state, feas, still
 
-    row = P(None, ax)
+    row = P(None, y_axis)
     a_specs, at_specs = sharded_bucket_specs(ax, fmt, strategy)
-    state_specs = PDState(xbar=P(), xstar=P(), yhat=row, gamma=P(), k=P())
+    x_spec = sharded_x_spec(ax, strategy)
+    state_specs = PDState(xbar=x_spec, xstar=x_spec, yhat=row, gamma=P(),
+                          k=P())
     operand_specs = (*a_specs, *at_specs, row, P(), P(), P())
     out_specs = (state_specs, P(), P())
     splice_fn = jax.jit(_shard_map(

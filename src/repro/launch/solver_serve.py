@@ -135,10 +135,15 @@ def main(argv=None):
                     help="make every N-th request oversized (routes to a "
                          "sharded bucket when above --shard-above)")
     ap.add_argument("--sharded-strategy", default=None,
-                    choices=("rowpart", "dualpart"),
+                    choices=("rowpart", "dualpart", "gridpart"),
                     help="force the mesh-wide bucket body layout "
-                         "(default: the planner's operand-byte rule, "
+                         "(default: the planner's byte-priced rule, "
                          "repro.plan.decide_bucket_body)")
+    ap.add_argument("--grid", default=None, metavar="RxC",
+                    help="force the gridpart (rows, cols) sub-mesh "
+                         "shape, e.g. 2x4 (implies "
+                         "--sharded-strategy gridpart; default: the "
+                         "planner scores every factorization)")
     ap.add_argument("--device-budget", type=int, default=None,
                     help="resident operand-byte capacity per device "
                          "(bytes; buckets admit against it via the "
@@ -172,12 +177,19 @@ def main(argv=None):
 
     from repro.serve import create_engine
 
+    grid = None
+    if args.grid:
+        r, _, c = args.grid.lower().partition("x")
+        if not (r.isdigit() and c.isdigit()):
+            raise SystemExit(f"--grid takes RxC (e.g. 2x4), got "
+                             f"{args.grid!r}")
+        grid = (int(r), int(c))
     probs = make_problems(args.requests, seed=args.seed,
                           big_every=args.big_every)
     eng = create_engine("solver", slots=args.slots, fmt=args.fmt,
                         backend=args.backend, check_every=args.check_every,
                         devices=args.devices, shard_above=args.shard_above,
-                        sharded_strategy=args.sharded_strategy,
+                        sharded_strategy=args.sharded_strategy, grid=grid,
                         device_budget=args.device_budget, fused=args.fused)
     reqs = [p.to_request(uid=i, tol=args.tol, max_iterations=4000)
             for i, p in enumerate(probs)]

@@ -199,56 +199,148 @@ def stacked_bcsr_rowpart_operator(a, axis: str, at, *,
 
 
 @register("stacked_ell", "dualpart")
-def stacked_ell_dualpart_operator(a, axis: str, at) -> LinearOperator:
+def stacked_ell_dualpart_operator(a, axis: str, at=None) -> LinearOperator:
     """Slot-batched dual-partitioned local operator (runs INSIDE
-    shard_map): each shard caches BOTH orientations — its row block of A
-    (vals/cols (S, m_loc, k), GLOBAL columns) AND its slice of the plain
-    transpose (``at``: (S, n_loc, k_t) rows of A^T = columns of A, GLOBAL
-    row indices) — the Spark dual-RDD cache per slot.
+    shard_map): each shard holds its row block of A (vals/cols
+    (S, m_loc, k), GLOBAL columns) — and, with x SHARD-RESIDENT
+    ((S, n/ndev) per shard, the engine's x-space layout), no transpose
+    copy at all.
 
-    x is replicated, y row-sharded: the forward is a local gather
-    (collective-free); the backward reassembles y with a tiled all_gather,
-    gathers each shard's OWN primal coordinates from its transpose slice,
-    and all_gathers the result back to the replicated x space.  Against
-    ``rowpart`` this trades the psum(n) backward for two all_gathers
-    (m + n bytes) and stores the transpose ONCE across the mesh instead of
-    one full-n block per shard — ndev x less transpose memory, the axis
-    the byte cost model prices (repro.plan.sharded_bucket_bytes).
+    The forward reassembles x with ONE tiled all_gather(n) and gathers
+    locally; the backward scatter-adds the partial ``A_loc^T y_loc`` over
+    the full n and reduces it straight back to the x shard with ONE tiled
+    psum_scatter(n).  Against the old replicated-x body (all_gather(m) +
+    all_gather(n) per backward) the pair moves (n) + (n) instead of
+    (m + n) + (n)-forward-free — HALVING backward wire bytes whenever
+    m >= n — and drops the transpose operand entirely (the byte axis
+    ``repro.plan.sharded_bucket_bytes`` prices at 0 for dualpart).  The
+    harvest-side all_gather happens for free when the engine device_gets
+    the sharded xbar.  ``at`` is accepted for call-signature parity and
+    ignored (callers pass a zero-width stand-in).
     """
     from repro.sparse.linalg import stacked_ell_matvec
 
-    def rmatvec(y):                      # (S, m_loc) -> (S, n) replicated
-        yg = jax.lax.all_gather(y, axis, axis=1, tiled=True)
-        z_loc = stacked_ell_matvec(at, yg)           # my columns only
-        return jax.lax.all_gather(z_loc, axis, axis=1, tiled=True)
+    n = a.n
+
+    def matvec(x_loc):                   # (S, n_loc) -> (S, m_loc)
+        xg = jax.lax.all_gather(x_loc, axis, axis=1, tiled=True)
+        return stacked_ell_matvec(a, xg)
+
+    def rmatvec(y):                      # (S, m_loc) -> (S, n_loc)
+        off = (jnp.arange(a.batch, dtype=a.cols.dtype) * n)[:, None, None]
+        contrib = a.vals.astype(y.dtype) * y[:, :, None]
+        z = jnp.zeros((a.batch * n,), y.dtype).at[
+            (a.cols + off).reshape(-1)].add(contrib.reshape(-1))
+        return jax.lax.psum_scatter(z.reshape(a.batch, n), axis,
+                                    scatter_dimension=1, tiled=True)
 
     return LinearOperator(
-        matvec=lambda x: stacked_ell_matvec(a, x),
-        rmatvec=rmatvec,
-        shape=(a.m, a.n), format="stacked_ell", backend="dualpart",
-        stats=dict(batch=a.batch, k=a.k, k_t=at.k, dual_copy=True))
+        matvec=matvec, rmatvec=rmatvec,
+        shape=(a.m, n), format="stacked_ell", backend="dualpart",
+        stats=dict(batch=a.batch, k=a.k, dual_copy=False))
 
 
 @register("stacked_bcsr", "dualpart")
-def stacked_bcsr_dualpart_operator(a, axis: str, at, *,
+def stacked_bcsr_dualpart_operator(a, axis: str, at=None, *,
                                    kernel_backend: str = "jnp",
                                    interpret=None) -> LinearOperator:
-    """Dual-partitioned MXU-path body: the tiled analogue of
-    ``("stacked_ell", "dualpart")`` — row-block tiles forward
-    (collective-free), each shard's slice of the plain transpose BCSR
-    backward (all_gather y -> tile contraction -> all_gather z), with the
-    per-tile contraction on the Pallas kernel when ``kernel_backend="pallas"``.
+    """Dual-partitioned MXU-path body with SHARD-RESIDENT x: the tiled
+    analogue of ``("stacked_ell", "dualpart")`` — all_gather(n) + tile
+    contraction forward (Pallas when ``kernel_backend="pallas"``),
+    per-tile partial products scatter-added over the full n and
+    psum_scatter'd back to the x shard backward.  ``at`` is accepted for
+    call-signature parity and ignored (zero-width stand-in).
     """
     mv = _stacked_bcsr_mv(kernel_backend, interpret)
 
-    def rmatvec(y):                      # (S, m_loc) -> (S, n) replicated
-        yg = jax.lax.all_gather(y, axis, axis=1, tiled=True)
-        return jax.lax.all_gather(mv(at, yg), axis, axis=1, tiled=True)
+    def matvec(x_loc):                   # (S, n_loc) -> (S, m_loc)
+        xg = jax.lax.all_gather(x_loc, axis, axis=1, tiled=True)
+        return mv(a, xg)
+
+    def rmatvec(y):                      # (S, m_loc) -> (S, n_loc)
+        S, nbr, kb, bm, bn = a.vals.shape
+        n_full = a.nbc * bn              # tile-padded n (>= a.n)
+        yt = y.reshape(S, nbr, bm)
+        contrib = jnp.einsum("sikmn,sim->sikn",
+                             a.vals.astype(y.dtype), yt)
+        off = (jnp.arange(S, dtype=a.bcols.dtype)
+               * n_full)[:, None, None, None]
+        idx = (a.bcols[..., None] * bn
+               + jnp.arange(bn, dtype=a.bcols.dtype) + off)
+        z = jnp.zeros((S * n_full,), y.dtype).at[
+            idx.reshape(-1)].add(contrib.reshape(-1))
+        z = z.reshape(S, n_full)[:, :a.n]   # tile pad columns are zero
+        return jax.lax.psum_scatter(z, axis, scatter_dimension=1,
+                                    tiled=True)
 
     return LinearOperator(
-        matvec=lambda x: mv(a, x),
-        rmatvec=rmatvec,
+        matvec=matvec, rmatvec=rmatvec,
         shape=(a.m, a.n), format="stacked_bcsr", backend="dualpart",
+        stats=dict(batch=a.batch, kb=a.kb,
+                   body_backend=kernel_backend, dual_copy=False))
+
+
+@register("stacked_ell", "gridpart")
+def stacked_ell_gridpart_operator(a, axes, at) -> LinearOperator:
+    """Slot-batched 2-D grid-partitioned local operator (runs INSIDE a
+    shard_map over a (row_axis, col_axis) sub-mesh): device (i, j) holds
+    block (i, j) of every slot's A — ``a`` vals/cols (S, mb, k) with
+    block-LOCAL columns into [0, n/C) — plus the block's transpose tile
+    ``at`` (S, nb, k_t) with block-LOCAL rows into [0, m/R)
+    (``sparse.partition.blockgrid_transpose_ell``).
+
+    y (S, m/R) is sharded over the row axis (replicated along columns);
+    x (S, n/(C*R)) is sharded over BOTH axes (column block j, row tile i).
+    The forward all_gathers x over the row axis (reassembling the block's
+    column slice inside each column group), gathers locally, and psums
+    the partial y along the COLUMN axis; the backward is a gather-only
+    tile product psum_scatter'd along the ROW axis — per-device wire
+    bytes shrink with BOTH mesh axes (the Nathan & Klabjan 2-D unlock).
+    """
+    from repro.sparse.linalg import stacked_ell_matvec
+
+    ra, ca = axes
+
+    def matvec(x_loc):                   # (S, n/(C*R)) -> (S, m/R)
+        xg = jax.lax.all_gather(x_loc, ra, axis=1, tiled=True)  # (S, n/C)
+        return jax.lax.psum(stacked_ell_matvec(a, xg), ca)
+
+    def rmatvec(y_loc):                  # (S, m/R) -> (S, n/(C*R))
+        z_part = stacked_ell_matvec(at, y_loc)                  # (S, n/C)
+        return jax.lax.psum_scatter(z_part, ra, scatter_dimension=1,
+                                    tiled=True)
+
+    return LinearOperator(
+        matvec=matvec, rmatvec=rmatvec,
+        shape=(a.m, a.n), format="stacked_ell", backend="gridpart",
+        stats=dict(batch=a.batch, k=a.k, k_t=at.k, dual_copy=True))
+
+
+@register("stacked_bcsr", "gridpart")
+def stacked_bcsr_gridpart_operator(a, axes, at, *,
+                                   kernel_backend: str = "jnp",
+                                   interpret=None) -> LinearOperator:
+    """2-D grid-partitioned MXU-path body: the tiled analogue of
+    ``("stacked_ell", "gridpart")`` — block BCSR tiles forward
+    (all_gather(row axis) -> tile contraction -> psum(col axis)), the
+    block's transpose BCSR tiles backward (gather + dot_general ->
+    psum_scatter(row axis)), contraction on the Pallas kernel when
+    ``kernel_backend="pallas"``.
+    """
+    mv = _stacked_bcsr_mv(kernel_backend, interpret)
+    ra, ca = axes
+
+    def matvec(x_loc):                   # (S, n/(C*R)) -> (S, m/R)
+        xg = jax.lax.all_gather(x_loc, ra, axis=1, tiled=True)
+        return jax.lax.psum(mv(a, xg), ca)
+
+    def rmatvec(y_loc):                  # (S, m/R) -> (S, n/(C*R))
+        return jax.lax.psum_scatter(mv(at, y_loc), ra,
+                                    scatter_dimension=1, tiled=True)
+
+    return LinearOperator(
+        matvec=matvec, rmatvec=rmatvec,
+        shape=(a.m, a.n), format="stacked_bcsr", backend="gridpart",
         stats=dict(batch=a.batch, kb=a.kb, kb_t=at.kb,
                    body_backend=kernel_backend, dual_copy=True))
 

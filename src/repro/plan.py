@@ -43,8 +43,8 @@ import numpy as np
 
 __all__ = ["ExecutionPlan", "Result", "SolveSpec", "bucket_operand_bytes",
            "decide_admission", "decide_bucket_body", "decide_check_every",
-           "decide_placement", "decide_solver_family", "plan",
-           "sharded_bucket_bytes", "sharding_ndev"]
+           "decide_placement", "decide_solver_family", "grid_shapes", "plan",
+           "sharded_bucket_bytes", "sharded_wire_bytes", "sharding_ndev"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -453,9 +453,63 @@ def bucket_operand_bytes(fmt: str, slots: int, m_pad: int, n_pad: int,
     return slots * (per_slot + b_bytes)
 
 
+def grid_shapes(ndev: int) -> list[tuple[int, int]]:
+    """Every (rows, cols) factorization of ``ndev`` — the gridpart
+    candidate set ``decide_bucket_body`` scores (1xN ~ colpart-like,
+    Nx1 ~ dualpart-like, the interior points the genuinely 2-D ones)."""
+    return [(r, ndev // r) for r in range(1, ndev + 1) if ndev % r == 0]
+
+
+def sharded_wire_bytes(strategy: str, slots: int, m_pad: int, n_pad: int,
+                       ndev: int, grid: tuple[int, int] | None = None
+                       ) -> dict:
+    """PER-DEVICE collective wire bytes of ONE iteration (forward +
+    backward) of a mesh-wide bucket, ring-algorithm model — the same
+    per-op factors ``repro.roofline.analysis.collective_stats`` charges
+    when it reads the lowered HLO, so the model and the counter agree:
+
+      all-reduce (psum)             2(g-1)/g x full bytes
+      all-gather (tiled)             (g-1)/g x full bytes
+      reduce-scatter (psum_scatter)  (g-1)/g x full bytes
+
+    rowpart   fwd 0 (x replicated); bwd psum over (S, n).
+    dualpart  fwd all_gather(x) over (S, n); bwd psum_scatter over
+              (S, n) — the shard-resident-x pair, n + n bytes where the
+              old two-all_gather backward moved (m + n) + n.
+    gridpart  (R, C) grid: fwd all_gather(x block) over the row axis
+              ((S, n/C) at group R) + psum(y) over the column axis
+              ((S, m/R) at group C); bwd psum_scatter over the row axis
+              ((S, n/C) at group R) — both terms shrink with BOTH axes.
+
+    Returns {"fwd": _, "bwd": _, "total": _} so the planner can price
+    and the wire-byte reason can name each direction.
+    """
+    from repro.operators.select import _VAL
+
+    def _ag(group: int, elems: int) -> int:      # all-gather / RS (tiled)
+        return (group - 1) * elems * _VAL // group
+
+    def _ar(group: int, elems: int) -> int:      # all-reduce (psum)
+        return 2 * (group - 1) * elems * _VAL // group
+
+    g = ndev
+    if strategy == "rowpart":
+        fwd, bwd = 0, _ar(g, slots * n_pad)
+    elif strategy == "dualpart":
+        fwd, bwd = _ag(g, slots * n_pad), _ag(g, slots * n_pad)
+    elif strategy == "gridpart":
+        R, C = grid
+        fwd = _ag(R, slots * (n_pad // C)) + _ar(C, slots * (m_pad // R))
+        bwd = _ag(R, slots * (n_pad // C))
+    else:
+        raise KeyError(f"unknown sharded-bucket strategy {strategy!r}")
+    return {"fwd": fwd, "bwd": bwd, "total": fwd + bwd}
+
+
 def sharded_bucket_bytes(fmt: str, strategy: str, slots: int, m_pad: int,
                          n_pad: int, width: int, width_t: int,
-                         ndev: int) -> int:
+                         ndev: int, grid: tuple[int, int] | None = None
+                         ) -> int:
     """PER-DEVICE resident operand bytes of one mesh-wide sharded bucket
     (the geometry ``core.distributed.make_sharded_bucket_fns`` lays out).
 
@@ -466,12 +520,30 @@ def sharded_bucket_bytes(fmt: str, strategy: str, slots: int, m_pad: int,
               (``rowshard_transpose_ell/_bcsr``) — n_pad * width_t per
               shard, i.e. the transpose axis is replicated ndev times
               mesh-wide, in exchange for a psum(n)-only backward.
-    dualpart  each shard stores a 1/ndev slice of the plain transpose
-              (the Spark dual-RDD cache) — the transpose is stored once
-              mesh-wide, in exchange for two all_gathers per backward.
+    dualpart  x is shard-resident and the backward is a scatter +
+              psum_scatter, so NO transpose is stored at all — callers
+              pass ``width_t=0`` and the at term prices to 0 (the
+              zero-width stand-in the engine allocates).
+    gridpart  device (i, j) of the (R, C) ``grid`` stores block (i, j)
+              ((m/R, n/C) at ``width``) plus its transpose tile
+              ((n/C, m/R) at ``width_t``) — both operands shrink with
+              both mesh axes; wire cost is priced separately by
+              ``sharded_wire_bytes``.
     """
     from repro.operators.select import _VAL, bcsr_bytes, ell_bytes
 
+    if strategy == "gridpart":
+        R, C = grid
+        mb, nb = m_pad // R, n_pad // C
+        b_bytes = mb * _VAL
+        if fmt == "ell":
+            a = ell_bytes(mb, width)
+            at = ell_bytes(nb, width_t)
+        else:
+            bm = 8
+            a = bcsr_bytes(mb // bm, width, bm, min(128, nb))
+            at = bcsr_bytes(-(-nb // bm), width_t, bm, min(128, mb))
+        return slots * (a + at + b_bytes)
     b_bytes = (m_pad // ndev) * _VAL
     if fmt == "ell":
         a = ell_bytes(m_pad // ndev, width)
@@ -488,44 +560,88 @@ def sharded_bucket_bytes(fmt: str, strategy: str, slots: int, m_pad: int,
     return slots * (a + at + b_bytes)
 
 
+def _bucket_body_score(fmt: str, strategy: str, m_pad: int, n_pad: int,
+                       w: int, wt: int, ndev: int, check_every: int,
+                       grid: Optional[tuple[int, int]] = None):
+    """(resident_bytes, wire_dict, total_score) of one bucket-body
+    candidate — resident operand bytes plus ``check_every`` iterations of
+    collective wire bytes, the unit ``decide_bucket_body`` minimizes."""
+    resident = sharded_bucket_bytes(fmt, strategy, 1, m_pad, n_pad, w, wt,
+                                    ndev, grid=grid)
+    wire = sharded_wire_bytes(strategy, 1, m_pad, n_pad, ndev, grid=grid)
+    return resident, wire, resident + check_every * wire["total"]
+
+
 def decide_bucket_body(fmt: str, m_pad: int, n_pad: int, width: int,
                        width_t_rowpart: int, width_t_dualpart: int,
-                       ndev: int, override: Optional[str] = None
-                       ) -> tuple[str, int, str]:
-    """The sharded-bucket body decision: (strategy, bytes_per_device,
-    reason).  Shared between ``plan()`` (which records it as the
-    ``bucket_body`` reason) and ``SolverEngine.sharded_bucket_key`` (which
-    builds the bucket it names), so the engine executes the same rule the
-    plan explains instead of silently rewriting it.
+                       ndev: int, override: Optional[str] = None,
+                       grid_widths: Optional[dict] = None,
+                       ) -> tuple[str, Optional[tuple[int, int]], int, str]:
+    """The sharded-bucket body decision: (strategy, grid,
+    bytes_per_device, reason); ``grid`` is the chosen (rows, cols)
+    sub-mesh shape for gridpart and None for the 1-D strategies.  Shared
+    between ``plan()`` (which records it as the ``bucket_body`` reason)
+    and ``SolverEngine.sharded_bucket_key`` (which builds the bucket it
+    names), so the engine executes the same rule the plan explains
+    instead of silently rewriting it.
 
-    The rule is the operand-byte model above: pick the strategy whose
-    per-device resident bytes are smaller — dualpart wins whenever
-    replicating a full-n transpose block per shard (rowpart) costs more
-    than its extra all_gather traffic is worth, which is exactly the
-    feature- vs observation-partitioned layout choice of the paper's
-    Spark design.  Ties go to dualpart (both orientations cached, the
-    planner's default for direct distributed solves).
+    The score is byte-priced end to end: per-slot resident operand bytes
+    (``sharded_bucket_bytes``) plus the per-axis WIRE bytes of one
+    check block (``sharded_wire_bytes`` x ``DEFAULT_CHECK_EVERY``
+    iterations, HBM byte ~ wire byte) — so a 1-D layout that stores
+    little but psums a huge axis every iteration loses to a grid whose
+    collectives shrink with both mesh dims, and vice versa.  Ties go to
+    dualpart (no transpose copy, the planner's default for direct
+    distributed solves).
 
-    With ``override`` set only that strategy's width is consulted —
-    callers on a hot admission path may pass a placeholder for the other
-    (the engine skips computing it entirely)."""
-    if override is not None and override not in ("rowpart", "dualpart"):
+    ``grid_widths`` maps candidate (rows, cols) factorizations to their
+    (width, width_t) storage widths (the engine computes them with
+    ``sharded_grid_widths``); without it only the 1-D strategies
+    compete — callers on a hot admission path may also pass placeholder
+    widths for any strategy an ``override`` rules out (the engine skips
+    computing them entirely).  ``override="gridpart"`` picks the best
+    candidate in ``grid_widths`` (which must then be non-empty)."""
+    from repro.core.solver import DEFAULT_CHECK_EVERY
+
+    if override is not None and override not in ("rowpart", "dualpart",
+                                                 "gridpart"):
         raise KeyError(f"unknown sharded-bucket strategy override "
-                       f"{override!r} (rowpart | dualpart | None)")
-    args = (1, m_pad, n_pad, width)
+                       f"{override!r} (rowpart | dualpart | gridpart | "
+                       f"None)")
+
+    if override == "gridpart" and not grid_widths:
+        raise ValueError("override='gridpart' needs grid_widths (candidate "
+                         "(rows, cols) -> (width, width_t))")
+    candidates: dict = {}
+    if override in (None, "rowpart"):
+        candidates[("rowpart", None)] = _bucket_body_score(
+            fmt, "rowpart", m_pad, n_pad, width, width_t_rowpart, ndev,
+            DEFAULT_CHECK_EVERY)
+    if override in (None, "dualpart"):
+        candidates[("dualpart", None)] = _bucket_body_score(
+            fmt, "dualpart", m_pad, n_pad, width, width_t_dualpart, ndev,
+            DEFAULT_CHECK_EVERY)
+    if override in (None, "gridpart"):
+        for g, (w_g, wt_g) in (grid_widths or {}).items():
+            candidates[("gridpart", tuple(g))] = _bucket_body_score(
+                fmt, "gridpart", m_pad, n_pad, w_g, wt_g, ndev,
+                DEFAULT_CHECK_EVERY, grid=tuple(g))
+    # smallest total; ties go to dualpart, then the declaration order above
+    (strategy, grid), (resident, wire, total) = min(
+        candidates.items(),
+        key=lambda kv: (kv[1][2], kv[0][0] != "dualpart"))
+    why = (f"byte-priced body model over {ndev} devices: " +
+           "; ".join(
+               f"{s}{'x'.join(map(str, g)) if g else ''} "
+               f"{c[0]}B resident + {c[1]['total']}B wire/iter"
+               for (s, g), c in candidates.items()) +
+           f" -> {strategy}{'x'.join(map(str, grid)) if grid else ''} "
+           f"(score = resident + {DEFAULT_CHECK_EVERY} x wire, "
+           f"fwd {wire['fwd']}B + bwd {wire['bwd']}B wire/iter/device "
+           f"per slot)")
     if override is not None:
-        wt = width_t_rowpart if override == "rowpart" else width_t_dualpart
-        return override, sharded_bucket_bytes(fmt, override, *args, wt,
-                                              ndev), "user override"
-    by = {"rowpart": sharded_bucket_bytes(fmt, "rowpart", *args,
-                                          width_t_rowpart, ndev),
-          "dualpart": sharded_bucket_bytes(fmt, "dualpart", *args,
-                                           width_t_dualpart, ndev)}
-    strategy = "dualpart" if by["dualpart"] <= by["rowpart"] else "rowpart"
-    return strategy, by[strategy], (
-        f"operand-bytes model over {ndev} devices: dualpart "
-        f"{by['dualpart']}B/device vs rowpart {by['rowpart']}B/device "
-        f"per slot -> {strategy}")
+        why = f"user override {override}; {why}"
+    return strategy, grid, resident, why
 
 
 def decide_check_every(override: Optional[int] = None) -> tuple[int, str]:
@@ -676,23 +792,35 @@ def _cost_reasons(problem, fmt: str, placement: str, n_devices: int,
     mean_wt = pow2(-(-coo.nnz // max(1, coo.n)))
     if placement == "sharded" and n_devices > 1:
         from repro.serve.solver_engine import (
-            sharded_bucket_dims, sharded_bucket_widths,
+            sharded_bucket_dims, sharded_bucket_widths, sharded_grid_widths,
         )
         ndev = sharding_ndev(coo.nnz, n_devices, shard_above)
         m_pad, n_pad = sharded_bucket_dims(coo.m, coo.n, ndev)
         if exact:     # the engine's own padded-width computation, shared
             w, wt_row, wt_dual = sharded_bucket_widths(
                 coo, m_pad, n_pad, ndev, fmt_b)
+            gw = {g: sharded_grid_widths(coo, m_pad, n_pad, g, fmt_b)
+                  for g in grid_shapes(ndev)}
         else:
-            w, wt_row, wt_dual = mean_w, mean_wt, mean_wt
-        strategy, per_dev, why = decide_bucket_body(
-            fmt_b, m_pad, n_pad, w, wt_row, wt_dual, ndev)
+            w, wt_row, wt_dual = mean_w, mean_wt, 0
+            gw = {(r, c): (pow2(-(-coo.nnz // max(1, coo.m * c))),
+                           pow2(-(-coo.nnz // max(1, coo.n * r))))
+                  for r, c in grid_shapes(ndev)}
+        strategy, grid, per_dev, why = decide_bucket_body(
+            fmt_b, m_pad, n_pad, w, wt_row, wt_dual, ndev, grid_widths=gw)
+        wire = sharded_wire_bytes(strategy, 1, m_pad, n_pad, ndev, grid=grid)
+        body = f"stacked_{fmt_b}/{strategy}" + (
+            f" {grid[0]}x{grid[1]}" if grid else "")
         return {
-            "bucket_body": (f"stacked_{fmt_b}/{strategy} mesh-wide bucket "
+            "bucket_body": (f"{body} mesh-wide bucket "
                             f"over {ndev} devices ({why}){est}"),
             "operand_bytes": (f"{per_dev} resident operand bytes/device "
                               f"per slot — the unit the engine's "
                               f"byte-based device_budget admits in{est}"),
+            "wire_bytes": (f"{wire['total']} collective wire bytes/device "
+                           f"per iteration per slot (fwd {wire['fwd']} + "
+                           f"bwd {wire['bwd']}, ring model — the factors "
+                           f"roofline.collective_stats charges){est}"),
         }
     m_pad = max(64, _next_pow2(coo.m))
     n_pad = max(16, _next_pow2(coo.n))

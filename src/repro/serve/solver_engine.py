@@ -253,11 +253,14 @@ class ShardedBucketKey:
     m_pad: int          # divisible by 8 * ndev
     n_pad: int          # divisible by 8 * ndev
     width: int          # ELL k / BCSR kb of A, padded bucket-wide
-    width_t: int        # transpose width for the key's strategy
+    width_t: int        # transpose width for the key's strategy (0 for
+                        # dualpart: shard-resident x, no transpose stored)
     prox: str
     ndev: int           # sub-mesh size
     fmt: str            # "ell" | "bcsr"
-    strategy: str       # "rowpart" | "dualpart" (repro.plan.decide_bucket_body)
+    strategy: str       # "rowpart" | "dualpart" | "gridpart"
+                        # (repro.plan.decide_bucket_body)
+    grid: tuple | None = None   # gridpart (rows, cols), rows*cols == ndev
 
 
 @dataclasses.dataclass
@@ -365,28 +368,58 @@ def sharded_bucket_widths(coo: COO, m_pad: int, n_pad: int, ndev: int,
     shared with ``repro.plan._cost_reasons`` so both sides feed
     ``decide_bucket_body`` identical inputs (a mismatch here makes the
     plan explain a different bucket than the engine builds).  Each is an
-    O(nnz) host pass; a skipped width (forced strategy) returns 1."""
+    O(nnz) host pass; a skipped width (forced strategy) returns 1.
+
+    ``wt_dual`` is always 0: the shard-resident-x dualpart body scatters
+    A^T y straight from the forward operand and psum_scatters the result,
+    so no transpose is stored at all (``need_dual`` is kept for call-site
+    symmetry but no longer triggers a host pass)."""
     from repro.sparse.partition import (
         rowshard_transpose_bcsr_width, rowshard_transpose_width,
     )
 
+    del need_dual
     c = pad_coo(coo, m_pad, n_pad)
     if fmt == "bcsr":
         floor = 1
         w = coo_bcsr_width(c, bm=8, bn=min(128, n_pad))
         wt_row = rowshard_transpose_bcsr_width(
             c, ndev, bm=8, bn=min(128, m_pad // ndev)) if need_row else 1
-        wt_dual = coo_bcsr_width(transpose_coo(c), bm=8,
-                                 bn=min(128, m_pad)) if need_dual else 1
     else:
         floor = 8
         rows = np.asarray(coo.rows)
-        cols = np.asarray(coo.cols)
         w = int(np.bincount(rows, minlength=coo.m).max()) if rows.size else 1
         wt_row = rowshard_transpose_width(c, ndev) if need_row else 1
-        wt_dual = int(np.bincount(cols, minlength=coo.n).max()) \
-            if cols.size and need_dual else 1
-    return tuple(_next_pow2(max(floor, v)) for v in (w, wt_row, wt_dual))
+    return (_next_pow2(max(floor, w)), _next_pow2(max(floor, wt_row)), 0)
+
+
+def sharded_grid_widths(coo: COO, m_pad: int, n_pad: int,
+                        grid: tuple[int, int], fmt: str) -> tuple[int, int]:
+    """pow2 ``(width, width_t)`` storage widths of one gridpart candidate:
+    the max per-block ELL row width (or BCSR tile count) over the
+    (rows, cols) block grid of A, and the same over the per-block
+    transpose tiles — the widths ``blockgrid_*``/``blockgrid_transpose_*``
+    lay the operands out at.  Shared with ``repro.plan._cost_reasons`` so
+    the plan prices the same grid candidates the engine would build.
+    Each candidate is an O(nnz) host pass (the gridpart admission path
+    scores every factorization of ndev)."""
+    from repro.sparse.partition import (
+        blockgrid_bcsr_width, blockgrid_ell_width,
+        blockgrid_transpose_bcsr_width, blockgrid_transpose_ell_width,
+    )
+
+    R, C = grid
+    c = pad_coo(coo, m_pad, n_pad)
+    if fmt == "bcsr":
+        floor = 1
+        w = blockgrid_bcsr_width(c, R, C, bm=8, bn=min(128, n_pad // C))
+        wt = blockgrid_transpose_bcsr_width(c, R, C, bm=8,
+                                            bn=min(128, m_pad // R))
+    else:
+        floor = 8
+        w = blockgrid_ell_width(c, R, C)
+        wt = blockgrid_transpose_ell_width(c, R, C)
+    return (_next_pow2(max(floor, w)), _next_pow2(max(floor, wt)))
 
 
 def _sharded_slot_shapes(key: ShardedBucketKey):
@@ -394,9 +427,20 @@ def _sharded_slot_shapes(key: ShardedBucketKey):
     mesh-wide bucket layout — the host-side mirror of the specs
     ``core.distributed.sharded_bucket_specs`` shards by.  The caller adds
     the slot axis (rowpart transpose blocks additionally lead with the
-    (ndev,) shard axis; dualpart transposes are sharded on their own row
-    axis, so their masters are plain per-slot stacks)."""
+    (ndev,) shard axis; gridpart operands lead with the (R, C) grid axes;
+    dualpart stores a ZERO-WIDTH transpose stand-in — width_t == 0 — so
+    its at masters cost nothing but keep the call arity uniform)."""
     m, n, nd = key.m_pad, key.n_pad, key.ndev
+    if key.strategy == "gridpart":
+        R, C = key.grid
+        mb, nb = m // R, n // C
+        if key.fmt == "ell":
+            return (mb, key.width), (mb, key.width), \
+                   (nb, key.width_t), (nb, key.width_t)
+        bm, bn, bn_t = 8, min(128, nb), min(128, mb)
+        return ((mb // bm, key.width, bm, bn), (mb // bm, key.width),
+                (-(-nb // bm), key.width_t, bm, bn_t),
+                (-(-nb // bm), key.width_t))
     if key.fmt == "ell":
         return (m, key.width), (m, key.width), \
                (n, key.width_t), (n, key.width_t)
@@ -449,12 +493,18 @@ class SolverEngine:
              the aggregate-capacity axis of multi-device serving (the
              benchmark's ``sharded_serving`` regime).
     sharded_strategy: bucket-body layout for mesh-wide buckets — None
-             (default) applies the planner's byte-model rule
-             (``repro.plan.decide_bucket_body``: rowpart vs dualpart by
-             per-device resident bytes), or force "rowpart"/"dualpart".
-             The fmt/backend knobs above select the kernel inside the
-             body (ELL gathers vs BCSR/Pallas MXU tiles), so the MXU path
-             and the mesh compose.
+             (default) applies the planner's byte-priced rule
+             (``repro.plan.decide_bucket_body``: rowpart vs dualpart vs
+             every gridpart factorization, scored on per-device resident
+             bytes plus per-check-block collective wire bytes), or force
+             "rowpart"/"dualpart"/"gridpart".  The fmt/backend knobs
+             above select the kernel inside the body (ELL gathers vs
+             BCSR/Pallas MXU tiles), so the MXU path and the mesh
+             compose.
+    grid:    force one (rows, cols) gridpart sub-mesh shape (implies
+             ``sharded_strategy="gridpart"``); rows*cols also pins the
+             sharded sub-mesh size.  None (default) lets the planner
+             score every factorization of the capacity-sized ndev.
     sanitize: strict-mode tick guarding (``repro.analysis.strict``) —
              None resolves the process-wide strict flag (the pytest
              ``--strict-sanitize`` option / REPRO_STRICT env var), True/
@@ -482,6 +532,7 @@ class SolverEngine:
                  devices: Any = None, shard_above: int | None = None,
                  device_budget: int | None = None,
                  sharded_strategy: str | None = None,
+                 grid: tuple[int, int] | None = None,
                  fused: bool | None = None, sanitize: bool | None = None,
                  clock=None):
         if fmt not in ("ell", "bcsr"):
@@ -508,11 +559,27 @@ class SolverEngine:
         self.devices = list(devices)
         self.shard_above = shard_above
         self.device_budget = device_budget
-        if sharded_strategy not in (None, "rowpart", "dualpart"):
+        if sharded_strategy not in (None, "rowpart", "dualpart", "gridpart"):
             raise ValueError("sharded_strategy must be None (byte-model "
-                             "rule) | 'rowpart' | 'dualpart', got "
-                             f"{sharded_strategy!r}")
+                             "rule) | 'rowpart' | 'dualpart' | 'gridpart', "
+                             f"got {sharded_strategy!r}")
+        if grid is not None:
+            grid = tuple(int(v) for v in grid)
+            if len(grid) != 2 or grid[0] < 1 or grid[1] < 1:
+                raise ValueError(f"grid must be a (rows, cols) pair of "
+                                 f"positive ints, got {grid!r}")
+            if grid[0] * grid[1] > len(devices):
+                raise ValueError(
+                    f"grid {grid[0]}x{grid[1]} needs {grid[0] * grid[1]} "
+                    f"devices, only {len(devices)} visible")
+            if sharded_strategy is None:
+                sharded_strategy = "gridpart"   # a forced shape forces the
+            elif sharded_strategy != "gridpart":            # strategy too
+                raise ValueError(f"grid= only applies to "
+                                 f"sharded_strategy='gridpart', got "
+                                 f"{sharded_strategy!r}")
         self.sharded_strategy = sharded_strategy
+        self.grid = grid
         # per-device resident operand BYTES charged by bucket creation
         self._budget_used: dict[int, int] = {d.id: 0 for d in self.devices}
         self.mesh = None
@@ -629,25 +696,36 @@ class SolverEngine:
         strategy is the planner's byte-model rule
         (``repro.plan.decide_bucket_body``) over the engine's fmt, unless
         ``sharded_strategy`` forces one."""
-        from repro.plan import decide_bucket_body
+        from repro.plan import decide_bucket_body, grid_shapes
 
         coo = req.coo
-        ndev = self._ndev_for(coo.nnz)
+        ndev = (self.grid[0] * self.grid[1] if self.grid is not None
+                else self._ndev_for(coo.nnz))
         m_pad, n_pad = sharded_bucket_dims(coo.m, coo.n, ndev,
                                            self.min_rows, self.min_cols)
         # only the widths the strategy decision can consult are computed
-        # (each is an O(nnz) host pass; a forced strategy skips the other)
+        # (each is an O(nnz) host pass; a forced strategy skips the rest)
         w, wt_row, wt_dual = sharded_bucket_widths(
             coo, m_pad, n_pad, ndev, self.fmt,
             need_row=self.sharded_strategy in (None, "rowpart"),
             need_dual=self.sharded_strategy in (None, "dualpart"))
-        strategy, _, _ = decide_bucket_body(
+        gw = None
+        if self.sharded_strategy in (None, "gridpart"):
+            shapes = ([self.grid] if self.grid is not None
+                      else grid_shapes(ndev))
+            gw = {g: sharded_grid_widths(coo, m_pad, n_pad, g, self.fmt)
+                  for g in shapes}
+        strategy, grid, _, _ = decide_bucket_body(
             self.fmt, m_pad, n_pad, w, wt_row, wt_dual, ndev,
-            override=self.sharded_strategy)
+            override=self.sharded_strategy, grid_widths=gw)
+        if strategy == "gridpart":
+            w, wt = gw[grid]
+        else:
+            wt = wt_row if strategy == "rowpart" else wt_dual
         return ShardedBucketKey(
-            m_pad=m_pad, n_pad=n_pad, width=w,
-            width_t=wt_row if strategy == "rowpart" else wt_dual,
-            prox=req.prox, ndev=ndev, fmt=self.fmt, strategy=strategy)
+            m_pad=m_pad, n_pad=n_pad, width=w, width_t=wt,
+            prox=req.prox, ndev=ndev, fmt=self.fmt, strategy=strategy,
+            grid=grid)
 
     def bucket_key(self, req: SolveRequest) -> BucketKey:
         """(shape-bucket, format, prox family): dims round up to powers of
@@ -744,6 +822,27 @@ class SolverEngine:
         row-sharded buckets' sub-mesh (one compiled body per ndev)."""
         return self._sub_mesh_of(self.devices[:ndev])
 
+    def _grid_mesh(self, grid: tuple[int, int]):
+        """2-axis ("r", "c") mesh over the first rows*cols engine devices
+        — the gridpart buckets' sub-mesh (cached per (ids, shape): 2x4
+        and 4x2 over the same devices are distinct meshes)."""
+        R, C = grid
+        devices = self.devices[:R * C]
+        cache_key = (tuple(d.id for d in devices), (R, C))
+        mesh = self._sub_meshes.get(cache_key)
+        if mesh is None:
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(devices).reshape(R, C), ("r", "c"))
+            self._sub_meshes[cache_key] = mesh
+        return mesh
+
+    def _mesh_for(self, key: ShardedBucketKey):
+        """The sub-mesh a mesh-wide bucket's collectives span: the (R, C)
+        grid for gridpart, the 1-axis ndev line otherwise."""
+        if key.strategy == "gridpart":
+            return self._grid_mesh(key.grid)
+        return self._sub_mesh(key.ndev)
+
     def _pick_devices(self, count: int) -> list:
         """The ``count`` least-budget-used devices (round-robin cursor
         breaks ties, so unbudgeted engines keep pure round-robin)."""
@@ -765,7 +864,7 @@ class SolverEngine:
         if isinstance(key, ShardedBucketKey):
             return sharded_bucket_bytes(
                 key.fmt, key.strategy, 1, key.m_pad, key.n_pad,
-                key.width, key.width_t, key.ndev)
+                key.width, key.width_t, key.ndev, grid=key.grid)
         return bucket_operand_bytes(key.fmt, 1, key.m_pad, key.n_pad,
                                     key.width, key.width_t)
 
@@ -880,7 +979,12 @@ class SolverEngine:
         s = self.slots if s is None else s
         m, n = key.m_pad, key.n_pad
         a_sh, ai_sh, at_sh, ati_sh = _sharded_slot_shapes(key)
-        lead = (key.ndev, s) if key.strategy == "rowpart" else (s,)
+        if key.strategy == "gridpart":
+            # per-block operands lead with the (R, C) grid axes, slot third
+            a_lead = at_lead = (*key.grid, s)
+        else:
+            a_lead = (s,)
+            at_lead = (key.ndev, s) if key.strategy == "rowpart" else (s,)
         zeros_x = jnp.zeros((s, n), jnp.float32)
         state = PDState(xbar=zeros_x, xstar=zeros_x,
                         yhat=jnp.zeros((s, m), jnp.float32),
@@ -888,10 +992,10 @@ class SolverEngine:
                         k=jnp.zeros((s,), jnp.int32))
         return _ShardedBucket(
             key=key,
-            a_vals=np.zeros((s, *a_sh), np.float32),
-            a_idx=np.zeros((s, *ai_sh), np.int32),
-            at_vals=np.zeros((*lead, *at_sh), np.float32),
-            at_idx=np.zeros((*lead, *ati_sh), np.int32),
+            a_vals=np.zeros((*a_lead, *a_sh), np.float32),
+            a_idx=np.zeros((*a_lead, *ai_sh), np.int32),
+            at_vals=np.zeros((*at_lead, *at_sh), np.float32),
+            at_idx=np.zeros((*at_lead, *ati_sh), np.int32),
             b=np.zeros((s, m), np.float32),
             lg=np.ones((s,), np.float32),
             gamma0=np.ones((s,), np.float32),
@@ -966,19 +1070,39 @@ class SolverEngine:
         the bucket's numpy masters."""
         if isinstance(key, ShardedBucketKey):
             from repro.sparse.partition import (
+                block_partitioned_ell, blockgrid_bcsr,
+                blockgrid_transpose_bcsr, blockgrid_transpose_ell,
                 rowshard_transpose_bcsr, rowshard_transpose_ell,
             )
 
             c = pad_coo(req.coo, key.m_pad, key.n_pad)
+            if key.strategy == "gridpart":
+                R, C = key.grid
+                if key.fmt == "ell":
+                    fa, fi, _, _ = block_partitioned_ell(c, R, C,
+                                                         k=key.width)
+                    tv, ti = blockgrid_transpose_ell(c, R, C,
+                                                     k=key.width_t)
+                else:
+                    bn = min(128, key.n_pad // C)
+                    bn_t = min(128, key.m_pad // R)
+                    fa, fi = blockgrid_bcsr(c, R, C, bm=8, bn=bn,
+                                            kb=key.width)
+                    tv, ti = blockgrid_transpose_bcsr(c, R, C, bm=8,
+                                                      bn=bn_t,
+                                                      kb=key.width_t)
+                bucket.a_vals[:, :, slot] = np.asarray(fa)
+                bucket.a_idx[:, :, slot] = np.asarray(fi)
+                bucket.at_vals[:, :, slot] = np.asarray(tv)
+                bucket.at_idx[:, :, slot] = np.asarray(ti)
+                self.stats["sharded_admitted"] += 1
+                return
             if key.fmt == "ell":
                 e = coo_to_ell(c, k=key.width)
                 fa, fi = e.vals, e.cols
                 if key.strategy == "rowpart":
                     tv, ti = rowshard_transpose_ell(c, key.ndev,
                                                     k=key.width_t)
-                else:
-                    et = coo_to_ell(transpose_coo(c), k=key.width_t)
-                    tv, ti = et.vals, et.cols
             else:
                 bm = 8
                 f = coo_to_bcsr(c, bm=bm, bn=min(128, key.n_pad),
@@ -988,19 +1112,13 @@ class SolverEngine:
                     tv, ti = rowshard_transpose_bcsr(
                         c, key.ndev, bm=bm,
                         bn=min(128, key.m_pad // key.ndev), kb=key.width_t)
-                else:
-                    ft = coo_to_bcsr(transpose_coo(c), bm=bm,
-                                     bn=min(128, key.m_pad),
-                                     kb=key.width_t)
-                    tv, ti = ft.vals, ft.bcols
             bucket.a_vals[slot] = np.asarray(fa)
             bucket.a_idx[slot] = np.asarray(fi)
             if key.strategy == "rowpart":
                 bucket.at_vals[:, slot] = np.asarray(tv)
                 bucket.at_idx[:, slot] = np.asarray(ti)
-            else:
-                bucket.at_vals[slot] = np.asarray(tv)
-                bucket.at_idx[slot] = np.asarray(ti)
+            # dualpart: nothing to write — the zero-width at stand-ins
+            # stay all-zero (the backward scatters from the forward operand)
             self.stats["sharded_admitted"] += 1
         else:
             (av, ai), (atv, ati) = self._convert(key, req.coo)
@@ -1137,9 +1255,11 @@ class SolverEngine:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
             from repro.core.distributed import sharded_bucket_specs
-            mesh = self._sub_mesh(bucket.key.ndev)
+            mesh = self._mesh_for(bucket.key)
+            gridded = bucket.key.strategy == "gridpart"
+            axis = ("r", "c") if gridded else "p"
             a_specs, at_specs = sharded_bucket_specs(
-                "p", bucket.key.fmt, bucket.key.strategy)
+                axis, bucket.key.fmt, bucket.key.strategy)
             ns = lambda spec: NamedSharding(mesh, spec)
             rep = ns(P())
             # numpy masters -> sharded buffers directly: materializing on
@@ -1151,7 +1271,8 @@ class SolverEngine:
                     jax.device_put(bucket.a_idx, ns(a_specs[1])),
                     jax.device_put(bucket.at_vals, ns(at_specs[0])),
                     jax.device_put(bucket.at_idx, ns(at_specs[1])),
-                    jax.device_put(bucket.b, ns(P(None, "p"))),
+                    jax.device_put(bucket.b,
+                                   ns(P(None, "r" if gridded else "p"))),
                     jax.device_put(bucket.lg, rep),
                     jax.device_put(bucket.gamma0, rep),
                     jax.device_put(bucket.reg, rep),
@@ -1163,17 +1284,19 @@ class SolverEngine:
     def _sharded_fns(self, key: ShardedBucketKey):
         """(splice_fn, advance_fn) shard_map bodies for mesh-wide buckets
         (core.distributed.make_sharded_bucket_fns), cached per
-        (ndev, n_pad, prox, fmt, strategy) — jit retraces per operand
-        shape underneath; fmt/strategy change the spec ranks so they pin
-        distinct bodies."""
-        cache_key = (key.ndev, key.n_pad, key.prox, key.fmt, key.strategy)
+        (ndev, n_pad, prox, fmt, strategy, grid) — jit retraces per
+        operand shape underneath; fmt/strategy/grid change the spec ranks
+        or mesh so they pin distinct bodies."""
+        cache_key = (key.ndev, key.n_pad, key.prox, key.fmt, key.strategy,
+                     key.grid)
         fns = self._sharded_fn_cache.get(cache_key)
         if fns is None:
             from repro.core.distributed import make_sharded_bucket_fns
             fns = make_sharded_bucket_fns(
-                self._sub_mesh(key.ndev), key.n_pad,
+                self._mesh_for(key), key.n_pad,
                 partial(batched_prox, key.prox),
                 algorithm=self.algorithm, check_every=self.check_every,
+                axis=("r", "c") if key.strategy == "gridpart" else "p",
                 fmt=key.fmt, strategy=key.strategy, backend=self.backend,
                 interpret=self.interpret)
             self._sharded_fn_cache[cache_key] = fns
@@ -1380,7 +1503,7 @@ class SolverEngine:
         here so the upload is a sanctioned, explicit transfer."""
         if isinstance(key, ShardedBucketKey):
             from jax.sharding import NamedSharding, PartitionSpec as P
-            tgt = NamedSharding(self._sub_mesh(key.ndev), P())
+            tgt = NamedSharding(self._mesh_for(key), P())
         elif bucket.slot_sharded:
             from jax.sharding import NamedSharding, PartitionSpec as P
             tgt = NamedSharding(bucket.slot_mesh, P("p"))

@@ -162,6 +162,123 @@ def rowshard_transpose_bcsr(a: COO, parts: int, bm: int = 8, bn: int = 128,
             jnp.stack([s.bcols for s in shards]))
 
 
+def blockgrid_ell_width(a: COO, grid_rows: int, grid_cols: int) -> int:
+    """Max per-(block, local row) entry count over an R x C block grid —
+    the shared ELL width ``block_partitioned_ell`` needs; callers take
+    bucket maxima.  One vectorized pass (admission path): the block row is
+    implied by the global row, so the key is (column block, global row)."""
+    if np.asarray(a.vals).size == 0:
+        return 1
+    rows = np.asarray(a.rows).astype(np.int64)
+    cols = np.asarray(a.cols).astype(np.int64)
+    nb = _ceil_to(a.n, grid_cols) // grid_cols
+    key = (cols // nb) * _ceil_to(a.m, grid_rows) + rows
+    return int(np.bincount(key).max())
+
+
+def blockgrid_transpose_ell_width(a: COO, grid_rows: int,
+                                  grid_cols: int) -> int:
+    """Max per-(block, local column) entry count — the width of the
+    per-block TRANSPOSE tiles ``blockgrid_transpose_ell`` builds."""
+    if np.asarray(a.vals).size == 0:
+        return 1
+    rows = np.asarray(a.rows).astype(np.int64)
+    cols = np.asarray(a.cols).astype(np.int64)
+    mb = _ceil_to(a.m, grid_rows) // grid_rows
+    key = (rows // mb) * _ceil_to(a.n, grid_cols) + cols
+    return int(np.bincount(key).max())
+
+
+def blockgrid_transpose_ell(a: COO, grid_rows: int, grid_cols: int,
+                            k: int | None = None, pad_to: int = 8):
+    """Per-block transpose tiles of the 2-D grid — the dual-copy trade
+    applied per block: returns (vals, rows) of shape (R, C, nb, k) where
+    tile (i, j) is the column-ELL of ``block(i, j)^T`` with row indices
+    LOCAL to the block's row slice (into [0, mb)), so a grid-sharded
+    backward pass is gather-only per block, then psum_scatter'd over the
+    row axis.  Built by block-partitioning A^T over the transposed (C, R)
+    grid and swapping the grid dims so slot [i, j] holds block (i, j)^T.
+    """
+    at = COO(rows=a.cols, cols=a.rows, vals=a.vals, m=a.n, n=a.m)
+    vt, rt, _, _ = block_partitioned_ell(at, grid_cols, grid_rows,
+                                         pad_to=pad_to, k=k)
+    return jnp.swapaxes(vt, 0, 1), jnp.swapaxes(rt, 0, 1)
+
+
+def _block_coo(a: COO, grid_rows: int, grid_cols: int, i: int,
+               j: int) -> COO:
+    """Block (i, j) of the R x C grid as an (mb, nb) COO with indices
+    LOCAL to the block."""
+    mb = _ceil_to(a.m, grid_rows) // grid_rows
+    nb = _ceil_to(a.n, grid_cols) // grid_cols
+    rows = np.asarray(a.rows)
+    cols = np.asarray(a.cols)
+    sel = (rows // mb == i) & (cols // nb == j)
+    return COO(rows=rows[sel] - i * mb, cols=cols[sel] - j * nb,
+               vals=np.asarray(a.vals)[sel], m=mb, n=nb)
+
+
+def blockgrid_bcsr_width(a: COO, grid_rows: int, grid_cols: int,
+                         bm: int = 8, bn: int = 128) -> int:
+    """Max nonzero-tile count per (block, block-row) over the R x C grid —
+    the BCSR ``kb`` that ``blockgrid_bcsr`` needs; callers take bucket
+    maxima (one vectorized pass, like ``rowshard_transpose_bcsr_width``)."""
+    rows = np.asarray(a.rows)
+    if rows.size == 0:
+        return 1
+    cols = np.asarray(a.cols)
+    R, C = grid_rows, grid_cols
+    mb = _ceil_to(a.m, R) // R
+    nb = _ceil_to(a.n, C) // C
+    bi, bj = rows // mb, cols // nb
+    lr, lc = rows - bi * mb, cols - bj * nb
+    nbr = max(1, -(-mb // bm))
+    nbc = max(1, -(-nb // bn))
+    key = (((bi.astype(np.int64) * C + bj) * nbr + lr // bm) * nbc
+           + lc // bn)
+    uniq = np.unique(key)
+    counts = np.bincount(uniq // nbc)   # nonzero tiles per (block, brow)
+    return max(1, int(counts.max()))
+
+
+def blockgrid_bcsr(a: COO, grid_rows: int, grid_cols: int, bm: int = 8,
+                   bn: int = 128, kb: int | None = None):
+    """2-D grid of BCSR tile stacks: returns (vals, bcols) of shape
+    (R, C, nbr_b, kb, bm, bn) / (R, C, nbr_b, kb) where cell (i, j) is
+    the tiled BCSR of block (i, j) with block-column indices LOCAL to the
+    block (into [0, nb/bn)) — the MXU-path operand of the gridpart body."""
+    if kb is None:
+        kb = blockgrid_bcsr_width(a, grid_rows, grid_cols, bm=bm, bn=bn)
+    cells = [[coo_to_bcsr(_block_coo(a, grid_rows, grid_cols, i, j),
+                          bm=bm, bn=bn, kb=kb)
+              for j in range(grid_cols)] for i in range(grid_rows)]
+    return (jnp.stack([jnp.stack([c.vals for c in row]) for row in cells]),
+            jnp.stack([jnp.stack([c.bcols for c in row]) for row in cells]))
+
+
+def blockgrid_transpose_bcsr_width(a: COO, grid_rows: int, grid_cols: int,
+                                   bm: int = 8, bn: int = 128) -> int:
+    """``blockgrid_bcsr_width`` of the per-block transposes — the ``kb``
+    of ``blockgrid_transpose_bcsr``; callers take bucket maxima."""
+    at = COO(rows=a.cols, cols=a.rows, vals=a.vals, m=a.n, n=a.m)
+    return blockgrid_bcsr_width(at, grid_cols, grid_rows, bm=bm, bn=bn)
+
+
+def blockgrid_transpose_bcsr(a: COO, grid_rows: int, grid_cols: int,
+                             bm: int = 8, bn: int = 128,
+                             kb: int | None = None):
+    """Per-block transpose BCSR tiles: cell (i, j) is the tiled BCSR of
+    ``block(i, j)^T`` (shapes (R, C, nbt_b, kb, bm, bn)), block-columns
+    LOCAL to the block's row slice — the tiled analogue of
+    ``blockgrid_transpose_ell``, so the gridpart backward is a per-block
+    tile contraction psum_scatter'd over the row axis."""
+    at = COO(rows=a.cols, cols=a.rows, vals=a.vals, m=a.n, n=a.m)
+    if kb is None:
+        kb = blockgrid_bcsr_width(at, grid_cols, grid_rows, bm=bm, bn=bn)
+    vt, ct = blockgrid_bcsr(at, grid_cols, grid_rows, bm=bm, bn=bn, kb=kb)
+    return jnp.swapaxes(vt, 0, 1), jnp.swapaxes(ct, 0, 1)
+
+
 # ---------------------------------------------------------------------------
 # Dry-run ShapeDtypeStruct stand-ins (no allocation; shardable)
 # ---------------------------------------------------------------------------

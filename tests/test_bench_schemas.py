@@ -61,7 +61,8 @@ def test_solver_serving_schema():
 def test_sharded_serving_schema():
     rec = _load("sharded_serving.json")
     for key in ("requests", "slots", "big_shape", "shard_above",
-                "formats", "by_devices", "speedup_8v1"):
+                "formats", "by_devices", "speedup_8v1", "by_grid",
+                "grid_format"):
         assert key in rec, key
     for fmt, frec in rec["formats"].items():
         assert "by_devices" in frec and "speedup_8v1" in frec, fmt
@@ -70,6 +71,54 @@ def test_sharded_serving_schema():
                         "sharded_admitted"):
                 assert key in point, (fmt, dev, key)
             assert point["rps"] > 0 and point["dt"] > 0
+    # the gridpart sub-mesh axis: each point names its (rows, cols)
+    # shape and carries the planner's ring wire-byte numbers + reason
+    assert rec["by_grid"], "need >= 1 gridpart factorization point"
+    for gname, point in rec["by_grid"].items():
+        r, c = (int(v) for v in gname.split("x"))
+        assert point["grid_shape"] == [r, c], (gname, point["grid_shape"])
+        assert point["rps"] > 0 and point["dt"] > 0, gname
+        assert point["sharded_admitted"] >= 1, gname
+        assert "gridpart" in point["bucket_body"], (gname,
+                                                    point["bucket_body"])
+        wire = point["wire_bytes"]
+        assert set(wire) == {"fwd", "bwd", "total"}, (gname, wire)
+        assert wire["fwd"] >= 0 and wire["bwd"] >= 0, (gname, wire)
+        assert wire["total"] == wire["fwd"] + wire["bwd"], (gname, wire)
+        assert point["wire_reason"].startswith(str(int(wire["total"]))), \
+            (gname, point["wire_reason"])
+        assert "ring model" in point["wire_reason"], gname
+
+
+def test_sharded_serving_quick_grid_smoke(tmp_path):
+    """``benchmarks/run.py sharded_serving --quick --grid 2x4`` end to
+    end: the sweep emits a grid point carrying grid_shape and the
+    wire-byte reason, written to a scratch dir via REPRO_BENCH_OUT so
+    the committed artifact is never touched."""
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["REPRO_BENCH_OUT"] = str(tmp_path)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    p = subprocess.run(
+        [sys.executable, os.path.join(repo, "benchmarks", "run.py"),
+         "sharded_serving", "--quick", "--format", "ell",
+         "--grid", "2x4"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    with open(os.path.join(tmp_path, "sharded_serving.json")) as f:
+        rec = json.load(f)
+    assert rec["quick"] and rec["grid_format"] == "ell"
+    assert set(rec["by_grid"]) == {"2x4"}
+    point = rec["by_grid"]["2x4"]
+    assert point["grid_shape"] == [2, 4]
+    assert point["sharded_admitted"] >= 1
+    assert "gridpart" in point["bucket_body"]
+    assert "ring model" in point["wire_reason"]
+    assert point["wire_bytes"]["total"] == (point["wire_bytes"]["fwd"]
+                                            + point["wire_bytes"]["bwd"])
 
 
 def test_rcd_serving_schema():

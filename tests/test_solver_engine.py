@@ -261,7 +261,8 @@ def test_engine_streams_oversized_requests_on_one_device():
     from repro.plan import decide_placement
 
     reqs = _mk_requests(2, [(96, 24)])       # nnz = 96*6 > shard_above
-    eng = SolverEngine(slots=2, check_every=16, shard_above=500)
+    eng = SolverEngine(slots=2, check_every=16, shard_above=500,
+                       devices=1)            # pin: streamed, never sharded
     keys = [eng.submit(r) for r in reqs]
     _, why = decide_placement(96, 24, reqs[0].coo.nnz, 1, 500)
     assert "streams" in why
@@ -285,16 +286,16 @@ def test_byte_budget_streams_what_slot_count_would_admit():
     (an order of magnitude fewer bytes for the same nonzeros) resident.
     Results must match the standalone solve either way."""
     reqs = _mk_requests(2, [(96, 24)])
-    probe = SolverEngine(slots=2, fmt="bcsr", check_every=16)
+    probe = SolverEngine(slots=2, fmt="bcsr", check_every=16, devices=1)
     bcsr_slot = probe.bucket_slot_bytes(probe.bucket_key(reqs[0]))
-    ell_probe = SolverEngine(slots=2, fmt="ell", check_every=16)
+    ell_probe = SolverEngine(slots=2, fmt="ell", check_every=16, devices=1)
     ell_slot = ell_probe.bucket_slot_bytes(ell_probe.bucket_key(reqs[0]))
     assert ell_slot < bcsr_slot  # the gap slot counting cannot see
     budget = bcsr_slot - 1       # holds >= 1 ELL slot, < 1 BCSR slot
     assert budget >= ell_slot
 
     eng = SolverEngine(slots=2, fmt="bcsr", check_every=16,
-                       device_budget=budget)
+                       device_budget=budget, devices=1)
     keys = [eng.submit(r) for r in reqs]
     done = eng.run()
     assert not eng.buckets[keys[0]].resident     # streamed, not admitted
@@ -307,7 +308,7 @@ def test_byte_budget_streams_what_slot_count_would_admit():
         np.testing.assert_allclose(r.x, np.asarray(s.xbar), atol=1e-5)
 
     eng2 = SolverEngine(slots=2, fmt="ell", check_every=16,
-                        device_budget=budget)
+                        device_budget=budget, devices=1)
     keys2 = [eng2.submit(r) for r in _mk_requests(2, [(96, 24)])]
     eng2.run()
     assert eng2.buckets[keys2[0]].resident       # same bytes admit ELL
